@@ -1,0 +1,79 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **RU packing** — literal one-packet-per-psum repetitive unicast vs
+//!    the packed 4-payloads-per-flit reading (brackets the paper's
+//!    baseline; EXPERIMENTS.md "Methodology notes").
+//! 2. **PE grouping** (§4.4) — column vs row grouping of the n PEs
+//!    behind a router.
+//! 3. **δ as fault tolerance** (§4.1) — a node whose upstream initiator
+//!    is disabled still delivers after its timeout expires.
+
+use noc_dnn::config::{Collection, PeGrouping, SimConfig};
+use noc_dnn::coordinator::experiment::{latency_improvement, Experiment};
+use noc_dnn::dataflow::os::OsMapping;
+use noc_dnn::models::alexnet;
+use noc_dnn::noc::network::Network;
+use noc_dnn::noc::Coord;
+use noc_dnn::util::bench::time_it;
+
+fn main() {
+    let layer = &alexnet::conv_layers()[2];
+
+    // ---- 1) RU packing ----
+    println!("== ablation: RU baseline reading (8x8, trace-driven, AlexNet conv3) ==");
+    for n in [1usize, 4, 8] {
+        let mut cfg = SimConfig::table1_8x8(n);
+        cfg.trace_driven = true;
+        let gather = Experiment::proposed(cfg.clone()).run_layer(layer);
+        let literal = Experiment::baseline_ru(cfg.clone()).run_layer(layer);
+        cfg.ru_pack_payloads = true;
+        let packed = Experiment::baseline_ru(cfg).run_layer(layer);
+        println!(
+            "  n={n}: improvement vs literal RU {:.2}x, vs packed RU {:.2}x",
+            latency_improvement(&literal, &gather),
+            latency_improvement(&packed, &gather),
+        );
+    }
+    println!("  (the paper's reported 1.0-1.84x sits between the two readings)");
+
+    // ---- 2) PE grouping ----
+    println!("\n== ablation: PE grouping (§4.4), 8x8 n=4 ==");
+    for grouping in [PeGrouping::Column, PeGrouping::Row] {
+        let mut cfg = SimConfig::table1_8x8(4);
+        cfg.pe_grouping = grouping;
+        let m = OsMapping::new(&cfg, layer);
+        let rep = Experiment::proposed(cfg).run_layer(layer);
+        println!(
+            "  {:<6} rounds={} row_bus={}w col_bus={}w total={} cycles",
+            grouping.label(),
+            m.rounds,
+            m.row_stream_words,
+            m.col_stream_words,
+            rep.run.total_cycles
+        );
+    }
+
+    // ---- 3) δ as a fault-tolerance bound (§4.1) ----
+    println!("\n== ablation: timeout bounds the wait when no packet ever comes ==");
+    let cfg = SimConfig::table1_8x8(1);
+    let mut net = Network::new(&cfg, Collection::Gather);
+    // Only a non-initiator node has payloads: no initiator packet will
+    // ever pass, so delivery relies entirely on the δ expiry.
+    net.post_result(0, Coord::new(5, 0), 1);
+    let ok = net.run_until(|n| n.payloads_delivered >= 1, 100_000);
+    assert!(ok, "orphan payload must still be delivered");
+    println!(
+        "  orphan payload delivered at cycle {} (delta={} + transit), packets={}",
+        net.cycle,
+        cfg.delta,
+        net.stats.packets_injected
+    );
+    assert!(net.cycle as i64 >= cfg.delta as i64, "must have waited out delta");
+
+    let t = time_it(3, || {
+        let mut cfg = SimConfig::table1_8x8(4);
+        cfg.trace_driven = true;
+        Experiment::proposed(cfg).run_layer(layer)
+    });
+    println!("\nbench: one trace-driven layer experiment {t}");
+}

@@ -1,0 +1,38 @@
+//! Bench + regeneration of Fig. 12: effect of the timeout δ on the
+//! single-row collection scenario (latency and power, 1/2/4/8 PEs/router).
+//!
+//! Prints the paper's series (normalized vs the δ<κ point) and times the
+//! underlying simulation.
+
+use noc_dnn::coordinator::{report, sweep};
+use noc_dnn::util::bench::time_it;
+
+fn main() {
+    let factors = [0u64, 1, 3, 5, 7, 9, 11];
+    for mesh in [8usize, 16] {
+        let series = sweep::fig12(mesh, &factors);
+        println!("Fig. 12 ({mesh}x{mesh}) — normalized runtime latency & power vs delta:");
+        print!("{}", report::fig12_text(&series));
+        // Paper's qualitative claims, asserted on every regeneration:
+        for s in &series {
+            let base = &s.points[0];
+            let plateau = s.points.last().unwrap();
+            assert!(
+                plateau.energy_j <= base.energy_j,
+                "power must improve with large delta (n={})",
+                s.pes_per_router
+            );
+            if s.pes_per_router >= 4 {
+                assert!(
+                    plateau.latency_cycles <= base.latency_cycles,
+                    "latency must improve for heavily loaded rows (n={})",
+                    s.pes_per_router
+                );
+            }
+        }
+        println!();
+    }
+
+    let t = time_it(5, || sweep::fig12(8, &factors));
+    println!("bench: fig12 sweep (8x8, 7 deltas x 4 n) {t}");
+}

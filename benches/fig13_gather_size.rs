@@ -1,0 +1,29 @@
+//! Bench + regeneration of Fig. 13: one large gather packet vs two
+//! smaller gather packets, 8×8 and 16×16, 1/2/4/8 PEs/router, normalized
+//! against repetitive unicast.
+
+use noc_dnn::coordinator::{report, sweep};
+use noc_dnn::models::alexnet;
+use noc_dnn::util::bench::time_it;
+
+fn main() {
+    let layer = &alexnet::conv_layers()[2];
+    for mesh in [8usize, 16] {
+        let rows = sweep::fig13(mesh, layer);
+        println!("Fig. 13 ({mesh}x{mesh}, workload AlexNet {}):", layer.name);
+        print!("{}", report::fig13_text(&rows));
+        for r in &rows {
+            // Paper §5.2: one large packet is at least as good for
+            // latency as two smaller packets.
+            assert!(
+                r.one_large.0 >= r.two_small.0 * 0.98,
+                "one-packet latency should not lose to two-packet (n={})",
+                r.pes_per_router
+            );
+        }
+        println!();
+    }
+
+    let t = time_it(3, || sweep::fig13(8, layer));
+    println!("bench: fig13 study (8x8, 4 n, 3 configs each) {t}");
+}

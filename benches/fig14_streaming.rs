@@ -1,0 +1,24 @@
+//! Bench + regeneration of Fig. 14: runtime improvement of gather with
+//! two-way / one-way streaming over the gather-only architecture [27],
+//! per conv layer of AlexNet and VGG-16.
+
+use noc_dnn::coordinator::{report, sweep};
+use noc_dnn::util::bench::time_it;
+
+fn main() {
+    let rows = sweep::fig14(8, 1);
+    println!("Fig. 14 (8x8 mesh, n=1):");
+    print!("{}", report::fig14_text(&rows));
+
+    let avg2 = rows.iter().map(|r| r.two_way).sum::<f64>() / rows.len() as f64;
+    let avg1 = rows.iter().map(|r| r.one_way).sum::<f64>() / rows.len() as f64;
+    // Paper: two-way 1.71x, one-way 1.48x on average; the qualitative
+    // ordering (both > 1, two-way > one-way) must hold.
+    assert!(avg2 > 1.0, "two-way must beat gather-only (avg {avg2})");
+    assert!(avg1 > 1.0, "one-way must beat gather-only (avg {avg1})");
+    assert!(avg2 > avg1, "two-way must beat one-way for OS dataflow");
+    println!("\npaper: 1.71x (two-way) / 1.48x (one-way); ours: {avg2:.2}x / {avg1:.2}x");
+
+    let t = time_it(1, || sweep::fig14(8, 1));
+    println!("bench: fig14 (18 layers x 3 architectures) {t}");
+}

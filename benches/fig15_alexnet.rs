@@ -1,0 +1,41 @@
+//! Bench + regeneration of Fig. 15: AlexNet — total runtime latency and
+//! network power improvement of gather over repetitive unicast, on 8×8
+//! and 16×16 meshes for 1/2/4/8 PEs/router (two-way streaming fabric).
+
+use noc_dnn::coordinator::{report, sweep};
+use noc_dnn::models::alexnet;
+use noc_dnn::util::bench::time_it;
+
+fn main() {
+    let layers = alexnet::conv_layers();
+    let points = sweep::fig_model(&layers, &[8, 16], &[1, 2, 4, 8]);
+    println!("Fig. 15 — AlexNet, gather vs RU:");
+    print!("{}", report::fig_model_text(&points));
+
+    // Paper's qualitative claims:
+    for mesh in [8usize, 16] {
+        let at = |n: usize| {
+            let v: Vec<f64> = points
+                .iter()
+                .filter(|p| p.mesh == mesh && p.pes_per_router == n)
+                .map(|p| p.latency_improvement)
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        // Improvement grows with PEs/router (§5.3).
+        assert!(at(8) > at(1), "mesh {mesh}: improvement must grow with n");
+        // Gather is at worst marginally behind RU in the uncongested n=1
+        // regime (§5.2 reports a slight increase there).
+        assert!(at(1) > 0.9, "mesh {mesh}: n=1 should be near parity");
+    }
+    let avg16: f64 = points
+        .iter()
+        .filter(|p| p.mesh == 16 && p.pes_per_router == 8)
+        .map(|p| p.latency_improvement)
+        .sum::<f64>()
+        / layers.len() as f64;
+    println!("\npaper headline: up to 1.8x latency; ours at 16x16/n=8: {avg16:.2}x");
+
+    let t = time_it(1, || sweep::fig_model(&layers, &[8], &[4]));
+    println!("bench: fig15 slice (5 layers, 8x8, n=4) {t}");
+}

@@ -1,0 +1,36 @@
+//! Bench + regeneration of Fig. 16: VGG-16 — total runtime latency and
+//! network power improvement of gather over repetitive unicast, on 8×8
+//! and 16×16 meshes for 1/2/4/8 PEs/router (two-way streaming fabric).
+
+use noc_dnn::coordinator::{report, sweep};
+use noc_dnn::models::vgg16;
+use noc_dnn::util::bench::time_it;
+
+fn main() {
+    let layers = vgg16::conv_layers();
+    let points = sweep::fig_model(&layers, &[8, 16], &[1, 2, 4, 8]);
+    println!("Fig. 16 — VGG-16, gather vs RU:");
+    print!("{}", report::fig_model_text(&points));
+
+    let avg = |mesh: usize, n: usize| {
+        let v: Vec<f64> = points
+            .iter()
+            .filter(|p| p.mesh == mesh && p.pes_per_router == n)
+            .map(|p| p.latency_improvement)
+            .collect();
+        v.iter().sum::<f64>() / v.len() as f64
+    };
+    // Paper: improvement grows with n; 16x16 offers more improvement than
+    // 8x8 at high n (up to 1.84x).
+    assert!(avg(8, 8) > avg(8, 1), "8x8: improvement must grow with n");
+    assert!(avg(16, 8) > avg(16, 1), "16x16: improvement must grow with n");
+    assert!(avg(16, 8) > avg(8, 8) * 0.95, "16x16 should be at least on par at n=8");
+    println!(
+        "\npaper headline: up to 1.84x (16x16); ours: 8x8/n=8 {:.2}x, 16x16/n=8 {:.2}x",
+        avg(8, 8),
+        avg(16, 8)
+    );
+
+    let t = time_it(1, || sweep::fig_model(&layers[..2], &[8], &[4]));
+    println!("bench: fig16 slice (2 layers, 8x8, n=4) {t}");
+}

@@ -1,0 +1,58 @@
+//! Simulator hot-path microbenchmarks (the §Perf targets of DESIGN.md):
+//! flit throughput of the cycle loop under saturating collection traffic,
+//! plus end-to-end layer-simulation timing.
+
+use noc_dnn::config::{Collection, SimConfig};
+use noc_dnn::coordinator::Experiment;
+use noc_dnn::models::alexnet;
+use noc_dnn::noc::network::Network;
+use noc_dnn::noc::Coord;
+use noc_dnn::util::bench::{fmt_ns, time_it};
+
+/// Saturating workload: every node posts `rounds` rounds of payloads.
+fn saturate(cfg: &SimConfig, collection: Collection, rounds: u64) -> (u64, u64) {
+    let mut net = Network::new(cfg, collection);
+    for r in 0..rounds {
+        for y in 0..cfg.mesh_rows {
+            for x in 0..cfg.mesh_cols {
+                net.post_result(
+                    r * 10 + 1,
+                    Coord::new(x as u16, y as u16),
+                    cfg.pes_per_router as u32,
+                );
+            }
+        }
+    }
+    let total = rounds * (cfg.mesh_rows * cfg.mesh_cols * cfg.pes_per_router) as u64;
+    let ok = net.run_until(|n| n.payloads_delivered >= total, 10_000_000);
+    assert!(ok, "saturation run stalled");
+    (net.stats.flit_hops, net.cycle)
+}
+
+fn main() {
+    for (mesh, n) in [(8usize, 4usize), (16, 4), (16, 8)] {
+        let cfg = SimConfig::table1(mesh, n);
+        for coll in [Collection::Gather, Collection::RepetitiveUnicast] {
+            let (hops, cycles) = saturate(&cfg, coll, 16);
+            let t = time_it(5, || saturate(&cfg, coll, 16));
+            let hops_per_sec = hops as f64 / (t.median_ns as f64 / 1e9);
+            let cyc_per_sec = cycles as f64 / (t.median_ns as f64 / 1e9);
+            println!(
+                "{mesh:>2}x{mesh} n={n} {:<7} {hops:>7} flit-hops / {cycles:>6} cycles in {:>9}  -> {:>5.1}M hops/s, {:>5.1}M cycles/s",
+                match coll { Collection::Gather => "gather", _ => "RU" },
+                fmt_ns(t.median_ns),
+                hops_per_sec / 1e6,
+                cyc_per_sec / 1e6,
+            );
+        }
+    }
+
+    // End-to-end layer simulation timing (what every figure point costs).
+    let layer = &alexnet::conv_layers()[2];
+    let mut cfg = SimConfig::table1_16x16(8);
+    cfg.trace_driven = true;
+    let t = time_it(5, || Experiment::proposed(cfg.clone()).run_layer(layer));
+    println!("\nlayer sim (16x16, n=8, gather, AlexNet conv3): {t}");
+    let t = time_it(5, || Experiment::baseline_ru(cfg.clone()).run_layer(layer));
+    println!("layer sim (16x16, n=8, RU,     AlexNet conv3): {t}");
+}

@@ -1,0 +1,36 @@
+//! Regeneration of the §5.4 hardware-overhead comparison (the paper's
+//! only table of synthesis results): baseline vs gather-supported router
+//! power and area at 45 nm / 1 GHz.
+
+use noc_dnn::power::area::overhead_report;
+use noc_dnn::power::router::{RouterArea, RouterEnergy};
+use noc_dnn::util::bench::time_it;
+
+fn main() {
+    let r = overhead_report(1.0e9);
+    println!("§5.4 hardware overhead (Table-1 router, 45 nm, 1 GHz):");
+    println!("  power: {:.2} mW -> {:.2} mW  (+{:.1}%)", r.baseline_power_mw, r.proposed_power_mw, r.power_overhead_pct);
+    println!("  area:  {:.0} um^2 -> {:.0} um^2  (+{:.1}%)", r.baseline_area_um2, r.proposed_area_um2, r.area_overhead_pct);
+    println!("  paper: 26.3 mW -> 27.87 mW (~6%); 72106 um^2 -> 74950 um^2 (~4%)");
+
+    // Component roll-up (the DSENT-style breakdown behind the totals).
+    let a = RouterArea::forty_five_nm();
+    println!("\narea breakdown (um^2):");
+    println!("  input buffers   {:8.0}", a.buffers_um2);
+    println!("  crossbar        {:8.0}", a.crossbar_um2);
+    println!("  allocators      {:8.0}", a.allocators_um2);
+    println!("  other           {:8.0}", a.other_um2);
+    println!("  + load gen      {:8.0}", a.gather_load_gen_um2);
+    println!("  + payload queue {:8.0}", a.gather_payload_q_um2);
+
+    let e = RouterEnergy::forty_five_nm();
+    println!("\nper-event energies (pJ): buf wr {:.2} / rd {:.2}, xbar {:.2}, arb {:.2}, link {:.2}",
+        e.buffer_write_j * 1e12, e.buffer_read_j * 1e12, e.crossbar_j * 1e12,
+        e.arbiter_j * 1e12, e.link_j * 1e12);
+
+    assert!((r.power_overhead_pct - 6.0).abs() < 2.0, "power overhead out of band");
+    assert!((r.area_overhead_pct - 4.0).abs() < 1.0, "area overhead out of band");
+
+    let t = time_it(100, || overhead_report(1.0e9));
+    println!("\nbench: overhead roll-up {t}");
+}

@@ -1,0 +1,58 @@
+//! Quickstart: the whole stack in ~60 lines.
+//!
+//! 1. Load the AOT-compiled conv artifact (L1 Pallas kernel inside the L2
+//!    JAX model, lowered to HLO text) and execute it through PJRT.
+//! 2. Verify the numerics against the in-tree reference convolution.
+//! 3. Simulate the same layer on the 8×8 mesh NoC with gather support and
+//!    with repetitive unicast, and print the improvement.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use noc_dnn::config::SimConfig;
+use noc_dnn::coordinator::experiment::{latency_improvement, power_improvement, Experiment};
+use noc_dnn::models::lite;
+use noc_dnn::runtime::layer_exec::LayerExecutor;
+use noc_dnn::runtime::{max_abs_diff, reference, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let layer = lite::quickstart_layer();
+
+    // --- numeric path: artifact through PJRT vs rust reference ---
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    let mut exec = LayerExecutor::new(&artifacts)?;
+    let input = Tensor::random(vec![1, layer.c, layer.h_in, layer.h_in], 42);
+    let weights = Tensor::random(vec![layer.q, layer.c, layer.r, layer.r], 43);
+    let out = exec.forward(&layer, &input, &weights)?;
+    let oracle = reference::conv2d(&input, &weights, layer.stride, layer.pad);
+    let diff = max_abs_diff(&out.data, &oracle.data);
+    println!(
+        "numerics: conv {}x{}x{} -> {:?} via PJRT, max|delta| vs reference = {diff:.2e}",
+        layer.c, layer.h_in, layer.h_in, out.shape
+    );
+    anyhow::ensure!(diff < 1e-3, "numeric mismatch");
+
+    // --- timing path: cycle-accurate NoC simulation, gather vs RU ---
+    let mut cfg = SimConfig::table1_8x8(4);
+    cfg.trace_driven = true;
+    let gather = Experiment::proposed(cfg.clone()).run_layer(&layer);
+    let ru = Experiment::baseline_ru(cfg).run_layer(&layer);
+    println!("timing:  {} rounds on 8x8 mesh (4 PEs/router)", gather.run.rounds_total);
+    println!(
+        "         gather: {} cycles, {:.3} uJ   RU: {} cycles, {:.3} uJ",
+        gather.run.total_cycles,
+        gather.power.total_j * 1e6,
+        ru.run.total_cycles,
+        ru.power.total_j * 1e6
+    );
+    println!(
+        "         improvement: {:.2}x latency, {:.2}x network power",
+        latency_improvement(&ru, &gather),
+        power_improvement(&ru, &gather)
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! VGG-16 full-model study: the deepest workload in the paper's
+//! evaluation, across mesh sizes, PEs/router and all three streaming
+//! architectures — a superset of Figs. 14 and 16 for one model.
+//!
+//! Run: `cargo run --release --example vgg16_study [-- --fast]`
+
+use noc_dnn::config::{Collection, SimConfig, Streaming};
+use noc_dnn::coordinator::experiment::{latency_improvement, power_improvement, Experiment};
+use noc_dnn::coordinator::report::table;
+use noc_dnn::coordinator::server::{default_workers, parallel_map};
+use noc_dnn::models::vgg16;
+use noc_dnn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[], &["fast"])?;
+    let layers = vgg16::conv_layers();
+    let layers = if args.get_bool("fast") { layers[..4].to_vec() } else { layers };
+
+    // ---- gather vs RU across the (mesh, n) grid, whole model ----
+    println!("== VGG-16 total: gather vs RU (two-way streaming, trace-driven) ==");
+    let mut grid = Vec::new();
+    for mesh in [8usize, 16] {
+        for n in [1usize, 2, 4, 8] {
+            grid.push((mesh, n));
+        }
+    }
+    let layers_ref = &layers;
+    let results = parallel_map(grid, default_workers(), |&(mesh, n)| {
+        let mut cfg = SimConfig::table1(mesh, n);
+        cfg.trace_driven = true;
+        let mut tot = (0u64, 0u64, 0.0f64, 0.0f64);
+        for layer in layers_ref {
+            let g = Experiment::proposed(cfg.clone()).run_layer(layer);
+            let ru = Experiment::baseline_ru(cfg.clone()).run_layer(layer);
+            tot.0 += ru.run.total_cycles;
+            tot.1 += g.run.total_cycles;
+            tot.2 += ru.power.router_dynamic_j + ru.power.router_static_j;
+            tot.3 += g.power.router_dynamic_j + g.power.router_static_j;
+        }
+        (mesh, n, tot)
+    });
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|(mesh, n, t)| {
+            vec![
+                format!("{mesh}x{mesh}"),
+                n.to_string(),
+                t.0.to_string(),
+                t.1.to_string(),
+                format!("{:.2}", t.0 as f64 / t.1 as f64),
+                format!("{:.2}", t.2 / t.3),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        table(&["mesh", "n", "RU cycles", "gather cycles", "lat impr", "pow impr"], &rows)
+    );
+
+    // ---- streaming architecture comparison on one deep layer ----
+    println!("\n== conv4_2: streaming architectures (n=1, full round timing) ==");
+    let layer = layers.iter().find(|l| l.name == "conv4_2").unwrap_or(&layers[0]);
+    let cfg = SimConfig::table1_8x8(1);
+    let mesh_arch = Experiment::gather_only(cfg.clone()).run_layer(layer);
+    let one = Experiment::new(cfg.clone(), Streaming::OneWay, Collection::Gather).run_layer(layer);
+    let two = Experiment::proposed(cfg).run_layer(layer);
+    let rows = vec![
+        vec![
+            "gather-only [27]".to_string(),
+            mesh_arch.run.total_cycles.to_string(),
+            "1.00".to_string(),
+            format!("{:.3}", mesh_arch.power.total_j * 1e3),
+        ],
+        vec![
+            "one-way bus".to_string(),
+            one.run.total_cycles.to_string(),
+            format!("{:.2}", latency_improvement(&mesh_arch, &one)),
+            format!("{:.3}", one.power.total_j * 1e3),
+        ],
+        vec![
+            "two-way bus".to_string(),
+            two.run.total_cycles.to_string(),
+            format!("{:.2}", latency_improvement(&mesh_arch, &two)),
+            format!("{:.3}", two.power.total_j * 1e3),
+        ],
+    ];
+    print!("{}", table(&["architecture", "cycles", "impr", "energy(mJ)"], &rows));
+    let _ = power_improvement(&mesh_arch, &two);
+    println!("vgg16_study OK");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+"""AOT pipeline: lower the L2 conv model (with its L1 Pallas kernel) to
+HLO **text** artifacts the rust runtime loads via PJRT.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the pinned xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts
+
+Python runs exactly once, at build time; `make artifacts` is a no-op when
+the artifacts are newer than the compile sources.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ConvSpec, all_artifact_specs, conv_forward
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: ConvSpec) -> str:
+    """Lower one conv layer shape to HLO text."""
+    fn = functools.partial(conv_forward, stride=spec.stride, pad=spec.pad)
+
+    def entry(x, w):
+        return (fn(x, w),)
+
+    x = jax.ShapeDtypeStruct(spec.input_shape(), jax.numpy.float32)
+    w = jax.ShapeDtypeStruct(spec.weight_shape(), jax.numpy.float32)
+    lowered = jax.jit(entry).lower(x, w)
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: pathlib.Path, specs: list[ConvSpec] | None = None) -> dict:
+    """Lower every artifact spec; returns the manifest dict."""
+    specs = specs if specs is not None else all_artifact_specs()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {"artifacts": []}
+    for spec in specs:
+        text = lower_spec(spec)
+        path = out_dir / spec.artifact_name()
+        path.write_text(text)
+        manifest["artifacts"].append(
+            {
+                "name": spec.name,
+                "file": spec.artifact_name(),
+                "input_shape": list(spec.input_shape()),
+                "weight_shape": list(spec.weight_shape()),
+                "h_out": spec.h_out,
+                "macs_per_output": spec.macs_per_output,
+                "hlo_bytes": len(text),
+            }
+        )
+        print(f"  wrote {path} ({len(text)} bytes)", file=sys.stderr)
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    manifest = build_all(out_dir)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""L1 — the Output-Stationary matmul Pallas kernel.
+
+This is the MAC hot-spot of the accelerator expressed for the TPU memory
+hierarchy. The OS dataflow of the paper (Fig. 4) keeps each PE's partial
+sum stationary while input-activation and weight words stream past; the
+Pallas translation keeps each **output tile** stationary in VMEM (the
+analogue of the PE register file) while K-dimension slabs of the patch
+matrix and the weight matrix stream HBM→VMEM under `BlockSpec` control —
+the same schedule the paper implements with row/column streaming buses.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation):
+
+* the paper's wire-level streaming becomes the `BlockSpec` index maps
+  (grid dim 2 walks the K slabs = the paper's `C·R·R` operand stream);
+* the per-PE 32-bit MAC becomes an MXU-shaped `jnp.dot` with f32
+  accumulation (`preferred_element_type`);
+* tiles default to 128×128×128 — MXU-aligned; pass smaller tiles for tiny
+  problems (the wrapper pads every dimension to the tile grid).
+
+`interpret=True` always: the CPU PJRT backend cannot run Mosaic
+custom-calls; correctness is established against `ref.py` and real-TPU
+performance is *estimated* from the VMEM footprint (see
+`vmem_footprint_bytes` and DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile (f32). 3 tiles of 128x128xf32 = 192 KiB —
+# comfortably inside a TensorCore's ~16 MiB VMEM even with double
+# buffering.
+DEFAULT_TILE = 128
+
+
+def _grid_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: accumulate a_tile @ b_tile into o_tile.
+
+    The output block index map ignores `k`, so the same VMEM tile is
+    revisited across the K walk — *output stationary*. `k == 0` zeroes the
+    accumulator (the PE reset at the start of a round).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    pr = rows - x.shape[0]
+    pc = cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k"))
+def os_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    tile_m: int = DEFAULT_TILE,
+    tile_n: int = DEFAULT_TILE,
+    tile_k: int = DEFAULT_TILE,
+) -> jax.Array:
+    """`a [M, K] @ b [K, N] -> [M, N]` with the OS-dataflow Pallas kernel.
+
+    `a` is the im2col patch matrix (one row per output position — the
+    paper's `P` dimension), `b` is the transposed weight matrix (one
+    column per filter — the paper's `Q` dimension). Inputs are padded to
+    the tile grid and the result is sliced back.
+    """
+    assert a.ndim == 2 and b.ndim == 2, "os_matmul expects 2-D operands"
+    assert a.shape[1] == b.shape[0], f"inner dims differ: {a.shape} @ {b.shape}"
+    m, k = a.shape
+    _, n = b.shape
+    tile_m = min(tile_m, _ceil_to(m, 8))
+    tile_n = min(tile_n, _ceil_to(n, 8))
+    tile_k = min(tile_k, _ceil_to(k, 8))
+    gm, gk, gn = _ceil_div(m, tile_m), _ceil_div(k, tile_k), _ceil_div(n, tile_n)
+    a_p = _pad_to(a.astype(jnp.float32), gm * tile_m, gk * tile_k)
+    b_p = _pad_to(b.astype(jnp.float32), gk * tile_k, gn * tile_n)
+
+    out = pl.pallas_call(
+        _grid_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            # Input patches stream along K for a fixed output row-tile —
+            # the row streaming bus of Fig. 10(a).
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            # Weights stream along K for a fixed output column-tile — the
+            # column streaming bus.
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        # Output tile index ignores kk: stationary accumulator.
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * tile_m, gn * tile_n), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _ceil_to(a: int, b: int) -> int:
+    return _ceil_div(a, b) * b
+
+
+def vmem_footprint_bytes(
+    tile_m: int = DEFAULT_TILE,
+    tile_n: int = DEFAULT_TILE,
+    tile_k: int = DEFAULT_TILE,
+    *,
+    double_buffered: bool = True,
+) -> int:
+    """Estimated VMEM residency of the kernel at the given tiling (f32).
+
+    Streaming operands are double-buffered by the Pallas pipeline; the
+    stationary accumulator is single-buffered. Used by the L1 perf report
+    (EXPERIMENTS.md §Perf) since interpret-mode wall-clock is not a TPU
+    proxy.
+    """
+    buf = 2 if double_buffered else 1
+    stream = buf * (tile_m * tile_k + tile_k * tile_n) * 4
+    acc = tile_m * tile_n * 4
+    return stream + acc
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, tile: int = DEFAULT_TILE) -> float:
+    """Fraction of MXU work that is useful (non-padding) for a problem."""
+    mm = _ceil_to(m, min(tile, _ceil_to(m, 8)))
+    kk = _ceil_to(k, min(tile, _ceil_to(k, 8)))
+    nn = _ceil_to(n, min(tile, _ceil_to(n, 8)))
+    return (m * k * n) / float(mm * kk * nn)

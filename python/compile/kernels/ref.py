@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the L1 kernel and the L2 model.
+
+These are the ground truth the Pallas kernel and the AOT artifacts are
+tested against (pytest, build time) and that `rust/src/runtime/reference.rs`
+mirrors on the rust side (run time).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain f32 matmul — the oracle for `os_matmul`."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int, pad: int) -> jax.Array:
+    """NCHW/OIHW convolution oracle via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def im2col_ref(x: jax.Array, r: int, stride: int, pad: int) -> jax.Array:
+    """Patch matrix `[P, C*R*R]` matching `reference.rs::im2col`.
+
+    Row `p = oy*Wo + ox` holds the receptive field of output position
+    (oy, ox), ordered (c, ky, kx) — the operand stream one PE row receives
+    per round in the OS dataflow.
+    """
+    patches = jax.lax.conv_general_dilated_patches(
+        x.astype(jnp.float32),
+        filter_shape=(r, r),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+    )  # [1, C*R*R, Ho, Wo], channel-major (c, ky, kx)
+    _, k, ho, wo = patches.shape
+    return patches.reshape(k, ho * wo).T

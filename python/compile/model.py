@@ -1,0 +1,99 @@
+"""L2 — the JAX model: convolution-layer forward in OS-dataflow form.
+
+`conv_forward` is the compute graph the accelerator executes for one
+layer: im2col the input (the row operand streams of Fig. 4), multiply by
+the transposed filter bank (the column streams) with the L1 Pallas
+OS-matmul kernel, and fold the `[P, Q]` result back to NCHW — each row of
+the matmul output is exactly the set of partial sums one gather packet
+round collects.
+
+This module is build-time only: `aot.py` lowers `conv_forward` to HLO
+text per layer shape, and the rust runtime executes the artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.os_matmul import os_matmul
+from .kernels.ref import im2col_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One convolution layer shape (mirrors rust `models::ConvLayer`)."""
+
+    name: str
+    c: int
+    h_in: int
+    r: int
+    stride: int
+    pad: int
+    q: int
+
+    @property
+    def h_out(self) -> int:
+        return (self.h_in + 2 * self.pad - self.r) // self.stride + 1
+
+    @property
+    def macs_per_output(self) -> int:
+        return self.c * self.r * self.r
+
+    def artifact_name(self) -> str:
+        """Must match rust `runtime::layer_exec::artifact_name`."""
+        return (
+            f"conv_c{self.c}_h{self.h_in}_r{self.r}"
+            f"_s{self.stride}_p{self.pad}_q{self.q}.hlo.txt"
+        )
+
+    def input_shape(self) -> tuple[int, int, int, int]:
+        return (1, self.c, self.h_in, self.h_in)
+
+    def weight_shape(self) -> tuple[int, int, int, int]:
+        return (self.q, self.c, self.r, self.r)
+
+
+def conv_forward(x: jax.Array, w: jax.Array, *, stride: int, pad: int) -> jax.Array:
+    """OS-dataflow convolution: im2col × Wᵀ via the Pallas kernel.
+
+    x: [1, C, H, H]; w: [Q, C, R, R] -> [1, Q, Ho, Wo].
+    """
+    n, c, h, _ = x.shape
+    q, cw, r, _ = w.shape
+    assert n == 1, "the accelerator model processes one image at a time"
+    assert c == cw, f"channel mismatch: {c} vs {cw}"
+    ho = (h + 2 * pad - r) // stride + 1
+    patches = im2col_ref(x, r, stride, pad)  # [P, C*R*R]
+    wt = w.reshape(q, c * r * r).T  # [C*R*R, Q]
+    out = os_matmul(patches, wt)  # [P, Q]
+    return out.T.reshape(1, q, ho, ho)
+
+
+def quickstart_spec() -> ConvSpec:
+    """The tiny layer used by examples/quickstart.rs."""
+    return ConvSpec(name="quickstart", c=4, h_in=8, r=3, stride=1, pad=1, q=8)
+
+
+def alexnet_lite_specs() -> list[ConvSpec]:
+    """Downscaled AlexNet conv stack for the end-to-end example.
+
+    Same layer topology (11/5/3/3/3 kernels, stride-4 stem) as torchvision
+    AlexNet with H and channel counts reduced so interpret-mode Pallas
+    stays tractable on CPU. The NoC *timing* simulation always uses the
+    full-size shapes (it consumes shape parameters, not tensors); these
+    lite shapes drive the *numeric* path through PJRT.
+    """
+    return [
+        ConvSpec(name="lite1", c=3, h_in=32, r=11, stride=4, pad=2, q=16),
+        ConvSpec(name="lite2", c=16, h_in=7, r=5, stride=1, pad=2, q=32),
+        ConvSpec(name="lite3", c=32, h_in=7, r=3, stride=1, pad=1, q=64),
+        ConvSpec(name="lite4", c=64, h_in=7, r=3, stride=1, pad=1, q=32),
+        ConvSpec(name="lite5", c=32, h_in=7, r=3, stride=1, pad=1, q=32),
+    ]
+
+
+def all_artifact_specs() -> list[ConvSpec]:
+    return [quickstart_spec(), *alexnet_lite_specs()]

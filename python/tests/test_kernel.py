@@ -1,0 +1,128 @@
+"""L1 kernel correctness: Pallas OS-matmul vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and tilings; every case asserts allclose against
+ref.matmul_ref. This is the core correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.os_matmul import (
+    mxu_utilization_estimate,
+    os_matmul,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+def assert_matches_ref(m, k, n, seed=0, **tiles):
+    a = rand((m, k), seed)
+    b = rand((k, n), seed + 1)
+    got = os_matmul(a, b, **tiles)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+class TestBasicShapes:
+    def test_square(self):
+        assert_matches_ref(32, 32, 32)
+
+    def test_tile_exact(self):
+        assert_matches_ref(128, 128, 128)
+
+    def test_single_row(self):
+        assert_matches_ref(1, 27, 8)
+
+    def test_single_col(self):
+        assert_matches_ref(17, 9, 1)
+
+    def test_k_equals_one(self):
+        assert_matches_ref(5, 1, 7)
+
+    def test_wide(self):
+        assert_matches_ref(8, 363, 64)  # AlexNet-conv1-like P-tile
+
+    def test_tall(self):
+        assert_matches_ref(3025 // 8, 27, 16)
+
+    def test_non_divisible_everything(self):
+        assert_matches_ref(33, 65, 17, tile_m=16, tile_n=16, tile_k=16)
+
+
+class TestNumerics:
+    def test_zeros(self):
+        a = jnp.zeros((16, 16))
+        b = jnp.zeros((16, 16))
+        assert float(jnp.abs(os_matmul(a, b)).max()) == 0.0
+
+    def test_identity(self):
+        a = rand((24, 24), 3)
+        got = os_matmul(a, jnp.eye(24))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a), rtol=1e-6, atol=1e-6)
+
+    def test_accumulation_order_stable(self):
+        # Two different K tilings must agree (f32 accumulate in both).
+        a = rand((16, 64), 5)
+        b = rand((64, 16), 6)
+        x = os_matmul(a, b, tile_k=16)
+        y = os_matmul(a, b, tile_k=64)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-6)
+
+    def test_dtype_is_f32(self):
+        out = os_matmul(rand((8, 8), 1), rand((8, 8), 2))
+        assert out.dtype == jnp.float32
+
+    def test_rejects_mismatched_inner(self):
+        with pytest.raises(AssertionError):
+            os_matmul(rand((4, 5), 0), rand((6, 4), 1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 96),
+    n=st.integers(1, 80),
+    tile=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(m, k, n, tile, seed):
+    assert_matches_ref(m, k, n, seed=seed, tile_m=tile, tile_n=tile, tile_k=tile)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 64),
+    n=st.integers(1, 40),
+)
+def test_hypothesis_dtype_sweep_bf16_inputs(m, k, n):
+    # bf16 inputs must still accumulate in f32 (MXU semantics).
+    a = rand((m, k), 11).astype(jnp.bfloat16)
+    b = rand((k, n), 12).astype(jnp.bfloat16)
+    got = os_matmul(a, b)
+    want = matmul_ref(a.astype(jnp.float32), b.astype(jnp.float32))
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+class TestPerfModel:
+    def test_vmem_footprint_fits_tensorcore(self):
+        # Default tiling with double buffering must fit 16 MiB VMEM.
+        assert vmem_footprint_bytes() < 16 * 1024 * 1024
+
+    def test_vmem_footprint_formula(self):
+        assert vmem_footprint_bytes(8, 8, 8, double_buffered=False) == 3 * 8 * 8 * 4
+
+    def test_mxu_utilization_bounds(self):
+        u = mxu_utilization_estimate(100, 100, 100)
+        assert 0.0 < u <= 1.0
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0

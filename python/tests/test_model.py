@@ -1,0 +1,99 @@
+"""L2 model correctness: OS-dataflow conv_forward vs the lax conv oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import conv2d_ref, im2col_ref
+from compile.model import (
+    ConvSpec,
+    all_artifact_specs,
+    alexnet_lite_specs,
+    conv_forward,
+    quickstart_spec,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+def assert_conv_matches(c, h, r, stride, pad, q, seed=0):
+    x = rand((1, c, h, h), seed)
+    w = rand((q, c, r, r), seed + 1)
+    got = conv_forward(x, w, stride=stride, pad=pad)
+    want = conv2d_ref(x, w, stride, pad)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+class TestConvForward:
+    def test_quickstart_shape(self):
+        assert_conv_matches(4, 8, 3, 1, 1, 8)
+
+    def test_strided_stem(self):
+        # AlexNet-lite conv1: 11x11 stride 4 pad 2.
+        assert_conv_matches(3, 32, 11, 4, 2, 16)
+
+    def test_no_padding(self):
+        assert_conv_matches(2, 9, 3, 1, 0, 4)
+
+    def test_1x1_conv(self):
+        assert_conv_matches(8, 6, 1, 1, 0, 12)
+
+    def test_all_lite_layers(self):
+        for spec in alexnet_lite_specs():
+            assert_conv_matches(
+                spec.c, spec.h_in, spec.r, spec.stride, spec.pad, spec.q, seed=42
+            )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 8),
+    h=st.integers(4, 16),
+    r=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 2),
+    pad=st.integers(0, 2),
+    q=st.integers(1, 12),
+    seed=st.integers(0, 1000),
+)
+def test_hypothesis_conv_sweep(c, h, r, stride, pad, q, seed):
+    if h + 2 * pad < r:
+        return  # degenerate geometry
+    assert_conv_matches(c, h, r, stride, pad, q, seed=seed)
+
+
+class TestIm2col:
+    def test_patch_matrix_shape(self):
+        x = rand((1, 3, 8, 8), 0)
+        p = im2col_ref(x, 3, 1, 1)
+        assert p.shape == (64, 27)
+
+    def test_patch_content_center(self):
+        # With padding 0 and r=1, patches are just the pixels.
+        x = rand((1, 2, 4, 4), 1)
+        p = im2col_ref(x, 1, 1, 0)
+        np.testing.assert_allclose(
+            np.asarray(p), np.asarray(x.reshape(2, 16).T), rtol=1e-6
+        )
+
+
+class TestSpecs:
+    def test_artifact_names_match_rust_convention(self):
+        s = quickstart_spec()
+        assert s.artifact_name() == "conv_c4_h8_r3_s1_p1_q8.hlo.txt"
+
+    def test_h_out_geometry(self):
+        s = ConvSpec("t", c=3, h_in=224, r=11, stride=4, pad=2, q=64)
+        assert s.h_out == 55
+
+    def test_all_specs_distinct_artifacts(self):
+        names = [s.artifact_name() for s in all_artifact_specs()]
+        assert len(names) == len(set(names))
+
+    def test_lite_stack_is_five_layers(self):
+        assert len(alexnet_lite_specs()) == 5

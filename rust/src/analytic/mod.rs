@@ -1,0 +1,138 @@
+//! Closed-form runtime latency of a convolution layer — Eqs. (3) and (4)
+//! of the paper (§4.5), used to sanity-check the simulator in the
+//! uncongested regime and to reproduce the paper's analysis of one-way vs
+//! two-way streaming.
+//!
+//! Notation (paper → here):
+//!
+//! * `C·R·R` → `macs_per_pe` — operand words streamed per PE per round;
+//! * `n` → `cfg.pes_per_router`;
+//! * `f_l` → `cfg.bus_words_per_cycle` (halved effectively for one-way);
+//! * `T_MAC` → `cfg.t_mac`;
+//! * `κ` → `cfg.router_pipeline`; our model additionally charges the
+//!   Table-1 link cycle explicitly, so the per-hop term is `κ + link`;
+//! * `P/N · Q/M · 1/n` → `rounds` (with ceilings, see
+//!   [`crate::dataflow::os::OsMapping`]);
+//! * `L`, `L'`, `W` → unicast/gather packet flit counts;
+//! * `η` → gather packet payload capacity;
+//! * `Δ_R`, `Δ_G` → congestion terms, **zero here** — they are what the
+//!   cycle-accurate simulation measures (§4.5: "We will evaluate the
+//!   effects of Δ_R and Δ_G through simulations").
+
+use crate::config::{SimConfig, Streaming};
+use crate::dataflow::os::OsMapping;
+use crate::models::ConvLayer;
+
+/// Zero-load components shared by both equations: the compute term
+/// `(C·R·R·n/f_l + T_MAC) · rounds`.
+pub fn compute_cycles(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> u64 {
+    let mapping = OsMapping::new(cfg, layer);
+    let stream = crate::pe::bus_stream_cycles(cfg, streaming, mapping.macs_per_pe);
+    (stream + cfg.t_mac) * mapping.rounds
+}
+
+/// Per-hop cycles of a head flit in our router model (κ + link).
+fn per_hop(cfg: &SimConfig) -> u64 {
+    cfg.router_pipeline + cfg.link_latency
+}
+
+/// Eq. (3): repetitive-unicast layer latency, Δ_R = 0.
+///
+/// `M·κ` is the head-flit latency of the *leftmost* node's result packet
+/// (all nodes transmit in parallel; the leftmost travels farthest), plus
+/// `⌈L/W⌉ − 1` for its remaining flits.
+pub fn latency_ru(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> u64 {
+    let m = cfg.mesh_cols as u64;
+    let serialization = cfg.unicast_packet_flits as u64 - 1;
+    compute_cycles(cfg, streaming, layer) + m * per_hop(cfg) + serialization
+}
+
+/// Eq. (4): gather-supported layer latency, Δ_G = 0.
+///
+/// The row needs `⌈M·n/η⌉` gather packets; packet `i` starts `i·η/n`
+/// columns east of the initiator and therefore travels `M − i·η/n` hops,
+/// each packet adding its own serialization tail.
+pub fn latency_gather(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> u64 {
+    let m = cfg.mesh_cols as u64;
+    let n = cfg.pes_per_router as u64;
+    let eta = cfg.gather_capacity() as u64;
+    let num_packets = (m * n).div_ceil(eta);
+    let serialization = cfg.gather_packet_flits as u64 - 1;
+    let mut collection = 0;
+    for i in 0..num_packets {
+        let hops = m.saturating_sub(i * eta / n);
+        collection += hops * per_hop(cfg) + serialization;
+    }
+    compute_cycles(cfg, streaming, layer) + collection
+}
+
+/// The analytic improvement factor RU/gather the paper derives in §4.5.
+pub fn improvement(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> f64 {
+    latency_ru(cfg, streaming, layer) as f64 / latency_gather(cfg, streaming, layer) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::alexnet;
+
+    fn layer() -> ConvLayer {
+        alexnet::conv_layers()[2].clone()
+    }
+
+    #[test]
+    fn one_gather_packet_on_8x8() {
+        // η = 8n on the 8×8 default, so one packet covers the row.
+        for n in [1, 2, 4, 8] {
+            let cfg = SimConfig::table1_8x8(n);
+            let m = 8u64;
+            let eta = cfg.gather_capacity() as u64;
+            assert_eq!((m * n as u64).div_ceil(eta), 1);
+        }
+    }
+
+    #[test]
+    fn two_gather_packets_on_16x16() {
+        for n in [1, 2, 4, 8] {
+            let cfg = SimConfig::table1_16x16(n);
+            let eta = cfg.gather_capacity() as u64;
+            assert_eq!((16 * n as u64).div_ceil(eta), 2);
+        }
+    }
+
+    #[test]
+    fn zero_load_forms_are_nearly_equal() {
+        // §4.5: "When n=1, the time taken to transmit the unicast packet
+        // from the leftmost node is nearly the same as the time taken to
+        // transmit the gather packet" — the real gap is congestion
+        // (Δ_R vs Δ_G), which the closed forms set to zero.
+        for n in [1, 2, 4, 8] {
+            for cfg in [SimConfig::table1_8x8(n), SimConfig::table1_16x16(n)] {
+                let ru = latency_ru(&cfg, Streaming::TwoWay, &layer()) as f64;
+                let g = latency_gather(&cfg, Streaming::TwoWay, &layer()) as f64;
+                let ratio = g / ru;
+                assert!((0.98..1.02).contains(&ratio), "n={n}: ratio={ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_way_beats_one_way_analytically() {
+        // §4.5 / Fig. 14: the two-way architecture halves the dominant
+        // stream term for the OS dataflow.
+        let cfg = SimConfig::table1_8x8(4);
+        let two = latency_gather(&cfg, Streaming::TwoWay, &layer());
+        let one = latency_gather(&cfg, Streaming::OneWay, &layer());
+        assert!(one > two);
+        let ratio = one as f64 / two as f64;
+        assert!(ratio > 1.5 && ratio < 2.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn compute_term_dominates_for_large_c() {
+        let cfg = SimConfig::table1_8x8(1);
+        let total = latency_gather(&cfg, Streaming::TwoWay, &layer());
+        let compute = compute_cycles(&cfg, Streaming::TwoWay, &layer());
+        assert!((total - compute) < total / 100);
+    }
+}

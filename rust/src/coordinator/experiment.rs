@@ -1,0 +1,123 @@
+//! One experiment = (network config, streaming architecture, collection
+//! scheme) applied to a workload. This is the unit every figure sweep and
+//! bench composes.
+
+use crate::config::{Collection, SimConfig, Streaming};
+use crate::dataflow::{run_layer, LayerRunResult};
+use crate::models::ConvLayer;
+use crate::power::{power_report, PowerReport};
+
+/// An architecture point under evaluation.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub cfg: SimConfig,
+    pub streaming: Streaming,
+    pub collection: Collection,
+}
+
+/// Result of one layer under one experiment.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub layer: String,
+    pub run: LayerRunResult,
+    pub power: PowerReport,
+}
+
+/// Result of a whole model (sum over conv layers, §5.3 "total runtime
+/// latency" — the output feature map of each layer is completely generated
+/// before the next layer starts, §5.1).
+#[derive(Debug, Clone)]
+pub struct ModelReport {
+    pub layers: Vec<LayerReport>,
+    pub total_cycles: u64,
+    pub total_energy_j: f64,
+}
+
+impl Experiment {
+    pub fn new(cfg: SimConfig, streaming: Streaming, collection: Collection) -> Experiment {
+        Experiment { cfg, streaming, collection }
+    }
+
+    /// The paper's proposed architecture: two-way streaming + gather.
+    pub fn proposed(cfg: SimConfig) -> Experiment {
+        Experiment::new(cfg, Streaming::TwoWay, Collection::Gather)
+    }
+
+    /// The paper's baseline: two-way streaming + repetitive unicast
+    /// (§5.3 compares collection schemes on the same streaming fabric).
+    pub fn baseline_ru(cfg: SimConfig) -> Experiment {
+        Experiment::new(cfg, Streaming::TwoWay, Collection::RepetitiveUnicast)
+    }
+
+    /// The gather-only architecture of [27]: gather packets but operand
+    /// distribution over the mesh itself.
+    pub fn gather_only(cfg: SimConfig) -> Experiment {
+        Experiment::new(cfg, Streaming::Mesh, Collection::Gather)
+    }
+
+    pub fn run_layer(&self, layer: &ConvLayer) -> LayerReport {
+        let run = run_layer(&self.cfg, self.streaming, self.collection, layer);
+        let power = power_report(
+            &self.cfg,
+            self.streaming,
+            self.collection,
+            &run.net,
+            &run.bus,
+            run.total_cycles,
+        );
+        LayerReport { layer: layer.name.to_string(), run, power }
+    }
+
+    pub fn run_model(&self, layers: &[ConvLayer]) -> ModelReport {
+        let layers: Vec<LayerReport> = layers.iter().map(|l| self.run_layer(l)).collect();
+        let total_cycles = layers.iter().map(|l| l.run.total_cycles).sum();
+        let total_energy_j = layers.iter().map(|l| l.power.total_j).sum();
+        ModelReport { layers, total_cycles, total_energy_j }
+    }
+}
+
+/// Improvement factor of `ours` over `base` (>1 means ours is better) for
+/// latency.
+pub fn latency_improvement(base: &LayerReport, ours: &LayerReport) -> f64 {
+    base.run.total_cycles as f64 / ours.run.total_cycles as f64
+}
+
+/// Improvement factor for *network* power consumption, as in Figs.
+/// 15(b)/(d) and 16(b)/(d): the paper's Orion-estimated NoC power (router
+/// dynamic + static over the runtime). The streaming buses are identical
+/// on both sides of the comparison and are reported separately by DSENT
+/// in the paper, so they are excluded from this ratio.
+pub fn power_improvement(base: &LayerReport, ours: &LayerReport) -> f64 {
+    (base.power.router_dynamic_j + base.power.router_static_j)
+        / (ours.power.router_dynamic_j + ours.power.router_static_j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ConvLayer;
+
+    fn tiny() -> ConvLayer {
+        ConvLayer { name: "tiny", c: 4, h_in: 8, r: 3, stride: 1, pad: 1, q: 16 }
+    }
+
+    #[test]
+    fn proposed_beats_baseline_on_congested_config() {
+        let cfg = SimConfig::table1_8x8(8);
+        let ours = Experiment::proposed(cfg.clone()).run_layer(&tiny());
+        let base = Experiment::baseline_ru(cfg).run_layer(&tiny());
+        let li = latency_improvement(&base, &ours);
+        let pi = power_improvement(&base, &ours);
+        assert!(li >= 1.0, "latency improvement {li}");
+        assert!(pi >= 1.0, "power improvement {pi}");
+    }
+
+    #[test]
+    fn model_report_sums_layers() {
+        let cfg = SimConfig::table1_8x8(2);
+        let e = Experiment::proposed(cfg);
+        let m = e.run_model(&[tiny(), tiny()]);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.total_cycles, m.layers.iter().map(|l| l.run.total_cycles).sum::<u64>());
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment orchestration: the [`experiment`] unit, the per-figure
+//! [`sweep`] generators, text/JSON [`report`] formatting and the
+//! leader/worker [`server`] that fans independent simulations out over
+//! threads.
+
+pub mod experiment;
+pub mod report;
+pub mod server;
+pub mod sweep;
+
+pub use experiment::{Experiment, LayerReport, ModelReport};

@@ -1,0 +1,190 @@
+//! Report formatting: aligned text tables (what the paper's figures plot)
+//! and JSON for downstream tooling.
+
+use crate::util::json::Json;
+
+use super::sweep::{Fig12Series, Fig13Row, Fig14Row, ModelFigPoint};
+
+/// Render an aligned text table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let header: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&header, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Fig. 12 text report: normalized latency/power vs the δ<κ point.
+pub fn fig12_text(series: &[Fig12Series]) -> String {
+    let mut rows = Vec::new();
+    for s in series {
+        let base = &s.points[0];
+        for p in &s.points {
+            rows.push(vec![
+                s.pes_per_router.to_string(),
+                if p.delta_over_kappa == 0 { "<1".into() } else { p.delta_over_kappa.to_string() },
+                p.latency_cycles.to_string(),
+                f3(p.latency_cycles as f64 / base.latency_cycles as f64),
+                f3(p.energy_j / base.energy_j),
+                p.packets.to_string(),
+            ]);
+        }
+    }
+    table(
+        &["PEs/router", "δ/κ", "latency(cyc)", "norm.latency", "norm.power", "gather pkts"],
+        &rows,
+    )
+}
+
+pub fn fig12_json(series: &[Fig12Series]) -> Json {
+    Json::Arr(
+        series
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("pes_per_router", Json::Num(s.pes_per_router as f64));
+                o.set(
+                    "points",
+                    Json::Arr(
+                        s.points
+                            .iter()
+                            .map(|p| {
+                                let mut q = Json::obj();
+                                q.set("delta_over_kappa", Json::Num(p.delta_over_kappa as f64))
+                                    .set("delta", Json::Num(p.delta as f64))
+                                    .set("latency_cycles", Json::Num(p.latency_cycles as f64))
+                                    .set("energy_j", Json::Num(p.energy_j))
+                                    .set("packets", Json::Num(p.packets as f64));
+                                q
+                            })
+                            .collect(),
+                    ),
+                );
+                o
+            })
+            .collect(),
+    )
+}
+
+/// Fig. 13 text report.
+pub fn fig13_text(rows: &[Fig13Row]) -> String {
+    let data: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{0}x{0}", r.mesh),
+                r.pes_per_router.to_string(),
+                f2(r.one_large.0),
+                f2(r.one_large.1),
+                f2(r.two_small.0),
+                f2(r.two_small.1),
+            ]
+        })
+        .collect();
+    table(
+        &["mesh", "PEs/router", "1pkt lat.impr", "1pkt pow.impr", "2pkt lat.impr", "2pkt pow.impr"],
+        &data,
+    )
+}
+
+/// Fig. 14 text report.
+pub fn fig14_text(rows: &[Fig14Row]) -> String {
+    let mut data: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![r.model.to_string(), r.layer.clone(), f2(r.two_way), f2(r.one_way)]
+        })
+        .collect();
+    let avg2 = rows.iter().map(|r| r.two_way).sum::<f64>() / rows.len() as f64;
+    let avg1 = rows.iter().map(|r| r.one_way).sum::<f64>() / rows.len() as f64;
+    data.push(vec!["average".into(), "-".into(), f2(avg2), f2(avg1)]);
+    table(&["model", "layer", "2-way vs gather-only", "1-way vs gather-only"], &data)
+}
+
+/// Figs. 15/16 text report.
+pub fn fig_model_text(points: &[ModelFigPoint]) -> String {
+    let data: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.layer.clone(),
+                format!("{0}x{0}", p.mesh),
+                p.pes_per_router.to_string(),
+                f2(p.latency_improvement),
+                f2(p.power_improvement),
+            ]
+        })
+        .collect();
+    table(&["layer", "mesh", "PEs/router", "latency impr (RU/G)", "power impr (RU/G)"], &data)
+}
+
+pub fn fig_model_json(points: &[ModelFigPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("layer", Json::Str(p.layer.clone()))
+                    .set("mesh", Json::Num(p.mesh as f64))
+                    .set("pes_per_router", Json::Num(p.pes_per_router as f64))
+                    .set("latency_improvement", Json::Num(p.latency_improvement))
+                    .set("power_improvement", Json::Num(p.power_improvement));
+                o
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["a", "long-header"],
+            &[vec!["1".into(), "2".into()], vec!["100".into(), "x".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All data lines same width.
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert!(lines[0].contains("long-header"));
+    }
+
+    #[test]
+    fn float_formats() {
+        assert_eq!(f2(1.867), "1.87");
+        assert_eq!(f3(0.12345), "0.123");
+    }
+}

@@ -1,0 +1,75 @@
+//! Leader/worker execution of independent experiments.
+//!
+//! Figure sweeps run dozens of independent simulations; this module fans
+//! them out over OS threads (the offline environment has no async runtime,
+//! and simulations are CPU-bound anyway — threads are the right tool).
+//! The leader owns the work list; workers claim indices from a shared
+//! atomic counter, so long and short simulations balance automatically.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Map `f` over `inputs` using up to `workers` threads, preserving input
+/// order in the output. Panics in `f` propagate to the caller.
+pub fn parallel_map<I, O, F>(inputs: Vec<I>, workers: usize, f: F) -> Vec<O>
+where
+    I: Send + Sync,
+    O: Send,
+    F: Fn(&I) -> O + Sync,
+{
+    let n = inputs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return inputs.iter().map(|i| f(i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<O>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(&inputs[i]);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("worker skipped a slot"))
+        .collect()
+}
+
+/// Default worker count: physical parallelism with a small cap to keep
+/// the host responsive.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map((0..100).collect(), 8, |&x: &i32| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let empty: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |&x| x);
+        assert!(empty.is_empty());
+        assert_eq!(parallel_map(vec![7], 4, |&x: &i32| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_workers_than_items_is_fine() {
+        assert_eq!(parallel_map(vec![1, 2], 64, |&x: &i32| x), vec![1, 2]);
+    }
+}

@@ -1,0 +1,283 @@
+//! Figure generators: each function reproduces the workload, sweep and
+//! normalization of one figure in the paper's evaluation (§5.2–§5.3).
+//! The bench targets and the CLI `figure` subcommand are thin wrappers
+//! over these.
+
+use crate::config::{Collection, SimConfig, Streaming};
+use crate::models::{alexnet, vgg16, ConvLayer};
+use crate::noc::network::Network;
+use crate::noc::stats::{BusStats, NetStats};
+use crate::noc::Coord;
+use crate::power::power_report;
+
+use super::experiment::{latency_improvement, power_improvement, Experiment};
+use super::server::{default_workers, parallel_map};
+
+// ---------------------------------------------------------------------
+// Fig. 12 — analysis of δ on the single-row collection scenario (Fig. 5)
+// ---------------------------------------------------------------------
+
+/// One point of the δ sweep.
+#[derive(Debug, Clone)]
+pub struct Fig12Point {
+    /// δ in units of κ (0 encodes the paper's "δ < κ" leftmost point).
+    pub delta_over_kappa: u64,
+    pub delta: u64,
+    pub latency_cycles: u64,
+    pub energy_j: f64,
+    /// Gather packets the row ended up using.
+    pub packets: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig12Series {
+    pub pes_per_router: usize,
+    pub points: Vec<Fig12Point>,
+}
+
+/// The Fig. 5 microbenchmark: every node of row 0 has one round of
+/// payloads ready at t=0 and delivers them to the row memory element.
+/// Returns (runtime latency, raw stats).
+pub fn single_row_collection(cfg: &SimConfig, collection: Collection) -> (u64, NetStats) {
+    let mut net = Network::new(cfg, collection);
+    for x in 0..cfg.mesh_cols {
+        net.post_result(0, Coord::new(x as u16, 0), cfg.pes_per_router as u32);
+    }
+    let total = (cfg.mesh_cols * cfg.pes_per_router) as u64;
+    let bound = 1_000_000 + cfg.delta * 4;
+    let ok = net.run_until(|n| n.payloads_delivered >= total, bound);
+    assert!(ok, "single-row collection stalled: {}/{total}", net.payloads_delivered);
+    (net.cycle, net.stats.clone())
+}
+
+/// Fig. 12: sweep δ over multiples of κ for each PEs/router setting.
+pub fn fig12(mesh: usize, kappa_factors: &[u64]) -> Vec<Fig12Series> {
+    [1usize, 2, 4, 8]
+        .iter()
+        .map(|&n| {
+            let points = kappa_factors
+                .iter()
+                .map(|&f| {
+                    let mut cfg = SimConfig::table1(mesh, n);
+                    let kappa = cfg.kappa();
+                    // factor 0 = the "δ < κ" regime (timeout fires at once).
+                    cfg.delta = f * kappa;
+                    let (lat, stats) = single_row_collection(&cfg, Collection::Gather);
+                    // No streaming in this microbenchmark: network power only.
+                    let p = power_report(
+                        &cfg,
+                        Streaming::Mesh,
+                        Collection::Gather,
+                        &stats,
+                        &BusStats::default(),
+                        lat,
+                    );
+                    Fig12Point {
+                        delta_over_kappa: f,
+                        delta: cfg.delta,
+                        latency_cycles: lat,
+                        // Traffic-dependent (Orion dynamic) energy: the
+                        // microbenchmark isolates the gather mechanism, so
+                        // fabric leakage over the tiny window is excluded.
+                        energy_j: p.router_dynamic_j,
+                        packets: stats.packets_injected,
+                    }
+                })
+                .collect();
+            Fig12Series { pes_per_router: n, points }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Fig. 13 — gather packet size study (1 large vs 2 small packets)
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig13Row {
+    pub mesh: usize,
+    pub pes_per_router: usize,
+    /// (latency, power) improvement over RU with one full-row packet.
+    pub one_large: (f64, f64),
+    /// (latency, power) improvement over RU with two half-row packets.
+    pub two_small: (f64, f64),
+}
+
+/// Configure the gather packet size for `packets_per_row` packets covering
+/// an `m`-column row with `n` PEs/router (head + payload flits).
+pub fn packet_flits_for_row(cfg: &SimConfig, packets_per_row: usize) -> usize {
+    let slots = (cfg.mesh_cols * cfg.pes_per_router) as u32;
+    let per_packet = slots.div_ceil(packets_per_row as u32);
+    1 + per_packet.div_ceil(cfg.payloads_per_flit()) as usize
+}
+
+/// Fig. 13: latency/power improvement over RU for the two packet-size
+/// policies, on `mesh`×`mesh`, for each PEs/router setting.
+pub fn fig13(mesh: usize, layer: &ConvLayer) -> Vec<Fig13Row> {
+    let jobs: Vec<usize> = vec![1, 2, 4, 8];
+    parallel_map(jobs, default_workers(), |&n| {
+        let mut base_cfg = SimConfig::table1(mesh, n);
+        base_cfg.trace_driven = true; // §5.1 trace methodology
+        let ru = Experiment::baseline_ru(base_cfg.clone()).run_layer(layer);
+
+        let mut one = base_cfg.clone();
+        one.gather_packets_per_row = 1;
+        one.gather_packet_flits = packet_flits_for_row(&one, 1);
+        let one_rep = Experiment::proposed(one).run_layer(layer);
+
+        let mut two = base_cfg.clone();
+        two.gather_packets_per_row = 2;
+        two.gather_packet_flits = packet_flits_for_row(&two, 2);
+        let two_rep = Experiment::proposed(two).run_layer(layer);
+
+        Fig13Row {
+            mesh,
+            pes_per_router: n,
+            one_large: (
+                latency_improvement(&ru, &one_rep),
+                power_improvement(&ru, &one_rep),
+            ),
+            two_small: (
+                latency_improvement(&ru, &two_rep),
+                power_improvement(&ru, &two_rep),
+            ),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------
+// Fig. 14 — streaming architectures vs gather-only [27]
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig14Row {
+    pub model: &'static str,
+    pub layer: String,
+    /// Runtime-latency improvement of gather + two-way streaming.
+    pub two_way: f64,
+    /// Runtime-latency improvement of gather + one-way streaming.
+    pub one_way: f64,
+}
+
+/// Fig. 14: per conv layer of AlexNet and VGG-16, runtime improvement of
+/// the streaming architectures over the gather-only architecture.
+pub fn fig14(mesh: usize, n: usize) -> Vec<Fig14Row> {
+    let mut jobs: Vec<(&'static str, ConvLayer)> = Vec::new();
+    for l in alexnet::conv_layers() {
+        jobs.push(("alexnet", l));
+    }
+    for l in vgg16::conv_layers() {
+        jobs.push(("vgg16", l));
+    }
+    parallel_map(jobs, default_workers(), |(model, layer)| {
+        let cfg = SimConfig::table1(mesh, n);
+        let base = Experiment::gather_only(cfg.clone()).run_layer(layer);
+        let two = Experiment::proposed(cfg.clone()).run_layer(layer);
+        let one = Experiment::new(cfg, Streaming::OneWay, Collection::Gather).run_layer(layer);
+        Fig14Row {
+            model,
+            layer: layer.name.to_string(),
+            two_way: latency_improvement(&base, &two),
+            one_way: latency_improvement(&base, &one),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------
+// Figs. 15/16 — per-layer improvement over RU across mesh sizes and n
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ModelFigPoint {
+    pub layer: String,
+    pub mesh: usize,
+    pub pes_per_router: usize,
+    pub latency_improvement: f64,
+    pub power_improvement: f64,
+}
+
+/// Figs. 15 (AlexNet) and 16 (VGG-16): for each conv layer, mesh size and
+/// PEs/router, the improvement of gather over RU (both on the two-way
+/// streaming fabric, §5.3).
+pub fn fig_model(layers: &[ConvLayer], meshes: &[usize], ns: &[usize]) -> Vec<ModelFigPoint> {
+    let mut jobs = Vec::new();
+    for layer in layers {
+        for &mesh in meshes {
+            for &n in ns {
+                jobs.push((layer.clone(), mesh, n));
+            }
+        }
+    }
+    parallel_map(jobs, default_workers(), |(layer, mesh, n)| {
+        let mut cfg = SimConfig::table1(*mesh, *n);
+        cfg.trace_driven = true; // §5.1 trace methodology
+        let ru = Experiment::baseline_ru(cfg.clone()).run_layer(layer);
+        let g = Experiment::proposed(cfg).run_layer(layer);
+        ModelFigPoint {
+            layer: layer.name.to_string(),
+            mesh: *mesh,
+            pes_per_router: *n,
+            latency_improvement: latency_improvement(&ru, &g),
+            power_improvement: power_improvement(&ru, &g),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_row_gather_uses_one_packet_with_ample_delta() {
+        let cfg = SimConfig::table1_8x8(1);
+        let (lat, stats) = single_row_collection(&cfg, Collection::Gather);
+        // One gather packet collects the whole row.
+        assert_eq!(stats.packets_injected, 1, "stats: {stats:?}");
+        assert_eq!(stats.gather_boards, 7);
+        assert!(lat > 0);
+    }
+
+    #[test]
+    fn single_row_ru_uses_one_packet_per_node() {
+        let cfg = SimConfig::table1_8x8(1);
+        let (_, stats) = single_row_collection(&cfg, Collection::RepetitiveUnicast);
+        assert_eq!(stats.packets_injected, 8);
+    }
+
+    #[test]
+    fn tiny_delta_degenerates_to_per_node_packets() {
+        let mut cfg = SimConfig::table1_8x8(1);
+        cfg.delta = 0;
+        let (_, stats) = single_row_collection(&cfg, Collection::Gather);
+        // δ < κ: every node fires its own packet (paper §5.2).
+        assert!(stats.packets_injected >= 7, "packets: {}", stats.packets_injected);
+    }
+
+    #[test]
+    fn packet_sizing_matches_table1() {
+        // One full-row packet on 8×8 must equal Table 1's defaults.
+        for n in [1usize, 2, 4, 8] {
+            let cfg = SimConfig::table1_8x8(n);
+            assert_eq!(packet_flits_for_row(&cfg, 1), SimConfig::gather_flits_for(n));
+        }
+        // Two-packet sizing halves the payload flits (+ head).
+        let cfg = SimConfig::table1_8x8(8);
+        assert_eq!(packet_flits_for_row(&cfg, 2), 9);
+    }
+
+    #[test]
+    fn fig12_latency_improves_with_delta_under_load() {
+        let series = fig12(8, &[0, 9]);
+        let s8 = series.iter().find(|s| s.pes_per_router == 8).unwrap();
+        let degenerate = &s8.points[0];
+        let plateau = &s8.points[1];
+        assert!(
+            plateau.latency_cycles <= degenerate.latency_cycles,
+            "δ=9κ ({}) should beat δ<κ ({})",
+            plateau.latency_cycles,
+            degenerate.latency_cycles
+        );
+        assert!(plateau.energy_j < degenerate.energy_j);
+        assert!(plateau.packets < degenerate.packets);
+    }
+}

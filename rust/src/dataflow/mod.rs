@@ -1,0 +1,14 @@
+//! The Output-Stationary dataflow mapper and the per-layer round driver.
+//!
+//! [`os`] turns a convolution layer shape into the OS mapping of Fig. 4:
+//! rows ↔ input patches, columns ↔ filters, `n` PEs/router, and the number
+//! of rounds needed to cover `P × Q`. [`driver`] runs the mapped layer on
+//! the cycle-accurate [`crate::noc::Network`], round by round, and
+//! extrapolates the full-layer latency/energy from the simulated prefix
+//! (see DESIGN.md, "Cycle simulation with round extrapolation").
+
+pub mod driver;
+pub mod os;
+
+pub use driver::{run_layer, LayerRunResult};
+pub use os::OsMapping;

@@ -1,0 +1,131 @@
+//! Output-Stationary mapping of a convolution layer onto the mesh (Fig. 4).
+//!
+//! Each round, every PE computes one output element: the PE at row `y`,
+//! column `x` (one of `n` behind the router) accumulates
+//! `C·R·R` MACs between its patch's input stream (row bus / west edge) and
+//! its filter's weight stream (column bus / north edge), per Eq. (2).
+//! Rows cover input patches (`P`), columns cover filters (`Q`); with `n`
+//! PEs per router grouped column-wise (§4.4 option 1), a round covers
+//! `N·n` patches × `M` filters, hence
+//! `rounds = ⌈P/(N·n)⌉ · ⌈Q/M⌉` — the `P/N · Q/M · 1/n` factor of
+//! Eqs. (3)–(4).
+
+use crate::config::{PeGrouping, SimConfig};
+use crate::models::ConvLayer;
+
+/// The OS mapping of one layer onto one mesh configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OsMapping {
+    /// Patches covered per round (N·n).
+    pub patches_per_round: u64,
+    /// Filters covered per round (M).
+    pub filters_per_round: u64,
+    /// Total rounds to cover P × Q.
+    pub rounds: u64,
+    /// MACs per PE per round (C·R·R).
+    pub macs_per_pe: u64,
+    /// Result payloads per router NI per round (n partial sums).
+    pub payloads_per_node: u32,
+    /// Input-activation words one row bus must deliver per round
+    /// (n patch streams × C·R·R words).
+    pub row_stream_words: u64,
+    /// Weight words one column bus must deliver per round
+    /// (one filter stream × C·R·R words).
+    pub col_stream_words: u64,
+}
+
+impl OsMapping {
+    pub fn new(cfg: &SimConfig, layer: &ConvLayer) -> OsMapping {
+        let n = cfg.pes_per_router as u64;
+        let rows = cfg.mesh_rows as u64;
+        let cols = cfg.mesh_cols as u64;
+        let p = layer.p_patches();
+        let q = layer.q as u64;
+        let macs = layer.macs_per_output();
+        // §4.4: column grouping multiplies the patch coverage (n input
+        // sets per NI, one filter set); row grouping multiplies the
+        // filter coverage (one input set, n filter sets).
+        let (patches_per_round, filters_per_round, row_words, col_words) =
+            match cfg.pe_grouping {
+                PeGrouping::Column => (rows * n, cols, n * macs, macs),
+                PeGrouping::Row => (rows, cols * n, macs, n * macs),
+            };
+        let rounds = p.div_ceil(patches_per_round) * q.div_ceil(filters_per_round);
+        OsMapping {
+            patches_per_round,
+            filters_per_round,
+            rounds,
+            macs_per_pe: macs,
+            payloads_per_node: n as u32,
+            row_stream_words: row_words,
+            col_stream_words: col_words,
+        }
+    }
+
+    /// Result payloads produced network-wide per round.
+    pub fn payloads_per_round(&self, cfg: &SimConfig) -> u64 {
+        (cfg.mesh_rows * cfg.mesh_cols) as u64 * self.payloads_per_node as u64
+    }
+
+    /// Total output elements of the layer actually needed (`P·Q`); the
+    /// final round's padding outputs are discarded by the memory element.
+    pub fn useful_outputs(&self, layer: &ConvLayer) -> u64 {
+        layer.p_patches() * layer.q as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::alexnet;
+
+    #[test]
+    fn rounds_follow_the_paper_formula() {
+        // conv3 of AlexNet: P = 169, Q = 384, on 8×8 with n = 2.
+        let cfg = SimConfig::table1_8x8(2);
+        let layer = &alexnet::conv_layers()[2];
+        let m = OsMapping::new(&cfg, layer);
+        assert_eq!(m.patches_per_round, 16);
+        assert_eq!(m.filters_per_round, 8);
+        // ceil(169/16) * ceil(384/8) = 11 * 48
+        assert_eq!(m.rounds, 11 * 48);
+        assert_eq!(m.macs_per_pe, 192 * 9);
+    }
+
+    #[test]
+    fn more_pes_reduce_rounds() {
+        let layer = &alexnet::conv_layers()[1];
+        let r1 = OsMapping::new(&SimConfig::table1_8x8(1), layer).rounds;
+        let r8 = OsMapping::new(&SimConfig::table1_8x8(8), layer).rounds;
+        assert!(r8 < r1);
+        // Roughly 8x fewer rounds (up to ceiling effects).
+        assert!(r1 as f64 / r8 as f64 > 6.0);
+    }
+
+    #[test]
+    fn row_grouping_swaps_coverage_and_stream_words() {
+        use crate::config::PeGrouping;
+        let layer = &alexnet::conv_layers()[2];
+        let mut cfg = SimConfig::table1_8x8(4);
+        cfg.pe_grouping = PeGrouping::Row;
+        let m = OsMapping::new(&cfg, layer);
+        assert_eq!(m.patches_per_round, 8);
+        assert_eq!(m.filters_per_round, 32);
+        assert_eq!(m.row_stream_words, m.macs_per_pe);
+        assert_eq!(m.col_stream_words, 4 * m.macs_per_pe);
+        // Same total coverage per round as column grouping.
+        let col = OsMapping::new(&SimConfig::table1_8x8(4), layer);
+        assert_eq!(
+            m.patches_per_round * m.filters_per_round,
+            col.patches_per_round * col.filters_per_round
+        );
+    }
+
+    #[test]
+    fn stream_words_scale_with_n() {
+        let layer = &alexnet::conv_layers()[2];
+        let m = OsMapping::new(&SimConfig::table1_8x8(4), layer);
+        assert_eq!(m.row_stream_words, 4 * m.macs_per_pe);
+        assert_eq!(m.col_stream_words, m.macs_per_pe);
+    }
+}

@@ -1,0 +1,62 @@
+//! # noc-dnn — Data Streaming and Traffic Gathering in Mesh-based NoC for DNN Acceleration
+//!
+//! Full-system reproduction of Tiwari, Yang, Wang & Jiang (J. Systems
+//! Architecture 2022 / arXiv 2021). The paper proposes two communication
+//! mechanisms for mesh-based DNN accelerator NoCs running the
+//! Output-Stationary (OS) dataflow:
+//!
+//! * **Gather packets** — a many-to-one collection packet that picks up the
+//!   partial-sum payloads of intermediate routers on its way to the global
+//!   memory (Algorithm 1 of the paper), governed by a timeout `δ`.
+//! * **Streaming buses** — one-way / two-way buses that stream input
+//!   activations and filter weights directly to PE rows/columns, relieving
+//!   the mesh of one-to-many traffic.
+//!
+//! The crate contains every substrate the paper depends on, rebuilt from
+//! scratch:
+//!
+//! * [`noc`] — a cycle-accurate, flit-level mesh NoC simulator
+//!   (4-stage router pipeline, virtual channels, credit flow control,
+//!   XY routing, gather and multicast packet support).
+//! * [`streaming`] — the one-way/two-way streaming bus architecture.
+//! * [`pe`] — processing-element and network-interface timing models.
+//! * [`dataflow`] — the OS dataflow mapper that turns a convolution layer
+//!   into per-round NoC traffic.
+//! * [`models`] — AlexNet / VGG-16 convolution layer shape tables.
+//! * [`power`] — Orion-3.0-style router energy and DSENT-style bus energy
+//!   models plus the §5.4 area/power overhead roll-up.
+//! * [`analytic`] — the closed-form latency models of Eqs. (3) and (4).
+//! * [`coordinator`] — experiment orchestration: sweeps, baselines, and
+//!   regeneration of every figure in the paper's evaluation section.
+//! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas
+//!   convolution artifacts (`artifacts/*.hlo.txt`) and executes the real
+//!   layer numerics from rust; Python is never on the request path.
+//! * [`config`] — configuration types with JSON round-trip (Table 1 defaults).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use noc_dnn::config::SimConfig;
+//! use noc_dnn::coordinator::Experiment;
+//! use noc_dnn::models::alexnet;
+//!
+//! let cfg = SimConfig::table1_8x8(4); // 8x8 mesh, 4 PEs/router
+//! let layer = &alexnet::conv_layers()[0];
+//! let report = Experiment::proposed(cfg).run_layer(layer);
+//! println!("latency = {} cycles", report.run.total_cycles);
+//! ```
+
+pub mod analytic;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod models;
+pub mod noc;
+pub mod pe;
+pub mod power;
+pub mod runtime;
+pub mod streaming;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,206 @@
+//! `noc-dnn` — CLI for the mesh-NoC DNN-acceleration reproduction.
+//!
+//! ```text
+//! noc-dnn figure 12 [--mesh 8] [--json]         # δ sweep (Fig. 12)
+//! noc-dnn figure 13 [--mesh 8]                  # gather packet size study
+//! noc-dnn figure 14 [--mesh 8] [--n 4]          # streaming vs gather-only
+//! noc-dnn figure 15                             # AlexNet vs RU
+//! noc-dnn figure 16                             # VGG-16 vs RU
+//! noc-dnn run --model alexnet [--mesh 8] [--n 4] [--streaming two-way]
+//!             [--collection gather] [--rounds-cap 8]
+//! noc-dnn overhead                              # §5.4 router overhead
+//! noc-dnn config --show [--mesh 8] [--n 1]      # print Table-1 config JSON
+//! ```
+
+use anyhow::{bail, Result};
+use noc_dnn::config::{Collection, SimConfig, Streaming};
+use noc_dnn::coordinator::{report, sweep, Experiment};
+use noc_dnn::models::{alexnet, vgg16, ConvLayer};
+use noc_dnn::power::area::overhead_report;
+use noc_dnn::util::cli::Args;
+
+const VALUED: &[&str] =
+    &["mesh", "n", "model", "streaming", "collection", "rounds-cap", "delta", "layer"];
+const BOOLEAN: &[&str] = &["json", "show", "help"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), VALUED, BOOLEAN)?;
+    if args.get_bool("help") || args.positional(0).is_none() {
+        print!("{}", usage());
+        return Ok(());
+    }
+    match args.positional(0).unwrap() {
+        "figure" => figure(&args),
+        "run" => run(&args),
+        "overhead" => overhead(&args),
+        "config" => config_cmd(&args),
+        cmd => bail!("unknown command '{cmd}'\n{}", usage()),
+    }
+}
+
+fn usage() -> &'static str {
+    "noc-dnn — Data Streaming and Traffic Gathering in Mesh-based NoC for DNN Acceleration
+
+USAGE:
+  noc-dnn figure <12|13|14|15|16> [--mesh 8|16] [--n 1|2|4|8] [--json]
+  noc-dnn run --model <alexnet|vgg16> [--mesh N] [--n N]
+              [--streaming mesh|one-way|two-way] [--collection ru|gather]
+              [--rounds-cap K] [--delta D] [--layer NAME]
+  noc-dnn overhead
+  noc-dnn config --show [--mesh N] [--n N]
+"
+}
+
+fn cfg_from(args: &Args) -> Result<SimConfig> {
+    let mesh: usize = args.get_parsed("mesh", 8)?;
+    let n: usize = args.get_parsed("n", 1)?;
+    let mut cfg = SimConfig::table1(mesh, n);
+    cfg.sim_rounds_cap = args.get_parsed("rounds-cap", cfg.sim_rounds_cap)?;
+    cfg.delta = args.get_parsed("delta", cfg.delta)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn model_layers(name: &str) -> Result<Vec<ConvLayer>> {
+    match name {
+        "alexnet" => Ok(alexnet::conv_layers()),
+        "vgg16" => Ok(vgg16::conv_layers()),
+        m => bail!("unknown model '{m}' (alexnet | vgg16)"),
+    }
+}
+
+fn figure(args: &Args) -> Result<()> {
+    let which = args.positional(1).ok_or_else(|| anyhow::anyhow!("figure needs a number"))?;
+    let mesh: usize = args.get_parsed("mesh", 8)?;
+    match which {
+        "12" => {
+            let series = sweep::fig12(mesh, &[0, 1, 3, 5, 7, 9, 11]);
+            if args.get_bool("json") {
+                println!("{}", report::fig12_json(&series).to_pretty());
+            } else {
+                println!("Fig. 12 — effect of δ on {mesh}x{mesh} single-row collection");
+                print!("{}", report::fig12_text(&series));
+            }
+        }
+        "13" => {
+            let layer = &alexnet::conv_layers()[2]; // representative conv
+            let rows = sweep::fig13(mesh, layer);
+            println!(
+                "Fig. 13 — gather packet size study on {mesh}x{mesh} (workload: AlexNet {})",
+                layer.name
+            );
+            print!("{}", report::fig13_text(&rows));
+        }
+        "14" => {
+            let n: usize = args.get_parsed("n", 1)?;
+            let rows = sweep::fig14(mesh, n);
+            println!("Fig. 14 — runtime improvement over gather-only [27] ({mesh}x{mesh}, n={n})");
+            print!("{}", report::fig14_text(&rows));
+        }
+        "15" | "16" => {
+            let layers =
+                if which == "15" { alexnet::conv_layers() } else { vgg16::conv_layers() };
+            let name = if which == "15" { "AlexNet" } else { "VGG-16" };
+            let points = sweep::fig_model(&layers, &[8, 16], &[1, 2, 4, 8]);
+            if args.get_bool("json") {
+                println!("{}", report::fig_model_json(&points).to_pretty());
+            } else {
+                println!("Fig. {which} — {name}: gather vs RU on two-way streaming");
+                print!("{}", report::fig_model_text(&points));
+            }
+        }
+        f => bail!("unknown figure '{f}' (12..16)"),
+    }
+    Ok(())
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = cfg_from(args)?;
+    let streaming = match args.get("streaming").unwrap_or("two-way") {
+        "mesh" => Streaming::Mesh,
+        "one-way" => Streaming::OneWay,
+        "two-way" => Streaming::TwoWay,
+        s => bail!("unknown streaming '{s}'"),
+    };
+    let collection = match args.get("collection").unwrap_or("gather") {
+        "ru" | "unicast" => Collection::RepetitiveUnicast,
+        "gather" => Collection::Gather,
+        s => bail!("unknown collection '{s}'"),
+    };
+    let mut layers = model_layers(args.get("model").unwrap_or("alexnet"))?;
+    if let Some(name) = args.get("layer") {
+        layers.retain(|l| l.name == name);
+        anyhow::ensure!(!layers.is_empty(), "no layer named '{name}'");
+    }
+    let exp = Experiment::new(cfg.clone(), streaming, collection);
+    println!(
+        "running {} layer(s) on {}x{} mesh, n={}, streaming={}, collection={}",
+        layers.len(),
+        cfg.mesh_cols,
+        cfg.mesh_rows,
+        cfg.pes_per_router,
+        streaming.label(),
+        collection.label()
+    );
+    let m = exp.run_model(&layers);
+    let rows: Vec<Vec<String>> = m
+        .layers
+        .iter()
+        .map(|l| {
+            vec![
+                l.layer.clone(),
+                l.run.rounds_total.to_string(),
+                l.run.total_cycles.to_string(),
+                format!("{:.3}", l.run.total_seconds(&cfg) * 1e3),
+                format!("{:.3}", l.power.total_j * 1e3),
+                format!("{:.1}", l.power.avg_power_w * 1e3),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::table(
+            &["layer", "rounds", "cycles", "runtime(ms)", "energy(mJ)", "avg power(mW)"],
+            &rows
+        )
+    );
+    println!(
+        "TOTAL: {} cycles = {:.3} ms, {:.3} mJ",
+        m.total_cycles,
+        m.total_cycles as f64 / cfg.clock_hz * 1e3,
+        m.total_energy_j * 1e3
+    );
+    Ok(())
+}
+
+fn overhead(_args: &Args) -> Result<()> {
+    let r = overhead_report(1.0e9);
+    println!("§5.4 hardware overhead (45 nm, 1 GHz router, Table 1 config)");
+    print!(
+        "{}",
+        report::table(
+            &["", "baseline", "gather-supported", "overhead"],
+            &[
+                vec![
+                    "power (mW)".into(),
+                    format!("{:.2}", r.baseline_power_mw),
+                    format!("{:.2}", r.proposed_power_mw),
+                    format!("{:.1}%", r.power_overhead_pct),
+                ],
+                vec![
+                    "area (µm²)".into(),
+                    format!("{:.0}", r.baseline_area_um2),
+                    format!("{:.0}", r.proposed_area_um2),
+                    format!("{:.1}%", r.area_overhead_pct),
+                ],
+            ]
+        )
+    );
+    Ok(())
+}
+
+fn config_cmd(args: &Args) -> Result<()> {
+    let cfg = cfg_from(args)?;
+    println!("{}", cfg.to_json());
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! AlexNet [4] convolution layers, torchvision shapes (the "one weird
+//! trick" single-GPU variant the PyTorch model zoo ships: 64 conv1
+//! filters). Pooling/FC layers generate negligible NoC collection traffic
+//! relative to the conv stack and are not part of the paper's evaluation.
+
+use super::ConvLayer;
+
+/// The five convolution layers of torchvision AlexNet.
+pub fn conv_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer { name: "conv1", c: 3, h_in: 224, r: 11, stride: 4, pad: 2, q: 64 },
+        ConvLayer { name: "conv2", c: 64, h_in: 27, r: 5, stride: 1, pad: 2, q: 192 },
+        ConvLayer { name: "conv3", c: 192, h_in: 13, r: 3, stride: 1, pad: 1, q: 384 },
+        ConvLayer { name: "conv4", c: 384, h_in: 13, r: 3, stride: 1, pad: 1, q: 256 },
+        ConvLayer { name: "conv5", c: 256, h_in: 13, r: 3, stride: 1, pad: 1, q: 256 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_conv_layers() {
+        let ls = conv_layers();
+        assert_eq!(ls.len(), 5);
+        assert_eq!(ls[0].h_out(), 55);
+        assert_eq!(ls[1].h_out(), 27);
+        assert_eq!(ls[2].h_out(), 13);
+        assert_eq!(ls[4].q, 256);
+    }
+
+    #[test]
+    fn mac_count_order_of_magnitude() {
+        // AlexNet convs are ~0.66 GMACs for the torchvision variant.
+        let total: u64 = conv_layers().iter().map(|l| l.total_macs()).sum();
+        assert!((500_000_000..1_500_000_000).contains(&total), "total={total}");
+    }
+}

@@ -1,0 +1,78 @@
+//! DNN workload shape tables.
+//!
+//! The paper's traces are generated from the PyTorch (torchvision)
+//! definitions of AlexNet [4] and VGG-16 [5] (§5.1: "the parameters
+//! obtained from Pytorch framework are used to model the traces for the
+//! NoC"). The NoC traffic of a convolution layer is fully determined by
+//! its shape, so these tables are the trace source.
+
+pub mod alexnet;
+pub mod lite;
+pub mod vgg16;
+
+/// One convolutional layer, in the paper's notation:
+/// `P` input patches of `C` channels convolved with `Q` filters of
+/// `R × R × C` weights.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: &'static str,
+    /// Input channels (C).
+    pub c: usize,
+    /// Input feature map height/width (square).
+    pub h_in: usize,
+    /// Kernel size (R).
+    pub r: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Output channels / filters (Q).
+    pub q: usize,
+}
+
+impl ConvLayer {
+    /// Output feature-map side length.
+    pub fn h_out(&self) -> usize {
+        (self.h_in + 2 * self.pad - self.r) / self.stride + 1
+    }
+
+    /// Number of output positions (`P` in the paper: each output pixel is
+    /// one input patch streamed to a PE row).
+    pub fn p_patches(&self) -> u64 {
+        let h = self.h_out() as u64;
+        h * h
+    }
+
+    /// MACs per output element = `C·R·R` (the per-PE work of one round).
+    pub fn macs_per_output(&self) -> u64 {
+        (self.c * self.r * self.r) as u64
+    }
+
+    /// Total MACs in the layer.
+    pub fn total_macs(&self) -> u64 {
+        self.p_patches() * self.q as u64 * self.macs_per_output()
+    }
+
+    /// Total weights (no bias).
+    pub fn weights(&self) -> u64 {
+        (self.q * self.c * self.r * self.r) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geometry() {
+        // AlexNet conv1: 224x224x3, 64 filters 11x11, stride 4, pad 2 -> 55.
+        let l = ConvLayer { name: "conv1", c: 3, h_in: 224, r: 11, stride: 4, pad: 2, q: 64 };
+        assert_eq!(l.h_out(), 55);
+        assert_eq!(l.p_patches(), 3025);
+        assert_eq!(l.macs_per_output(), 363);
+    }
+
+    #[test]
+    fn vgg_conv_keeps_resolution() {
+        let l = ConvLayer { name: "c", c: 64, h_in: 224, r: 3, stride: 1, pad: 1, q: 64 };
+        assert_eq!(l.h_out(), 224);
+    }
+}

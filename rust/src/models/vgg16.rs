@@ -1,0 +1,47 @@
+//! VGG-16 [5] convolution layers (torchvision configuration "D": thirteen
+//! 3×3 convolutions, resolution halved after each pooling block).
+
+use super::ConvLayer;
+
+/// The thirteen convolution layers of VGG-16.
+pub fn conv_layers() -> Vec<ConvLayer> {
+    let mk = |name, c, h_in, q| ConvLayer { name, c, h_in, r: 3, stride: 1, pad: 1, q };
+    vec![
+        mk("conv1_1", 3, 224, 64),
+        mk("conv1_2", 64, 224, 64),
+        mk("conv2_1", 64, 112, 128),
+        mk("conv2_2", 128, 112, 128),
+        mk("conv3_1", 128, 56, 256),
+        mk("conv3_2", 256, 56, 256),
+        mk("conv3_3", 256, 56, 256),
+        mk("conv4_1", 256, 28, 512),
+        mk("conv4_2", 512, 28, 512),
+        mk("conv4_3", 512, 28, 512),
+        mk("conv5_1", 512, 14, 512),
+        mk("conv5_2", 512, 14, 512),
+        mk("conv5_3", 512, 14, 512),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_layers_with_halving_resolution() {
+        let ls = conv_layers();
+        assert_eq!(ls.len(), 13);
+        for l in &ls {
+            assert_eq!(l.h_out(), l.h_in, "3x3 s1 p1 preserves resolution");
+        }
+        assert_eq!(ls[2].h_in, 112);
+        assert_eq!(ls[12].h_in, 14);
+    }
+
+    #[test]
+    fn mac_count_matches_published_vgg16() {
+        // VGG-16 convolutions are ~15.3 GMACs (paper Fig. 1: 15.5G incl. FC).
+        let total: u64 = conv_layers().iter().map(|l| l.total_macs()).sum();
+        assert!((14_000_000_000..16_000_000_000).contains(&total), "total={total}");
+    }
+}

@@ -1,0 +1,166 @@
+//! Virtual-channel input buffers with credit accounting.
+//!
+//! Each router input port owns `vcs` FIFO buffers of `buffer_depth` flits.
+//! Flow control is credit-based (§4.4 / [34]): the upstream router holds one
+//! credit per free downstream slot and may only forward a flit into a VC for
+//! which it holds a credit.
+
+use super::flit::Flit;
+use std::collections::VecDeque;
+
+/// Per-VC state machine. A VC is idle until a head flit allocates it; it
+/// stays bound to that packet until the tail flit departs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VcState {
+    Idle,
+    /// Head flit buffered; route computation pending/complete but no output
+    /// VC granted yet. Holds (cycle at which VA may complete).
+    Routing { sa_ready_cycle: u64 },
+    /// Output VC granted: (output port index, output vc); flits may compete
+    /// in switch allocation.
+    Active { out_port: usize, out_vc: usize },
+}
+
+/// One virtual-channel FIFO.
+#[derive(Debug)]
+pub struct VcBuffer {
+    fifo: VecDeque<Flit>,
+    depth: usize,
+    pub state: VcState,
+}
+
+impl VcBuffer {
+    pub fn new(depth: usize) -> Self {
+        VcBuffer { fifo: VecDeque::with_capacity(depth), depth, state: VcState::Idle }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fifo.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.fifo.len()
+    }
+
+    pub fn has_space(&self) -> bool {
+        self.fifo.len() < self.depth
+    }
+
+    /// Push an arriving flit. Panics on overflow — credits must make this
+    /// impossible; an overflow is a flow-control bug, not a runtime
+    /// condition.
+    pub fn push(&mut self, flit: Flit) {
+        assert!(self.has_space(), "VC buffer overflow: credit protocol violated");
+        self.fifo.push_back(flit);
+    }
+
+    pub fn front(&self) -> Option<&Flit> {
+        self.fifo.front()
+    }
+
+    pub fn front_mut(&mut self) -> Option<&mut Flit> {
+        self.fifo.front_mut()
+    }
+
+    pub fn pop(&mut self) -> Option<Flit> {
+        self.fifo.pop_front()
+    }
+}
+
+/// Credit counters the upstream side keeps for one downstream input port:
+/// `credits[vc]` = free slots in the downstream VC buffer.
+#[derive(Debug, Clone)]
+pub struct CreditTracker {
+    credits: Vec<u32>,
+}
+
+impl CreditTracker {
+    pub fn new(vcs: usize, depth: usize) -> Self {
+        CreditTracker { credits: vec![depth as u32; vcs] }
+    }
+
+    pub fn available(&self, vc: usize) -> bool {
+        self.credits[vc] > 0
+    }
+
+    pub fn consume(&mut self, vc: usize) {
+        assert!(self.credits[vc] > 0, "consumed a credit we do not hold");
+        self.credits[vc] -= 1;
+    }
+
+    pub fn refund(&mut self, vc: usize, depth: usize) {
+        self.credits[vc] += 1;
+        assert!(
+            self.credits[vc] <= depth as u32,
+            "credit refund exceeded buffer depth: protocol violated"
+        );
+    }
+
+    pub fn count(&self, vc: usize) -> u32 {
+        self.credits[vc]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::flit::{Coord, PacketDesc, PacketType};
+
+    fn flit(seq: u32) -> Flit {
+        PacketDesc {
+            id: 1,
+            ptype: PacketType::Unicast,
+            src: Coord::new(0, 0),
+            dst: Coord::new(3, 0),
+            len_flits: 4,
+            aspace: 0,
+            inject_cycle: 0,
+            deliver_along_path: false,
+            carried_payloads: 0,
+        }
+        .flit(seq)
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = VcBuffer::new(4);
+        for i in 0..4 {
+            b.push(flit(i));
+        }
+        assert!(!b.has_space());
+        for i in 0..4 {
+            assert_eq!(b.pop().unwrap().seq, i);
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut b = VcBuffer::new(2);
+        b.push(flit(0));
+        b.push(flit(1));
+        b.push(flit(2));
+    }
+
+    #[test]
+    fn credit_lifecycle() {
+        let mut c = CreditTracker::new(2, 4);
+        assert!(c.available(0));
+        for _ in 0..4 {
+            c.consume(0);
+        }
+        assert!(!c.available(0));
+        assert!(c.available(1));
+        c.refund(0, 4);
+        assert!(c.available(0));
+        assert_eq!(c.count(0), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "credit refund exceeded")]
+    fn over_refund_panics() {
+        let mut c = CreditTracker::new(1, 4);
+        c.refund(0, 4);
+    }
+}

@@ -1,0 +1,184 @@
+//! Flit and packet field types — the packet format of Fig. 6(a).
+//!
+//! A packet is a head flit followed by body flits and a tail flit (a 2-flit
+//! packet is head + tail). The head carries `FT`, `PT`, `ASpace`, `Src`,
+//! `Dst` (and `MDst` for multicast); body/tail flits carry payload words.
+
+
+/// Flit type field (`FT` in Fig. 6(a)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlitType {
+    Head,
+    Body,
+    Tail,
+}
+
+/// Packet type field (`PT` in Fig. 6(a)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PacketType {
+    /// One-to-one result/parameter traffic.
+    Unicast,
+    /// One-to-many operand distribution (row/column streams over the mesh).
+    Multicast,
+    /// Many-to-one partial-sum collection (the paper's contribution).
+    Gather,
+}
+
+/// A node coordinate on the mesh. `x` grows eastward (toward the global
+/// memory column), `y` grows southward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub x: u16,
+    pub y: u16,
+}
+
+impl Coord {
+    pub const fn new(x: u16, y: u16) -> Self {
+        Coord { x, y }
+    }
+
+    /// Manhattan distance (hop count under XY routing).
+    pub fn manhattan(&self, other: &Coord) -> u64 {
+        (self.x.abs_diff(other.x) as u64) + (self.y.abs_diff(other.y) as u64)
+    }
+}
+
+/// Globally unique packet id (simulator bookkeeping, not an on-wire field).
+pub type PacketId = u64;
+
+/// One flit in flight. This is the unit the simulator moves around.
+///
+/// For timing simulation the data words themselves are not carried; the
+/// gather payload occupancy is tracked via [`Flit::aspace`] on the head flit
+/// exactly as the hardware does (Fig. 6(b)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flit {
+    pub packet_id: PacketId,
+    pub ftype: FlitType,
+    pub ptype: PacketType,
+    pub src: Coord,
+    pub dst: Coord,
+    /// Remaining gather payload slots (`ASpace`); meaningful on gather heads.
+    pub aspace: u32,
+    /// Index of this flit within its packet (head = 0).
+    pub seq: u32,
+    /// Total flits in the packet.
+    pub packet_len: u32,
+    /// Cycle at which the packet was injected into the network (for latency
+    /// accounting; carried on every flit so the tail can report).
+    pub inject_cycle: u64,
+    /// For multicast operand streams: deliver a copy to the local port of
+    /// every router traversed (row/column streaming over the mesh).
+    pub deliver_along_path: bool,
+    /// Gather payloads carried so far (head flits; starts at the
+    /// initiator's own payload count, incremented on boarding). For unicast
+    /// result packets, set at injection.
+    pub carried_payloads: u32,
+    /// Cycle this flit was last written into a buffer (simulator
+    /// bookkeeping for SA eligibility, not an on-wire field).
+    pub arrival: u64,
+}
+
+impl Flit {
+    pub fn is_head(&self) -> bool {
+        self.ftype == FlitType::Head
+    }
+
+    pub fn is_tail(&self) -> bool {
+        self.ftype == FlitType::Tail
+    }
+}
+
+/// Builds the flit sequence for one packet.
+#[derive(Debug, Clone)]
+pub struct PacketDesc {
+    pub id: PacketId,
+    pub ptype: PacketType,
+    pub src: Coord,
+    pub dst: Coord,
+    pub len_flits: u32,
+    pub aspace: u32,
+    pub inject_cycle: u64,
+    pub deliver_along_path: bool,
+    /// Result payloads carried by this packet at injection time.
+    pub carried_payloads: u32,
+}
+
+impl PacketDesc {
+    /// Materialize the `i`-th flit of this packet.
+    pub fn flit(&self, i: u32) -> Flit {
+        debug_assert!(i < self.len_flits);
+        let ftype = if i == 0 {
+            FlitType::Head
+        } else if i + 1 == self.len_flits {
+            FlitType::Tail
+        } else {
+            FlitType::Body
+        };
+        Flit {
+            packet_id: self.id,
+            ftype,
+            ptype: self.ptype,
+            src: self.src,
+            dst: self.dst,
+            aspace: self.aspace,
+            seq: i,
+            packet_len: self.len_flits,
+            inject_cycle: self.inject_cycle,
+            deliver_along_path: self.deliver_along_path,
+            carried_payloads: self.carried_payloads,
+            arrival: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manhattan_distance() {
+        let a = Coord::new(0, 0);
+        let b = Coord::new(7, 3);
+        assert_eq!(a.manhattan(&b), 10);
+        assert_eq!(b.manhattan(&a), 10);
+        assert_eq!(a.manhattan(&a), 0);
+    }
+
+    #[test]
+    fn packet_desc_flit_types() {
+        let d = PacketDesc {
+            id: 1,
+            ptype: PacketType::Gather,
+            src: Coord::new(0, 0),
+            dst: Coord::new(7, 0),
+            len_flits: 3,
+            aspace: 8,
+            inject_cycle: 100,
+            deliver_along_path: false,
+            carried_payloads: 0,
+        };
+        assert_eq!(d.flit(0).ftype, FlitType::Head);
+        assert_eq!(d.flit(1).ftype, FlitType::Body);
+        assert_eq!(d.flit(2).ftype, FlitType::Tail);
+        assert!(d.flit(0).is_head());
+        assert!(d.flit(2).is_tail());
+    }
+
+    #[test]
+    fn two_flit_packet_is_head_plus_tail() {
+        let d = PacketDesc {
+            id: 2,
+            ptype: PacketType::Unicast,
+            src: Coord::new(3, 2),
+            dst: Coord::new(7, 2),
+            len_flits: 2,
+            aspace: 0,
+            inject_cycle: 0,
+            deliver_along_path: false,
+            carried_payloads: 0,
+        };
+        assert_eq!(d.flit(0).ftype, FlitType::Head);
+        assert_eq!(d.flit(1).ftype, FlitType::Tail);
+    }
+}

@@ -1,0 +1,236 @@
+//! Gather-supported routing — Algorithm 1 of the paper, plus the NI-side
+//! timeout machinery (§4.1, §4.2, §5.2).
+//!
+//! ## Boarding (Algorithm 1, Fig. 7)
+//!
+//! "When the header flit of a gather packet arrives at the input buffer,
+//! the Load signal is generated during the RC stage": boarding is decided
+//! **on head arrival** at each transit router. If the NI holds pending
+//! payloads with the same destination (`F.Dst = P.Dst`) and
+//! `F.ASpace >= sizeof(P)`, `ASpace` is decremented and the payloads are
+//! filled into the body/tail flits during their otherwise-unused RC/VA
+//! pipeline slots. **No extra pipeline stage and no extra latency** — in
+//! the simulator this is a zero-cost mutation of the passing packet's
+//! occupancy at buffer-write time.
+//!
+//! ## Timeout δ and packet initiation (§4.1, §4.2, §5.2)
+//!
+//! * The leftmost node of a row is the hardwired initiator and stages its
+//!   packet as soon as payloads are ready.
+//! * Every other NI arms a timeout; if no gather packet passes within it,
+//!   the node stages its own packet (the "δ < κ" regime of Fig. 12
+//!   degenerates to per-node packets exactly as in the paper).
+//! * **Full packets** (§4.2: "initiate its own gather packet if the
+//!   incoming gather packet is full"; §5.2: "the second packet is only
+//!   injected when the first packet reaches the node, with no space
+//!   left... the first node to encounter such a situation will initiate a
+//!   new gather packet"): a node whose boarding attempt finds no space
+//!   stages its own packet **immediately**.
+//!
+//! Two engineering details keep the multi-packet regime (16×16 meshes) at
+//! exactly `gather_packets_per_row` packets instead of a flood:
+//!
+//! 1. **One-cycle staging latency**: the packet-format unit (Fig. 9) takes
+//!    a cycle to assemble the staged packet before it can enter the
+//!    router. Since link arrivals are processed before NI injection within
+//!    a cycle, the replacement packet launched by the *first* starved node
+//!    arrives at each downstream starved node exactly in time to board its
+//!    payloads and cancel that node's own staged packet.
+//! 2. **Cancel-on-board**: a staged packet is re-validated against the
+//!    NI's pending count when its head is about to enter the router; if a
+//!    passing packet collected everything in the meantime, the staged
+//!    packet is dropped.
+//!
+//! The per-column fine-tuning hook of §4.1 ("δ can be fine-tuned further
+//! for an individual router") is kept for the timeout itself:
+//! `effective_delta(δ, x) = δ + x` staggers self-injection eastward, which
+//! de-bursts the δ<κ regime and covers arbitration jitter.
+
+use super::flit::{Coord, Flit, PacketType};
+
+/// NI-side gather state for one router (shared by the n attached PEs —
+//  the NI aggregates their payloads, Fig. 9).
+#[derive(Debug, Clone)]
+pub struct NiState {
+    /// Payload slots waiting to be shipped (one slot per partial sum).
+    pub pending: u32,
+    /// Destination (row memory element) of the pending payloads.
+    pub dst: Coord,
+    /// Timeout armed?
+    pub armed: bool,
+    /// Cycle at which this NI injects its own packet (staging happens κ
+    /// cycles earlier).
+    pub deadline: u64,
+    /// Hardwired initiator (leftmost node of the row) — injects at post
+    /// time without waiting.
+    pub is_initiator: bool,
+    /// Own gather packet staged in the NI (packet-format unit of Fig. 9)
+    /// but not yet entered into the router. Guards against double-staging
+    /// when several full packets pass in a row.
+    pub staged: bool,
+    /// Rounds whose results are computed but cannot enter the NI yet: the
+    /// payload queue of Fig. 9 holds one round; further rounds back up
+    /// here until the active round's payloads leave (boarded / injected).
+    /// This is the backpressure that turns network congestion into round
+    /// stalls — the Δ_R / Δ_G the paper measures.
+    pub backlog: std::collections::VecDeque<u32>,
+}
+
+impl NiState {
+    pub fn new() -> Self {
+        NiState {
+            pending: 0,
+            dst: Coord::new(0, 0),
+            armed: false,
+            deadline: 0,
+            is_initiator: false,
+            staged: false,
+            backlog: std::collections::VecDeque::new(),
+        }
+    }
+}
+
+impl Default for NiState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Outcome of a gather head passing an NI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoardOutcome {
+    /// Not a gather head / destination mismatch / nothing pending.
+    NotApplicable,
+    /// `n` payloads boarded; NI fully drained.
+    BoardedAll(u32),
+    /// `n` payloads boarded but some remain pending (packet filled up).
+    BoardedPartial(u32),
+    /// Packet had no space at all.
+    Full,
+}
+
+/// Algorithm 1: try to board `ni`'s pending payloads onto the passing
+/// gather head `flit`. Mutates `flit.aspace` / `flit.carried_payloads` and
+/// `ni.pending`. Caller handles re-arming on `BoardedPartial` / `Full`.
+pub fn try_board(flit: &mut Flit, ni: &mut NiState) -> BoardOutcome {
+    // if ((F.FT = H) and (F.PT = G) and (F.Dst = P.Dst) and pending)
+    if !flit.is_head() || flit.ptype != PacketType::Gather {
+        return BoardOutcome::NotApplicable;
+    }
+    if ni.pending == 0 || flit.dst != ni.dst {
+        return BoardOutcome::NotApplicable;
+    }
+    // if (F.ASpace >= sizeof(P)) then Load <- 1 ; F.ASpace -= sizeof(P)
+    if flit.aspace == 0 {
+        return BoardOutcome::Full;
+    }
+    let boarded = flit.aspace.min(ni.pending);
+    flit.aspace -= boarded;
+    flit.carried_payloads += boarded;
+    ni.pending -= boarded;
+    if ni.pending == 0 {
+        ni.armed = false;
+        BoardOutcome::BoardedAll(boarded)
+    } else {
+        BoardOutcome::BoardedPartial(boarded)
+    }
+}
+
+/// Effective timeout of the node at column `x` (per-router fine-tuning,
+/// see module docs).
+pub fn effective_delta(delta: u64, x: u16) -> u64 {
+    delta + x as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::flit::{FlitType, PacketDesc};
+
+    fn gather_head(aspace: u32, dst: Coord) -> Flit {
+        let mut f = PacketDesc {
+            id: 7,
+            ptype: PacketType::Gather,
+            src: Coord::new(0, 2),
+            dst,
+            len_flits: 3,
+            aspace,
+            inject_cycle: 0,
+            deliver_along_path: false,
+            carried_payloads: 1,
+        }
+        .flit(0);
+        f.ftype = FlitType::Head;
+        f
+    }
+
+    fn ni(pending: u32, dst: Coord) -> NiState {
+        NiState { pending, dst, armed: true, deadline: 100, ..NiState::new() }
+    }
+
+    #[test]
+    fn boards_all_when_space_suffices() {
+        let dst = Coord::new(8, 2);
+        let mut f = gather_head(7, dst);
+        let mut n = ni(4, dst);
+        assert_eq!(try_board(&mut f, &mut n), BoardOutcome::BoardedAll(4));
+        assert_eq!(f.aspace, 3);
+        assert_eq!(f.carried_payloads, 5);
+        assert_eq!(n.pending, 0);
+        assert!(!n.armed, "drained NI must disarm its timeout");
+    }
+
+    #[test]
+    fn partial_board_when_packet_nearly_full() {
+        let dst = Coord::new(8, 2);
+        let mut f = gather_head(2, dst);
+        let mut n = ni(4, dst);
+        assert_eq!(try_board(&mut f, &mut n), BoardOutcome::BoardedPartial(2));
+        assert_eq!(f.aspace, 0);
+        assert_eq!(n.pending, 2);
+        assert!(n.armed, "NI with leftovers keeps its timeout armed");
+    }
+
+    #[test]
+    fn full_packet_boards_nothing() {
+        let dst = Coord::new(8, 2);
+        let mut f = gather_head(0, dst);
+        let mut n = ni(4, dst);
+        assert_eq!(try_board(&mut f, &mut n), BoardOutcome::Full);
+        assert_eq!(n.pending, 4);
+    }
+
+    #[test]
+    fn destination_mismatch_is_ignored() {
+        // Algorithm 1 line: if (F.Dst = P.Dst) then Load <- 1
+        let mut f = gather_head(8, Coord::new(8, 2));
+        let mut n = ni(4, Coord::new(8, 3)); // different row's memory
+        assert_eq!(try_board(&mut f, &mut n), BoardOutcome::NotApplicable);
+        assert_eq!(f.aspace, 8);
+    }
+
+    #[test]
+    fn non_gather_packets_never_board() {
+        let dst = Coord::new(8, 2);
+        let mut f = gather_head(8, dst);
+        f.ptype = PacketType::Unicast;
+        let mut n = ni(4, dst);
+        assert_eq!(try_board(&mut f, &mut n), BoardOutcome::NotApplicable);
+    }
+
+    #[test]
+    fn body_flits_never_board() {
+        // Boarding is decided on the head (Load latched for the body).
+        let dst = Coord::new(8, 2);
+        let mut f = gather_head(8, dst);
+        f.ftype = FlitType::Body;
+        let mut n = ni(4, dst);
+        assert_eq!(try_board(&mut f, &mut n), BoardOutcome::NotApplicable);
+    }
+
+    #[test]
+    fn effective_delta_staggers_eastward() {
+        assert_eq!(effective_delta(39, 0), 39);
+        assert!(effective_delta(39, 9) > effective_delta(39, 8));
+    }
+}

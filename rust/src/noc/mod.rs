@@ -1,0 +1,21 @@
+//! Cycle-accurate mesh NoC substrate.
+//!
+//! This module is the reproduction of the cycle-accurate C++ simulator the
+//! paper's evaluation runs on [38], extended with the paper's own
+//! contributions: gather-supported routing (Algorithm 1, [`gather`]) and
+//! mesh-borne operand multicast streams (the gather-only baseline of [27]).
+//!
+//! See [`network::Network`] for the simulator entry point.
+
+pub mod buffer;
+pub mod flit;
+pub mod gather;
+pub mod network;
+pub mod router;
+pub mod routing;
+pub mod stats;
+
+pub use flit::{Coord, Flit, FlitType, PacketDesc, PacketId, PacketType};
+pub use network::{Network, StreamEdge};
+pub use routing::{Algorithm, Port};
+pub use stats::{BusStats, NetStats};

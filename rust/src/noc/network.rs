@@ -1,0 +1,895 @@
+//! The cycle-accurate mesh network simulator.
+//!
+//! One [`Network`] owns every router ([`RouterState`]), the inter-router
+//! links, the NI-side gather machinery ([`NiState`]) and the injection
+//! sources. `step()` advances one clock; `run_until` / `run_until_idle`
+//! drive it with idle fast-forwarding so compute-only phases between
+//! traffic bursts cost nothing.
+//!
+//! ## Per-cycle ordering
+//!
+//! 1. apply credit refunds scheduled last cycle;
+//! 2. deliver link arrivals (buffer writes);
+//! 3. apply scheduled NI posts / operand-stream injections for this cycle;
+//! 4. VC allocation for routed head flits;
+//! 5. switch allocation + traversal (this is where gather boarding and
+//!    stream delivery happen — boarding strictly *before* step 6/7 so a
+//!    boarded NI never stages a redundant packet in the same cycle);
+//! 6. NI injection sources feed one flit each into their local buffers;
+//! 7. gather timeout staging (κ cycles before each armed deadline).
+//!
+//! ## Topology & memory elements (§5.1)
+//!
+//! Routers live at `(x, y)`, `x ∈ [0, cols)` eastward, `y ∈ [0, rows)`
+//! southward. The global memory of row `y` is the virtual node
+//! `(cols, y)`: packets routed to it leave the east edge and are sunk
+//! unconditionally (the memory ingest is never the bottleneck, as in the
+//! paper). Operand streams enter at the west edge (input activations, one
+//! per row) and the north edge (filter weights, one per column) — either
+//! over the mesh itself (`deliver_along_path` multicast wormhole streams,
+//! the "gather-only" baseline architecture) or over the dedicated
+//! streaming buses of `crate::streaming` (which bypass this module
+//! entirely).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::buffer::VcState;
+use super::flit::{Coord, Flit, PacketDesc, PacketId, PacketType};
+use super::gather::{effective_delta, try_board, BoardOutcome, NiState};
+use super::router::{refresh_vc_state, RouterState};
+use super::routing::{route, Algorithm, Port};
+use super::stats::NetStats;
+use crate::config::{Collection, SimConfig};
+
+/// A flit in flight on a link, due to be written into a buffer.
+#[derive(Debug)]
+struct Arrival {
+    router: usize,
+    port: Port,
+    vc: usize,
+    flit: Flit,
+}
+
+/// An entry in an injection source's queue.
+#[derive(Debug)]
+struct InjEntry {
+    desc: PacketDesc,
+    /// Staged by the NI gather machinery: re-validated against the NI's
+    /// pending count when the head is about to enter the router (cancel-on
+    /// -board, see `noc::gather` module docs).
+    from_ni: bool,
+    /// Earliest cycle the head may enter the router (the packet-format
+    /// unit of Fig. 9 takes one cycle to assemble staged gather packets).
+    not_before: u64,
+}
+
+/// One injection source: feeds at most one flit per cycle into a single
+/// input port of its router (the NI↔router bandwidth of Fig. 9).
+#[derive(Debug, Default)]
+struct Injector {
+    queue: VecDeque<InjEntry>,
+    /// In-progress packet: (desc, next flit seq, chosen VC).
+    cur: Option<(PacketDesc, u32, usize)>,
+}
+
+/// Where an operand stream enters the mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamEdge {
+    /// Input-activation stream for row `y` (enters west, exits at the
+    /// east-most PE column).
+    Row(usize),
+    /// Weight stream for column `x` (enters north, exits at the bottom
+    /// row).
+    Col(usize),
+}
+
+/// A deferred NI post: `payloads` partial sums become ready at a node.
+#[derive(Debug, Clone, Copy)]
+struct NiPost {
+    node: usize,
+    payloads: u32,
+    dst: Coord,
+}
+
+/// The simulator.
+pub struct Network {
+    pub cfg: SimConfig,
+    pub collection: Collection,
+    alg: Algorithm,
+    cols: usize,
+    rows: usize,
+    vcs: usize,
+    routers: Vec<RouterState>,
+    ni: Vec<NiState>,
+    injectors: Vec<Injector>,
+    /// Ring buffer of link arrivals; slot 0 = current cycle.
+    arrivals: VecDeque<Vec<Arrival>>,
+    /// Credit refunds to apply at the start of the next cycle:
+    /// (router, out port index, vc).
+    credit_refunds: Vec<(usize, usize, usize)>,
+    /// Reused buffer for `apply_credit_refunds`.
+    credit_scratch: Vec<(usize, usize, usize)>,
+    ni_posts: BTreeMap<u64, Vec<NiPost>>,
+    stream_posts: BTreeMap<u64, Vec<(usize, Port, PacketDesc)>>,
+    pub stats: NetStats,
+    pub cycle: u64,
+    /// Flits resident in buffers or on links.
+    flits_active: u64,
+    /// Result payloads delivered to the east-edge memory elements.
+    pub payloads_delivered: u64,
+    /// Tails of operand stream packets that finished their path.
+    pub stream_tails_ejected: u64,
+    /// Gather packets sunk at the memory.
+    pub gather_packets_ejected: u64,
+    /// Result (gather or unicast) packets sunk at the memory.
+    pub result_packets_ejected: u64,
+    pub last_eject_cycle: u64,
+    /// Nodes with rounds waiting behind a busy NI (see `apply_ni_post`).
+    backlogged_nodes: usize,
+    /// Buffered flits per router — lets the VA/SA loops skip idle routers
+    /// entirely (the dominant cost at low-to-medium load; see
+    /// EXPERIMENTS.md §Perf).
+    occupancy: Vec<u32>,
+    next_pid: PacketId,
+}
+
+const PORTS: usize = Port::COUNT;
+
+impl Network {
+    pub fn new(cfg: &SimConfig, collection: Collection) -> Self {
+        cfg.validate().expect("invalid SimConfig");
+        let (cols, rows, vcs) = (cfg.mesh_cols, cfg.mesh_rows, cfg.vcs);
+        let mut routers = Vec::with_capacity(cols * rows);
+        for y in 0..rows {
+            for x in 0..cols {
+                // Which output ports have a downstream router to credit?
+                // East at the east edge is the memory sink (no credits);
+                // other edge ports simply never get routed to.
+                let mut nb = [false; PORTS];
+                nb[Port::North.index()] = y > 0;
+                nb[Port::South.index()] = y + 1 < rows;
+                nb[Port::East.index()] = x + 1 < cols;
+                nb[Port::West.index()] = x > 0;
+                nb[Port::Local.index()] = false; // ejection: NI always sinks
+                routers.push(RouterState::new(
+                    Coord::new(x as u16, y as u16),
+                    vcs,
+                    cfg.buffer_depth,
+                    &nb,
+                ));
+            }
+        }
+        let mut ni: Vec<NiState> = (0..cols * rows).map(|_| NiState::new()).collect();
+        for y in 0..rows {
+            // Hardwired initiator: leftmost node of each row (§4.1).
+            ni[y * cols].is_initiator = true;
+        }
+        let link_window = (cfg.link_latency + 2) as usize;
+        Network {
+            cfg: cfg.clone(),
+            collection,
+            alg: Algorithm::Xy,
+            cols,
+            rows,
+            vcs,
+            routers,
+            ni,
+            injectors: (0..cols * rows * PORTS).map(|_| Injector::default()).collect(),
+            arrivals: (0..link_window).map(|_| Vec::new()).collect(),
+            credit_refunds: Vec::new(),
+            credit_scratch: Vec::new(),
+            ni_posts: BTreeMap::new(),
+            stream_posts: BTreeMap::new(),
+            stats: NetStats::default(),
+            cycle: 0,
+            flits_active: 0,
+            payloads_delivered: 0,
+            stream_tails_ejected: 0,
+            gather_packets_ejected: 0,
+            result_packets_ejected: 0,
+            last_eject_cycle: 0,
+            backlogged_nodes: 0,
+            occupancy: vec![0; cols * rows],
+            next_pid: 1,
+        }
+    }
+
+    #[inline]
+    fn node_idx(&self, c: Coord) -> usize {
+        c.y as usize * self.cols + c.x as usize
+    }
+
+    /// Memory element coordinate for row `y` (virtual east column).
+    pub fn memory_of_row(&self, y: usize) -> Coord {
+        Coord::new(self.cols as u16, y as u16)
+    }
+
+    fn alloc_pid(&mut self) -> PacketId {
+        let id = self.next_pid;
+        self.next_pid += 1;
+        id
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduling API (used by the round driver)
+    // ------------------------------------------------------------------
+
+    /// Schedule `payloads` partial sums to become ready at `node` at cycle
+    /// `at`, destined for the row memory element.
+    pub fn post_result(&mut self, at: u64, node: Coord, payloads: u32) {
+        assert!(at >= self.cycle, "cannot post results in the past");
+        let dst = self.memory_of_row(node.y as usize);
+        let idx = self.node_idx(node);
+        self.ni_posts.entry(at).or_default().push(NiPost { node: idx, payloads, dst });
+    }
+
+    /// Schedule an operand stream of `words` payload words to enter the
+    /// mesh at `edge` at cycle `at` (gather-only architecture). The stream
+    /// is one multicast wormhole packet that delivers a copy of every flit
+    /// to each router it traverses.
+    pub fn post_operand_stream(&mut self, at: u64, edge: StreamEdge, words: u64) {
+        assert!(at >= self.cycle, "cannot post streams in the past");
+        let ppf = self.cfg.payloads_per_flit() as u64;
+        let body = words.div_ceil(ppf).max(1);
+        let (router, port, dst) = match edge {
+            StreamEdge::Row(y) => (
+                self.node_idx(Coord::new(0, y as u16)),
+                Port::West,
+                Coord::new(self.cols as u16 - 1, y as u16),
+            ),
+            StreamEdge::Col(x) => (
+                self.node_idx(Coord::new(x as u16, 0)),
+                Port::North,
+                Coord::new(x as u16, self.rows as u16 - 1),
+            ),
+        };
+        let src = match edge {
+            StreamEdge::Row(y) => Coord::new(0, y as u16),
+            StreamEdge::Col(x) => Coord::new(x as u16, 0),
+        };
+        let desc = PacketDesc {
+            id: self.alloc_pid(),
+            ptype: PacketType::Multicast,
+            src,
+            dst,
+            len_flits: (1 + body) as u32,
+            aspace: 0,
+            inject_cycle: at,
+            deliver_along_path: true,
+            carried_payloads: 0,
+        };
+        self.stream_posts.entry(at).or_default().push((router, port, desc));
+    }
+
+    /// Lowest cycle at which something is scheduled to happen, given an
+    /// otherwise idle network (for fast-forwarding).
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        let mut next: Option<u64> = None;
+        let mut consider = |c: u64| {
+            next = Some(next.map_or(c, |n: u64| n.min(c)));
+        };
+        if let Some((&c, _)) = self.ni_posts.iter().next() {
+            consider(c);
+        }
+        if let Some((&c, _)) = self.stream_posts.iter().next() {
+            consider(c);
+        }
+        for ni in &self.ni {
+            if ni.armed && ni.pending > 0 {
+                consider(ni.deadline.saturating_sub(self.cfg.kappa()).max(self.cycle + 1));
+            }
+        }
+        next
+    }
+
+    /// True when no flit is in flight and no injector holds work.
+    pub fn quiescent(&self) -> bool {
+        self.flits_active == 0
+            && self.backlogged_nodes == 0
+            && self.injectors.iter().all(|i| i.queue.is_empty() && i.cur.is_none())
+    }
+
+    /// Advance until `pred` holds or `max_cycle` is reached. Returns true
+    /// if the predicate was satisfied. Fast-forwards through idle gaps.
+    pub fn run_until(&mut self, mut pred: impl FnMut(&Network) -> bool, max_cycle: u64) -> bool {
+        while self.cycle < max_cycle {
+            if pred(self) {
+                return true;
+            }
+            if self.quiescent() {
+                match self.next_event_cycle() {
+                    Some(c) if c > self.cycle => self.cycle = c,
+                    Some(_) => {}
+                    None => return pred(self),
+                }
+            }
+            self.step();
+        }
+        pred(self)
+    }
+
+    /// Drain everything currently scheduled; returns false on `max_cycle`
+    /// overrun (treated by callers as a deadlock/livelock failure).
+    pub fn run_until_idle(&mut self, max_cycle: u64) -> bool {
+        self.run_until(
+            |n| {
+                n.quiescent()
+                    && n.ni_posts.is_empty()
+                    && n.stream_posts.is_empty()
+                    && n.ni.iter().all(|s| !(s.armed && s.pending > 0))
+            },
+            max_cycle,
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // The clock
+    // ------------------------------------------------------------------
+
+    pub fn step(&mut self) {
+        self.apply_credit_refunds();
+        self.deliver_arrivals();
+        self.apply_posts();
+        self.vc_allocate();
+        self.switch_allocate();
+        self.feed_injectors();
+        self.gather_timeouts();
+        self.drain_backlogs();
+        self.cycle += 1;
+        self.stats.cycles_simulated = self.cycle;
+    }
+
+    fn apply_credit_refunds(&mut self) {
+        // Swap-with-scratch keeps the Vec's capacity across cycles (the
+        // allocator was ~1/3 of the cycle cost before; EXPERIMENTS §Perf).
+        std::mem::swap(&mut self.credit_refunds, &mut self.credit_scratch);
+        for &(router, out_port, vc) in &self.credit_scratch {
+            if let Some(ct) = self.routers[router].out_credits[out_port].as_mut() {
+                ct.refund(vc, self.cfg.buffer_depth);
+            }
+        }
+        self.credit_scratch.clear();
+    }
+
+    fn deliver_arrivals(&mut self) {
+        let mut batch = self.arrivals.pop_front().expect("arrival ring underflow");
+        for Arrival { router, port, vc, mut flit } in batch.drain(..) {
+            flit.arrival = self.cycle;
+            // Gather boarding happens at head *arrival* — the Load signal
+            // is generated in the RC stage (Fig. 7) — so payloads of this
+            // router's NI are folded into the packet at zero latency.
+            if flit.ptype == PacketType::Gather
+                && flit.is_head()
+                && self.routers[router].coord != flit.src
+            {
+                let ni = &mut self.ni[router];
+                match try_board(&mut flit, ni) {
+                    BoardOutcome::BoardedAll(k) => {
+                        self.stats.gather_boards += k as u64;
+                    }
+                    BoardOutcome::BoardedPartial(k) => {
+                        // Packet filled up with payloads left behind: this
+                        // node initiates a fresh packet immediately (§4.2).
+                        self.stats.gather_boards += k as u64;
+                        self.stage_own_gather(router);
+                    }
+                    BoardOutcome::Full => {
+                        self.stage_own_gather(router);
+                    }
+                    BoardOutcome::NotApplicable => {}
+                }
+            }
+            self.write_flit(router, port, vc, flit);
+        }
+        // Recycle the drained batch (keeps its capacity).
+        self.arrivals.push_back(batch);
+    }
+
+    /// Stage this node's own gather packet in the NI (one-cycle assembly;
+    /// validated again at head entry — see `noc::gather` docs).
+    fn stage_own_gather(&mut self, node: usize) {
+        let ni = &self.ni[node];
+        if ni.staged || ni.pending == 0 {
+            return;
+        }
+        let desc = PacketDesc {
+            id: 0, // assigned at head entry
+            ptype: PacketType::Gather,
+            src: self.routers[node].coord,
+            dst: ni.dst,
+            len_flits: self.cfg.gather_packet_flits as u32,
+            aspace: 0, // computed at head entry
+            inject_cycle: self.cycle,
+            deliver_along_path: false,
+            carried_payloads: 0,
+        };
+        self.injectors[node * PORTS + Port::Local.index()].queue.push_back(InjEntry {
+            desc,
+            from_ni: true,
+            not_before: self.cycle + 1,
+        });
+        let ni = &mut self.ni[node];
+        ni.staged = true;
+        ni.armed = false;
+    }
+
+    /// Buffer write common to link arrivals and local injection.
+    fn write_flit(&mut self, router: usize, port: Port, vc: usize, flit: Flit) {
+        let vcs = self.vcs;
+        let r = &mut self.routers[router];
+        let idx = port.index() * vcs + vc;
+        let was_empty = r.inputs[idx].is_empty();
+        if flit.is_head() {
+            r.meta[idx].head_arrival = self.cycle;
+        }
+        r.inputs[idx].push(flit);
+        r.nonempty_mask |= 1 << idx;
+        self.occupancy[router] += 1;
+        self.stats.buffer_writes += 1;
+        // Only (re)start the VC state machine when the VC is idle: an empty
+        // buffer in Active state is a packet whose head departed while its
+        // body flits are still on the wire.
+        if was_empty && r.inputs[idx].state == VcState::Idle {
+            r.inputs[idx].state =
+                refresh_vc_state(&r.inputs[idx], &mut r.meta[idx], self.cycle, self.cfg.kappa());
+        }
+    }
+
+    fn apply_posts(&mut self) {
+        // Operand streams.
+        while let Some((&c, _)) = self.stream_posts.iter().next() {
+            if c > self.cycle {
+                break;
+            }
+            let (_, entries) = self.stream_posts.pop_first().unwrap();
+            for (router, port, desc) in entries {
+                self.stats.packets_injected += 1;
+                self.injectors[router * PORTS + port.index()]
+                    .queue
+                    .push_back(InjEntry { desc, from_ni: false, not_before: self.cycle });
+            }
+        }
+        // Result posts.
+        while let Some((&c, _)) = self.ni_posts.iter().next() {
+            if c > self.cycle {
+                break;
+            }
+            let (_, posts) = self.ni_posts.pop_first().unwrap();
+            for post in posts {
+                self.apply_ni_post(post);
+            }
+        }
+    }
+
+    fn apply_ni_post(&mut self, post: NiPost) {
+        // The NI payload queue (Fig. 9) holds one round; if the previous
+        // round's payloads have not left this node yet, the new round backs
+        // up (PE output registers stall) — this is the backpressure through
+        // which network congestion stretches the round pipeline (Δ_R/Δ_G).
+        self.ni[post.node].dst = post.dst;
+        if self.ni_busy(post.node) {
+            self.ni[post.node].backlog.push_back(post.payloads);
+            self.backlogged_nodes += 1;
+        } else {
+            self.activate_round(post.node, post.payloads);
+        }
+    }
+
+    /// Does this node still hold payloads (or result packets) of a
+    /// previous round?
+    fn ni_busy(&self, node: usize) -> bool {
+        let inj = &self.injectors[node * PORTS + Port::Local.index()];
+        self.ni[node].pending > 0 || !inj.queue.is_empty() || inj.cur.is_some()
+    }
+
+    /// Make one round's payloads live at the NI.
+    fn activate_round(&mut self, node: usize, payloads: u32) {
+        match self.collection {
+            Collection::RepetitiveUnicast => {
+                // RU baseline: literal repetitive unicast — each PE's
+                // partial sum is sent as its own fixed-size 2-flit packet
+                // ([31][32]; Table 1 compares "gather packet size" against
+                // "unicast packet size: 2 flits/packet" per result).
+                // `ru_pack_payloads` is the packed ablation variant.
+                let per_pkt = if self.cfg.ru_pack_payloads {
+                    (self.cfg.unicast_packet_flits as u32 - 1) * self.cfg.payloads_per_flit()
+                } else {
+                    1
+                };
+                let src = self.routers[node].coord;
+                let dst = self.ni[node].dst;
+                let mut remaining = payloads;
+                while remaining > 0 {
+                    let carried = remaining.min(per_pkt);
+                    remaining -= carried;
+                    let desc = PacketDesc {
+                        id: self.alloc_pid(),
+                        ptype: PacketType::Unicast,
+                        src,
+                        dst,
+                        len_flits: self.cfg.unicast_packet_flits as u32,
+                        aspace: 0,
+                        inject_cycle: self.cycle,
+                        deliver_along_path: false,
+                        carried_payloads: carried,
+                    };
+                    self.stats.packets_injected += 1;
+                    self.injectors[node * PORTS + Port::Local.index()]
+                        .queue
+                        .push_back(InjEntry { desc, from_ni: false, not_before: self.cycle });
+                }
+            }
+            Collection::Gather => {
+                let x = self.routers[node].coord.x;
+                let ni = &mut self.ni[node];
+                ni.pending += payloads;
+                if ni.is_initiator {
+                    // Leftmost node: inject without waiting.
+                    ni.armed = true;
+                    ni.deadline = self.cycle;
+                } else if !ni.armed {
+                    ni.armed = true;
+                    ni.deadline = self.cycle + effective_delta(self.cfg.delta, x);
+                }
+            }
+        }
+    }
+
+    /// Activate backlogged rounds on nodes whose NI has drained.
+    fn drain_backlogs(&mut self) {
+        if self.backlogged_nodes == 0 {
+            return;
+        }
+        for node in 0..self.ni.len() {
+            if self.ni[node].backlog.is_empty() || self.ni_busy(node) {
+                continue;
+            }
+            let payloads = self.ni[node].backlog.pop_front().unwrap();
+            self.backlogged_nodes -= 1;
+            self.activate_round(node, payloads);
+        }
+    }
+
+    fn vc_allocate(&mut self) {
+        let vcs = self.vcs;
+        for ridx in 0..self.routers.len() {
+            let mut mask = self.routers[ridx].nonempty_mask;
+            while mask != 0 {
+                let idx = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                let dst = {
+                    let r = &self.routers[ridx];
+                    match (r.inputs[idx].state, r.inputs[idx].front()) {
+                        (VcState::Routing { sa_ready_cycle }, Some(f))
+                            // VA completes one cycle before SA readiness.
+                            if self.cycle + 1 >= sa_ready_cycle =>
+                        {
+                            f.dst
+                        }
+                        _ => continue,
+                    }
+                };
+                let here = self.routers[ridx].coord;
+                let out_port = route(self.alg, here, dst);
+                let in_port = idx / vcs;
+                let in_vc = idx % vcs;
+                let granted =
+                    self.routers[ridx].allocate_out_vc(out_port, vcs, (in_port, in_vc));
+                if let Some(out_vc) = granted {
+                    self.stats.vc_allocs += 1;
+                    self.routers[ridx].inputs[idx].state = VcState::Active {
+                        out_port: out_port.index(),
+                        out_vc,
+                    };
+                }
+            }
+        }
+    }
+
+    fn switch_allocate(&mut self) {
+        let vcs = self.vcs;
+        let n = PORTS * vcs;
+        for ridx in 0..self.routers.len() {
+            if self.routers[ridx].nonempty_mask == 0 {
+                continue;
+            }
+            // One pass over the occupied VCs collects the eligible
+            // requesters per output port; classic separable allocation
+            // (one grant per output port, one per input port) follows.
+            let mut reqs = [[usize::MAX; 16]; PORTS];
+            let mut counts = [0usize; PORTS];
+            {
+                let r = &self.routers[ridx];
+                let mut mask = r.nonempty_mask;
+                while mask != 0 {
+                    let idx = mask.trailing_zeros() as usize;
+                    mask &= mask - 1;
+                    let buf = &r.inputs[idx];
+                    let (op, ovc) = match buf.state {
+                        VcState::Active { out_port, out_vc } => (out_port, out_vc),
+                        _ => continue,
+                    };
+                    let Some(front) = buf.front() else { continue };
+                    // SA eligibility: flit must have been buffered in an
+                    // earlier cycle; heads additionally wait out RC/VA.
+                    if front.arrival >= self.cycle {
+                        continue;
+                    }
+                    if front.is_head() {
+                        let head_ready = r.meta[idx].head_arrival + self.cfg.kappa() - 1;
+                        let ready = head_ready.max(r.meta[idx].front_since + 1);
+                        if self.cycle < ready {
+                            continue;
+                        }
+                    }
+                    // Credits toward downstream (None = ejection sink).
+                    if let Some(ct) = &r.out_credits[op] {
+                        if !ct.available(ovc) {
+                            continue;
+                        }
+                    }
+                    reqs[op][counts[op]] = idx;
+                    counts[op] += 1;
+                }
+            }
+            let mut in_port_used = [false; PORTS];
+            for out_port_i in 0..PORTS {
+                if counts[out_port_i] == 0 {
+                    continue;
+                }
+                // Round-robin: smallest distance from the rr pointer.
+                let rr = self.routers[ridx].sa_rr[out_port_i];
+                let mut winner: Option<(usize, usize)> = None; // (dist, idx)
+                for &idx in &reqs[out_port_i][..counts[out_port_i]] {
+                    if in_port_used[idx / vcs] {
+                        continue;
+                    }
+                    let dist = (idx + n - rr) % n;
+                    if winner.map_or(true, |(d, _)| dist < d) {
+                        winner = Some((dist, idx));
+                    }
+                }
+                let Some((_, idx)) = winner else { continue };
+                self.grant(ridx, idx, out_port_i);
+                in_port_used[idx / vcs] = true;
+                self.routers[ridx].sa_rr[out_port_i] = (idx + 1) % n;
+            }
+        }
+    }
+
+    /// Execute one SA grant: pop the flit, do gather boarding / stream
+    /// delivery, refund the upstream credit, and either forward the flit to
+    /// the neighbour or eject it.
+    fn grant(&mut self, ridx: usize, idx: usize, out_port_i: usize) {
+        let vcs = self.vcs;
+        let out_port = Port::from_index(out_port_i);
+        let kappa = self.cfg.kappa();
+
+        // Capture the allocated output VC before any state reset.
+        let out_vc = match self.routers[ridx].inputs[idx].state {
+            VcState::Active { out_port: op, out_vc } => {
+                debug_assert_eq!(op, out_port_i);
+                out_vc
+            }
+            s => panic!("SA granted from non-active VC state {s:?}"),
+        };
+
+        let flit = self.routers[ridx].inputs[idx].pop().expect("SA granted an empty VC");
+        if self.routers[ridx].inputs[idx].is_empty() {
+            self.routers[ridx].nonempty_mask &= !(1 << idx);
+        }
+        self.occupancy[ridx] -= 1;
+        self.stats.buffer_reads += 1;
+        self.stats.sa_grants += 1;
+        self.stats.crossbar_traversals += 1;
+        self.stats.flit_hops += 1;
+
+        // --- mesh operand stream delivery along the path ---
+        if flit.deliver_along_path {
+            self.stats.stream_deliveries += 1;
+        }
+
+        // --- upstream credit refund (the slot we just freed) ---
+        let in_port = Port::from_index(idx / vcs);
+        let in_vc = idx % vcs;
+        if in_port != Port::Local {
+            let here = self.routers[ridx].coord;
+            if let Some(up) = self.neighbour(here, in_port) {
+                let up_idx = self.node_idx(up);
+                self.credit_refunds.push((up_idx, in_port.opposite().index(), in_vc));
+            }
+            // else: edge injection port (West/North memory side) — the
+            // injector checks buffer space directly, no credits to refund.
+        }
+
+        // --- tail: release the output VC and refresh the input VC ---
+        if flit.is_tail() || flit.packet_len == 1 {
+            self.routers[ridx].release_out_vc(out_port, out_vc, vcs);
+            let r = &mut self.routers[ridx];
+            r.inputs[idx].state = VcState::Idle;
+            if !r.inputs[idx].is_empty() {
+                r.inputs[idx].state =
+                    refresh_vc_state(&r.inputs[idx], &mut r.meta[idx], self.cycle, kappa);
+            }
+        }
+
+        // --- forward or eject ---
+        let here = self.routers[ridx].coord;
+        let ejecting = out_port == Port::Local
+            || (out_port == Port::East
+                && here.x as usize + 1 == self.cols
+                && flit.dst.x as usize >= self.cols);
+        if ejecting {
+            self.eject(flit);
+            self.flits_active -= 1;
+        } else {
+            // Consume a credit and put the flit on the link.
+            if let Some(ct) = self.routers[ridx].out_credits[out_port_i].as_mut() {
+                ct.consume(out_vc);
+            }
+            let nb = self
+                .neighbour(here, out_port)
+                .expect("routed toward a missing neighbour");
+            let nb_idx = self.node_idx(nb);
+            self.stats.link_traversals += 1;
+            // ST (next cycle) + link. The ring was already popped for the
+            // current cycle, so slot 0 is cycle+1: index delay−1 ⇒ arrival
+            // at cycle + delay, giving the κ+link per-hop latency of
+            // Table 1.
+            let delay = (1 + self.cfg.link_latency) as usize;
+            self.arrivals[delay - 1].push(Arrival {
+                router: nb_idx,
+                port: out_port.opposite(),
+                vc: out_vc,
+                flit,
+            });
+        }
+    }
+
+    fn eject(&mut self, flit: Flit) {
+        self.stats.flits_ejected += 1;
+        if flit.is_head() {
+            if flit.dst.x as usize >= self.cols {
+                // Result packet reached the row memory element.
+                self.payloads_delivered += flit.carried_payloads as u64;
+                if flit.ptype == PacketType::Gather {
+                    self.gather_packets_ejected += 1;
+                }
+            }
+        }
+        if flit.is_tail() || flit.packet_len == 1 {
+            self.stats.packets_ejected += 1;
+            let lat = self.cycle.saturating_sub(flit.inject_cycle);
+            self.stats.total_packet_latency += lat;
+            self.stats.max_packet_latency = self.stats.max_packet_latency.max(lat);
+            self.last_eject_cycle = self.cycle;
+            if flit.deliver_along_path {
+                self.stream_tails_ejected += 1;
+            }
+            if flit.dst.x as usize >= self.cols {
+                self.result_packets_ejected += 1;
+            }
+        }
+    }
+
+    fn neighbour(&self, c: Coord, p: Port) -> Option<Coord> {
+        match p {
+            Port::North => (c.y > 0).then(|| Coord::new(c.x, c.y - 1)),
+            Port::South => ((c.y as usize + 1) < self.rows).then(|| Coord::new(c.x, c.y + 1)),
+            Port::East => ((c.x as usize + 1) < self.cols).then(|| Coord::new(c.x + 1, c.y)),
+            Port::West => (c.x > 0).then(|| Coord::new(c.x - 1, c.y)),
+            Port::Local => None,
+        }
+    }
+
+    fn feed_injectors(&mut self) {
+        for ridx in 0..self.routers.len() {
+            for port_i in 0..PORTS {
+                let ii = ridx * PORTS + port_i;
+                if self.injectors[ii].cur.is_none() && self.injectors[ii].queue.is_empty() {
+                    continue;
+                }
+                self.feed_one_injector(ridx, Port::from_index(port_i));
+            }
+        }
+    }
+
+    fn feed_one_injector(&mut self, ridx: usize, port: Port) {
+        let ii = ridx * PORTS + port.index();
+        // Start the next packet if idle.
+        if self.injectors[ii].cur.is_none() {
+            let ready = match self.injectors[ii].queue.front() {
+                Some(e) => e.not_before <= self.cycle,
+                None => return,
+            };
+            if !ready {
+                return;
+            }
+            let entry = self.injectors[ii].queue.pop_front().unwrap();
+            let mut desc = entry.desc;
+            if entry.from_ni {
+                // Cancel-on-board: re-validate against the NI now.
+                let cap = self.cfg.gather_capacity();
+                let ni = &mut self.ni[ridx];
+                ni.staged = false;
+                if ni.pending == 0 {
+                    return; // a passing packet collected everything
+                }
+                let carried = ni.pending.min(cap);
+                ni.pending -= carried;
+                if ni.pending == 0 {
+                    ni.armed = false;
+                } else {
+                    // Oversized round (payloads exceed one packet): keep
+                    // the remainder armed for the next opportunity.
+                    ni.armed = true;
+                    ni.deadline = self.cycle
+                        + effective_delta(self.cfg.delta, self.routers[ridx].coord.x);
+                }
+                desc.carried_payloads = carried;
+                desc.aspace = cap - carried;
+                desc.id = self.alloc_pid();
+                desc.inject_cycle = self.cycle;
+                self.stats.packets_injected += 1;
+            }
+            self.injectors[ii].cur = Some((desc, 0, usize::MAX));
+        }
+        // Feed one flit if buffer space allows.
+        let vcs = self.vcs;
+        let Some((desc, seq, vc_slot)) = self.injectors[ii].cur.take() else { return };
+        let mut vc = vc_slot;
+        if seq == 0 {
+            // Choose the VC with the most free space for the whole packet.
+            let r = &self.routers[ridx];
+            let base = port.index() * vcs;
+            vc = (0..vcs)
+                .max_by_key(|&v| self.cfg.buffer_depth - r.inputs[base + v].len())
+                .unwrap();
+        }
+        let idx = port.index() * vcs + vc;
+        if self.routers[ridx].inputs[idx].has_space() {
+            let flit = {
+                let mut f = desc.flit(seq);
+                f.arrival = self.cycle;
+                f
+            };
+            self.write_flit(ridx, port, vc, flit);
+            self.flits_active += 1;
+            let next = seq + 1;
+            if next < desc.len_flits {
+                self.injectors[ii].cur = Some((desc, next, vc));
+            }
+        } else {
+            self.injectors[ii].cur = Some((desc, seq, vc));
+        }
+    }
+
+    fn gather_timeouts(&mut self) {
+        if self.collection != Collection::Gather {
+            return;
+        }
+        for ridx in 0..self.ni.len() {
+            let ni = &self.ni[ridx];
+            if !(ni.armed && ni.pending > 0 && !ni.staged) {
+                continue;
+            }
+            if self.cycle < ni.deadline {
+                continue;
+            }
+            let is_initiator = ni.is_initiator;
+            self.stage_own_gather(ridx);
+            if !is_initiator {
+                self.stats.delta_expiries += 1;
+            }
+        }
+    }
+
+    // Exposed for tests.
+    pub fn ni_state(&self, node: Coord) -> &NiState {
+        &self.ni[self.node_idx(node)]
+    }
+
+    pub fn total_buffered_flits(&self) -> usize {
+        self.routers.iter().map(|r| r.occupancy()).sum()
+    }
+}

@@ -1,0 +1,213 @@
+//! Per-router state: input VC buffers, credit trackers toward each
+//! neighbour, output-VC allocation state and switch-allocation arbitration
+//! pointers.
+//!
+//! The pipeline (Fig. 7) is modelled at flit granularity:
+//!
+//! * A **head** flit written into a VC buffer at cycle `t` finishes route
+//!   computation + VC allocation no earlier than `t + κ − 2` and may compete
+//!   for the switch from `t + κ − 1`; switch traversal takes one more cycle,
+//!   so an uncontended head leaves the router `κ` cycles after arrival —
+//!   matching Table 1's "router: 4 cycles".
+//! * **Body/tail** flits inherit the route/VC of their head and only use the
+//!   SA/ST stages; the otherwise idle RC/VA slots are what the gather
+//!   support uses to fill payloads (Fig. 7, "Modified router pipeline") —
+//!   which is why gather boarding adds zero latency in [`super::network`].
+
+use super::buffer::{CreditTracker, VcBuffer, VcState};
+use super::flit::Coord;
+use super::routing::Port;
+
+/// Per-VC pipeline bookkeeping (parallel array to the VC buffers).
+#[derive(Debug, Clone, Copy)]
+pub struct VcMeta {
+    /// Cycle the current head flit was written into this buffer.
+    pub head_arrival: u64,
+    /// Cycle the current front flit became the front of the FIFO.
+    pub front_since: u64,
+}
+
+impl Default for VcMeta {
+    fn default() -> Self {
+        VcMeta { head_arrival: 0, front_since: 0 }
+    }
+}
+
+/// One router's complete state.
+#[derive(Debug)]
+pub struct RouterState {
+    pub coord: Coord,
+    /// Input VC buffers, indexed `port * vcs + vc`.
+    pub inputs: Vec<VcBuffer>,
+    /// Pipeline metadata parallel to `inputs`.
+    pub meta: Vec<VcMeta>,
+    /// Credits we hold toward the downstream input port behind each of our
+    /// output ports. `None` for ports with no consumer (mesh edge) and for
+    /// ejection ports, which sink flits unconditionally.
+    pub out_credits: Vec<Option<CreditTracker>>,
+    /// Which input VC currently holds each output VC, indexed
+    /// `port * vcs + vc`. An output VC is held from head VA grant to tail
+    /// switch traversal (wormhole).
+    pub out_vc_holder: Vec<Option<(usize, usize)>>,
+    /// Round-robin arbitration pointer per output port (over the flattened
+    /// input-VC index space).
+    pub sa_rr: Vec<usize>,
+    /// Bit per input VC (bit `port*vcs+vc`): set while that buffer holds
+    /// any flit. Lets the VA/SA stages walk only occupied VCs instead of
+    /// scanning all ports×VCs (EXPERIMENTS.md §Perf).
+    pub nonempty_mask: u32,
+}
+
+impl RouterState {
+    pub fn new(coord: Coord, vcs: usize, depth: usize, neighbour_ports: &[bool; Port::COUNT]) -> Self {
+        let n_in = Port::COUNT * vcs;
+        RouterState {
+            coord,
+            inputs: (0..n_in).map(|_| VcBuffer::new(depth)).collect(),
+            meta: vec![VcMeta::default(); n_in],
+            out_credits: (0..Port::COUNT)
+                .map(|p| neighbour_ports[p].then(|| CreditTracker::new(vcs, depth)))
+                .collect(),
+            out_vc_holder: vec![None; n_in],
+            sa_rr: vec![0; Port::COUNT],
+            nonempty_mask: 0,
+        }
+    }
+
+    /// Flattened input index.
+    #[inline]
+    pub fn ivc(&self, port: Port, vc: usize, vcs: usize) -> usize {
+        port.index() * vcs + vc
+    }
+
+    /// Number of flits buffered in this router (all ports, all VCs).
+    pub fn occupancy(&self) -> usize {
+        self.inputs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Try to allocate a free output VC on `out_port`. Returns the granted
+    /// VC index. Prefers the VC with the most downstream credits so long
+    /// packets pick the least-congested lane.
+    pub fn allocate_out_vc(&mut self, out_port: Port, vcs: usize, holder: (usize, usize)) -> Option<usize> {
+        let base = out_port.index() * vcs;
+        let mut best: Option<(usize, u32)> = None;
+        for vc in 0..vcs {
+            if self.out_vc_holder[base + vc].is_none() {
+                let credits = match &self.out_credits[out_port.index()] {
+                    Some(ct) => ct.count(vc),
+                    None => u32::MAX, // ejection port: always free
+                };
+                if best.map_or(true, |(_, c)| credits > c) {
+                    best = Some((vc, credits));
+                }
+            }
+        }
+        let (vc, _) = best?;
+        self.out_vc_holder[base + vc] = Some(holder);
+        Some(vc)
+    }
+
+    /// Release an output VC after the tail flit traversed the switch.
+    pub fn release_out_vc(&mut self, out_port: Port, vc: usize, vcs: usize) {
+        let slot = &mut self.out_vc_holder[out_port.index() * vcs + vc];
+        debug_assert!(slot.is_some(), "releasing an unheld output VC");
+        *slot = None;
+    }
+}
+
+/// State transitions of an input VC when its front flit changes.
+/// Returns the new state given the (possibly new) front flit.
+pub fn refresh_vc_state(buf: &VcBuffer, meta: &mut VcMeta, cycle: u64, kappa: u64) -> VcState {
+    match buf.front() {
+        None => VcState::Idle,
+        Some(f) if f.is_head() => {
+            meta.front_since = cycle;
+            // RC+VA occupy κ−2 cycles from buffer write; SA may start at
+            // κ−1. A head that waited blocked at the front re-enters with
+            // only a single-cycle re-arbitration penalty.
+            let sa_ready = (meta.head_arrival + kappa - 1).max(cycle + 1);
+            VcState::Routing { sa_ready_cycle: sa_ready }
+        }
+        Some(_) => {
+            // Body/tail at the front with no head: the packet's head already
+            // departed, VC remains Active — the caller must not have reset
+            // the state. Reaching here is a protocol bug.
+            unreachable!("body/tail flit at VC front without an active packet state")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::flit::{PacketDesc, PacketType};
+
+    fn router() -> RouterState {
+        RouterState::new(Coord::new(1, 1), 2, 4, &[true, true, true, true, false])
+    }
+
+    #[test]
+    fn out_vc_allocation_prefers_most_credits() {
+        let mut r = router();
+        // Consume 2 credits on East vc0 so vc1 has more.
+        if let Some(ct) = r.out_credits[Port::East.index()].as_mut() {
+            ct.consume(0);
+            ct.consume(0);
+        }
+        let vc = r.allocate_out_vc(Port::East, 2, (0, 0)).unwrap();
+        assert_eq!(vc, 1);
+        // Next allocation must take the remaining VC.
+        let vc2 = r.allocate_out_vc(Port::East, 2, (0, 1)).unwrap();
+        assert_eq!(vc2, 0);
+        // All VCs held: no grant.
+        assert!(r.allocate_out_vc(Port::East, 2, (1, 0)).is_none());
+        r.release_out_vc(Port::East, 1, 2);
+        assert!(r.allocate_out_vc(Port::East, 2, (1, 0)).is_some());
+    }
+
+    #[test]
+    fn head_sa_ready_respects_pipeline_depth() {
+        let mut buf = VcBuffer::new(4);
+        let d = PacketDesc {
+            id: 1,
+            ptype: PacketType::Unicast,
+            src: Coord::new(0, 0),
+            dst: Coord::new(3, 0),
+            len_flits: 2,
+            aspace: 0,
+            inject_cycle: 10,
+            deliver_along_path: false,
+            carried_payloads: 0,
+        };
+        buf.push(d.flit(0));
+        let mut meta = VcMeta { head_arrival: 10, front_since: 10 };
+        let st = refresh_vc_state(&buf, &mut meta, 10, 4);
+        match st {
+            VcState::Routing { sa_ready_cycle } => assert_eq!(sa_ready_cycle, 13), // t + κ − 1
+            _ => panic!("expected Routing"),
+        }
+    }
+
+    #[test]
+    fn blocked_head_pays_single_rearbitration_cycle() {
+        let mut buf = VcBuffer::new(4);
+        let d = PacketDesc {
+            id: 1,
+            ptype: PacketType::Unicast,
+            src: Coord::new(0, 0),
+            dst: Coord::new(3, 0),
+            len_flits: 2,
+            aspace: 0,
+            inject_cycle: 10,
+            deliver_along_path: false,
+            carried_payloads: 0,
+        };
+        buf.push(d.flit(0));
+        // Head arrived long ago but only reached the FIFO front now (cycle 50).
+        let mut meta = VcMeta { head_arrival: 10, front_since: 50 };
+        match refresh_vc_state(&buf, &mut meta, 50, 4) {
+            VcState::Routing { sa_ready_cycle } => assert_eq!(sa_ready_cycle, 51),
+            _ => panic!("expected Routing"),
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Route computation. The paper uses deadlock-free XY (dimension-order)
+//! routing for all packet types, including gather packets (§4.1).
+
+use super::flit::Coord;
+
+/// Router ports. `Local` is the NI/PE side; `Eject` is the east-edge memory
+/// element port (only wired on the memory column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Port {
+    North = 0,
+    South = 1,
+    East = 2,
+    West = 3,
+    Local = 4,
+}
+
+impl Port {
+    pub const COUNT: usize = 5;
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Port {
+        match i {
+            0 => Port::North,
+            1 => Port::South,
+            2 => Port::East,
+            3 => Port::West,
+            4 => Port::Local,
+            _ => panic!("invalid port index {i}"),
+        }
+    }
+
+    /// The port on the neighbouring router that receives what we emit from
+    /// this output port (links connect opposite ports).
+    pub fn opposite(self) -> Port {
+        match self {
+            Port::North => Port::South,
+            Port::South => Port::North,
+            Port::East => Port::West,
+            Port::West => Port::East,
+            Port::Local => Port::Local,
+        }
+    }
+}
+
+/// Routing algorithm selector. XY is the paper's choice; YX exists to
+/// exercise the router model independently of the algorithm in tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    Xy,
+    Yx,
+}
+
+/// Compute the output port at router `here` for a packet headed to `dst`.
+/// Returns `Port::Local` when the packet has arrived.
+pub fn route(alg: Algorithm, here: Coord, dst: Coord) -> Port {
+    match alg {
+        Algorithm::Xy => {
+            if dst.x > here.x {
+                Port::East
+            } else if dst.x < here.x {
+                Port::West
+            } else if dst.y > here.y {
+                Port::South
+            } else if dst.y < here.y {
+                Port::North
+            } else {
+                Port::Local
+            }
+        }
+        Algorithm::Yx => {
+            if dst.y > here.y {
+                Port::South
+            } else if dst.y < here.y {
+                Port::North
+            } else if dst.x > here.x {
+                Port::East
+            } else if dst.x < here.x {
+                Port::West
+            } else {
+                Port::Local
+            }
+        }
+    }
+}
+
+/// The full XY path from `src` to `dst`, inclusive of both endpoints.
+/// Used by tests and by the gather bookkeeping to reason about which
+/// routers a packet visits.
+pub fn xy_path(src: Coord, dst: Coord) -> Vec<Coord> {
+    let mut path = vec![src];
+    let mut cur = src;
+    while cur != dst {
+        let p = route(Algorithm::Xy, cur, dst);
+        cur = match p {
+            Port::East => Coord::new(cur.x + 1, cur.y),
+            Port::West => Coord::new(cur.x - 1, cur.y),
+            Port::South => Coord::new(cur.x, cur.y + 1),
+            Port::North => Coord::new(cur.x, cur.y - 1),
+            Port::Local => unreachable!("route() returned Local before arrival"),
+        };
+        path.push(cur);
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xy_routes_x_first() {
+        let here = Coord::new(2, 2);
+        assert_eq!(route(Algorithm::Xy, here, Coord::new(5, 0)), Port::East);
+        assert_eq!(route(Algorithm::Xy, here, Coord::new(0, 5)), Port::West);
+        assert_eq!(route(Algorithm::Xy, here, Coord::new(2, 5)), Port::South);
+        assert_eq!(route(Algorithm::Xy, here, Coord::new(2, 0)), Port::North);
+        assert_eq!(route(Algorithm::Xy, here, here), Port::Local);
+    }
+
+    #[test]
+    fn yx_routes_y_first() {
+        let here = Coord::new(2, 2);
+        assert_eq!(route(Algorithm::Yx, here, Coord::new(5, 0)), Port::North);
+        assert_eq!(route(Algorithm::Yx, here, Coord::new(5, 2)), Port::East);
+    }
+
+    #[test]
+    fn xy_path_length_is_manhattan_plus_one() {
+        let s = Coord::new(1, 6);
+        let d = Coord::new(6, 2);
+        let p = xy_path(s, d);
+        assert_eq!(p.len() as u64, s.manhattan(&d) + 1);
+        assert_eq!(p[0], s);
+        assert_eq!(*p.last().unwrap(), d);
+        // X-first: all X movement happens before any Y movement.
+        let turn = p.iter().position(|c| c.x == d.x).unwrap();
+        for w in p[..=turn].windows(2) {
+            assert_eq!(w[0].y, w[1].y, "moved in Y before finishing X");
+        }
+    }
+
+    #[test]
+    fn opposite_ports() {
+        assert_eq!(Port::East.opposite(), Port::West);
+        assert_eq!(Port::North.opposite(), Port::South);
+        assert_eq!(Port::from_index(Port::East.index()), Port::East);
+    }
+}

@@ -1,0 +1,156 @@
+//! Simulation statistics: latency, hop, flit and energy-event counters.
+//!
+//! Energy is accounted as *event counts* here; `crate::power` converts the
+//! counts into joules with the 45 nm constants. Keeping raw counts in the
+//! simulator makes the power model swappable and the counters testable.
+
+
+/// Raw event counters produced by one simulation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetStats {
+    /// Packets injected into the mesh.
+    pub packets_injected: u64,
+    /// Packets fully ejected at their destination.
+    pub packets_ejected: u64,
+    /// Flits ejected.
+    pub flits_ejected: u64,
+    /// Sum over ejected packets of (eject cycle − inject cycle).
+    pub total_packet_latency: u64,
+    /// Max single-packet latency observed.
+    pub max_packet_latency: u64,
+    /// Total flit-hops (a flit crossing one router counts one).
+    pub flit_hops: u64,
+    /// Buffer write events (flit enters a VC buffer).
+    pub buffer_writes: u64,
+    /// Buffer read events (flit leaves a VC buffer).
+    pub buffer_reads: u64,
+    /// Crossbar traversal events.
+    pub crossbar_traversals: u64,
+    /// VC allocation events (head flits).
+    pub vc_allocs: u64,
+    /// Switch allocation grants.
+    pub sa_grants: u64,
+    /// Link traversal events (flit crosses an inter-router link).
+    pub link_traversals: u64,
+    /// Gather payloads that boarded a passing gather packet.
+    pub gather_boards: u64,
+    /// Gather packets initiated after a δ timeout expiry (not counting the
+    /// hardwired leftmost initiator).
+    pub delta_expiries: u64,
+    /// Operand words delivered to router-local NIs by mesh multicast
+    /// streams (`deliver_along_path` flits), one count per flit per router
+    /// traversed.
+    pub stream_deliveries: u64,
+    /// Words delivered over the streaming buses (per-row/column counters are
+    /// in `BusStats`).
+    pub cycles_simulated: u64,
+}
+
+impl NetStats {
+    pub fn avg_packet_latency(&self) -> f64 {
+        if self.packets_ejected == 0 {
+            0.0
+        } else {
+            self.total_packet_latency as f64 / self.packets_ejected as f64
+        }
+    }
+
+    /// Merge counters from another run segment (used by the round
+    /// extrapolation to combine warmup + measured segments).
+    pub fn merge(&mut self, other: &NetStats) {
+        self.packets_injected += other.packets_injected;
+        self.packets_ejected += other.packets_ejected;
+        self.flits_ejected += other.flits_ejected;
+        self.total_packet_latency += other.total_packet_latency;
+        self.max_packet_latency = self.max_packet_latency.max(other.max_packet_latency);
+        self.flit_hops += other.flit_hops;
+        self.buffer_writes += other.buffer_writes;
+        self.buffer_reads += other.buffer_reads;
+        self.crossbar_traversals += other.crossbar_traversals;
+        self.vc_allocs += other.vc_allocs;
+        self.sa_grants += other.sa_grants;
+        self.link_traversals += other.link_traversals;
+        self.gather_boards += other.gather_boards;
+        self.delta_expiries += other.delta_expiries;
+        self.stream_deliveries += other.stream_deliveries;
+        self.cycles_simulated = self.cycles_simulated.max(other.cycles_simulated);
+    }
+
+    /// Scale all additive counters by `k` (round extrapolation).
+    pub fn scaled(&self, k: f64) -> NetStats {
+        let s = |v: u64| (v as f64 * k).round() as u64;
+        NetStats {
+            packets_injected: s(self.packets_injected),
+            packets_ejected: s(self.packets_ejected),
+            flits_ejected: s(self.flits_ejected),
+            total_packet_latency: s(self.total_packet_latency),
+            max_packet_latency: self.max_packet_latency,
+            flit_hops: s(self.flit_hops),
+            buffer_writes: s(self.buffer_writes),
+            buffer_reads: s(self.buffer_reads),
+            crossbar_traversals: s(self.crossbar_traversals),
+            vc_allocs: s(self.vc_allocs),
+            sa_grants: s(self.sa_grants),
+            link_traversals: s(self.link_traversals),
+            gather_boards: s(self.gather_boards),
+            delta_expiries: s(self.delta_expiries),
+            stream_deliveries: s(self.stream_deliveries),
+            cycles_simulated: self.cycles_simulated,
+        }
+    }
+}
+
+/// Streaming-bus event counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BusStats {
+    /// Words driven on row (input activation) buses.
+    pub row_words: u64,
+    /// Words driven on column (weight) buses.
+    pub col_words: u64,
+    /// Cycles any bus was active.
+    pub active_cycles: u64,
+}
+
+impl BusStats {
+    pub fn merge(&mut self, other: &BusStats) {
+        self.row_words += other.row_words;
+        self.col_words += other.col_words;
+        self.active_cycles += other.active_cycles;
+    }
+
+    pub fn scaled(&self, k: f64) -> BusStats {
+        let s = |v: u64| (v as f64 * k).round() as u64;
+        BusStats {
+            row_words: s(self.row_words),
+            col_words: s(self.col_words),
+            active_cycles: s(self.active_cycles),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_latency_handles_zero_packets() {
+        assert_eq!(NetStats::default().avg_packet_latency(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = NetStats { packets_ejected: 2, total_packet_latency: 100, ..Default::default() };
+        let b = NetStats { packets_ejected: 3, total_packet_latency: 50, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.packets_ejected, 5);
+        assert_eq!(a.avg_packet_latency(), 30.0);
+    }
+
+    #[test]
+    fn scaled_multiplies_additive_counters() {
+        let a = NetStats { flit_hops: 10, max_packet_latency: 7, ..Default::default() };
+        let b = a.scaled(2.5);
+        assert_eq!(b.flit_hops, 25);
+        assert_eq!(b.max_packet_latency, 7); // max is not additive
+    }
+}

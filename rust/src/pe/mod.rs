@@ -1,0 +1,89 @@
+//! Processing-element and network-interface timing models (§4.4, Fig. 9).
+//!
+//! PEs are the simple MAC-pipeline elements of [36]: each PE performs one
+//! MAC per cycle on streamed operands and applies its activation function
+//! with a fixed, predictable pipeline depth (`T_MAC` in Table 1), so rows
+//! and columns stay synchronized without handshake overhead.
+//!
+//! The NI (Fig. 9) aggregates `n` PEs behind one router: it disassembles
+//! incoming stream words to the right PE register files and assembles
+//! outgoing partial sums into packets (gather payload queue / packet format
+//! unit). Its timing contribution is folded into the per-round schedule
+//! computed here; its *gather* behaviour (payload queue, δ counter) lives
+//! in `crate::noc::gather` because it is clocked with the router.
+
+use crate::config::{SimConfig, Streaming};
+
+/// Timing of one OS-dataflow round on a row of PEs (Fig. 11).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundTiming {
+    /// Cycles to stream one round's operands to every PE (the `C·R·R·n/f_l`
+    /// term of Eqs. (3)–(4)).
+    pub stream_cycles: u64,
+    /// MAC pipeline drain after the last operand (`T_MAC`).
+    pub mac_cycles: u64,
+}
+
+impl RoundTiming {
+    /// Cycles from round start to partial sums ready.
+    pub fn ready_after(&self) -> u64 {
+        self.stream_cycles + self.mac_cycles
+    }
+}
+
+/// Compute the per-round operand streaming time for a bus architecture.
+///
+/// `macs_per_pe` is `C·R·R` — one operand word pair is consumed per MAC, so
+/// the stream for one PE is `C·R·R` words; `n` PEs per router multiply it
+/// (§4.4: n input sets share the NI). The two-way architecture streams
+/// inputs and weights on separate buses in parallel; the one-way
+/// architecture interleaves both on a shared bus, doubling the occupancy
+/// (Fig. 10(b)).
+pub fn bus_stream_cycles(cfg: &SimConfig, streaming: Streaming, macs_per_pe: u64) -> u64 {
+    let words = macs_per_pe * cfg.pes_per_router as u64;
+    let per_bus = words.div_ceil(cfg.bus_words_per_cycle as u64);
+    match streaming {
+        Streaming::TwoWay => per_bus,
+        Streaming::OneWay => 2 * per_bus,
+        Streaming::Mesh => {
+            unreachable!("mesh streaming time is simulated, not closed-form")
+        }
+    }
+}
+
+/// Round timing for a bus-based streaming architecture.
+pub fn round_timing(cfg: &SimConfig, streaming: Streaming, macs_per_pe: u64) -> RoundTiming {
+    RoundTiming {
+        stream_cycles: bus_stream_cycles(cfg, streaming, macs_per_pe),
+        mac_cycles: cfg.t_mac,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_way_streams_in_parallel() {
+        let mut cfg = SimConfig::table1_8x8(2);
+        cfg.bus_words_per_cycle = 1;
+        // C·R·R = 27 MACs, n = 2 → 54 words on each bus.
+        assert_eq!(bus_stream_cycles(&cfg, Streaming::TwoWay, 27), 54);
+        assert_eq!(bus_stream_cycles(&cfg, Streaming::OneWay, 27), 108);
+    }
+
+    #[test]
+    fn wider_bus_divides_stream_time() {
+        let mut cfg = SimConfig::table1_8x8(1);
+        cfg.bus_words_per_cycle = 4; // Table-1 default: flit-wide bus
+        assert_eq!(bus_stream_cycles(&cfg, Streaming::TwoWay, 100), 25);
+    }
+
+    #[test]
+    fn round_ready_includes_mac_drain() {
+        let mut cfg = SimConfig::table1_8x8(1);
+        cfg.bus_words_per_cycle = 1;
+        let rt = round_timing(&cfg, Streaming::TwoWay, 27);
+        assert_eq!(rt.ready_after(), 27 + 5);
+    }
+}

@@ -1,0 +1,58 @@
+//! §5.4 hardware-overhead roll-up: reproduces the paper's Synopsys DC /
+//! DSENT comparison of the baseline vs gather-supported router.
+
+use super::router::{RouterArea, RouterEnergy};
+
+/// One §5.4 table row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverheadReport {
+    pub baseline_power_mw: f64,
+    pub proposed_power_mw: f64,
+    pub power_overhead_pct: f64,
+    pub baseline_area_um2: f64,
+    pub proposed_area_um2: f64,
+    pub area_overhead_pct: f64,
+}
+
+/// Compute the §5.4 overhead table for a 1 GHz router.
+///
+/// The proposed router's extra power is the gather logic exercised on the
+/// same saturation traffic: one Load-generation per head flit per port plus
+/// one payload fill per cycle (conservative — the upper bound of the
+/// modified pipeline of Fig. 7).
+pub fn overhead_report(clock_hz: f64) -> OverheadReport {
+    let e = RouterEnergy::forty_five_nm();
+    let a = RouterArea::forty_five_nm();
+    let base_w = e.saturation_power(clock_hz);
+    // Gather adders at saturation: 5 ports' heads checked (5 × logic) and
+    // one payload fill per cycle, plus the payload queue's static power
+    // (~0.45 mW, proportional to its share of buffer area).
+    let queue_static_w = e.static_w * (a.gather_payload_q_um2 + a.gather_load_gen_um2)
+        / a.baseline()
+        * 2.5; // queue is flop-based: leakier per µm² than SRAM buffers
+    let gather_dyn_w = (4.0 * e.gather_logic_j + e.gather_payload_j) * clock_hz;
+    let prop_w = base_w + gather_dyn_w + queue_static_w;
+    OverheadReport {
+        baseline_power_mw: base_w * 1e3,
+        proposed_power_mw: prop_w * 1e3,
+        power_overhead_pct: (prop_w / base_w - 1.0) * 100.0,
+        baseline_area_um2: a.baseline(),
+        proposed_area_um2: a.proposed(),
+        area_overhead_pct: (a.proposed() / a.baseline() - 1.0) * 100.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_section_5_4() {
+        // Paper: 26.3 mW → 27.87 mW (~6%), 72106 µm² → 74950 µm² (~4%).
+        let r = overhead_report(1.0e9);
+        assert!((r.baseline_power_mw - 26.3).abs() < 0.5, "{r:?}");
+        assert!((r.proposed_power_mw - 27.87).abs() < 0.8, "{r:?}");
+        assert!(r.power_overhead_pct > 4.5 && r.power_overhead_pct < 7.5, "{r:?}");
+        assert!(r.area_overhead_pct > 3.0 && r.area_overhead_pct < 5.0, "{r:?}");
+    }
+}

@@ -1,0 +1,97 @@
+//! DSENT-style streaming-bus wire model [40].
+//!
+//! DSENT models an on-chip bus as a repeated global wire: energy per bit
+//! per millimetre from wire + repeater capacitance (≈0.20 pJ/bit/mm at
+//! 45 nm, 1.0 V), plus repeater leakage per millimetre. The streaming bus
+//! of Fig. 10 spans its full row/column (one tile pitch per hop), and a
+//! broadcast drives the whole span every cycle it is active.
+
+use crate::config::SimConfig;
+use crate::noc::stats::BusStats;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BusEnergy {
+    /// Switching energy, joules per bit per millimetre.
+    pub j_per_bit_mm: f64,
+    /// Repeater/driver leakage, watts per millimetre of bus.
+    pub leak_w_per_mm: f64,
+    /// Tile pitch, millimetres (bus length = pitch × nodes spanned).
+    pub tile_pitch_mm: f64,
+    /// Signalling activity factor (fraction of bits toggling).
+    pub activity: f64,
+}
+
+impl BusEnergy {
+    pub fn forty_five_nm() -> Self {
+        BusEnergy {
+            j_per_bit_mm: 0.20e-12,
+            leak_w_per_mm: 12.0e-6,
+            tile_pitch_mm: 1.0,
+            activity: 0.5,
+        }
+    }
+
+    /// Length of one row bus (west memory to east-most PE column).
+    pub fn row_bus_mm(&self, cfg: &SimConfig) -> f64 {
+        cfg.mesh_cols as f64 * self.tile_pitch_mm
+    }
+
+    /// Length of one column bus.
+    pub fn col_bus_mm(&self, cfg: &SimConfig) -> f64 {
+        cfg.mesh_rows as f64 * self.tile_pitch_mm
+    }
+
+    /// Dynamic switching energy for the recorded bus traffic, joules.
+    /// Every word drives the full bus span (broadcast).
+    pub fn dynamic_j(&self, cfg: &SimConfig, bus: &BusStats) -> f64 {
+        let word_bits = cfg.gather_payload_bits as f64;
+        let row_j =
+            bus.row_words as f64 * word_bits * self.activity * self.j_per_bit_mm * self.row_bus_mm(cfg);
+        let col_j =
+            bus.col_words as f64 * word_bits * self.activity * self.j_per_bit_mm * self.col_bus_mm(cfg);
+        row_j + col_j
+    }
+
+    /// Leakage over `cycles` for the full bus fabric (joules). One-way
+    /// architectures instantiate only the row buses — callers pass
+    /// `col_buses = 0`.
+    pub fn leakage_j(
+        &self,
+        cfg: &SimConfig,
+        row_buses: usize,
+        col_buses: usize,
+        cycles: u64,
+    ) -> f64 {
+        let total_mm = row_buses as f64 * self.row_bus_mm(cfg)
+            + col_buses as f64 * self.col_bus_mm(cfg);
+        total_mm * self.leak_w_per_mm * cycles as f64 / cfg.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_energy_scales_with_words_and_span() {
+        let cfg8 = SimConfig::table1_8x8(1);
+        let cfg16 = SimConfig::table1_16x16(1);
+        let e = BusEnergy::forty_five_nm();
+        let bus = BusStats { row_words: 1000, col_words: 0, active_cycles: 0 };
+        let j8 = e.dynamic_j(&cfg8, &bus);
+        let j16 = e.dynamic_j(&cfg16, &bus);
+        assert!(j16 > 1.9 * j8, "longer bus costs proportionally more");
+        let bus2 = BusStats { row_words: 2000, col_words: 0, active_cycles: 0 };
+        assert!((e.dynamic_j(&cfg8, &bus2) / j8 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leakage_scales_with_time() {
+        let cfg = SimConfig::table1_8x8(1);
+        let e = BusEnergy::forty_five_nm();
+        let a = e.leakage_j(&cfg, 8, 8, 1_000);
+        let b = e.leakage_j(&cfg, 8, 8, 2_000);
+        assert!((b / a - 2.0).abs() < 1e-9);
+        assert!(e.leakage_j(&cfg, 8, 0, 1_000) < a);
+    }
+}

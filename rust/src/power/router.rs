@@ -1,0 +1,134 @@
+//! Orion-3.0-style router energy/area model [39], 45 nm.
+//!
+//! Orion estimates router power from per-event energies (buffer read/write,
+//! crossbar traversal, arbitration) plus leakage. We use the same
+//! decomposition with constants calibrated so the Table-1 router
+//! (5 ports, 2 VCs, 4-flit × 128-bit buffers) dissipates ≈26.3 mW at 1 GHz
+//! under saturation load — the DSENT figure the paper reports in §5.4 —
+//! with a ~40% leakage share, typical for 45 nm SRAM-dominated routers.
+//!
+//! Absolute joules are calibration anchors, not measurements; every result
+//! the paper reports (and we reproduce) is a *ratio* between two runs of
+//! the same model, which depends only on relative event counts.
+
+/// Per-event energies (joules) and static power (watts) for one router.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterEnergy {
+    pub buffer_write_j: f64,
+    pub buffer_read_j: f64,
+    pub crossbar_j: f64,
+    /// One allocation decision (VC or SA grant).
+    pub arbiter_j: f64,
+    /// Inter-router link traversal, one flit.
+    pub link_j: f64,
+    /// Gather support: Load-signal generation + ASpace update on a passing
+    /// gather head (the Fig. 8 "Gather Load Generator").
+    pub gather_logic_j: f64,
+    /// Gather support: enqueue/fill of one payload from the NI queue.
+    pub gather_payload_j: f64,
+    /// Static (leakage + clock) power per router, watts.
+    pub static_w: f64,
+}
+
+impl RouterEnergy {
+    /// 45 nm constants for the Table-1 router at 1.0 V.
+    ///
+    /// Derivation of the calibration: at saturation one flit enters and
+    /// leaves every port each cycle (5 writes, 5 reads, 5 crossbar
+    /// traversals, ~5 grants, 4 link traversals), giving
+    /// `5·(0.85+0.65+1.25+0.18) + 4·0.45 pJ ≈ 16.5 pJ/cycle = 16.5 mW`
+    /// dynamic at 1 GHz; with 9.8 mW static the total is ≈26.3 mW (§5.4).
+    pub fn forty_five_nm() -> Self {
+        RouterEnergy {
+            buffer_write_j: 0.85e-12,
+            buffer_read_j: 0.65e-12,
+            crossbar_j: 1.25e-12,
+            arbiter_j: 0.18e-12,
+            link_j: 0.45e-12,
+            // §5.4: the proposed router adds ~6% power; the adders are the
+            // load generator (comparator + subtractor on the head) and the
+            // payload queue fill (one 32-bit register file write).
+            gather_logic_j: 0.12e-12,
+            gather_payload_j: 0.22e-12,
+            static_w: 9.8e-3,
+        }
+    }
+
+    /// Dynamic power at saturation load, watts at `clock_hz` (calibration
+    /// check; see unit test).
+    pub fn saturation_power(&self, clock_hz: f64) -> f64 {
+        let per_cycle = 5.0 * (self.buffer_write_j + self.buffer_read_j + self.crossbar_j)
+            + 5.0 * self.arbiter_j
+            + 4.0 * self.link_j;
+        self.static_w + per_cycle * clock_hz
+    }
+}
+
+/// Area model (µm², 45 nm), component roll-up in the style of the Orion /
+/// DSENT area reports. Calibrated to the paper's §5.4 figures:
+/// baseline 72 106 µm², proposed (gather-supported) 74 950 µm² (+3.9%).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouterArea {
+    pub buffers_um2: f64,
+    pub crossbar_um2: f64,
+    pub allocators_um2: f64,
+    pub other_um2: f64,
+    /// Gather Load Generator (comparators, ASpace subtractor) — Fig. 8.
+    pub gather_load_gen_um2: f64,
+    /// Gather payload queue + status signalling — Fig. 8.
+    pub gather_payload_q_um2: f64,
+}
+
+impl RouterArea {
+    pub fn forty_five_nm() -> Self {
+        // Input buffers dominate (5 ports × 2 VCs × 4 × 128 b ≈ 5 Kb SRAM).
+        RouterArea {
+            buffers_um2: 39_000.0,
+            crossbar_um2: 17_500.0,
+            allocators_um2: 6_600.0,
+            other_um2: 9_006.0,
+            gather_load_gen_um2: 780.0,
+            gather_payload_q_um2: 2_064.0,
+        }
+    }
+
+    /// Baseline (unmodified) router area.
+    pub fn baseline(&self) -> f64 {
+        self.buffers_um2 + self.crossbar_um2 + self.allocators_um2 + self.other_um2
+    }
+
+    /// Gather-supported router area (Fig. 8).
+    pub fn proposed(&self) -> f64 {
+        self.baseline() + self.gather_load_gen_um2 + self.gather_payload_q_um2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturation_power_matches_the_papers_dsent_figure() {
+        // §5.4: 26.3 mW at 1 GHz for the Table-1 router.
+        let e = RouterEnergy::forty_five_nm();
+        let p = e.saturation_power(1.0e9);
+        assert!((p - 26.3e-3).abs() < 0.5e-3, "saturation power {p}");
+    }
+
+    #[test]
+    fn area_matches_the_papers_synthesis_report() {
+        // §5.4: 72106 µm² baseline, 74950 µm² proposed.
+        let a = RouterArea::forty_five_nm();
+        assert!((a.baseline() - 72_106.0).abs() < 110.0, "baseline {}", a.baseline());
+        assert!((a.proposed() - 74_950.0).abs() < 110.0, "proposed {}", a.proposed());
+        let overhead = a.proposed() / a.baseline() - 1.0;
+        assert!(overhead > 0.03 && overhead < 0.05, "area overhead {overhead}");
+    }
+
+    #[test]
+    fn leakage_share_is_plausible_for_45nm() {
+        let e = RouterEnergy::forty_five_nm();
+        let share = e.static_w / e.saturation_power(1.0e9);
+        assert!(share > 0.3 && share < 0.5, "leakage share {share}");
+    }
+}

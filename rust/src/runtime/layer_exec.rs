@@ -1,0 +1,112 @@
+//! Convolution-layer execution through the AOT artifacts.
+//!
+//! Artifacts are per-layer-shape HLO modules produced by
+//! `python/compile/aot.py` (the L2 JAX model calling the L1 Pallas
+//! OS-matmul kernel). `LayerExecutor` resolves the artifact for a layer,
+//! compiles it once, and executes it with concrete tensors — the numeric
+//! half of the accelerator that the NoC simulator provides the timing for.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::{LoadedModel, Runtime, Tensor};
+use crate::models::ConvLayer;
+
+/// Artifact file name for a layer shape (mirrors `aot.py::artifact_name`).
+pub fn artifact_name(c: usize, h: usize, r: usize, stride: usize, pad: usize, q: usize) -> String {
+    format!("conv_c{c}_h{h}_r{r}_s{stride}_p{pad}_q{q}.hlo.txt")
+}
+
+/// Per-process executor: one PJRT client, one compiled executable per
+/// distinct layer shape (compile-once, execute-many).
+pub struct LayerExecutor {
+    runtime: Runtime,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, LoadedModel>,
+}
+
+impl LayerExecutor {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<LayerExecutor> {
+        Ok(LayerExecutor {
+            runtime: Runtime::cpu()?,
+            artifacts_dir: artifacts_dir.into(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    fn ensure_loaded(&mut self, layer: &ConvLayer) -> Result<String> {
+        let name =
+            artifact_name(layer.c, layer.h_in, layer.r, layer.stride, layer.pad, layer.q);
+        if !self.cache.contains_key(&name) {
+            let path = self.artifacts_dir.join(&name);
+            anyhow::ensure!(
+                path.exists(),
+                "artifact {} not found — run `make artifacts` (layer {})",
+                path.display(),
+                layer.name
+            );
+            let model = self.runtime.load_hlo_text(&path)?;
+            self.cache.insert(name.clone(), model);
+        }
+        Ok(name)
+    }
+
+    /// Execute the layer forward: `input [1,C,H,H]`, `weights [Q,C,R,R]`
+    /// → `[1,Q,Ho,Ho]`.
+    pub fn forward(&mut self, layer: &ConvLayer, input: &Tensor, weights: &Tensor) -> Result<Tensor> {
+        anyhow::ensure!(
+            input.shape == vec![1, layer.c, layer.h_in, layer.h_in],
+            "input shape {:?} does not match layer {}",
+            input.shape,
+            layer.name
+        );
+        anyhow::ensure!(
+            weights.shape == vec![layer.q, layer.c, layer.r, layer.r],
+            "weight shape {:?} does not match layer {}",
+            weights.shape,
+            layer.name
+        );
+        let h_out = layer.h_out();
+        let key = self.ensure_loaded(layer)?;
+        let model = &self.cache[&key];
+        let outputs = self
+            .runtime
+            .exec_f32(model, &[input.clone(), weights.clone()])
+            .with_context(|| format!("executing artifact for layer {}", layer.name))?;
+        anyhow::ensure!(outputs.len() == 1, "expected a single output tensor");
+        let data = outputs.into_iter().next().unwrap();
+        anyhow::ensure!(
+            data.len() == layer.q * h_out * h_out,
+            "output size {} does not match [1,{},{h_out},{h_out}]",
+            data.len(),
+            layer.q
+        );
+        Ok(Tensor::new(vec![1, layer.q, h_out, h_out], data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names_are_shape_keyed() {
+        assert_eq!(artifact_name(3, 32, 3, 1, 1, 16), "conv_c3_h32_r3_s1_p1_q16.hlo.txt");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let mut ex = LayerExecutor::new("/nonexistent-artifacts").unwrap();
+        let layer = ConvLayer { name: "t", c: 3, h_in: 8, r: 3, stride: 1, pad: 1, q: 4 };
+        let input = Tensor::zeros(vec![1, 3, 8, 8]);
+        let weights = Tensor::zeros(vec![4, 3, 3, 3]);
+        let err = ex.forward(&layer, &input, &weights).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

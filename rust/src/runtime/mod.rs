@@ -1,0 +1,151 @@
+//! PJRT runtime bridge — loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them from rust. Python is never on this path.
+//!
+//! Interchange format is **HLO text**, not serialized `HloModuleProto`:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the pinned
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! `/opt/xla-example/README.md`).
+
+pub mod layer_exec;
+pub mod reference;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus the executables loaded on it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled model artifact.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "model".to_string());
+        Ok(LoadedModel { exe, name })
+    }
+
+    /// Execute with f32 tensor inputs; returns every output of the result
+    /// tuple, flattened (artifacts are lowered with `return_tuple=True`).
+    pub fn exec_f32(&self, model: &LoadedModel, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input to {:?}", t.shape))?;
+            literals.push(lit);
+        }
+        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = result.to_tuple().context("decomposing result tuple")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>().context("converting output to f32")?);
+        }
+        Ok(out)
+    }
+}
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Deterministic pseudo-random tensor for tests/examples.
+    pub fn random(shape: Vec<usize>, seed: u64) -> Tensor {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| (rng.unit() as f32 - 0.5) * 2.0).collect();
+        Tensor { shape, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Max absolute difference between two equally-shaped buffers.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "comparing buffers of different sizes");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        let z = Tensor::zeros(vec![4, 4]);
+        assert_eq!(z.data.len(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_rejects_bad_shape() {
+        Tensor::new(vec![2, 2], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn random_tensor_is_deterministic() {
+        let a = Tensor::random(vec![8], 7);
+        let b = Tensor::random(vec![8], 7);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn max_abs_diff_finds_the_worst_element() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

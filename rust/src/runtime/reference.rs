@@ -1,0 +1,168 @@
+//! Pure-rust reference convolution (naive direct form). This is the
+//! third corner of the correctness triangle:
+//!
+//! * `python/compile/kernels/ref.py` — jnp oracle checked against the
+//!   Pallas kernel at build time;
+//! * the AOT artifact executed through PJRT at run time;
+//! * this function, checked against the artifact output in integration
+//!   tests and the end-to-end example — proving the whole
+//!   python-AOT → rust-runtime pipeline preserves numerics.
+
+use super::Tensor;
+
+/// Direct NCHW convolution. `input` is `[1, C, H, H]`, `weights` is
+/// `[Q, C, R, R]`; returns `[1, Q, Ho, Ho]` with the given stride/padding.
+pub fn conv2d(input: &Tensor, weights: &Tensor, stride: usize, pad: usize) -> Tensor {
+    assert_eq!(input.shape.len(), 4, "input must be NCHW");
+    assert_eq!(weights.shape.len(), 4, "weights must be QCRR");
+    let (nb, c, h, w) = (input.shape[0], input.shape[1], input.shape[2], input.shape[3]);
+    let (q, cw, r, r2) = (weights.shape[0], weights.shape[1], weights.shape[2], weights.shape[3]);
+    assert_eq!(nb, 1, "reference supports batch 1");
+    assert_eq!(c, cw, "channel mismatch");
+    assert_eq!(r, r2, "kernels are square");
+    let ho = (h + 2 * pad - r) / stride + 1;
+    let wo = (w + 2 * pad - r) / stride + 1;
+    let mut out = Tensor::zeros(vec![1, q, ho, wo]);
+    for oc in 0..q {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut acc = 0.0f32;
+                for ic in 0..c {
+                    for ky in 0..r {
+                        for kx in 0..r {
+                            let iy = oy * stride + ky;
+                            let ix = ox * stride + kx;
+                            if iy < pad || ix < pad {
+                                continue;
+                            }
+                            let (iy, ix) = (iy - pad, ix - pad);
+                            if iy >= h || ix >= w {
+                                continue;
+                            }
+                            let iv = input.data[(ic * h + iy) * w + ix];
+                            let wv = weights.data[((oc * c + ic) * r + ky) * r + kx];
+                            acc += iv * wv;
+                        }
+                    }
+                }
+                out.data[(oc * ho + oy) * wo + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// im2col patch extraction matching the L2 JAX model's layout: returns
+/// `[P, C·R·R]` where `P = Ho·Wo` — the exact operand stream each PE row
+/// receives in the OS dataflow (Fig. 4).
+pub fn im2col(input: &Tensor, r: usize, stride: usize, pad: usize) -> Tensor {
+    let (c, h, w) = (input.shape[1], input.shape[2], input.shape[3]);
+    let ho = (h + 2 * pad - r) / stride + 1;
+    let wo = (w + 2 * pad - r) / stride + 1;
+    let k = c * r * r;
+    let mut out = Tensor::zeros(vec![ho * wo, k]);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            let p = oy * wo + ox;
+            for ic in 0..c {
+                for ky in 0..r {
+                    for kx in 0..r {
+                        let iy = oy * stride + ky;
+                        let ix = ox * stride + kx;
+                        let v = if iy < pad || ix < pad || iy - pad >= h || ix - pad >= w {
+                            0.0
+                        } else {
+                            input.data[(ic * h + (iy - pad)) * w + (ix - pad)]
+                        };
+                        out.data[p * k + (ic * r + ky) * r + kx] = v;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Matmul `[m,k] × [k,n] → [m,n]` (row-major). The OS dataflow computes
+/// exactly `im2col(input) × weightsᵀ`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "inner dimension mismatch");
+    let mut out = Tensor::zeros(vec![m, n]);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a.data[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out.data[i * n + j] += av * b.data[l * n + j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::max_abs_diff;
+
+    #[test]
+    fn identity_kernel_preserves_input() {
+        // 1x1 kernel of 1.0 on a single channel is identity.
+        let input = Tensor::random(vec![1, 1, 5, 5], 3);
+        let weights = Tensor::new(vec![1, 1, 1, 1], vec![1.0]);
+        let out = conv2d(&input, &weights, 1, 0);
+        assert_eq!(out.shape, vec![1, 1, 5, 5]);
+        assert_eq!(out.data, input.data);
+    }
+
+    #[test]
+    fn conv_matches_im2col_matmul() {
+        // The OS dataflow identity: conv = im2col × Wᵀ, reshaped.
+        let input = Tensor::random(vec![1, 3, 8, 8], 11);
+        let weights = Tensor::random(vec![4, 3, 3, 3], 12);
+        let direct = conv2d(&input, &weights, 1, 1);
+
+        let patches = im2col(&input, 3, 1, 1); // [64, 27]
+        let wt = {
+            // [Q, C·R·R] -> transpose to [C·R·R, Q]
+            let k = 27;
+            let q = 4;
+            let mut t = Tensor::zeros(vec![k, q]);
+            for qq in 0..q {
+                for kk in 0..k {
+                    t.data[kk * q + qq] = weights.data[qq * k + kk];
+                }
+            }
+            t
+        };
+        let mm = matmul(&patches, &wt); // [64, 4] = [P, Q]
+        // direct is [1, Q, 8, 8]; mm is [P, Q] with P = 64.
+        for p in 0..64 {
+            for q in 0..4 {
+                let d = direct.data[q * 64 + p];
+                let m = mm.data[p * 4 + q];
+                assert!((d - m).abs() < 1e-4, "p={p} q={q}: {d} vs {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn stride_and_padding_geometry() {
+        let input = Tensor::random(vec![1, 2, 9, 9], 5);
+        let weights = Tensor::random(vec![3, 2, 3, 3], 6);
+        let out = conv2d(&input, &weights, 2, 1);
+        assert_eq!(out.shape, vec![1, 3, 5, 5]);
+    }
+
+    #[test]
+    fn matmul_small_known_case() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(max_abs_diff(&c.data, &[3.0, 3.0, 7.0, 7.0]), 0.0);
+    }
+}

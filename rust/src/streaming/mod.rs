@@ -1,0 +1,166 @@
+//! The streaming-bus architecture of §4.3/Fig. 10.
+//!
+//! Dedicated buses carry operands from the memory elements straight to the
+//! PE rows/columns, eliminating per-hop router traversal for one-to-many
+//! traffic:
+//!
+//! * **Two-way** (Fig. 10(a)): one input-activation streaming unit per row
+//!   and one weight streaming unit per column, operating in parallel.
+//! * **One-way** (Fig. 10(b)): a single per-row link shared by inputs and
+//!   weights, interleaved through a multiplexor — half the wires, twice the
+//!   occupancy.
+//!
+//! Flow control (§4.4): the global buffer tracks per-NI credits and a
+//! stream unit only drives a word when *all* NIs in its row/column have
+//! space, guaranteeing single-cycle delivery. The PEs of [36] consume one
+//! word per cycle deterministically, so in steady state the gate never
+//! closes; [`StreamUnit`] still models the gate so failure injection tests
+//! can exercise stalls.
+
+use crate::config::{SimConfig, Streaming};
+use crate::dataflow::os::OsMapping;
+use crate::noc::stats::BusStats;
+
+/// One streaming unit driving one row (inputs) or column (weights).
+#[derive(Debug, Clone)]
+pub struct StreamUnit {
+    /// Words still to stream this round.
+    pub remaining: u64,
+    /// Words deliverable per cycle (bus width, `f_l`).
+    pub words_per_cycle: u32,
+    /// Per-NI free-space credits along the bus (global-buffer view).
+    pub credits: Vec<u32>,
+    /// Total words driven (power accounting).
+    pub words_driven: u64,
+    /// Cycles the bus was active.
+    pub active_cycles: u64,
+}
+
+impl StreamUnit {
+    pub fn new(words: u64, words_per_cycle: u32, nis: usize, ni_queue_depth: u32) -> Self {
+        StreamUnit {
+            remaining: words,
+            words_per_cycle,
+            credits: vec![ni_queue_depth; nis],
+            words_driven: 0,
+            active_cycles: 0,
+        }
+    }
+
+    /// §4.4: "The streaming unit will only perform the streaming if all the
+    /// nodes have free space to hold the data."
+    pub fn can_stream(&self) -> bool {
+        self.remaining > 0 && self.credits.iter().all(|&c| c > 0)
+    }
+
+    /// Advance one cycle: drive up to `words_per_cycle` words (broadcast to
+    /// every NI on the bus), consuming one credit per NI per word. Returns
+    /// words driven.
+    pub fn step(&mut self) -> u64 {
+        if !self.can_stream() {
+            return 0;
+        }
+        let burst = (self.words_per_cycle as u64)
+            .min(self.remaining)
+            .min(self.credits.iter().copied().min().unwrap_or(0) as u64);
+        if burst == 0 {
+            return 0;
+        }
+        for c in self.credits.iter_mut() {
+            *c -= burst as u32;
+        }
+        self.remaining -= burst;
+        self.words_driven += burst;
+        self.active_cycles += 1;
+        burst
+    }
+
+    /// An NI consumed `k` words (PE register file accepted them).
+    pub fn refund(&mut self, ni: usize, k: u32) {
+        self.credits[ni] += k;
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+/// Deterministic per-round stream phase length in cycles — the
+/// `C·R·R·n / f_l` term of Eqs. (3)–(4), doubled for the shared one-way
+/// link.
+pub fn stream_phase_cycles(cfg: &SimConfig, streaming: Streaming, macs_per_pe: u64) -> u64 {
+    crate::pe::bus_stream_cycles(cfg, streaming, macs_per_pe)
+}
+
+/// Streaming-bus activity for ONE round of the OS schedule (power
+/// accounting input). Mesh streaming has no buses.
+pub fn per_round_bus_stats(cfg: &SimConfig, streaming: Streaming, mapping: &OsMapping) -> BusStats {
+    match streaming {
+        Streaming::TwoWay => BusStats {
+            row_words: cfg.mesh_rows as u64 * mapping.row_stream_words,
+            col_words: cfg.mesh_cols as u64 * mapping.col_stream_words,
+            active_cycles: stream_phase_cycles(cfg, streaming, mapping.macs_per_pe),
+        },
+        Streaming::OneWay => BusStats {
+            // The shared per-row link carries inputs and weights interleaved
+            // (Fig. 10(b)); weight words ride the row bus.
+            row_words: cfg.mesh_rows as u64
+                * (mapping.row_stream_words + mapping.col_stream_words),
+            col_words: 0,
+            active_cycles: stream_phase_cycles(cfg, streaming, mapping.macs_per_pe),
+        },
+        Streaming::Mesh => BusStats::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ConvLayer;
+
+    #[test]
+    fn unit_streams_all_words_when_credits_flow() {
+        let mut u = StreamUnit::new(10, 1, 4, 2);
+        let mut cycles = 0;
+        while !u.done() {
+            let w = u.step();
+            // Consume immediately (deterministic PEs).
+            for ni in 0..4 {
+                u.refund(ni, w as u32);
+            }
+            cycles += 1;
+            assert!(cycles < 100, "livelock");
+        }
+        assert_eq!(u.words_driven, 10);
+        assert_eq!(cycles, 10);
+    }
+
+    #[test]
+    fn gate_closes_when_any_ni_backs_up() {
+        let mut u = StreamUnit::new(10, 1, 4, 1);
+        assert_eq!(u.step(), 1);
+        // No refunds: all NIs full now.
+        assert!(!u.can_stream());
+        assert_eq!(u.step(), 0);
+        u.refund(0, 1);
+        // NI 0 has space but NIs 1-3 are full: §4.4 all-or-nothing gate.
+        assert!(!u.can_stream());
+        for ni in 1..4 {
+            u.refund(ni, 1);
+        }
+        assert_eq!(u.step(), 1);
+    }
+
+    #[test]
+    fn one_way_carries_weights_on_the_row_bus() {
+        let cfg = SimConfig::table1_8x8(2);
+        let layer = ConvLayer { name: "t", c: 3, h_in: 8, r: 3, stride: 1, pad: 1, q: 8 };
+        let m = OsMapping::new(&cfg, &layer);
+        let two = per_round_bus_stats(&cfg, Streaming::TwoWay, &m);
+        let one = per_round_bus_stats(&cfg, Streaming::OneWay, &m);
+        assert!(two.col_words > 0);
+        assert_eq!(one.col_words, 0);
+        assert!(one.row_words > two.row_words);
+        assert_eq!(one.active_cycles, 2 * two.active_cycles);
+    }
+}

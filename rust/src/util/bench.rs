@@ -1,0 +1,92 @@
+//! Tiny wall-clock bench harness (offline build: no `criterion`).
+//!
+//! Every `benches/*.rs` target is a `harness = false` binary that uses
+//! [`time_it`] for simulator hot-path timing and prints the paper-figure
+//! series alongside. Reported numbers: median, mean, min over `reps`.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median_ns: u128,
+    pub mean_ns: u128,
+    pub min_ns: u128,
+    pub reps: usize,
+}
+
+impl Timing {
+    pub fn per_iter(&self, iters_per_rep: u64) -> f64 {
+        self.median_ns as f64 / iters_per_rep as f64
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {} mean {} min {} ({} reps)",
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            self.reps
+        )
+    }
+}
+
+pub fn fmt_ns(ns: u128) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Time `f` `reps` times (after one untimed warmup) and summarize.
+/// The closure's return value is black-boxed to keep the work alive.
+pub fn time_it<T>(reps: usize, mut f: impl FnMut() -> T) -> Timing {
+    assert!(reps >= 1);
+    std::hint::black_box(f()); // warmup
+    let mut samples: Vec<u128> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos());
+    }
+    samples.sort_unstable();
+    Timing {
+        median_ns: samples[samples.len() / 2],
+        mean_ns: samples.iter().sum::<u128>() / samples.len() as u128,
+        min_ns: samples[0],
+        reps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_orders_hold() {
+        let t = time_it(5, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(t.min_ns <= t.median_ns);
+        assert_eq!(t.reps, 5);
+    }
+
+    #[test]
+    fn formats_scale() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1_500), "1.500µs");
+        assert_eq!(fmt_ns(2_000_000), "2.000ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000s");
+    }
+}

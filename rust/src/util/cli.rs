@@ -1,0 +1,119 @@
+//! Minimal command-line flag parsing (offline build: no `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments and subcommands. Unknown flags are an error, so typos fail
+//! loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]` given the set of flags that take a value.
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        valued: &[&str],
+        boolean: &[&str],
+    ) -> anyhow::Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut positionals = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if boolean.contains(&name) {
+                    anyhow::ensure!(inline.is_none(), "flag --{name} takes no value");
+                    flags.insert(name.to_string(), "true".to_string());
+                } else if valued.contains(&name) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?,
+                    };
+                    flags.insert(name.to_string(), v);
+                } else {
+                    anyhow::bail!("unknown flag --{name}");
+                }
+            } else {
+                positionals.push(arg);
+            }
+        }
+        Ok(Args { flags, positionals })
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|e| anyhow::anyhow!("invalid value for --{name}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_valued_and_bool_flags() {
+        let a = Args::parse(
+            argv(&["run", "--mesh", "8", "--verbose", "--n=4"]),
+            &["mesh", "n"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(0), Some("run"));
+        assert_eq!(a.get("mesh"), Some("8"));
+        assert_eq!(a.get_parsed::<usize>("n", 1).unwrap(), 4);
+        assert!(a.get_bool("verbose"));
+        assert!(!a.get_bool("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(Args::parse(argv(&["--wat"]), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert!(Args::parse(argv(&["--mesh"]), &["mesh"], &[]).is_err());
+    }
+
+    #[test]
+    fn default_applies_when_absent() {
+        let a = Args::parse(argv(&[]), &["k"], &[]).unwrap();
+        assert_eq!(a.get_parsed::<u64>("k", 9).unwrap(), 9);
+    }
+}

@@ -1,0 +1,414 @@
+//! A minimal JSON reader/writer.
+//!
+//! The build environment is fully offline (no `serde`/`serde_json`), so the
+//! crate carries this small, well-tested JSON implementation for config
+//! round-trips and machine-readable experiment reports. It supports the
+//! full JSON value grammar except exotic number forms; that is all the
+//! project needs.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    pub fn set(&mut self, key: &str, val: Json) -> &mut Self {
+        if let Json::Obj(m) = self {
+            m.insert(key.to_string(), val);
+        } else {
+            panic!("Json::set on non-object");
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|f| f as u64)
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|f| f as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    /// Serialize with two-space indentation.
+    pub fn to_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn write_pretty(&self, out: &mut String, indent: usize) {
+        let pad = "  ".repeat(indent + 1);
+        let pad0 = "  ".repeat(indent);
+        match self {
+            Json::Arr(v) if !v.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    x.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&pad0);
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    write_str(out, k);
+                    out.push_str(": ");
+                    v.write_pretty(out, indent + 1);
+                }
+                out.push('\n');
+                out.push_str(&pad0);
+                out.push('}');
+            }
+            other => other.write(out),
+        }
+    }
+}
+
+fn write_num(out: &mut String, n: f64) {
+    if n.fract() == 0.0 && n.abs() < 9.0e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Parse a JSON document.
+pub fn parse(input: &str) -> anyhow::Result<Json> {
+    let mut p = Parser { b: input.as_bytes(), i: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    anyhow::ensure!(p.i == p.b.len(), "trailing characters at offset {}", p.i);
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("unexpected end of input"))
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        anyhow::ensure!(self.peek()? == c, "expected '{}' at offset {}", c as char, self.i);
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> anyhow::Result<Json> {
+        anyhow::ensure!(
+            self.b[self.i..].starts_with(s.as_bytes()),
+            "invalid literal at offset {}",
+            self.i
+        );
+        self.i += s.len();
+        Ok(v)
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => anyhow::bail!("unexpected character '{}' at offset {}", c as char, self.i),
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => anyhow::bail!("expected ',' or '}}', got '{}' at {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut v = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.skip_ws();
+            v.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.i += 1;
+                }
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => anyhow::bail!("expected ',' or ']', got '{}' at {}", c as char, self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'b' => s.push('\u{0008}'),
+                        b'f' => s.push('\u{000c}'),
+                        b'u' => {
+                            anyhow::ensure!(self.i + 4 <= self.b.len(), "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        }
+                        c => anyhow::bail!("invalid escape '\\{}'", c as char),
+                    }
+                }
+                c if c < 0x80 => s.push(c as char),
+                _ => {
+                    // Multi-byte UTF-8: copy the full sequence.
+                    let start = self.i - 1;
+                    let len = utf8_len(c);
+                    anyhow::ensure!(start + len <= self.b.len(), "truncated UTF-8");
+                    s.push_str(std::str::from_utf8(&self.b[start..start + len])?);
+                    self.i = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>()?))
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_object() {
+        let mut j = Json::obj();
+        j.set("a", Json::Num(1.5))
+            .set("b", Json::Str("x\"y".into()))
+            .set("c", Json::Arr(vec![Json::Bool(true), Json::Null]));
+        let s = j.to_string();
+        assert_eq!(parse(&s).unwrap(), j);
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"k": {"inner": [1, 2, 3]}, "f": -2.5e3}"#).unwrap();
+        assert_eq!(v.get("f").unwrap().as_f64(), Some(-2500.0));
+        let inner = v.get("k").unwrap().get("inner").unwrap().as_arr().unwrap();
+        assert_eq!(inner.len(), 3);
+        assert_eq!(inner[2].as_u64(), Some(3));
+    }
+
+    #[test]
+    fn integer_formatting_has_no_fraction() {
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\":1} x").is_err());
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let j = Json::Str("tab\tnl\nuni\u{2603}".into());
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn pretty_output_parses_back() {
+        let v = parse(r#"{"a":[1,{"b":2}],"c":"s"}"#).unwrap();
+        assert_eq!(parse(&v.to_pretty()).unwrap(), v);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree utilities replacing unavailable third-party crates (the build
+//! environment is offline): JSON ([`json`]), deterministic RNG and
+//! property-check driver ([`rng`]), a wall-clock bench harness ([`bench`])
+//! and CLI flag parsing ([`cli`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

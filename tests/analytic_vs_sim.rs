@@ -1,0 +1,88 @@
+//! Cross-validation of the closed-form latency models (Eqs. 3–4, §4.5)
+//! against the cycle-accurate simulation in the uncongested regime, where
+//! Δ_R = Δ_G = 0 and the two must agree.
+
+use noc_dnn::analytic;
+use noc_dnn::config::{Collection, SimConfig, Streaming};
+use noc_dnn::dataflow::run_layer;
+use noc_dnn::models::ConvLayer;
+
+fn quiet_layer() -> ConvLayer {
+    // Large C·R·R => long compute period => the network is never
+    // congested and the analytic zero-Δ forms should match simulation.
+    ConvLayer { name: "quiet", c: 64, h_in: 16, r: 3, stride: 1, pad: 1, q: 32 }
+}
+
+fn rel_err(a: u64, b: u64) -> f64 {
+    (a as f64 - b as f64).abs() / (b as f64)
+}
+
+#[test]
+fn gather_simulation_matches_eq4_when_uncongested() {
+    for n in [1usize, 4] {
+        let cfg = SimConfig::table1_8x8(n);
+        let layer = quiet_layer();
+        let sim = run_layer(&cfg, Streaming::TwoWay, Collection::Gather, &layer);
+        let model = analytic::latency_gather(&cfg, Streaming::TwoWay, &layer);
+        let err = rel_err(sim.total_cycles, model);
+        assert!(
+            err < 0.05,
+            "n={n}: sim {} vs Eq.(4) {model} ({:.1}% off)",
+            sim.total_cycles,
+            err * 100.0
+        );
+    }
+}
+
+#[test]
+fn ru_simulation_matches_eq3_when_uncongested() {
+    for n in [1usize, 4] {
+        let cfg = SimConfig::table1_8x8(n);
+        let layer = quiet_layer();
+        let sim = run_layer(&cfg, Streaming::TwoWay, Collection::RepetitiveUnicast, &layer);
+        let model = analytic::latency_ru(&cfg, Streaming::TwoWay, &layer);
+        let err = rel_err(sim.total_cycles, model);
+        assert!(
+            err < 0.05,
+            "n={n}: sim {} vs Eq.(3) {model} ({:.1}% off)",
+            sim.total_cycles,
+            err * 100.0
+        );
+    }
+}
+
+#[test]
+fn congestion_terms_are_nonnegative() {
+    // Δ = sim − analytic must be ≥ (slightly below) 0: the closed forms
+    // are zero-load lower bounds.
+    let mut cfg = SimConfig::table1_8x8(8);
+    cfg.trace_driven = true; // network-bound: Δ_R should be large
+    let layer = ConvLayer { name: "hot", c: 4, h_in: 16, r: 3, stride: 1, pad: 1, q: 64 };
+    let sim_ru = run_layer(&cfg, Streaming::TwoWay, Collection::RepetitiveUnicast, &layer);
+    let sim_g = run_layer(&cfg, Streaming::TwoWay, Collection::Gather, &layer);
+    // In the trace-driven regime the compute term is hidden, so compare
+    // the two simulations directly: Δ_R > Δ_G manifests as RU slower.
+    assert!(
+        sim_ru.total_cycles > sim_g.total_cycles,
+        "RU ({}) must exceed gather ({}) under congestion",
+        sim_ru.total_cycles,
+        sim_g.total_cycles
+    );
+}
+
+#[test]
+fn extrapolation_is_cap_insensitive() {
+    // DESIGN.md: the round-extrapolated totals must be stable in the
+    // simulated-prefix length (steady-state rounds are identical).
+    let layer = quiet_layer();
+    let mut totals = Vec::new();
+    for cap in [4usize, 8, 16] {
+        let mut cfg = SimConfig::table1_8x8(4);
+        cfg.sim_rounds_cap = cap;
+        let r = run_layer(&cfg, Streaming::TwoWay, Collection::Gather, &layer);
+        totals.push(r.total_cycles);
+    }
+    let spread = (*totals.iter().max().unwrap() - *totals.iter().min().unwrap()) as f64
+        / *totals.iter().min().unwrap() as f64;
+    assert!(spread < 0.02, "cap sensitivity too high: {totals:?}");
+}

@@ -1,0 +1,225 @@
+//! Detailed behavioural tests of the cycle-accurate network: zero-load
+//! latency arithmetic, wormhole serialization, credit backpressure,
+//! gather packet emergence (1 packet on 8×8, 2 on 16×16), multicast
+//! stream delivery, and the δ<κ degeneration.
+
+use noc_dnn::config::{Collection, SimConfig};
+use noc_dnn::noc::network::{Network, StreamEdge};
+use noc_dnn::noc::Coord;
+
+fn drain(net: &mut Network, payloads: u64) -> u64 {
+    let ok = net.run_until(|n| n.payloads_delivered >= payloads, 1_000_000);
+    assert!(ok, "network stalled at {}/{payloads}", net.payloads_delivered);
+    net.cycle
+}
+
+#[test]
+fn zero_load_unicast_latency_matches_pipeline_model() {
+    // One unicast packet from (0,y) to the row memory: the head pays
+    // κ+link per hop over (cols) routers + injection overhead; the tail
+    // (2-flit packet) follows one cycle behind.
+    let cfg = SimConfig::table1_8x8(1);
+    let mut net = Network::new(&cfg, Collection::RepetitiveUnicast);
+    net.post_result(0, Coord::new(0, 3), 1);
+    let done = drain(&mut net, 1);
+    // Analytic: injection pipeline (~3) + 8 hops x (kappa+link) - final
+    // link reabsorbed at ejection; measured 39. Pin with +/-3 slack so
+    // timing regressions surface.
+    assert!((36..=42).contains(&done), "zero-load latency {done}");
+    assert!(net.run_until_idle(10_000));
+    assert_eq!(net.stats.packets_injected, 1);
+    assert_eq!(net.stats.packets_ejected, 1);
+}
+
+#[test]
+fn zero_load_latency_scales_with_distance() {
+    let cfg = SimConfig::table1_8x8(1);
+    let mut t = Vec::new();
+    for x in [0u16, 4, 7] {
+        let mut net = Network::new(&cfg, Collection::RepetitiveUnicast);
+        net.post_result(0, Coord::new(x, 0), 1);
+        t.push(drain(&mut net, 1));
+    }
+    assert!(t[0] > t[1] && t[1] > t[2], "farther sources must take longer: {t:?}");
+    // Per-hop delta = kappa + link = 5.
+    assert_eq!(t[1] - t[2], 3 * 5);
+    assert_eq!(t[0] - t[1], 4 * 5);
+}
+
+#[test]
+fn gather_single_packet_collects_whole_8x8_row() {
+    let cfg = SimConfig::table1_8x8(4);
+    let mut net = Network::new(&cfg, Collection::Gather);
+    for x in 0..8 {
+        net.post_result(0, Coord::new(x, 2), 4);
+    }
+    drain(&mut net, 32);
+    assert_eq!(net.stats.packets_injected, 1, "one packet must suffice");
+    assert_eq!(net.stats.gather_boards, 28, "7 transit nodes x 4 payloads");
+    assert_eq!(net.gather_packets_ejected, 1);
+}
+
+#[test]
+fn sixteen_mesh_emerges_exactly_two_gather_packets() {
+    // §5.2: capacity covers half the row; the starved node initiates the
+    // second packet immediately on seeing the full first one.
+    for n in [1usize, 2, 4, 8] {
+        let cfg = SimConfig::table1_16x16(n);
+        let mut net = Network::new(&cfg, Collection::Gather);
+        for x in 0..16 {
+            net.post_result(0, Coord::new(x, 5), n as u32);
+        }
+        drain(&mut net, 16 * n as u64);
+        assert_eq!(
+            net.stats.packets_injected, 2,
+            "n={n}: expected exactly 2 gather packets, got {}",
+            net.stats.packets_injected
+        );
+    }
+}
+
+#[test]
+fn tiny_delta_degenerates_to_per_node_packets_with_higher_cost() {
+    let mut small = SimConfig::table1_8x8(8);
+    small.delta = 0;
+    let mut net_small = Network::new(&small, Collection::Gather);
+    let big = SimConfig::table1_8x8(8);
+    let mut net_big = Network::new(&big, Collection::Gather);
+    for x in 0..8 {
+        net_small.post_result(0, Coord::new(x, 0), 8);
+        net_big.post_result(0, Coord::new(x, 0), 8);
+    }
+    let t_small = drain(&mut net_small, 64);
+    let t_big = drain(&mut net_big, 64);
+    assert!(net_small.stats.packets_injected > net_big.stats.packets_injected);
+    assert!(net_small.stats.flit_hops > net_big.stats.flit_hops);
+    assert!(t_small >= t_big, "congested delta<kappa must not be faster");
+}
+
+#[test]
+fn wormhole_packets_do_not_interleave_on_a_vc() {
+    // Two nodes on the same row send long gather packets; payload and
+    // packet conservation under VC competition.
+    let mut cfg = SimConfig::table1_8x8(8);
+    cfg.delta = 0; // force both to self-inject 17-flit packets
+    let mut net = Network::new(&cfg, Collection::Gather);
+    net.post_result(0, Coord::new(2, 1), 8);
+    net.post_result(0, Coord::new(3, 1), 8);
+    drain(&mut net, 16);
+    assert!(net.run_until_idle(100_000));
+    assert_eq!(net.stats.packets_ejected, net.stats.packets_injected);
+    assert_eq!(net.total_buffered_flits(), 0);
+}
+
+#[test]
+fn credit_backpressure_bounds_buffer_occupancy() {
+    // Flood one row from many sources; buffers must never exceed depth
+    // (enforced by an assert inside VcBuffer::push — this test exercises
+    // it under the heaviest contention we can generate).
+    let mut cfg = SimConfig::table1_8x8(8);
+    cfg.delta = 0;
+    let mut net = Network::new(&cfg, Collection::RepetitiveUnicast);
+    for r in 0..4u64 {
+        for x in 0..8 {
+            net.post_result(r, Coord::new(x, 0), 8);
+        }
+    }
+    drain(&mut net, 4 * 64);
+    assert!(net.run_until_idle(100_000));
+    assert_eq!(net.total_buffered_flits(), 0);
+}
+
+#[test]
+fn operand_streams_deliver_along_rows_and_columns() {
+    let cfg = SimConfig::table1_8x8(1);
+    let mut net = Network::new(&cfg, Collection::Gather);
+    net.post_operand_stream(0, StreamEdge::Row(3), 64); // 16 body flits
+    net.post_operand_stream(0, StreamEdge::Col(5), 32);
+    let ok = net.run_until(|n| n.stream_tails_ejected >= 2, 100_000);
+    assert!(ok, "streams stalled");
+    // Row stream: 17 flits x 8 routers; col stream: 9 flits x 8 routers.
+    assert_eq!(net.stats.stream_deliveries, 17 * 8 + 9 * 8);
+}
+
+#[test]
+fn crossing_streams_use_disjoint_crossbar_paths() {
+    // Row streams (West->East) and column streams (North->South) use
+    // different input AND output ports — a non-blocking 5x5 crossbar
+    // passes them concurrently. (The gather-only architecture's real
+    // contention is stream-vs-collection, tested below.)
+    let cfg = SimConfig::table1_8x8(1);
+    let mut solo = Network::new(&cfg, Collection::Gather);
+    solo.post_operand_stream(0, StreamEdge::Row(4), 256);
+    assert!(solo.run_until(|n| n.stream_tails_ejected >= 1, 100_000));
+    let t_solo = solo.cycle;
+    let mut cross = Network::new(&cfg, Collection::Gather);
+    cross.post_operand_stream(0, StreamEdge::Row(4), 256);
+    for x in 0..8 {
+        cross.post_operand_stream(0, StreamEdge::Col(x), 256);
+    }
+    assert!(cross.run_until(|n| n.stream_tails_ejected >= 9, 400_000));
+    assert!(cross.cycle <= t_solo + 8, "orthogonal streams should not serialize");
+}
+
+#[test]
+fn collection_contends_with_same_row_operand_stream() {
+    // Operand streams and result collection both head East on the same
+    // row: they share output ports, so the gather-only architecture pays
+    // real contention — the mechanism behind Fig. 14's streaming-bus win.
+    // (The inverse direction — collection delaying a lone small gather
+    // packet — is mostly absorbed by the credit-loop bubbles, so we
+    // assert on the stream side, where the interference is unavoidable.)
+    let cfg = SimConfig::table1_8x8(8);
+    let stream_words = 512u64;
+    let mut solo = Network::new(&cfg, Collection::RepetitiveUnicast);
+    solo.post_operand_stream(0, StreamEdge::Row(4), stream_words);
+    assert!(solo.run_until(|n| n.stream_tails_ejected >= 1, 100_000));
+    let t_solo = solo.cycle;
+    let mut busy = Network::new(&cfg, Collection::RepetitiveUnicast);
+    busy.post_operand_stream(0, StreamEdge::Row(4), stream_words);
+    for x in 0..8 {
+        busy.post_result(0, Coord::new(x, 4), 8); // 8 unicast pkts per node
+    }
+    assert!(busy.run_until(|n| n.stream_tails_ejected >= 1, 400_000));
+    let t_busy = busy.cycle;
+    assert!(
+        t_busy > t_solo,
+        "stream sharing the row with collection must slow down ({t_busy} vs {t_solo})"
+    );
+}
+
+#[test]
+fn rows_drain_independently_in_parallel() {
+    // Same per-row load on 1 vs 8 rows: makespans should be close
+    // (rows share nothing but the sink column).
+    let cfg = SimConfig::table1_8x8(4);
+    let mut one = Network::new(&cfg, Collection::Gather);
+    for x in 0..8 {
+        one.post_result(0, Coord::new(x, 0), 4);
+    }
+    let t1 = drain(&mut one, 32);
+    let mut all = Network::new(&cfg, Collection::Gather);
+    for y in 0..8 {
+        for x in 0..8 {
+            all.post_result(0, Coord::new(x, y), 4);
+        }
+    }
+    let t8 = drain(&mut all, 8 * 32);
+    assert!(t8 <= t1 + 10, "rows must drain in parallel: 1-row {t1}, 8-row {t8}");
+}
+
+#[test]
+fn payloads_delivered_counts_each_exactly_once() {
+    let cfg = SimConfig::table1_16x16(2);
+    let mut net = Network::new(&cfg, Collection::Gather);
+    let mut expect = 0u64;
+    for y in 0..16 {
+        for x in 0..16 {
+            net.post_result(0, Coord::new(x, y), 2);
+            expect += 2;
+        }
+    }
+    drain(&mut net, expect);
+    assert!(net.run_until_idle(1_000_000));
+    assert_eq!(net.payloads_delivered, expect, "no duplicates after full drain");
+}

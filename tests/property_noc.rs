@@ -1,0 +1,165 @@
+//! Property tests over the NoC simulator invariants (in-tree generator —
+//! see `util::rng::check_cases`; the offline build has no proptest).
+//!
+//! Invariants:
+//! * **conservation** — every posted payload is delivered exactly once,
+//!   for arbitrary mesh sizes, PEs/router, δ, packet sizing and collection
+//!   scheme;
+//! * **no deadlock/livelock** — all scenarios drain within a generous
+//!   cycle bound (XY + credits + wormhole VC discipline);
+//! * **gather economy** — with ample δ, gather never injects more packets
+//!   than repetitive unicast;
+//! * **packet accounting** — injected = ejected after drain.
+
+use noc_dnn::config::{Collection, SimConfig};
+use noc_dnn::noc::network::Network;
+use noc_dnn::noc::Coord;
+use noc_dnn::util::rng::{check_cases, Rng};
+
+/// Random-but-valid config.
+fn random_cfg(rng: &mut Rng) -> SimConfig {
+    let mesh = *rng.choose(&[4usize, 5, 8, 11, 16]);
+    let n = *rng.choose(&[1usize, 2, 4, 8]);
+    let mut cfg = SimConfig::table1(if mesh >= 8 { mesh } else { 8 }, n);
+    // Shrink the mesh after table1 (which asserts n) to cover odd sizes.
+    cfg.mesh_cols = mesh;
+    cfg.mesh_rows = mesh;
+    cfg.delta = rng.range(0, 3 * cfg.delta);
+    cfg.gather_packet_flits = rng.range(2, 20) as usize;
+    cfg.sim_rounds_cap = 4;
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn prop_payload_conservation_across_configs() {
+    check_cases(0xC0FFEE, 60, |rng, case| {
+        let cfg = random_cfg(rng);
+        let collection =
+            if rng.chance(0.5) { Collection::Gather } else { Collection::RepetitiveUnicast };
+        let rounds = rng.range(1, 3);
+        let mut net = Network::new(&cfg, collection);
+        let mut posted = 0u64;
+        for r in 0..rounds {
+            for y in 0..cfg.mesh_rows {
+                for x in 0..cfg.mesh_cols {
+                    if rng.chance(0.8) {
+                        let p = rng.range(1, cfg.pes_per_router as u64) as u32;
+                        net.post_result(r * 50, Coord::new(x as u16, y as u16), p);
+                        posted += p as u64;
+                    }
+                }
+            }
+        }
+        let bound = 2_000_000;
+        let ok = net.run_until(|n| n.payloads_delivered >= posted, bound);
+        assert!(
+            ok && net.payloads_delivered == posted,
+            "case {case}: delivered {}/{posted} (cfg mesh={} n={} δ={} Lg={} coll={:?})",
+            net.payloads_delivered,
+            cfg.mesh_cols,
+            cfg.pes_per_router,
+            cfg.delta,
+            cfg.gather_packet_flits,
+            collection,
+        );
+    });
+}
+
+#[test]
+fn prop_network_drains_completely() {
+    check_cases(0xBEEF, 40, |rng, case| {
+        let cfg = random_cfg(rng);
+        let mut net = Network::new(&cfg, Collection::Gather);
+        for y in 0..cfg.mesh_rows {
+            net.post_result(
+                rng.range(0, 30),
+                Coord::new(rng.below(cfg.mesh_cols as u64) as u16, y as u16),
+                cfg.pes_per_router as u32,
+            );
+        }
+        let ok = net.run_until_idle(2_000_000);
+        assert!(ok, "case {case}: network failed to drain");
+        assert_eq!(net.total_buffered_flits(), 0, "case {case}: flits stuck in buffers");
+        assert_eq!(
+            net.stats.packets_injected, net.stats.packets_ejected,
+            "case {case}: packet leak"
+        );
+    });
+}
+
+#[test]
+fn prop_gather_injects_no_more_packets_than_ru() {
+    check_cases(0xABCD, 30, |rng, case| {
+        let mesh = *rng.choose(&[8usize, 16]);
+        let n = *rng.choose(&[1usize, 2, 4, 8]);
+        let cfg = SimConfig::table1(mesh, n);
+        let run = |coll: Collection| {
+            let mut net = Network::new(&cfg, coll);
+            let total = (cfg.mesh_cols * cfg.mesh_rows * cfg.pes_per_router) as u64;
+            for y in 0..cfg.mesh_rows {
+                for x in 0..cfg.mesh_cols {
+                    net.post_result(0, Coord::new(x as u16, y as u16), n as u32);
+                }
+            }
+            let ok = net.run_until(|nn| nn.payloads_delivered >= total, 1_000_000);
+            assert!(ok, "case {case}: stalled");
+            net.stats.clone()
+        };
+        let g = run(Collection::Gather);
+        let ru = run(Collection::RepetitiveUnicast);
+        assert!(
+            g.packets_injected <= ru.packets_injected,
+            "case {case}: gather {} packets vs RU {}",
+            g.packets_injected,
+            ru.packets_injected
+        );
+        // And strictly fewer flit-hops whenever more than one payload per
+        // row exists and the gather consolidation can kick in.
+        if n >= 4 {
+            assert!(
+                g.flit_hops < ru.flit_hops,
+                "case {case}: gather hops {} !< RU hops {}",
+                g.flit_hops,
+                ru.flit_hops
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_gather_packets_bounded_by_row_population() {
+    // However adversarial δ is, a row never emits more gather packets per
+    // round than it has nodes.
+    check_cases(0x5EED, 30, |rng, case| {
+        let n = *rng.choose(&[1usize, 2, 4, 8]);
+        let mut cfg = SimConfig::table1_8x8(n);
+        cfg.delta = rng.range(0, 80);
+        let mut net = Network::new(&cfg, Collection::Gather);
+        for x in 0..cfg.mesh_cols {
+            net.post_result(0, Coord::new(x as u16, 0), n as u32);
+        }
+        let total = (cfg.mesh_cols * n) as u64;
+        let ok = net.run_until(|nn| nn.payloads_delivered >= total, 1_000_000);
+        assert!(ok, "case {case}: stalled");
+        assert!(
+            net.stats.packets_injected <= cfg.mesh_cols as u64,
+            "case {case}: {} packets from an {}-node row (δ={})",
+            net.stats.packets_injected,
+            cfg.mesh_cols,
+            cfg.delta
+        );
+    });
+}
+
+#[test]
+fn prop_config_json_roundtrip() {
+    check_cases(0x1234, 50, |rng, case| {
+        let mut cfg = random_cfg(rng);
+        cfg.trace_driven = rng.chance(0.5);
+        cfg.ru_pack_payloads = rng.chance(0.5);
+        let s = cfg.to_json();
+        let back = SimConfig::from_json(&s).unwrap();
+        assert_eq!(cfg, back, "case {case}: JSON round-trip changed the config");
+    });
+}

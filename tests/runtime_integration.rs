@@ -1,0 +1,83 @@
+//! Integration: the full python-AOT → rust-PJRT numeric path.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+//! Every artifact is loaded, compiled and executed with deterministic
+//! random tensors; outputs are checked against the in-tree rust reference
+//! convolution — closing the loop python-oracle ⇄ Pallas-kernel ⇄ HLO
+//! artifact ⇄ PJRT execution ⇄ rust reference.
+
+use noc_dnn::models::lite;
+use noc_dnn::runtime::layer_exec::LayerExecutor;
+use noc_dnn::runtime::reference;
+use noc_dnn::runtime::{max_abs_diff, Tensor};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn quickstart_artifact_matches_reference_conv() {
+    let Some(dir) = artifacts_dir() else { return };
+    let layer = lite::quickstart_layer();
+    let mut ex = LayerExecutor::new(dir).unwrap();
+    let input = Tensor::random(vec![1, layer.c, layer.h_in, layer.h_in], 1);
+    let weights = Tensor::random(vec![layer.q, layer.c, layer.r, layer.r], 2);
+    let got = ex.forward(&layer, &input, &weights).unwrap();
+    let want = reference::conv2d(&input, &weights, layer.stride, layer.pad);
+    assert_eq!(got.shape, want.shape);
+    let diff = max_abs_diff(&got.data, &want.data);
+    assert!(diff < 1e-3, "PJRT vs reference diverged: {diff}");
+}
+
+#[test]
+fn all_lite_artifacts_execute_and_match() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut ex = LayerExecutor::new(dir).unwrap();
+    for (i, layer) in lite::alexnet_lite().iter().enumerate() {
+        let input = Tensor::random(vec![1, layer.c, layer.h_in, layer.h_in], 100 + i as u64);
+        let weights =
+            Tensor::random(vec![layer.q, layer.c, layer.r, layer.r], 200 + i as u64);
+        let got = ex.forward(layer, &input, &weights).unwrap();
+        let want = reference::conv2d(&input, &weights, layer.stride, layer.pad);
+        let diff = max_abs_diff(&got.data, &want.data);
+        assert!(diff < 5e-3, "layer {}: diff {diff}", layer.name);
+    }
+}
+
+#[test]
+fn compile_once_execute_many() {
+    let Some(dir) = artifacts_dir() else { return };
+    let layer = lite::quickstart_layer();
+    let mut ex = LayerExecutor::new(dir).unwrap();
+    let weights = Tensor::random(vec![layer.q, layer.c, layer.r, layer.r], 7);
+    let mut prev: Option<Tensor> = None;
+    for seed in 0..4 {
+        let input = Tensor::random(vec![1, layer.c, layer.h_in, layer.h_in], seed);
+        let out = ex.forward(&layer, &input, &weights).unwrap();
+        if let Some(p) = prev {
+            assert_ne!(p.data, out.data, "distinct inputs must give distinct outputs");
+        }
+        prev = Some(out);
+    }
+}
+
+#[test]
+fn gather_payload_accounting_matches_layer_outputs() {
+    // Every output activation of a layer is carried by exactly one gather
+    // payload: the OS mapping's useful_outputs equals the tensor size.
+    use noc_dnn::config::SimConfig;
+    use noc_dnn::dataflow::os::OsMapping;
+    let layer = lite::quickstart_layer();
+    let cfg = SimConfig::table1_8x8(1);
+    let mapping = OsMapping::new(&cfg, &layer);
+    let outputs = (layer.q as u64) * (layer.h_out() as u64).pow(2);
+    assert_eq!(mapping.useful_outputs(&layer), outputs);
+    // The padded round capacity is at least the useful outputs.
+    assert!(mapping.rounds * mapping.payloads_per_round(&cfg) >= outputs);
+}
