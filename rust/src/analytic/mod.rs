@@ -3,10 +3,18 @@
 //! uncongested regime and to reproduce the paper's analysis of one-way vs
 //! two-way streaming.
 //!
+//! The paper states both equations for the OS dataflow. Written against
+//! the [`Dataflow`] interface they generalize to any mapping: the compute
+//! term becomes `(stream + T_MAC) · rounds + setup`, and the collection
+//! term depends only on the payloads each NI posts per round (`n` for OS,
+//! `n/spread` for WS — see [`crate::dataflow::ws`]). The OS instantiation
+//! is numerically identical to the paper's forms.
+//!
 //! Notation (paper → here):
 //!
 //! * `C·R·R` → `macs_per_pe` — operand words streamed per PE per round;
-//! * `n` → `cfg.pes_per_router`;
+//! * `n` → [`Dataflow::psum_collection`] payloads per node
+//!   (`cfg.pes_per_router` under OS);
 //! * `f_l` → `cfg.bus_words_per_cycle` (halved effectively for one-way);
 //! * `T_MAC` → `cfg.t_mac`;
 //! * `κ` → `cfg.router_pipeline`; our model additionally charges the
@@ -19,21 +27,57 @@
 //!   cycle-accurate simulation measures (§4.5: "We will evaluate the
 //!   effects of Δ_R and Δ_G through simulations").
 
-use crate::config::{SimConfig, Streaming};
-use crate::dataflow::os::OsMapping;
+use crate::config::{Collection, SimConfig, Streaming};
+use crate::dataflow::{build, Dataflow};
 use crate::models::ConvLayer;
 
-/// Zero-load components shared by both equations: the compute term
-/// `(C·R·R·n/f_l + T_MAC) · rounds`.
+/// Zero-load compute term for any dataflow:
+/// `(stream + T_MAC) · rounds + setup` — for OS exactly the
+/// `(C·R·R·n/f_l + T_MAC) · rounds` of Eqs. (3)–(4) (OS has no setup
+/// phase).
+pub fn compute_cycles_for(
+    cfg: &SimConfig,
+    streaming: Streaming,
+    mapping: &dyn Dataflow,
+) -> u64 {
+    // The closed forms only exist for the deterministic bus phase; mesh
+    // operand delivery (and its contention) is what the simulator
+    // measures — `Dataflow::stream_cycles` returns 0 there, which would
+    // silently yield a wild underestimate.
+    assert!(
+        streaming != Streaming::Mesh,
+        "mesh streaming latency is simulated, not closed-form (Eqs. 3-4 assume bus streaming)"
+    );
+    (mapping.stream_cycles(cfg, streaming) + cfg.t_mac) * mapping.rounds()
+        + mapping.setup_cycles(cfg, streaming)
+}
+
+/// Zero-load compute term for the dataflow selected by `cfg.dataflow`.
 pub fn compute_cycles(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> u64 {
-    let mapping = OsMapping::new(cfg, layer);
-    let stream = crate::pe::bus_stream_cycles(cfg, streaming, mapping.macs_per_pe);
-    (stream + cfg.t_mac) * mapping.rounds
+    compute_cycles_for(cfg, streaming, build(cfg, layer).as_ref())
 }
 
 /// Per-hop cycles of a head flit in our router model (κ + link).
 fn per_hop(cfg: &SimConfig) -> u64 {
     cfg.router_pipeline + cfg.link_latency
+}
+
+/// The zero-load collection tail for a gather-supported row whose NIs
+/// each post `ppn` payloads: the row needs `⌈M·ppn/η⌉` gather packets;
+/// packet `i` starts `i·η/ppn` columns east of the initiator and
+/// therefore travels `M − i·η/ppn` hops, each packet adding its own
+/// serialization tail.
+fn gather_collection_tail(cfg: &SimConfig, ppn: u64) -> u64 {
+    let m = cfg.mesh_cols as u64;
+    let eta = cfg.gather_capacity() as u64;
+    let num_packets = (m * ppn).div_ceil(eta);
+    let serialization = cfg.gather_packet_flits as u64 - 1;
+    let mut collection = 0;
+    for i in 0..num_packets {
+        let hops = m.saturating_sub(i * eta / ppn);
+        collection += hops * per_hop(cfg) + serialization;
+    }
+    collection
 }
 
 /// Eq. (3): repetitive-unicast layer latency, Δ_R = 0.
@@ -48,22 +92,24 @@ pub fn latency_ru(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> u
 }
 
 /// Eq. (4): gather-supported layer latency, Δ_G = 0.
-///
-/// The row needs `⌈M·n/η⌉` gather packets; packet `i` starts `i·η/n`
-/// columns east of the initiator and therefore travels `M − i·η/n` hops,
-/// each packet adding its own serialization tail.
 pub fn latency_gather(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> u64 {
-    let m = cfg.mesh_cols as u64;
-    let n = cfg.pes_per_router as u64;
-    let eta = cfg.gather_capacity() as u64;
-    let num_packets = (m * n).div_ceil(eta);
-    let serialization = cfg.gather_packet_flits as u64 - 1;
-    let mut collection = 0;
-    for i in 0..num_packets {
-        let hops = m.saturating_sub(i * eta / n);
-        collection += hops * per_hop(cfg) + serialization;
+    let mapping = build(cfg, layer);
+    let ppn = mapping.psum_collection().payloads_per_node as u64;
+    compute_cycles_for(cfg, streaming, mapping.as_ref()) + gather_collection_tail(cfg, ppn)
+}
+
+/// Zero-load latency for any (streaming, collection) pair under the
+/// dataflow selected by `cfg.dataflow`.
+pub fn latency(
+    cfg: &SimConfig,
+    streaming: Streaming,
+    collection: Collection,
+    layer: &ConvLayer,
+) -> u64 {
+    match collection {
+        Collection::RepetitiveUnicast => latency_ru(cfg, streaming, layer),
+        Collection::Gather => latency_gather(cfg, streaming, layer),
     }
-    compute_cycles(cfg, streaming, layer) + collection
 }
 
 /// The analytic improvement factor RU/gather the paper derives in §4.5.

@@ -7,6 +7,39 @@
 use crate::util::json::Json;
 
 
+/// Which dataflow maps a convolution layer onto the mesh (see
+/// [`crate::dataflow::Dataflow`]). The paper evaluates Output-Stationary
+/// only; Weight-Stationary generalizes its streaming/gather mechanisms to
+/// a second traffic shape (pinned weights, broadcast activations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataflowKind {
+    /// Output-Stationary (Fig. 4): each PE accumulates one output element
+    /// per round; inputs ride the row buses, weights the column buses.
+    OutputStationary,
+    /// Weight-Stationary: filter weights are pinned in PE register files
+    /// for a whole wave of rounds; one input patch per round is broadcast
+    /// on the row buses; completed sums ride gather packets east.
+    WeightStationary,
+}
+
+impl DataflowKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DataflowKind::OutputStationary => "os",
+            DataflowKind::WeightStationary => "ws",
+        }
+    }
+
+    /// Parse a CLI/JSON spelling (`os` / `ws`, long names accepted).
+    pub fn parse(s: &str) -> crate::Result<DataflowKind> {
+        match s {
+            "os" | "output-stationary" => Ok(DataflowKind::OutputStationary),
+            "ws" | "weight-stationary" => Ok(DataflowKind::WeightStationary),
+            other => anyhow::bail!("unknown dataflow '{other}' (os | ws)"),
+        }
+    }
+}
+
 /// How partial sums travel back to the global memory (east edge).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Collection {
@@ -93,6 +126,14 @@ pub struct SimConfig {
     pub bus_words_per_cycle: u32,
     /// PE grouping behind each router (§4.4).
     pub pe_grouping: PeGrouping,
+    /// Dataflow used to map layers onto the mesh (default: the paper's
+    /// Output-Stationary).
+    pub dataflow: DataflowKind,
+    /// Weight-Stationary only: per-PE register-file capacity in weight
+    /// words. A filter whose `C·R·R` weights exceed this is spread across
+    /// the PEs behind one router, and the NI accumulates their partial
+    /// sums before collection (see `dataflow::ws`).
+    pub ws_rf_words: u32,
     /// Pack up to `payloads_per_flit` partial sums into each RU unicast
     /// packet body instead of the literal one-packet-per-result repetitive
     /// unicast. Ablation knob (benches/fig15 variants); the paper's RU
@@ -142,6 +183,11 @@ impl SimConfig {
             delta: (m as u64 - 1) * (4 + 1) + 4,
             bus_words_per_cycle: 4,
             pe_grouping: PeGrouping::Column,
+            dataflow: DataflowKind::OutputStationary,
+            // 2048 words (8 KiB of f32) holds every AlexNet filter
+            // (conv3: C·R·R = 1728); the deep VGG-16 layers (4608) spread
+            // across PEs.
+            ws_rf_words: 2048,
             ru_pack_payloads: false,
             trace_driven: false,
             sim_rounds_cap: 8,
@@ -205,6 +251,7 @@ impl SimConfig {
         anyhow::ensure!(self.gather_packets_per_row >= 1, "need at least one gather packet");
         anyhow::ensure!(self.router_pipeline >= 2, "pipeline must cover RC/VA + SA/ST");
         anyhow::ensure!(self.sim_rounds_cap >= 2, "need >= 2 simulated rounds to extrapolate");
+        anyhow::ensure!(self.ws_rf_words >= 1, "WS register file needs at least one word");
         Ok(())
     }
 
@@ -227,6 +274,8 @@ impl SimConfig {
             .set("delta", Json::Num(self.delta as f64))
             .set("bus_words_per_cycle", Json::Num(self.bus_words_per_cycle as f64))
             .set("pe_grouping", Json::Str(self.pe_grouping.label().to_string()))
+            .set("dataflow", Json::Str(self.dataflow.label().to_string()))
+            .set("ws_rf_words", Json::Num(self.ws_rf_words as f64))
             .set("ru_pack_payloads", Json::Bool(self.ru_pack_payloads))
             .set("trace_driven", Json::Bool(self.trace_driven))
             .set("sim_rounds_cap", Json::Num(self.sim_rounds_cap as f64))
@@ -262,6 +311,11 @@ impl SimConfig {
                 Some("row") => PeGrouping::Row,
                 _ => PeGrouping::Column,
             },
+            dataflow: match j.get("dataflow").and_then(Json::as_str) {
+                Some(s) => DataflowKind::parse(s)?,
+                None => d.dataflow,
+            },
+            ws_rf_words: u("ws_rf_words", d.ws_rf_words as u64) as u32,
             ru_pack_payloads: j
                 .get("ru_pack_payloads")
                 .and_then(Json::as_bool)
@@ -369,6 +423,21 @@ mod tests {
         let s = c.to_json();
         let d = SimConfig::from_json(&s).unwrap();
         assert_eq!(c, d);
+    }
+
+    #[test]
+    fn dataflow_selection_roundtrips_and_parses() {
+        let mut c = SimConfig::table1_8x8(2);
+        c.dataflow = DataflowKind::WeightStationary;
+        c.ws_rf_words = 512;
+        let d = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(DataflowKind::parse("weight-stationary").unwrap(), c.dataflow);
+        assert_eq!(DataflowKind::parse("os").unwrap(), DataflowKind::OutputStationary);
+        assert!(DataflowKind::parse("systolic").is_err());
+        // Configs written before the dataflow field default to OS.
+        let legacy = SimConfig::from_json("{}").unwrap();
+        assert_eq!(legacy.dataflow, DataflowKind::OutputStationary);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use crate::util::json::Json;
 
-use super::sweep::{Fig12Series, Fig13Row, Fig14Row, ModelFigPoint};
+use super::sweep::{DataflowCompareRow, Fig12Series, Fig13Row, Fig14Row, ModelFigPoint};
 
 /// Render an aligned text table.
 pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -165,6 +165,58 @@ pub fn fig_model_json(points: &[ModelFigPoint]) -> Json {
     )
 }
 
+/// OS-vs-WS study text report (the `noc-dnn compare` output).
+pub fn dataflow_compare_text(rows: &[DataflowCompareRow]) -> String {
+    let data: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.streaming.label().to_string(),
+                r.collection.label().to_string(),
+                r.os_cycles.to_string(),
+                r.ws_cycles.to_string(),
+                f2(r.ws_speedup()),
+                f3(r.os_energy_j * 1e3),
+                f3(r.ws_energy_j * 1e3),
+                f2(r.ws_energy_improvement()),
+            ]
+        })
+        .collect();
+    table(
+        &[
+            "streaming",
+            "collection",
+            "OS cycles",
+            "WS cycles",
+            "WS speedup",
+            "OS mJ",
+            "WS mJ",
+            "WS energy impr",
+        ],
+        &data,
+    )
+}
+
+/// OS-vs-WS study JSON report.
+pub fn dataflow_compare_json(rows: &[DataflowCompareRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("streaming", Json::Str(r.streaming.label().to_string()))
+                    .set("collection", Json::Str(r.collection.label().to_string()))
+                    .set("os_cycles", Json::Num(r.os_cycles as f64))
+                    .set("ws_cycles", Json::Num(r.ws_cycles as f64))
+                    .set("ws_speedup", Json::Num(r.ws_speedup()))
+                    .set("os_energy_j", Json::Num(r.os_energy_j))
+                    .set("ws_energy_j", Json::Num(r.ws_energy_j))
+                    .set("ws_energy_improvement", Json::Num(r.ws_energy_improvement()));
+                o
+            })
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,5 +238,23 @@ mod tests {
     fn float_formats() {
         assert_eq!(f2(1.867), "1.87");
         assert_eq!(f3(0.12345), "0.123");
+    }
+
+    #[test]
+    fn dataflow_compare_report_renders_ratios() {
+        use crate::config::{Collection, Streaming};
+        let rows = vec![DataflowCompareRow {
+            streaming: Streaming::TwoWay,
+            collection: Collection::Gather,
+            os_cycles: 200,
+            ws_cycles: 100,
+            os_energy_j: 4.0e-3,
+            ws_energy_j: 1.0e-3,
+        }];
+        let t = dataflow_compare_text(&rows);
+        assert!(t.contains("2.00"), "speedup column missing:\n{t}");
+        assert!(t.contains("4.00"), "energy column missing:\n{t}");
+        let j = dataflow_compare_json(&rows);
+        assert!(j.to_string().contains("ws_speedup"));
     }
 }

@@ -3,7 +3,7 @@
 //! The bench targets and the CLI `figure` subcommand are thin wrappers
 //! over these.
 
-use crate::config::{Collection, SimConfig, Streaming};
+use crate::config::{Collection, DataflowKind, SimConfig, Streaming};
 use crate::models::{alexnet, vgg16, ConvLayer};
 use crate::noc::network::Network;
 use crate::noc::stats::{BusStats, NetStats};
@@ -175,7 +175,9 @@ pub fn fig14(mesh: usize, n: usize) -> Vec<Fig14Row> {
         let two = Experiment::proposed(cfg.clone()).run_layer(layer);
         let one = Experiment::new(cfg, Streaming::OneWay, Collection::Gather).run_layer(layer);
         Fig14Row {
-            model,
+            // `model` binds as `&&'static str` through the by-ref closure
+            // argument; copy the inner &'static str out.
+            model: *model,
             layer: layer.name.to_string(),
             two_way: latency_improvement(&base, &two),
             one_way: latency_improvement(&base, &one),
@@ -223,6 +225,66 @@ pub fn fig_model(layers: &[ConvLayer], meshes: &[usize], ns: &[usize]) -> Vec<Mo
     })
 }
 
+// ---------------------------------------------------------------------
+// Dataflow study — OS vs WS under every streaming × collection pairing
+// ---------------------------------------------------------------------
+
+/// One point of the OS-vs-WS study: a whole model run under one
+/// (streaming, collection) pairing for both dataflows.
+#[derive(Debug, Clone)]
+pub struct DataflowCompareRow {
+    pub streaming: Streaming,
+    pub collection: Collection,
+    pub os_cycles: u64,
+    pub ws_cycles: u64,
+    pub os_energy_j: f64,
+    pub ws_energy_j: f64,
+}
+
+impl DataflowCompareRow {
+    /// OS/WS runtime ratio (>1 means WS is faster).
+    pub fn ws_speedup(&self) -> f64 {
+        self.os_cycles as f64 / self.ws_cycles as f64
+    }
+
+    /// OS/WS total-energy ratio (>1 means WS spends less).
+    pub fn ws_energy_improvement(&self) -> f64 {
+        self.os_energy_j / self.ws_energy_j
+    }
+}
+
+/// The OS-vs-WS study: run `layers` (whole-model total, §5.3 convention)
+/// under Mesh / one-way / two-way streaming × RU / gather collection,
+/// once per dataflow, on a Table-1 `mesh`×`mesh` configuration with `n`
+/// PEs/router. Streams and collection traffic are produced by the same
+/// [`crate::dataflow::Dataflow`] machinery the figure sweeps use.
+pub fn dataflow_compare(mesh: usize, n: usize, layers: &[ConvLayer]) -> Vec<DataflowCompareRow> {
+    let mut combos = Vec::new();
+    for streaming in [Streaming::Mesh, Streaming::OneWay, Streaming::TwoWay] {
+        for collection in [Collection::RepetitiveUnicast, Collection::Gather] {
+            combos.push((streaming, collection));
+        }
+    }
+    parallel_map(combos, default_workers(), |&(streaming, collection)| {
+        let run = |kind: DataflowKind| {
+            let mut cfg = SimConfig::table1(mesh, n);
+            cfg.dataflow = kind;
+            let m = Experiment::new(cfg, streaming, collection).run_model(layers);
+            (m.total_cycles, m.total_energy_j)
+        };
+        let (os_cycles, os_energy_j) = run(DataflowKind::OutputStationary);
+        let (ws_cycles, ws_energy_j) = run(DataflowKind::WeightStationary);
+        DataflowCompareRow {
+            streaming,
+            collection,
+            os_cycles,
+            ws_cycles,
+            os_energy_j,
+            ws_energy_j,
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +325,23 @@ mod tests {
         // Two-packet sizing halves the payload flits (+ head).
         let cfg = SimConfig::table1_8x8(8);
         assert_eq!(packet_flits_for_row(&cfg, 2), 9);
+    }
+
+    #[test]
+    fn dataflow_compare_covers_the_full_grid() {
+        // A single quick layer keeps the test fast; the full AlexNet study
+        // runs through the CLI (`noc-dnn compare`).
+        let layer = ConvLayer { name: "t", c: 8, h_in: 10, r: 3, stride: 1, pad: 1, q: 32 };
+        let rows = dataflow_compare(8, 2, std::slice::from_ref(&layer));
+        assert_eq!(rows.len(), 6, "3 streaming modes x 2 collection schemes");
+        for r in &rows {
+            assert!(r.os_cycles > 0 && r.ws_cycles > 0);
+            assert!(r.os_energy_j > 0.0 && r.ws_energy_j > 0.0);
+        }
+        // All three streaming modes are present for each collection.
+        let gather: Vec<_> =
+            rows.iter().filter(|r| r.collection == Collection::Gather).collect();
+        assert_eq!(gather.len(), 3);
     }
 
     #[test]

@@ -1,5 +1,12 @@
-//! Per-layer round driver: executes the OS dataflow schedule of Fig. 11 on
-//! the cycle-accurate network and extrapolates full-layer totals.
+//! Per-layer round driver: executes a dataflow schedule (Fig. 11 for OS;
+//! the analogous wave/round pipeline for WS) on the cycle-accurate network
+//! and extrapolates full-layer totals.
+//!
+//! The driver is dataflow-generic: everything it needs from a mapping —
+//! round count, per-round stream demand, per-NI payload counts, the
+//! closed-form bus phase and any setup cost — comes through the
+//! [`Dataflow`] trait, so OS and WS (and future mappings) share one
+//! simulation loop.
 //!
 //! ## Round schedule
 //!
@@ -12,6 +19,9 @@
 //!   are injected when round `r`'s streams finish delivering, and the
 //!   observed delivery time *is* the stream phase — contention between
 //!   crossing streams and with collection traffic emerges from simulation.
+//! * **Setup phases** (WS weight pinning at wave boundaries) are not
+//!   simulated round-by-round; their closed-form cost
+//!   ([`Dataflow::setup_cycles`]) is added to the extrapolated total.
 //!
 //! ## Extrapolation
 //!
@@ -25,22 +35,27 @@ use crate::config::{Collection, SimConfig, Streaming};
 use crate::models::ConvLayer;
 use crate::noc::network::{Network, StreamEdge};
 use crate::noc::stats::{BusStats, NetStats};
-use crate::pe;
 
-use super::os::OsMapping;
+use super::{build, Dataflow};
 
 /// Full-layer result (extrapolated) plus the measured prefix.
 #[derive(Debug, Clone)]
 pub struct LayerRunResult {
     pub layer_name: String,
+    /// Label of the dataflow that produced this run (`os` / `ws`).
+    pub dataflow: &'static str,
     pub rounds_total: u64,
     pub simulated_rounds: u64,
-    /// Extrapolated full-layer runtime latency in cycles.
+    /// Extrapolated full-layer runtime latency in cycles (includes any
+    /// dataflow setup phases).
     pub total_cycles: u64,
     /// Cycle at which the simulated prefix finished.
     pub simulated_cycles: u64,
     /// Steady-state cycles per round used for extrapolation.
     pub steady_period: f64,
+    /// One-off setup cycles (e.g. WS weight pinning) included in
+    /// `total_cycles`.
+    pub setup_cycles: u64,
     /// Event counters extrapolated to the full layer.
     pub net: NetStats,
     /// Streaming-bus counters extrapolated to the full layer (zero for
@@ -57,35 +72,38 @@ impl LayerRunResult {
     }
 }
 
-/// Simulate `layer` on `cfg` with the given streaming/collection modes.
+/// Simulate `layer` on `cfg` with the given streaming/collection modes,
+/// under the dataflow selected by `cfg.dataflow`.
 pub fn run_layer(
     cfg: &SimConfig,
     streaming: Streaming,
     collection: Collection,
     layer: &ConvLayer,
 ) -> LayerRunResult {
-    let mapping = OsMapping::new(cfg, layer);
+    let mapping = build(cfg, layer);
+    run_layer_mapped(cfg, streaming, collection, layer, mapping.as_ref())
+}
+
+/// Simulate `layer` under an explicit dataflow mapping.
+pub fn run_layer_mapped(
+    cfg: &SimConfig,
+    streaming: Streaming,
+    collection: Collection,
+    layer: &ConvLayer,
+    mapping: &dyn Dataflow,
+) -> LayerRunResult {
     match streaming {
         Streaming::OneWay | Streaming::TwoWay => {
-            run_bus_layer(cfg, streaming, collection, layer, &mapping)
+            run_bus_layer(cfg, streaming, collection, layer, mapping)
         }
-        Streaming::Mesh => run_mesh_layer(cfg, collection, layer, &mapping),
+        Streaming::Mesh => run_mesh_layer(cfg, collection, layer, mapping),
     }
 }
 
-/// Per-round payload total for completion tracking.
-fn payloads_per_round(cfg: &SimConfig) -> u64 {
-    (cfg.mesh_rows * cfg.mesh_cols * cfg.pes_per_router) as u64
-}
-
-fn post_round(net: &mut Network, cfg: &SimConfig, ready: u64) {
+fn post_round(net: &mut Network, cfg: &SimConfig, ready: u64, payloads_per_node: u32) {
     for y in 0..cfg.mesh_rows {
         for x in 0..cfg.mesh_cols {
-            net.post_result(
-                ready,
-                crate::noc::Coord::new(x as u16, y as u16),
-                cfg.pes_per_router as u32,
-            );
+            net.post_result(ready, crate::noc::Coord::new(x as u16, y as u16), payloads_per_node);
         }
     }
 }
@@ -98,12 +116,14 @@ struct PrefixOutcome {
 
 fn extrapolate(
     layer: &ConvLayer,
-    mapping: &OsMapping,
+    mapping: &dyn Dataflow,
     sim_rounds: u64,
     outcome: PrefixOutcome,
     min_period: u64,
+    setup_cycles: u64,
     bus_per_round: BusStats,
 ) -> LayerRunResult {
+    let rounds = mapping.rounds();
     let completions = outcome.completions;
     let simulated_cycles = *completions.last().expect("at least one round simulated");
     // Steady-state period: average spacing over the second half of the
@@ -116,20 +136,23 @@ fn extrapolate(
         completions[0] as f64
     };
     let steady = steady.max(min_period as f64);
-    let remaining = mapping.rounds - sim_rounds;
-    let total_cycles = simulated_cycles + (remaining as f64 * steady).round() as u64;
-    let scale = mapping.rounds as f64 / sim_rounds as f64;
+    let remaining = rounds - sim_rounds;
+    let total_cycles =
+        simulated_cycles + (remaining as f64 * steady).round() as u64 + setup_cycles;
+    let scale = rounds as f64 / sim_rounds as f64;
     let mut net = outcome.net.scaled(scale);
     net.cycles_simulated = total_cycles;
     LayerRunResult {
         layer_name: layer.name.to_string(),
-        rounds_total: mapping.rounds,
+        dataflow: mapping.kind().label(),
+        rounds_total: rounds,
         simulated_rounds: sim_rounds,
         total_cycles,
         simulated_cycles,
         steady_period: steady,
+        setup_cycles,
         net,
-        bus: bus_per_round.scaled(mapping.rounds as f64),
+        bus: bus_per_round.scaled(rounds as f64),
         measured_net: outcome.net,
     }
 }
@@ -139,16 +162,21 @@ fn run_bus_layer(
     streaming: Streaming,
     collection: Collection,
     layer: &ConvLayer,
-    mapping: &OsMapping,
+    mapping: &dyn Dataflow,
 ) -> LayerRunResult {
-    let timing = pe::round_timing(cfg, streaming, mapping.macs_per_pe);
     // Trace-driven mode (the paper's Fig. 13/15/16 methodology): compute
     // and streaming are fully overlapped with collection; rounds are gated
     // by the network drain alone. Otherwise the full Eq. (3)/(4) period
     // applies.
-    let period = if cfg.trace_driven { cfg.t_mac } else { timing.ready_after() };
-    let sim_rounds = mapping.rounds.min(cfg.sim_rounds_cap as u64);
-    let per_round = payloads_per_round(cfg);
+    let period = if cfg.trace_driven {
+        cfg.t_mac
+    } else {
+        mapping.stream_cycles(cfg, streaming) + cfg.t_mac
+    };
+    let rounds = mapping.rounds();
+    let sim_rounds = rounds.min(cfg.sim_rounds_cap as u64);
+    let per_round = mapping.traffic_per_round(cfg).payloads;
+    let payloads_per_node = mapping.psum_collection().payloads_per_node;
 
     let mut net = Network::new(cfg, collection);
     let mut completions = Vec::with_capacity(sim_rounds as usize);
@@ -167,7 +195,7 @@ fn run_bus_layer(
     let p = period.max(1);
     let mut ready = p;
     for r in 0..sim_rounds {
-        post_round(&mut net, cfg, ready);
+        post_round(&mut net, cfg, ready, payloads_per_node);
         let target = (r + 1) * per_round;
         let ok = net.run_until(|n| n.payloads_delivered >= target, bound);
         assert!(
@@ -183,43 +211,66 @@ fn run_bus_layer(
 
     // Per-round streaming bus activity (power accounting).
     let bus_per_round = crate::streaming::per_round_bus_stats(cfg, streaming, mapping);
+    let setup = mapping.setup_cycles(cfg, streaming);
 
-    extrapolate(
+    let mut result = extrapolate(
         layer,
         mapping,
         sim_rounds,
         PrefixOutcome { completions, net: net.stats.clone() },
         period,
+        setup,
         bus_per_round,
-    )
+    );
+    // Setup-phase bus words (WS weight loads) are charged energy too.
+    result.bus.merge(&mapping.setup_bus_stats(cfg, streaming));
+    apply_accumulation_counts(&mut result, cfg, mapping);
+    result
+}
+
+/// Fold the mapping's per-round NI accumulate operations into the stats
+/// (the simulator does not model the NI adder; the count is closed-form).
+fn apply_accumulation_counts(result: &mut LayerRunResult, cfg: &SimConfig, mapping: &dyn Dataflow) {
+    let per_round = (cfg.mesh_rows * cfg.mesh_cols) as u64
+        * mapping.psum_collection().accumulations_per_node as u64;
+    result.net.ni_accumulations = mapping.rounds() * per_round;
+    result.measured_net.ni_accumulations = result.simulated_rounds * per_round;
 }
 
 fn run_mesh_layer(
     cfg: &SimConfig,
     collection: Collection,
     layer: &ConvLayer,
-    mapping: &OsMapping,
+    mapping: &dyn Dataflow,
 ) -> LayerRunResult {
-    let sim_rounds = mapping.rounds.min(cfg.sim_rounds_cap as u64);
-    let per_round = payloads_per_round(cfg);
-    let streams_per_round = (cfg.mesh_rows + cfg.mesh_cols) as u64;
+    let rounds = mapping.rounds();
+    let sim_rounds = rounds.min(cfg.sim_rounds_cap as u64);
+    let traffic = mapping.traffic_per_round(cfg);
+    let per_round = traffic.payloads;
+    let payloads_per_node = mapping.psum_collection().payloads_per_node;
+    let words = mapping.stream_words();
+    // Streams with zero words (e.g. WS column buses in steady state) are
+    // simply not posted.
+    let row_streams = if words.row > 0 { cfg.mesh_rows as u64 } else { 0 };
+    let col_streams = if words.col > 0 { cfg.mesh_cols as u64 } else { 0 };
+    let streams_per_round = row_streams + col_streams;
 
     let mut net = Network::new(cfg, collection);
     let mut completions = Vec::with_capacity(sim_rounds as usize);
     // Mesh streams serialize at worst one flit/cycle per row with crossing
     // contention; bound generously.
-    let per_round_flits = cfg.mesh_rows as u64
-        * mapping.row_stream_words.div_ceil(cfg.payloads_per_flit() as u64)
-        + cfg.mesh_cols as u64
-            * mapping.col_stream_words.div_ceil(cfg.payloads_per_flit() as u64);
-    let bound = (sim_rounds + 2) * (per_round_flits * 8 + 100_000);
+    let bound = (sim_rounds + 2) * (traffic.stream_flits * 8 + 100_000);
 
     let post_streams = |net: &mut Network, at: u64| {
-        for y in 0..cfg.mesh_rows {
-            net.post_operand_stream(at, StreamEdge::Row(y), mapping.row_stream_words);
+        if words.row > 0 {
+            for y in 0..cfg.mesh_rows {
+                net.post_operand_stream(at, StreamEdge::Row(y), words.row);
+            }
         }
-        for x in 0..cfg.mesh_cols {
-            net.post_operand_stream(at, StreamEdge::Col(x), mapping.col_stream_words);
+        if words.col > 0 {
+            for x in 0..cfg.mesh_cols {
+                net.post_operand_stream(at, StreamEdge::Col(x), words.col);
+            }
         }
     };
     post_streams(&mut net, 0);
@@ -237,7 +288,7 @@ fn run_mesh_layer(
         if r + 1 < sim_rounds {
             post_streams(&mut net, stream_end);
         }
-        post_round(&mut net, cfg, stream_end + cfg.t_mac);
+        post_round(&mut net, cfg, stream_end + cfg.t_mac, payloads_per_node);
 
         let target = (r + 1) * per_round;
         let ok = net.run_until(|n| n.payloads_delivered >= target, bound);
@@ -246,19 +297,32 @@ fn run_mesh_layer(
         completions.push(net.cycle);
     }
 
-    extrapolate(
+    // Wave-boundary setup (WS weight distribution over the mesh) is
+    // closed-form, not simulated — see `Dataflow::setup_cycles`.
+    let setup = mapping.setup_cycles(cfg, Streaming::Mesh);
+
+    let mut result = extrapolate(
         layer,
         mapping,
         sim_rounds,
         PrefixOutcome { completions, net: net.stats.clone() },
         1,
+        setup,
         BusStats::default(),
-    )
+    );
+    // Setup-phase mesh traffic (WS weight distribution) is charged router
+    // energy in closed form, since wave boundaries are not simulated.
+    result.net.merge(&mapping.setup_net_stats(cfg, Streaming::Mesh));
+    apply_accumulation_counts(&mut result, cfg, mapping);
+    result
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::DataflowKind;
+    use crate::dataflow::os::OsMapping;
+    use crate::dataflow::ws::WsMapping;
     use crate::models::alexnet;
 
     fn small_layer() -> ConvLayer {
@@ -272,6 +336,7 @@ mod tests {
         assert!(r.simulated_rounds >= 2);
         assert!(r.total_cycles >= r.simulated_cycles);
         assert_eq!(r.rounds_total, OsMapping::new(&cfg, &small_layer()).rounds);
+        assert_eq!(r.dataflow, "os");
         // All simulated payloads delivered.
         assert!(r.measured_net.packets_ejected > 0);
     }
@@ -330,5 +395,40 @@ mod tests {
             let per_round = expected / r.simulated_rounds;
             assert_eq!(expected, r.simulated_rounds * per_round);
         }
+    }
+
+    #[test]
+    fn ws_layer_runs_under_every_streaming_mode() {
+        let mut cfg = SimConfig::table1_8x8(4);
+        cfg.dataflow = DataflowKind::WeightStationary;
+        let layer = small_layer();
+        let mapping = WsMapping::new(&cfg, &layer);
+        for streaming in [Streaming::TwoWay, Streaming::OneWay, Streaming::Mesh] {
+            let r = run_layer(&cfg, streaming, Collection::Gather, &layer);
+            assert_eq!(r.dataflow, "ws");
+            assert_eq!(r.rounds_total, mapping.rounds);
+            assert!(r.total_cycles >= r.simulated_cycles);
+            assert_eq!(r.setup_cycles, mapping.setup_cycles(&cfg, streaming));
+            assert!(r.measured_net.packets_ejected > 0, "{streaming:?} moved no packets");
+            // Weight-load words are charged to the buses that carry them.
+            match streaming {
+                Streaming::TwoWay => assert!(r.bus.col_words > 0, "weight loads missing"),
+                Streaming::OneWay => assert_eq!(r.bus.col_words, 0),
+                Streaming::Mesh => assert_eq!(r.bus, BusStats::default()),
+            }
+        }
+    }
+
+    #[test]
+    fn ws_explicit_mapping_matches_config_selected_run() {
+        let mut cfg = SimConfig::table1_8x8(2);
+        cfg.dataflow = DataflowKind::WeightStationary;
+        let layer = small_layer();
+        let via_cfg = run_layer(&cfg, Streaming::TwoWay, Collection::Gather, &layer);
+        let mapping = WsMapping::new(&cfg, &layer);
+        let explicit =
+            run_layer_mapped(&cfg, Streaming::TwoWay, Collection::Gather, &layer, &mapping);
+        assert_eq!(via_cfg.total_cycles, explicit.total_cycles);
+        assert_eq!(via_cfg.net, explicit.net);
     }
 }

@@ -1,14 +1,219 @@
-//! The Output-Stationary dataflow mapper and the per-layer round driver.
+//! Dataflow abstraction: how a convolution layer becomes per-round NoC
+//! traffic, plus the per-layer round driver.
 //!
-//! [`os`] turns a convolution layer shape into the OS mapping of Fig. 4:
-//! rows ↔ input patches, columns ↔ filters, `n` PEs/router, and the number
-//! of rounds needed to cover `P × Q`. [`driver`] runs the mapped layer on
-//! the cycle-accurate [`crate::noc::Network`], round by round, and
-//! extrapolates the full-layer latency/energy from the simulated prefix
-//! (see DESIGN.md, "Cycle simulation with round extrapolation").
+//! The paper evaluates its streaming buses and gather packets under the
+//! Output-Stationary (OS) dataflow only, but frames both mechanisms as
+//! general one-to-many / many-to-one primitives (§4). The [`Dataflow`]
+//! trait captures exactly the contract the rest of the simulator needs
+//! from a mapping — round count, per-round stream word demand, per-round
+//! partial-sum collection shape, and the closed-form bus timing — so new
+//! dataflows plug in without touching the network model:
+//!
+//! * [`os`] — the paper's OS mapping of Fig. 4: rows ↔ input patches,
+//!   columns ↔ filters, `n` PEs/router, `rounds = ⌈P/(N·n)⌉·⌈Q/M⌉`.
+//! * [`ws`] — a Weight-Stationary mapping: filter weights pinned in PE
+//!   register files for a wave of rounds, one input patch per round
+//!   broadcast on the row buses, completed sums gathered east.
+//! * [`driver`] — runs any mapping on the cycle-accurate
+//!   [`crate::noc::Network`], round by round, and extrapolates the
+//!   full-layer latency/energy from the simulated prefix (see DESIGN.md,
+//!   "Cycle simulation with round extrapolation").
+//!
+//! Select a dataflow with [`crate::config::SimConfig::dataflow`] (CLI:
+//! `--dataflow os|ws`) or construct one directly with [`build`] /
+//! [`Dataflow::map_layer`].
 
 pub mod driver;
 pub mod os;
+pub mod ws;
 
-pub use driver::{run_layer, LayerRunResult};
+pub use driver::{run_layer, run_layer_mapped, LayerRunResult};
 pub use os::OsMapping;
+pub use ws::WsMapping;
+
+use crate::config::{DataflowKind, SimConfig, Streaming};
+use crate::models::ConvLayer;
+use crate::noc::stats::{BusStats, NetStats};
+
+/// Per-round operand demand on one streaming bus (or mesh stream) of each
+/// kind. `row` is the words one row bus must deliver per round, `col` the
+/// words one column bus must deliver; either may be zero (e.g. WS streams
+/// no weights in steady state).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamWords {
+    pub row: u64,
+    pub col: u64,
+}
+
+/// Per-round partial-sum collection shape at each router's NI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PsumCollection {
+    /// Result payloads each NI posts per round (the gather `sizeof(P)`).
+    pub payloads_per_node: u32,
+    /// True when several PEs' partial products are accumulated into one
+    /// payload before collection (the in-network/NI accumulation reading
+    /// of the gather mechanism; see [`ws`]).
+    pub in_network_accumulation: bool,
+    /// Partial-sum *add* operations the NI performs per round to fold its
+    /// PEs' partials into the posted payloads (0 when each PE finishes its
+    /// own output). The driver turns this into
+    /// [`crate::noc::stats::NetStats::ni_accumulations`] so the power
+    /// model can charge the adder/register writes.
+    pub accumulations_per_node: u32,
+}
+
+/// Aggregate per-round traffic, used for completion tracking and
+/// simulation bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundTraffic {
+    /// Result payloads produced network-wide per round.
+    pub payloads: u64,
+    /// Flits one round's operand streams occupy when carried over the mesh
+    /// itself (gather-only architecture); zero-words streams contribute
+    /// nothing.
+    pub stream_flits: u64,
+}
+
+/// A dataflow mapping of one convolution layer onto one mesh
+/// configuration.
+///
+/// Implementations are pure shape arithmetic: they decide *what* traffic
+/// each round carries; the [`driver`] decides *when* by running it on the
+/// cycle-accurate network. The contract:
+///
+/// * every round posts [`PsumCollection::payloads_per_node`] payloads at
+///   every NI, destined for the row memory element;
+/// * operand delivery is either the deterministic bus phase
+///   ([`Dataflow::stream_cycles`]) or mesh streams sized by
+///   [`Dataflow::stream_words`];
+/// * one-off per-layer costs (e.g. WS weight pinning) are reported by
+///   [`Dataflow::setup_cycles`] and added to the extrapolated total.
+pub trait Dataflow {
+    /// Map `layer` onto `cfg` (the constructor used by [`build`]).
+    fn map_layer(cfg: &SimConfig, layer: &ConvLayer) -> Self
+    where
+        Self: Sized;
+
+    /// Which dataflow this mapping implements.
+    fn kind(&self) -> DataflowKind;
+
+    /// Total rounds needed to cover the layer's `P × Q` outputs.
+    fn rounds(&self) -> u64;
+
+    /// MACs each PE executes per round (the compute term of Eqs. (3)–(4)).
+    fn macs_per_pe(&self) -> u64;
+
+    /// Per-round operand words on each row/column bus (or mesh stream).
+    fn stream_words(&self) -> StreamWords;
+
+    /// Per-round partial-sum collection shape.
+    fn psum_collection(&self) -> PsumCollection;
+
+    /// Deterministic operand-phase length in cycles for a bus streaming
+    /// architecture; must return 0 for [`Streaming::Mesh`], whose delivery
+    /// time is simulated, not closed-form.
+    fn stream_cycles(&self, cfg: &SimConfig, streaming: Streaming) -> u64;
+
+    /// One-off cycles outside the round pipeline (weight pinning phases
+    /// and the like); 0 for dataflows without a setup phase.
+    fn setup_cycles(&self, cfg: &SimConfig, streaming: Streaming) -> u64;
+
+    /// Whole-layer bus traffic of the setup phases (e.g. WS weight loads
+    /// at wave boundaries), so setup words are charged bus energy just
+    /// like steady-state words. Zero for dataflows without setup and for
+    /// mesh streaming (no buses).
+    fn setup_bus_stats(&self, _cfg: &SimConfig, _streaming: Streaming) -> BusStats {
+        BusStats::default()
+    }
+
+    /// Whole-layer *router* events of the setup phases when operands ride
+    /// the mesh itself ([`Streaming::Mesh`]): wave boundaries are not
+    /// simulated, so their flit traffic is accounted in closed form and
+    /// merged into the run's [`NetStats`] — otherwise the mesh rows of an
+    /// energy comparison would move setup traffic for free. Zero for
+    /// dataflows without setup and for bus streaming (covered by
+    /// [`Dataflow::setup_bus_stats`]).
+    fn setup_net_stats(&self, _cfg: &SimConfig, _streaming: Streaming) -> NetStats {
+        NetStats::default()
+    }
+
+    /// Output elements of the layer actually needed (`P·Q`); padding
+    /// outputs of the final round are discarded by the memory element.
+    fn useful_outputs(&self, layer: &ConvLayer) -> u64;
+
+    /// Aggregate per-round traffic (derived; used by the driver for
+    /// completion targets and deadlock bounds).
+    fn traffic_per_round(&self, cfg: &SimConfig) -> RoundTraffic {
+        let sw = self.stream_words();
+        let ppf = cfg.payloads_per_flit() as u64;
+        RoundTraffic {
+            payloads: (cfg.mesh_rows * cfg.mesh_cols) as u64
+                * self.psum_collection().payloads_per_node as u64,
+            stream_flits: cfg.mesh_rows as u64 * sw.row.div_ceil(ppf)
+                + cfg.mesh_cols as u64 * sw.col.div_ceil(ppf),
+        }
+    }
+}
+
+/// Construct the mapping selected by `cfg.dataflow`.
+pub fn build(cfg: &SimConfig, layer: &ConvLayer) -> Box<dyn Dataflow> {
+    match cfg.dataflow {
+        DataflowKind::OutputStationary => Box::new(OsMapping::map_layer(cfg, layer)),
+        DataflowKind::WeightStationary => Box::new(WsMapping::map_layer(cfg, layer)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::alexnet;
+
+    #[test]
+    fn build_follows_the_config_selector() {
+        let layer = &alexnet::conv_layers()[2];
+        let mut cfg = SimConfig::table1_8x8(4);
+        assert_eq!(build(&cfg, layer).kind(), DataflowKind::OutputStationary);
+        cfg.dataflow = DataflowKind::WeightStationary;
+        assert_eq!(build(&cfg, layer).kind(), DataflowKind::WeightStationary);
+    }
+
+    #[test]
+    fn traffic_per_round_matches_mapping_shape() {
+        let layer = &alexnet::conv_layers()[2];
+        let cfg = SimConfig::table1_8x8(4);
+        let m = build(&cfg, layer);
+        let t = m.traffic_per_round(&cfg);
+        assert_eq!(
+            t.payloads,
+            64 * m.psum_collection().payloads_per_node as u64
+        );
+        let sw = m.stream_words();
+        let ppf = cfg.payloads_per_flit() as u64;
+        assert_eq!(
+            t.stream_flits,
+            8 * sw.row.div_ceil(ppf) + 8 * sw.col.div_ceil(ppf)
+        );
+    }
+
+    #[test]
+    fn both_dataflows_cover_every_useful_output() {
+        // Coverage invariant: rounds × per-round payload capacity ≥ P·Q.
+        for layer in alexnet::conv_layers() {
+            for n in [1usize, 4] {
+                let cfg = SimConfig::table1_8x8(n);
+                for m in [
+                    Box::new(OsMapping::map_layer(&cfg, &layer)) as Box<dyn Dataflow>,
+                    Box::new(WsMapping::map_layer(&cfg, &layer)) as Box<dyn Dataflow>,
+                ] {
+                    let per_round = m.traffic_per_round(&cfg).payloads;
+                    assert!(
+                        m.rounds() * per_round >= m.useful_outputs(&layer),
+                        "{} under {:?} does not cover the layer",
+                        layer.name,
+                        m.kind()
+                    );
+                }
+            }
+        }
+    }
+}

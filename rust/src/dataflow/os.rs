@@ -10,8 +10,10 @@
 //! `rounds = ⌈P/(N·n)⌉ · ⌈Q/M⌉` — the `P/N · Q/M · 1/n` factor of
 //! Eqs. (3)–(4).
 
-use crate::config::{PeGrouping, SimConfig};
+use crate::config::{DataflowKind, PeGrouping, SimConfig, Streaming};
 use crate::models::ConvLayer;
+
+use super::{Dataflow, PsumCollection, StreamWords};
 
 /// The OS mapping of one layer onto one mesh configuration.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -71,6 +73,58 @@ impl OsMapping {
     /// final round's padding outputs are discarded by the memory element.
     pub fn useful_outputs(&self, layer: &ConvLayer) -> u64 {
         layer.p_patches() * layer.q as u64
+    }
+}
+
+/// The OS mapping viewed through the generic dataflow interface. Every
+/// method is a direct restatement of the struct fields, so the trait path
+/// is cycle-identical to the concrete one (asserted by
+/// `tests/dataflow_trait.rs`).
+impl Dataflow for OsMapping {
+    fn map_layer(cfg: &SimConfig, layer: &ConvLayer) -> OsMapping {
+        OsMapping::new(cfg, layer)
+    }
+
+    fn kind(&self) -> DataflowKind {
+        DataflowKind::OutputStationary
+    }
+
+    fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    fn macs_per_pe(&self) -> u64 {
+        self.macs_per_pe
+    }
+
+    fn stream_words(&self) -> StreamWords {
+        StreamWords { row: self.row_stream_words, col: self.col_stream_words }
+    }
+
+    fn psum_collection(&self) -> PsumCollection {
+        // Each PE finishes its own output (full C·R·R reduction locally):
+        // nothing to accumulate on the way out.
+        PsumCollection {
+            payloads_per_node: self.payloads_per_node,
+            in_network_accumulation: false,
+            accumulations_per_node: 0,
+        }
+    }
+
+    fn stream_cycles(&self, cfg: &SimConfig, streaming: Streaming) -> u64 {
+        match streaming {
+            // Mesh delivery time is simulated, not closed-form.
+            Streaming::Mesh => 0,
+            _ => crate::pe::bus_stream_cycles(cfg, streaming, self.macs_per_pe),
+        }
+    }
+
+    fn setup_cycles(&self, _cfg: &SimConfig, _streaming: Streaming) -> u64 {
+        0
+    }
+
+    fn useful_outputs(&self, layer: &ConvLayer) -> u64 {
+        OsMapping::useful_outputs(self, layer)
     }
 }
 

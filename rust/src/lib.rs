@@ -20,31 +20,53 @@
 //!   XY routing, gather and multicast packet support).
 //! * [`streaming`] — the one-way/two-way streaming bus architecture.
 //! * [`pe`] — processing-element and network-interface timing models.
-//! * [`dataflow`] — the OS dataflow mapper that turns a convolution layer
-//!   into per-round NoC traffic.
+//! * [`dataflow`] — the [`dataflow::Dataflow`] abstraction ("layer →
+//!   per-round NoC traffic") with two implementations: the paper's
+//!   Output-Stationary mapping ([`dataflow::os`]) and a Weight-Stationary
+//!   mapping ([`dataflow::ws`]) where weights are pinned in PE register
+//!   files and input patches are broadcast on the row buses.
 //! * [`models`] — AlexNet / VGG-16 convolution layer shape tables.
 //! * [`power`] — Orion-3.0-style router energy and DSENT-style bus energy
 //!   models plus the §5.4 area/power overhead roll-up.
-//! * [`analytic`] — the closed-form latency models of Eqs. (3) and (4).
-//! * [`coordinator`] — experiment orchestration: sweeps, baselines, and
-//!   regeneration of every figure in the paper's evaluation section.
+//! * [`analytic`] — the closed-form latency models of Eqs. (3) and (4),
+//!   generalized over the dataflow and cross-checked against simulation.
+//! * [`coordinator`] — experiment orchestration: sweeps, baselines,
+//!   regeneration of every figure in the paper's evaluation section, and
+//!   the OS-vs-WS dataflow study (`noc-dnn compare`).
 //! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas
 //!   convolution artifacts (`artifacts/*.hlo.txt`) and executes the real
 //!   layer numerics from rust; Python is never on the request path.
-//! * [`config`] — configuration types with JSON round-trip (Table 1 defaults).
+//!   Requires the `pjrt` cargo feature (plus the `xla` crate); the default
+//!   offline build ships a stub that fails loudly at artifact load.
+//! * [`config`] — configuration types with JSON round-trip (Table 1
+//!   defaults), including the [`config::DataflowKind`] selector.
+//!
+//! See `ARCHITECTURE.md` at the repository root for the module map and the
+//! simulator's per-cycle tick order.
 //!
 //! ## Quickstart
 //!
 //! ```no_run
-//! use noc_dnn::config::SimConfig;
+//! use noc_dnn::config::{DataflowKind, SimConfig};
 //! use noc_dnn::coordinator::Experiment;
 //! use noc_dnn::models::alexnet;
 //!
-//! let cfg = SimConfig::table1_8x8(4); // 8x8 mesh, 4 PEs/router
+//! let mut cfg = SimConfig::table1_8x8(4); // 8x8 mesh, 4 PEs/router
+//! // Pick the dataflow: the paper's Output-Stationary is the default;
+//! // Weight-Stationary pins weights and broadcasts input patches.
+//! cfg.dataflow = DataflowKind::WeightStationary;
 //! let layer = &alexnet::conv_layers()[0];
 //! let report = Experiment::proposed(cfg).run_layer(layer);
-//! println!("latency = {} cycles", report.run.total_cycles);
+//! println!(
+//!     "latency = {} cycles under the {} dataflow",
+//!     report.run.total_cycles,
+//!     report.run.dataflow
+//! );
 //! ```
+//!
+//! From the CLI: `noc-dnn run --model alexnet --dataflow ws` simulates one
+//! configuration; `noc-dnn compare` runs the full OS-vs-WS study across
+//! all three streaming modes and both collection schemes.
 
 pub mod analytic;
 pub mod config;

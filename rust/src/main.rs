@@ -7,20 +7,31 @@
 //! noc-dnn figure 15                             # AlexNet vs RU
 //! noc-dnn figure 16                             # VGG-16 vs RU
 //! noc-dnn run --model alexnet [--mesh 8] [--n 4] [--streaming two-way]
-//!             [--collection gather] [--rounds-cap 8]
+//!             [--collection gather] [--dataflow os|ws] [--rounds-cap 8]
+//! noc-dnn compare [--model alexnet] [--mesh 8] [--n 4] [--json]
+//!                                               # OS vs WS dataflow study
 //! noc-dnn overhead                              # §5.4 router overhead
 //! noc-dnn config --show [--mesh 8] [--n 1]      # print Table-1 config JSON
 //! ```
 
 use anyhow::{bail, Result};
-use noc_dnn::config::{Collection, SimConfig, Streaming};
+use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming};
 use noc_dnn::coordinator::{report, sweep, Experiment};
 use noc_dnn::models::{alexnet, vgg16, ConvLayer};
 use noc_dnn::power::area::overhead_report;
 use noc_dnn::util::cli::Args;
 
-const VALUED: &[&str] =
-    &["mesh", "n", "model", "streaming", "collection", "rounds-cap", "delta", "layer"];
+const VALUED: &[&str] = &[
+    "mesh",
+    "n",
+    "model",
+    "streaming",
+    "collection",
+    "dataflow",
+    "rounds-cap",
+    "delta",
+    "layer",
+];
 const BOOLEAN: &[&str] = &["json", "show", "help"];
 
 fn main() -> Result<()> {
@@ -32,6 +43,7 @@ fn main() -> Result<()> {
     match args.positional(0).unwrap() {
         "figure" => figure(&args),
         "run" => run(&args),
+        "compare" => compare(&args),
         "overhead" => overhead(&args),
         "config" => config_cmd(&args),
         cmd => bail!("unknown command '{cmd}'\n{}", usage()),
@@ -45,9 +57,22 @@ USAGE:
   noc-dnn figure <12|13|14|15|16> [--mesh 8|16] [--n 1|2|4|8] [--json]
   noc-dnn run --model <alexnet|vgg16> [--mesh N] [--n N]
               [--streaming mesh|one-way|two-way] [--collection ru|gather]
-              [--rounds-cap K] [--delta D] [--layer NAME]
+              [--dataflow os|ws] [--rounds-cap K] [--delta D] [--layer NAME]
+  noc-dnn compare [--model <alexnet|vgg16>] [--mesh N] [--n N] [--json]
   noc-dnn overhead
-  noc-dnn config --show [--mesh N] [--n N]
+  noc-dnn config --show [--mesh N] [--n N] [--dataflow os|ws]
+
+FLAGS:
+  --dataflow os|ws   dataflow mapping: Output-Stationary (paper default) or
+                     Weight-Stationary (weights pinned in PE register files,
+                     input patches broadcast on the row buses)
+  --streaming MODE   operand distribution: dedicated one-way/two-way buses
+                     (Fig. 10) or the mesh itself ('mesh', gather-only [27])
+  --collection C     partial-sum collection: 'gather' packets (Algorithm 1)
+                     or repetitive unicast 'ru'
+
+`compare` runs the whole model under OS and WS for every streaming mode x
+collection scheme and prints latency/energy with WS-vs-OS ratios.
 "
 }
 
@@ -57,6 +82,9 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
     let mut cfg = SimConfig::table1(mesh, n);
     cfg.sim_rounds_cap = args.get_parsed("rounds-cap", cfg.sim_rounds_cap)?;
     cfg.delta = args.get_parsed("delta", cfg.delta)?;
+    if let Some(df) = args.get("dataflow") {
+        cfg.dataflow = DataflowKind::parse(df)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -134,11 +162,12 @@ fn run(args: &Args) -> Result<()> {
     }
     let exp = Experiment::new(cfg.clone(), streaming, collection);
     println!(
-        "running {} layer(s) on {}x{} mesh, n={}, streaming={}, collection={}",
+        "running {} layer(s) on {}x{} mesh, n={}, dataflow={}, streaming={}, collection={}",
         layers.len(),
         cfg.mesh_cols,
         cfg.mesh_rows,
         cfg.pes_per_router,
+        cfg.dataflow.label(),
         streaming.label(),
         collection.label()
     );
@@ -170,6 +199,33 @@ fn run(args: &Args) -> Result<()> {
         m.total_cycles as f64 / cfg.clock_hz * 1e3,
         m.total_energy_j * 1e3
     );
+    Ok(())
+}
+
+fn compare(args: &Args) -> Result<()> {
+    let mesh: usize = args.get_parsed("mesh", 8)?;
+    let n: usize = args.get_parsed("n", 4)?;
+    // --dataflow is accepted for symmetry with `run` but the study always
+    // covers both dataflows; the flag just validates.
+    if let Some(df) = args.get("dataflow") {
+        DataflowKind::parse(df)?;
+    }
+    let model = args.get("model").unwrap_or("alexnet");
+    let layers = model_layers(model)?;
+    let rows = sweep::dataflow_compare(mesh, n, &layers);
+    if args.get_bool("json") {
+        println!("{}", report::dataflow_compare_json(&rows).to_pretty());
+    } else {
+        println!(
+            "Dataflow study — {model} total on {mesh}x{mesh}, n={n}: \
+             Output-Stationary vs Weight-Stationary"
+        );
+        print!("{}", report::dataflow_compare_text(&rows));
+        println!(
+            "(WS pins weights in PE register files and broadcasts one patch/round \
+             on the row buses; OS streams n patches/router and one filter/column.)"
+        );
+    }
     Ok(())
 }
 

@@ -3,15 +3,31 @@
 //!
 //! ## Boarding (Algorithm 1, Fig. 7)
 //!
+//! The paper's Algorithm 1 ("Gather support routing algorithm"), as
+//! implemented by [`try_board`] — `F` is the arriving head flit, `P` the
+//! local NI's pending payload set:
+//!
+//! ```text
+//! if (F.FT = H) and (F.PT = G) and (F.Dst = P.Dst) and P pending:
+//!     if F.ASpace >= sizeof(P):         // room for all local payloads
+//!         Load <- 1                     // fill into body/tail flits
+//!         F.ASpace <- F.ASpace - sizeof(P)
+//!     else:                             // packet (nearly) full
+//!         board what fits; initiate an own gather packet for the rest
+//! ```
+//!
 //! "When the header flit of a gather packet arrives at the input buffer,
 //! the Load signal is generated during the RC stage": boarding is decided
 //! **on head arrival** at each transit router. If the NI holds pending
 //! payloads with the same destination (`F.Dst = P.Dst`) and
 //! `F.ASpace >= sizeof(P)`, `ASpace` is decremented and the payloads are
 //! filled into the body/tail flits during their otherwise-unused RC/VA
-//! pipeline slots. **No extra pipeline stage and no extra latency** — in
-//! the simulator this is a zero-cost mutation of the passing packet's
-//! occupancy at buffer-write time.
+//! pipeline slots (see the pipeline table in [`super::network`]). **No
+//! extra pipeline stage and no extra latency** — in the simulator this is
+//! a zero-cost mutation of the passing packet's occupancy at buffer-write
+//! time. The hardware cost of this shortcut — the Load generator and the
+//! NI payload queue of Fig. 8/9 — is what §5.4 prices at ~6% router power
+//! and ~4% area ([`crate::power::area::overhead_report`]).
 //!
 //! ## Timeout δ and packet initiation (§4.1, §4.2, §5.2)
 //!
@@ -41,10 +57,26 @@
 //!    passing packet collected everything in the meantime, the staged
 //!    packet is dropped.
 //!
+//! ## Choosing δ (§5.2, Fig. 12)
+//!
+//! δ trades collection latency against packet count. `δ < κ` degenerates
+//! to one packet per node (every NI times out before the initiator's
+//! packet can arrive — the leftmost Fig. 12 point); the paper's plateau
+//! sets `δ = (N−1)·κ` so the initiator's header can reach every node of
+//! the row first. Our router charges the Table-1 link cycle explicitly,
+//! so the equivalent plateau is `(N−1)·(κ+link) + κ` — the
+//! `SimConfig::table1` default. Larger δ buys no further latency but
+//! bounds the wait of an orphaned node (the §4.1 fault-tolerance reading;
+//! exercised in `benches/ablations.rs`).
+//!
 //! The per-column fine-tuning hook of §4.1 ("δ can be fine-tuned further
 //! for an individual router") is kept for the timeout itself:
 //! `effective_delta(δ, x) = δ + x` staggers self-injection eastward, which
 //! de-bursts the δ<κ regime and covers arbitration jitter.
+//!
+//! Gather collection is dataflow-independent: the OS mapping posts `n`
+//! payloads per NI per round, the WS mapping `n/spread` pre-accumulated
+//! sums ([`crate::dataflow::ws`]) — Algorithm 1 handles both unchanged.
 
 use super::flit::{Coord, Flit, PacketType};
 

@@ -6,6 +6,46 @@
 //! drive it with idle fast-forwarding so compute-only phases between
 //! traffic bursts cost nothing.
 //!
+//! The simulator is dataflow-agnostic: it moves whatever payload counts
+//! and operand streams the active [`crate::dataflow::Dataflow`] mapping
+//! posts ([`Network::post_result`] / [`Network::post_operand_stream`]) —
+//! the OS and WS mappings drive this same substrate.
+//!
+//! ## The 4-stage router pipeline (§4.1, Fig. 7; Table 1: κ = 4)
+//!
+//! Each router implements the canonical input-queued VC pipeline:
+//!
+//! | stage | name                  | model                                      |
+//! |-------|-----------------------|--------------------------------------------|
+//! | RC    | route computation     | XY ([`route`]) on the buffered head flit    |
+//! | VA    | VC allocation         | [`RouterState::allocate_out_vc`], one output VC held head→tail (wormhole) |
+//! | SA    | switch allocation     | separable round-robin: one grant per output port and per input port/cycle |
+//! | ST    | switch traversal      | flit leaves on the link; arrives `link_latency` cycles later |
+//!
+//! A head flit buffered at cycle `t` finishes RC+VA no earlier than
+//! `t + κ − 2`, competes in SA from `t + κ − 1`, and traverses the switch
+//! one cycle later — an uncontended head therefore spends exactly `κ`
+//! cycles per router plus the link cycle, the `κ + link` per-hop latency
+//! the zero-load tests pin. Body/tail flits inherit the head's route and
+//! output VC and use only SA/ST; their idle RC/VA slots are what the
+//! gather support borrows to fill payloads at zero latency cost
+//! ([`super::gather`], Fig. 7 "Modified router pipeline").
+//!
+//! ## Credit flow control (§4.4, [34])
+//!
+//! Buffering is credit-based per VC: an upstream router holds one credit
+//! per free slot of the downstream input VC ([`super::buffer::CreditTracker`]
+//! inside [`RouterState::out_credits`]) and SA refuses a grant without a
+//! credit.
+//! A credit is consumed when the flit is placed on the link and refunded
+//! one cycle after the downstream slot frees (`credit_refunds` batch, step
+//! 1 below), closing the credit loop at `κ + 2·link` cycles. Ejection
+//! ports (`Local`, and East on the memory column) sink unconditionally —
+//! the memory ingest is never the bottleneck, matching §5.1 — and edge
+//! injection ports (West/North operand sources) check buffer space
+//! directly instead of holding credits. `VcBuffer::push` panics on
+//! overflow, so any credit-protocol violation fails loudly in simulation.
+//!
 //! ## Per-cycle ordering
 //!
 //! 1. apply credit refunds scheduled last cycle;

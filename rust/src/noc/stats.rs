@@ -34,6 +34,11 @@ pub struct NetStats {
     pub link_traversals: u64,
     /// Gather payloads that boarded a passing gather packet.
     pub gather_boards: u64,
+    /// Partial-sum accumulate operations performed at the NIs before
+    /// collection (Weight-Stationary register-file spill; see
+    /// `crate::dataflow::ws`). Reported by the round driver from the
+    /// mapping's `PsumCollection`, charged by `crate::power`.
+    pub ni_accumulations: u64,
     /// Gather packets initiated after a δ timeout expiry (not counting the
     /// hardwired leftmost initiator).
     pub delta_expiries: u64,
@@ -71,6 +76,7 @@ impl NetStats {
         self.sa_grants += other.sa_grants;
         self.link_traversals += other.link_traversals;
         self.gather_boards += other.gather_boards;
+        self.ni_accumulations += other.ni_accumulations;
         self.delta_expiries += other.delta_expiries;
         self.stream_deliveries += other.stream_deliveries;
         self.cycles_simulated = self.cycles_simulated.max(other.cycles_simulated);
@@ -93,6 +99,7 @@ impl NetStats {
             sa_grants: s(self.sa_grants),
             link_traversals: s(self.link_traversals),
             gather_boards: s(self.gather_boards),
+            ni_accumulations: s(self.ni_accumulations),
             delta_expiries: s(self.delta_expiries),
             stream_deliveries: s(self.stream_deliveries),
             cycles_simulated: self.cycles_simulated,

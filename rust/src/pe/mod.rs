@@ -14,24 +14,11 @@
 
 use crate::config::{SimConfig, Streaming};
 
-/// Timing of one OS-dataflow round on a row of PEs (Fig. 11).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct RoundTiming {
-    /// Cycles to stream one round's operands to every PE (the `C·R·R·n/f_l`
-    /// term of Eqs. (3)–(4)).
-    pub stream_cycles: u64,
-    /// MAC pipeline drain after the last operand (`T_MAC`).
-    pub mac_cycles: u64,
-}
-
-impl RoundTiming {
-    /// Cycles from round start to partial sums ready.
-    pub fn ready_after(&self) -> u64 {
-        self.stream_cycles + self.mac_cycles
-    }
-}
-
 /// Compute the per-round operand streaming time for a bus architecture.
+/// This is the OS instantiation of the dataflow-generic
+/// [`crate::dataflow::Dataflow::stream_cycles`] contract (the round
+/// period the driver gates on is `stream_cycles + T_MAC`); the WS
+/// broadcast phase lives in [`crate::dataflow::ws`].
 ///
 /// `macs_per_pe` is `C·R·R` — one operand word pair is consumed per MAC, so
 /// the stream for one PE is `C·R·R` words; `n` PEs per router multiply it
@@ -48,14 +35,6 @@ pub fn bus_stream_cycles(cfg: &SimConfig, streaming: Streaming, macs_per_pe: u64
         Streaming::Mesh => {
             unreachable!("mesh streaming time is simulated, not closed-form")
         }
-    }
-}
-
-/// Round timing for a bus-based streaming architecture.
-pub fn round_timing(cfg: &SimConfig, streaming: Streaming, macs_per_pe: u64) -> RoundTiming {
-    RoundTiming {
-        stream_cycles: bus_stream_cycles(cfg, streaming, macs_per_pe),
-        mac_cycles: cfg.t_mac,
     }
 }
 
@@ -79,11 +58,4 @@ mod tests {
         assert_eq!(bus_stream_cycles(&cfg, Streaming::TwoWay, 100), 25);
     }
 
-    #[test]
-    fn round_ready_includes_mac_drain() {
-        let mut cfg = SimConfig::table1_8x8(1);
-        cfg.bus_words_per_cycle = 1;
-        let rt = round_timing(&cfg, Streaming::TwoWay, 27);
-        assert_eq!(rt.ready_after(), 27 + 5);
-    }
 }

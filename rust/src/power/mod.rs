@@ -52,6 +52,9 @@ pub fn power_report(
         // charging every board plus one check per hop of gather heads.
         dyn_j += net.gather_boards as f64 * (re.gather_payload_j + re.gather_logic_j);
     }
+    // NI partial-sum accumulation (WS register-file spill): one adder pass
+    // + payload-register write per fold, independent of collection scheme.
+    dyn_j += net.ni_accumulations as f64 * re.gather_payload_j;
 
     let seconds = total_cycles as f64 / cfg.clock_hz;
     let routers = (cfg.mesh_rows * cfg.mesh_cols) as f64;

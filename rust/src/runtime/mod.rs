@@ -6,75 +6,139 @@
 //! jax ≥ 0.5 emits protos with 64-bit instruction ids that the pinned
 //! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
 //! `/opt/xla-example/README.md`).
+//!
+//! ## Feature gating
+//!
+//! The PJRT client requires the `xla` crate, which the offline build image
+//! does not carry. The real implementation is compiled only with the
+//! `pjrt` cargo feature (which additionally requires adding the `xla`
+//! dependency to `Cargo.toml`); the default build ships an API-compatible
+//! stub whose `load_hlo_text`/`exec_f32` fail with a clear message. The
+//! pure-rust [`reference`] numerics, [`Tensor`], and everything the NoC
+//! timing simulation needs are always available.
 
 pub mod layer_exec;
 pub mod reference;
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::Tensor;
+    use anyhow::{Context, Result};
+    use std::path::Path;
 
-/// A PJRT CPU client plus the executables loaded on it.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-/// One compiled model artifact.
-pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+    /// A PJRT CPU client plus the executables loaded on it.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One compiled model artifact.
+    pub struct LoadedModel {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
 
-    /// Load an HLO-text artifact and compile it for this client.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path is not UTF-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let name = path
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "model".to_string());
-        Ok(LoadedModel { exe, name })
-    }
-
-    /// Execute with f32 tensor inputs; returns every output of the result
-    /// tuple, flattened (artifacts are lowered with `return_tuple=True`).
-    pub fn exec_f32(&self, model: &LoadedModel, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(&t.data)
-                .reshape(&dims)
-                .with_context(|| format!("reshaping input to {:?}", t.shape))?;
-            literals.push(lit);
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client })
         }
-        let result = model.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = result.to_tuple().context("decomposing result tuple")?;
-        let mut out = Vec::with_capacity(parts.len());
-        for p in parts {
-            out.push(p.to_vec::<f32>().context("converting output to f32")?);
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(out)
+
+        /// Load an HLO-text artifact and compile it for this client.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path is not UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            let name = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "model".to_string());
+            Ok(LoadedModel { exe, name })
+        }
+
+        /// Execute with f32 tensor inputs; returns every output of the result
+        /// tuple, flattened (artifacts are lowered with `return_tuple=True`).
+        pub fn exec_f32(&self, model: &LoadedModel, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for t in inputs {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input to {:?}", t.shape))?;
+                literals.push(lit);
+            }
+            let result = model.exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = result.to_tuple().context("decomposing result tuple")?;
+            let mut out = Vec::with_capacity(parts.len());
+            for p in parts {
+                out.push(p.to_vec::<f32>().context("converting output to f32")?);
+            }
+            Ok(out)
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_impl {
+    use super::Tensor;
+    use anyhow::Result;
+    use std::path::Path;
+
+    /// Stub PJRT client (built without the `pjrt` feature). Construction
+    /// succeeds so callers can probe artifact availability first; loading
+    /// or executing an artifact fails with a clear message.
+    pub struct Runtime {
+        _private: (),
+    }
+
+    /// Stub handle for a compiled model artifact.
+    pub struct LoadedModel {
+        pub name: String,
+    }
+
+    impl Runtime {
+        /// Create the stub client (always succeeds).
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime { _private: () })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (built without the `pjrt` feature)".to_string()
+        }
+
+        /// Always fails: PJRT support is not compiled in.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+            anyhow::bail!(
+                "cannot load {}: built without the `pjrt` feature (add the `xla` \
+                 dependency and rebuild with `--features pjrt`)",
+                path.display()
+            )
+        }
+
+        /// Always fails: PJRT support is not compiled in.
+        pub fn exec_f32(&self, model: &LoadedModel, _inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+            anyhow::bail!(
+                "cannot execute {}: built without the `pjrt` feature (add the `xla` \
+                 dependency and rebuild with `--features pjrt`)",
+                model.name
+            )
+        }
+    }
+}
+
+pub use pjrt_impl::{LoadedModel, Runtime};
 
 /// A dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -147,5 +211,14 @@ mod tests {
     fn max_abs_diff_finds_the_worst_element() {
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
         assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_fails_loudly_on_load() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.platform().contains("stub"));
+        let err = rt.load_hlo_text(std::path::Path::new("x.hlo.txt")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 }

@@ -18,7 +18,7 @@
 //! can exercise stalls.
 
 use crate::config::{SimConfig, Streaming};
-use crate::dataflow::os::OsMapping;
+use crate::dataflow::Dataflow;
 use crate::noc::stats::BusStats;
 
 /// One streaming unit driving one row (inputs) or column (weights).
@@ -85,29 +85,28 @@ impl StreamUnit {
     }
 }
 
-/// Deterministic per-round stream phase length in cycles — the
-/// `C·R·R·n / f_l` term of Eqs. (3)–(4), doubled for the shared one-way
-/// link.
-pub fn stream_phase_cycles(cfg: &SimConfig, streaming: Streaming, macs_per_pe: u64) -> u64 {
-    crate::pe::bus_stream_cycles(cfg, streaming, macs_per_pe)
-}
-
-/// Streaming-bus activity for ONE round of the OS schedule (power
-/// accounting input). Mesh streaming has no buses.
-pub fn per_round_bus_stats(cfg: &SimConfig, streaming: Streaming, mapping: &OsMapping) -> BusStats {
+/// Streaming-bus activity for ONE round of a dataflow's schedule (power
+/// accounting input). Word demand and the active window both come from the
+/// [`Dataflow`] mapping, so OS and WS account identically through the same
+/// code path. Mesh streaming has no buses.
+pub fn per_round_bus_stats(
+    cfg: &SimConfig,
+    streaming: Streaming,
+    mapping: &dyn Dataflow,
+) -> BusStats {
+    let w = mapping.stream_words();
     match streaming {
         Streaming::TwoWay => BusStats {
-            row_words: cfg.mesh_rows as u64 * mapping.row_stream_words,
-            col_words: cfg.mesh_cols as u64 * mapping.col_stream_words,
-            active_cycles: stream_phase_cycles(cfg, streaming, mapping.macs_per_pe),
+            row_words: cfg.mesh_rows as u64 * w.row,
+            col_words: cfg.mesh_cols as u64 * w.col,
+            active_cycles: mapping.stream_cycles(cfg, streaming),
         },
         Streaming::OneWay => BusStats {
             // The shared per-row link carries inputs and weights interleaved
             // (Fig. 10(b)); weight words ride the row bus.
-            row_words: cfg.mesh_rows as u64
-                * (mapping.row_stream_words + mapping.col_stream_words),
+            row_words: cfg.mesh_rows as u64 * (w.row + w.col),
             col_words: 0,
-            active_cycles: stream_phase_cycles(cfg, streaming, mapping.macs_per_pe),
+            active_cycles: mapping.stream_cycles(cfg, streaming),
         },
         Streaming::Mesh => BusStats::default(),
     }
@@ -116,6 +115,8 @@ pub fn per_round_bus_stats(cfg: &SimConfig, streaming: Streaming, mapping: &OsMa
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dataflow::os::OsMapping;
+    use crate::dataflow::ws::WsMapping;
     use crate::models::ConvLayer;
 
     #[test]
@@ -162,5 +163,19 @@ mod tests {
         assert_eq!(one.col_words, 0);
         assert!(one.row_words > two.row_words);
         assert_eq!(one.active_cycles, 2 * two.active_cycles);
+    }
+
+    #[test]
+    fn ws_keeps_column_buses_dark_in_steady_state() {
+        let cfg = SimConfig::table1_8x8(4);
+        let layer = ConvLayer { name: "t", c: 3, h_in: 8, r: 3, stride: 1, pad: 1, q: 8 };
+        let ws = WsMapping::new(&cfg, &layer);
+        let two = per_round_bus_stats(&cfg, Streaming::TwoWay, &ws);
+        assert_eq!(two.col_words, 0, "pinned weights stream nothing per round");
+        assert_eq!(two.row_words, cfg.mesh_rows as u64 * layer.macs_per_output());
+        // The broadcast patch costs the same on the shared one-way bus.
+        let one = per_round_bus_stats(&cfg, Streaming::OneWay, &ws);
+        assert_eq!(one.row_words, two.row_words);
+        assert_eq!(one.active_cycles, two.active_cycles);
     }
 }

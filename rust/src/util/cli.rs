@@ -3,6 +3,17 @@
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
 //! arguments and subcommands. Unknown flags are an error, so typos fail
 //! loudly.
+//!
+//! The binary's flag vocabulary lives in `main.rs` (`VALUED` / `BOOLEAN`);
+//! notable simulator selectors parsed through this module:
+//!
+//! * `--dataflow <os|ws>` — dataflow mapping for `run`/`config`/`compare`:
+//!   `os` (Output-Stationary, the paper's default) or `ws`
+//!   (Weight-Stationary; see [`crate::dataflow::ws`]). Long spellings
+//!   `output-stationary` / `weight-stationary` are accepted by
+//!   [`crate::config::DataflowKind::parse`].
+//! * `--streaming <mesh|one-way|two-way>` and `--collection <ru|gather>` —
+//!   the architecture axes of the paper's evaluation.
 
 use std::collections::BTreeMap;
 
@@ -115,5 +126,13 @@ mod tests {
     fn default_applies_when_absent() {
         let a = Args::parse(argv(&[]), &["k"], &[]).unwrap();
         assert_eq!(a.get_parsed::<u64>("k", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn dataflow_flag_round_trips_to_the_config_parser() {
+        use crate::config::DataflowKind;
+        let a = Args::parse(argv(&["run", "--dataflow", "ws"]), &["dataflow"], &[]).unwrap();
+        let kind = DataflowKind::parse(a.get("dataflow").unwrap()).unwrap();
+        assert_eq!(kind, DataflowKind::WeightStationary);
     }
 }

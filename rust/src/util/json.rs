@@ -78,6 +78,7 @@ impl Json {
     }
 
     /// Serialize compactly.
+    #[allow(clippy::inherent_to_string)] // not worth a Display impl: JSON has two renderings
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

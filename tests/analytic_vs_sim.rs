@@ -3,9 +3,9 @@
 //! Δ_R = Δ_G = 0 and the two must agree.
 
 use noc_dnn::analytic;
-use noc_dnn::config::{Collection, SimConfig, Streaming};
+use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming};
 use noc_dnn::dataflow::run_layer;
-use noc_dnn::models::ConvLayer;
+use noc_dnn::models::{alexnet, ConvLayer};
 
 fn quiet_layer() -> ConvLayer {
     // Large C·R·R => long compute period => the network is never
@@ -68,6 +68,44 @@ fn congestion_terms_are_nonnegative() {
         sim_ru.total_cycles,
         sim_g.total_cycles
     );
+}
+
+#[test]
+fn ws_simulation_matches_generalized_eq4_on_alexnet_layers() {
+    // The WS instantiation of the generalized Eq. (4): broadcast-patch
+    // stream period, wave setup cost, and a collection tail driven by
+    // n/spread payloads per node. conv3 fits the register file
+    // (spread = 1); conv4's 3456-word filters split across two PEs
+    // (spread = 2, NI accumulation) — both must match simulation in the
+    // uncongested regime.
+    for idx in [2usize, 3] {
+        for n in [1usize, 4] {
+            let mut cfg = SimConfig::table1_8x8(n);
+            cfg.dataflow = DataflowKind::WeightStationary;
+            let layer = alexnet::conv_layers()[idx].clone();
+            let sim = run_layer(&cfg, Streaming::TwoWay, Collection::Gather, &layer);
+            let model = analytic::latency_gather(&cfg, Streaming::TwoWay, &layer);
+            let err = rel_err(sim.total_cycles, model);
+            assert!(
+                err < 0.05,
+                "{} n={n}: WS sim {} vs generalized Eq.(4) {model} ({:.1}% off)",
+                layer.name,
+                sim.total_cycles,
+                err * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn ws_ru_simulation_matches_generalized_eq3() {
+    let mut cfg = SimConfig::table1_8x8(4);
+    cfg.dataflow = DataflowKind::WeightStationary;
+    let layer = alexnet::conv_layers()[2].clone();
+    let sim = run_layer(&cfg, Streaming::TwoWay, Collection::RepetitiveUnicast, &layer);
+    let model = analytic::latency_ru(&cfg, Streaming::TwoWay, &layer);
+    let err = rel_err(sim.total_cycles, model);
+    assert!(err < 0.05, "WS/RU sim {} vs Eq.(3) {model}", sim.total_cycles);
 }
 
 #[test]

@@ -1,0 +1,141 @@
+//! The dataflow-trait refactor contract:
+//!
+//! 1. the OS mapping viewed through [`Dataflow`] is a faithful restatement
+//!    of the concrete `OsMapping` (every trait method equals the field it
+//!    abstracts);
+//! 2. running a layer through the config-selected boxed trait object is
+//!    cycle-identical to running it with the concrete mapping — across
+//!    random configurations, streaming modes and collection schemes;
+//! 3. the refactored driver still follows the pre-refactor OS round
+//!    schedule exactly: in the uncongested bus regime the steady-state
+//!    period is `C·R·R·n/f_l + T_MAC`, the Eq. (3)/(4) compute period.
+
+use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming};
+use noc_dnn::dataflow::{run_layer, run_layer_mapped, Dataflow, OsMapping, WsMapping};
+use noc_dnn::models::{alexnet, ConvLayer};
+use noc_dnn::util::rng::{check_cases, Rng};
+
+fn random_layer(rng: &mut Rng) -> ConvLayer {
+    ConvLayer {
+        name: "prop",
+        c: rng.range(1, 16) as usize,
+        h_in: rng.range(6, 14) as usize,
+        r: *rng.choose(&[1usize, 3, 5]),
+        stride: rng.range(1, 2) as usize,
+        pad: rng.range(0, 2) as usize,
+        q: rng.range(4, 48) as usize,
+    }
+}
+
+#[test]
+fn os_trait_view_restates_the_struct_fields() {
+    for n in [1usize, 2, 4, 8] {
+        let cfg = SimConfig::table1_8x8(n);
+        for layer in alexnet::conv_layers() {
+            let m = OsMapping::new(&cfg, &layer);
+            let d: &dyn Dataflow = &m;
+            assert_eq!(d.kind(), DataflowKind::OutputStationary);
+            assert_eq!(d.rounds(), m.rounds);
+            assert_eq!(d.macs_per_pe(), m.macs_per_pe);
+            assert_eq!(d.stream_words().row, m.row_stream_words);
+            assert_eq!(d.stream_words().col, m.col_stream_words);
+            assert_eq!(d.psum_collection().payloads_per_node, m.payloads_per_node);
+            assert!(!d.psum_collection().in_network_accumulation);
+            assert_eq!(d.setup_cycles(&cfg, Streaming::TwoWay), 0, "OS has no setup phase");
+            assert_eq!(d.traffic_per_round(&cfg).payloads, m.payloads_per_round(&cfg));
+            assert_eq!(d.useful_outputs(&layer), m.useful_outputs(&layer));
+        }
+    }
+}
+
+#[test]
+fn prop_os_via_trait_is_cycle_identical_to_concrete_mapping() {
+    check_cases(0xD47AF10, 25, |rng, case| {
+        let n = *rng.choose(&[1usize, 2, 4]);
+        let mut cfg = SimConfig::table1_8x8(n);
+        cfg.sim_rounds_cap = 4;
+        cfg.trace_driven = rng.chance(0.3);
+        let layer = random_layer(rng);
+        let streaming = *rng.choose(&[Streaming::TwoWay, Streaming::OneWay, Streaming::Mesh]);
+        let collection = if rng.chance(0.5) {
+            Collection::Gather
+        } else {
+            Collection::RepetitiveUnicast
+        };
+        // Config-selected (boxed trait object) vs explicit concrete mapping.
+        let via_cfg = run_layer(&cfg, streaming, collection, &layer);
+        let concrete = OsMapping::new(&cfg, &layer);
+        let via_concrete = run_layer_mapped(&cfg, streaming, collection, &layer, &concrete);
+        assert_eq!(
+            via_cfg.total_cycles, via_concrete.total_cycles,
+            "case {case}: trait-object and concrete OS runs diverged"
+        );
+        assert_eq!(via_cfg.simulated_cycles, via_concrete.simulated_cycles, "case {case}");
+        assert_eq!(via_cfg.steady_period, via_concrete.steady_period, "case {case}");
+        assert_eq!(via_cfg.net, via_concrete.net, "case {case}: stats diverged");
+        assert_eq!(via_cfg.bus, via_concrete.bus, "case {case}: bus stats diverged");
+        assert_eq!(via_cfg.setup_cycles, 0, "case {case}: OS grew a setup phase");
+    });
+}
+
+#[test]
+fn prop_os_steady_period_matches_the_pre_refactor_schedule() {
+    // The pre-refactor driver gated bus rounds at exactly
+    // `bus_stream_cycles + T_MAC`. Compute-heavy layers are uncongested,
+    // so the measured steady period must equal that closed form — cycle
+    // for cycle — through the trait-driven driver too.
+    check_cases(0x05C4ED, 15, |rng, case| {
+        let n = *rng.choose(&[1usize, 2, 4]);
+        let cfg = SimConfig::table1_8x8(n);
+        let mut layer = random_layer(rng);
+        layer.c = rng.range(48, 96) as usize; // long compute period
+        layer.r = 3;
+        layer.q = 64; // ≥ 8 filter rounds: guarantees ≥ 2 simulated rounds
+        for streaming in [Streaming::TwoWay, Streaming::OneWay] {
+            let mapping = OsMapping::new(&cfg, &layer);
+            let expected = noc_dnn::pe::bus_stream_cycles(&cfg, streaming, mapping.macs_per_pe)
+                + cfg.t_mac;
+            let r = run_layer(&cfg, streaming, Collection::Gather, &layer);
+            assert_eq!(
+                r.steady_period, expected as f64,
+                "case {case} ({streaming:?}): schedule drifted from Eq. (3)/(4) period"
+            );
+        }
+    });
+}
+
+#[test]
+fn ws_trait_object_runs_identically_to_concrete_ws() {
+    let mut cfg = SimConfig::table1_8x8(4);
+    cfg.dataflow = DataflowKind::WeightStationary;
+    let layer = ConvLayer { name: "t", c: 8, h_in: 12, r: 3, stride: 1, pad: 1, q: 32 };
+    for streaming in [Streaming::TwoWay, Streaming::OneWay, Streaming::Mesh] {
+        let via_cfg = run_layer(&cfg, streaming, Collection::Gather, &layer);
+        let concrete = WsMapping::new(&cfg, &layer);
+        let explicit = run_layer_mapped(&cfg, streaming, Collection::Gather, &layer, &concrete);
+        assert_eq!(via_cfg.total_cycles, explicit.total_cycles);
+        assert_eq!(via_cfg.net, explicit.net);
+        assert_eq!(via_cfg.dataflow, "ws");
+    }
+}
+
+#[test]
+fn dataflows_disagree_only_where_they_should() {
+    // Same layer, same fabric: OS and WS must both deliver every payload
+    // they post, and their traffic shapes must differ in the documented
+    // ways (WS broadcasts: row words independent of n; OS scales with n).
+    let layer = &alexnet::conv_layers()[2];
+    for n in [2usize, 8] {
+        let cfg = SimConfig::table1_8x8(n);
+        let os = OsMapping::new(&cfg, layer);
+        let ws = WsMapping::new(&cfg, layer);
+        assert_eq!(os.stream_words().row, n as u64 * layer.macs_per_output());
+        assert_eq!(ws.stream_words().row, layer.macs_per_output());
+        assert!(os.stream_words().col > 0);
+        assert_eq!(ws.stream_words().col, 0);
+        // Both cover the layer.
+        assert!(os.rounds * os.payloads_per_round(&cfg) >= os.useful_outputs(layer));
+        let ws_d: &dyn Dataflow = &ws;
+        assert!(ws_d.rounds() * ws_d.traffic_per_round(&cfg).payloads >= ws_d.useful_outputs(layer));
+    }
+}

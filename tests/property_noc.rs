@@ -11,7 +11,7 @@
 //!   than repetitive unicast;
 //! * **packet accounting** — injected = ejected after drain.
 
-use noc_dnn::config::{Collection, SimConfig};
+use noc_dnn::config::{Collection, DataflowKind, SimConfig};
 use noc_dnn::noc::network::Network;
 use noc_dnn::noc::Coord;
 use noc_dnn::util::rng::{check_cases, Rng};
@@ -158,6 +158,12 @@ fn prop_config_json_roundtrip() {
         let mut cfg = random_cfg(rng);
         cfg.trace_driven = rng.chance(0.5);
         cfg.ru_pack_payloads = rng.chance(0.5);
+        cfg.dataflow = if rng.chance(0.5) {
+            DataflowKind::WeightStationary
+        } else {
+            DataflowKind::OutputStationary
+        };
+        cfg.ws_rf_words = rng.range(64, 4096) as u32;
         let s = cfg.to_json();
         let back = SimConfig::from_json(&s).unwrap();
         assert_eq!(cfg, back, "case {case}: JSON round-trip changed the config");
