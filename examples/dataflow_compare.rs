@@ -2,9 +2,10 @@
 //!
 //! Runs AlexNet (default) or VGG-16 through the cycle-accurate simulator
 //! under both dataflows, for every streaming architecture × collection
-//! scheme pairing, then drills into one representative layer to show
-//! *why* the totals differ: per-round stream words, payloads per node,
-//! round counts and the WS weight-pinning setup cost.
+//! scheme pairing (repetitive unicast vs gather vs in-network
+//! accumulation — a 9-row grid), then drills into one representative
+//! layer to show *why* the totals differ: per-round stream words,
+//! payloads per node, round counts and the WS weight-pinning setup cost.
 //!
 //! Run: `cargo run --release --example dataflow_compare [-- --model vgg16]`
 

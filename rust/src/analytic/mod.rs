@@ -98,6 +98,21 @@ pub fn latency_gather(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) 
     compute_cycles_for(cfg, streaming, mapping.as_ref()) + gather_collection_tail(cfg, ppn)
 }
 
+/// Generalized Eq. (4) for in-network accumulation
+/// ([`Collection::Ina`]): the initiator's packet travels the full row
+/// (`M` hops) while transit folds and merges add zero latency, and its
+/// serialization tail is the *small* INA packet
+/// ([`Dataflow::ina_packet_flits`] − 1 body flits) instead of the
+/// row-sized gather packet — INA's zero-load form is therefore the
+/// leftmost-unicast form of Eq. (3) with the INA packet length.
+pub fn latency_ina(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> u64 {
+    let mapping = build(cfg, layer);
+    let serialization = mapping.ina_packet_flits(cfg) as u64 - 1;
+    compute_cycles_for(cfg, streaming, mapping.as_ref())
+        + cfg.mesh_cols as u64 * per_hop(cfg)
+        + serialization
+}
+
 /// Zero-load latency for any (streaming, collection) pair under the
 /// dataflow selected by `cfg.dataflow`.
 pub fn latency(
@@ -109,6 +124,46 @@ pub fn latency(
     match collection {
         Collection::RepetitiveUnicast => latency_ru(cfg, streaming, layer),
         Collection::Gather => latency_gather(cfg, streaming, layer),
+        Collection::Ina => latency_ina(cfg, streaming, layer),
+    }
+}
+
+/// Closed-form expected hop-weighted traffic (flit-hops, as counted by
+/// [`crate::noc::stats::NetStats::flit_hops`]) to collect one row's
+/// psums — `ppn` per node — at zero contention with ample δ. This is the
+/// quantity INA minimizes: a single small packet crosses the row once,
+/// versus one row-sized gather packet (or `⌈M·ppn/η⌉` of them), versus a
+/// quadratic sum of unicasts.
+///
+/// Exact when the gather capacity `η` covers whole nodes (all Table-1
+/// configurations); cross-checked against simulation by the test suite.
+pub fn row_collection_flit_hops(cfg: &SimConfig, collection: Collection, ppn: u32) -> u64 {
+    let m = cfg.mesh_cols as u64;
+    let ppn = ppn as u64;
+    match collection {
+        Collection::RepetitiveUnicast => {
+            // The node at column x sends its packets over M − x routers:
+            // Σ_{x=0}^{M−1} (M − x) = M(M+1)/2, times packets × flits.
+            let per_pkt = if cfg.ru_pack_payloads {
+                (cfg.unicast_packet_flits as u64 - 1) * cfg.payloads_per_flit() as u64
+            } else {
+                1
+            };
+            let pkts_per_node = ppn.div_ceil(per_pkt);
+            pkts_per_node * cfg.unicast_packet_flits as u64 * m * (m + 1) / 2
+        }
+        Collection::Gather => {
+            // Packet i fills up after η/ppn nodes and the next initiates
+            // there (§4.2/§5.2), so it crosses M − i·η/ppn routers.
+            let eta = cfg.gather_capacity() as u64;
+            let lg = cfg.gather_packet_flits as u64;
+            let num_packets = (m * ppn).div_ceil(eta);
+            (0..num_packets).map(|i| lg * (m - i * eta / ppn)).sum()
+        }
+        Collection::Ina => {
+            // One small packet per row: folds and merges move no flits.
+            cfg.ina_packet_flits(ppn as u32) as u64 * m
+        }
     }
 }
 
@@ -172,6 +227,49 @@ mod tests {
         assert!(one > two);
         let ratio = one as f64 / two as f64;
         assert!(ratio > 1.5 && ratio < 2.05, "ratio={ratio}");
+    }
+
+    #[test]
+    fn ina_zero_load_latency_is_nearly_the_ru_and_gather_forms() {
+        // All three schemes are leftmost-packet-bound at zero load; the
+        // differences (smaller serialization tail than gather, fewer
+        // packets than RU) are second order next to the compute term.
+        for n in [1, 2, 4, 8] {
+            let cfg = SimConfig::table1_8x8(n);
+            let ina = latency_ina(&cfg, Streaming::TwoWay, &layer()) as f64;
+            let ru = latency_ru(&cfg, Streaming::TwoWay, &layer()) as f64;
+            let g = latency_gather(&cfg, Streaming::TwoWay, &layer()) as f64;
+            assert!((0.98..1.02).contains(&(ina / ru)), "n={n}: INA/RU {}", ina / ru);
+            assert!(ina <= g, "n={n}: INA tail must not exceed the gather tail");
+        }
+        let cfg = SimConfig::table1_8x8(4);
+        assert_eq!(
+            latency(&cfg, Streaming::TwoWay, Collection::Ina, &layer()),
+            latency_ina(&cfg, Streaming::TwoWay, &layer())
+        );
+    }
+
+    #[test]
+    fn hop_weighted_traffic_orders_ina_below_gather_below_ru() {
+        for n in [1u32, 2, 4, 8] {
+            for cfg in [SimConfig::table1_8x8(n as usize), SimConfig::table1_16x16(n as usize)] {
+                let ru = row_collection_flit_hops(&cfg, Collection::RepetitiveUnicast, n);
+                let g = row_collection_flit_hops(&cfg, Collection::Gather, n);
+                let ina = row_collection_flit_hops(&cfg, Collection::Ina, n);
+                assert!(ina <= g, "n={n} m={}: INA {ina} vs gather {g}", cfg.mesh_cols);
+                assert!(g <= ru, "n={n} m={}: gather {g} vs RU {ru}", cfg.mesh_cols);
+                if n >= 2 {
+                    assert!(ina < ru, "n={n}: INA must strictly undercut RU");
+                }
+            }
+        }
+        // Spot-check the closed forms on the Table-1 8×8, n=1 point:
+        // RU: 8 nodes × 2 flits × mean hops — Σ(8−x) = 36 → 72;
+        // gather: one 3-flit packet × 8 hops = 24; INA: 2 flits × 8 = 16.
+        let cfg = SimConfig::table1_8x8(1);
+        assert_eq!(row_collection_flit_hops(&cfg, Collection::RepetitiveUnicast, 1), 72);
+        assert_eq!(row_collection_flit_hops(&cfg, Collection::Gather, 1), 24);
+        assert_eq!(row_collection_flit_hops(&cfg, Collection::Ina, 1), 16);
     }
 
     #[test]

@@ -48,6 +48,14 @@ pub enum Collection {
     RepetitiveUnicast,
     /// Proposed: gather packets per Algorithm 1 with timeout `δ`.
     Gather,
+    /// In-Network Accumulation (the arXiv:2209.10056 follow-up): psums are
+    /// tagged with an accumulation space and *added* at intermediate
+    /// routers — a passing packet folds a transit NI's same-space psums at
+    /// zero latency, and two same-space packets meeting in a router merge
+    /// into one. Packets stay small (head + ⌈payloads/slots⌉ flits) no
+    /// matter how many nodes contribute; the router pays an ALU add per
+    /// folded word (priced by `crate::power`).
+    Ina,
 }
 
 /// How input activations / filter weights reach the PEs.
@@ -129,6 +137,11 @@ pub struct SimConfig {
     /// Dataflow used to map layers onto the mesh (default: the paper's
     /// Output-Stationary).
     pub dataflow: DataflowKind,
+    /// Default partial-sum collection scheme for tools that serialize a
+    /// whole experiment as one config (CLI `--collection ru|gather|ina`).
+    /// `Network::new` still takes the scheme explicitly; this field is the
+    /// config-file/CLI default, not a hidden override.
+    pub collection: Collection,
     /// Weight-Stationary only: per-PE register-file capacity in weight
     /// words. A filter whose `C·R·R` weights exceed this is spread across
     /// the PEs behind one router, and the NI accumulates their partial
@@ -184,6 +197,7 @@ impl SimConfig {
             bus_words_per_cycle: 4,
             pe_grouping: PeGrouping::Column,
             dataflow: DataflowKind::OutputStationary,
+            collection: Collection::Gather,
             // 2048 words (8 KiB of f32) holds every AlexNet filter
             // (conv3: C·R·R = 1728); the deep VGG-16 layers (4608) spread
             // across PEs.
@@ -225,6 +239,17 @@ impl SimConfig {
     /// (body/tail flits × slots per flit).
     pub fn gather_capacity(&self) -> u32 {
         (self.gather_packet_flits as u32 - 1) * self.payloads_per_flit()
+    }
+
+    /// Flits of one in-network-accumulation packet carrying `payloads`
+    /// physical psum words: a head plus `⌈payloads/slots⌉` body/tail
+    /// flits. Downstream routers add into those words instead of
+    /// appending slots, so the packet never grows in flight. The single
+    /// source of truth for INA packet framing — the network's staging
+    /// logic, the [`crate::dataflow::Dataflow`] view and the analytic
+    /// closed forms all call this.
+    pub fn ina_packet_flits(&self, payloads: u32) -> u32 {
+        1 + payloads.div_ceil(self.payloads_per_flit()).max(1)
     }
 
     /// Number of unicast packets one NI sends per round under repetitive
@@ -275,6 +300,7 @@ impl SimConfig {
             .set("bus_words_per_cycle", Json::Num(self.bus_words_per_cycle as f64))
             .set("pe_grouping", Json::Str(self.pe_grouping.label().to_string()))
             .set("dataflow", Json::Str(self.dataflow.label().to_string()))
+            .set("collection", Json::Str(self.collection.label().to_string()))
             .set("ws_rf_words", Json::Num(self.ws_rf_words as f64))
             .set("ru_pack_payloads", Json::Bool(self.ru_pack_payloads))
             .set("trace_driven", Json::Bool(self.trace_driven))
@@ -315,6 +341,10 @@ impl SimConfig {
                 Some(s) => DataflowKind::parse(s)?,
                 None => d.dataflow,
             },
+            collection: match j.get("collection").and_then(Json::as_str) {
+                Some(s) => Collection::parse(s)?,
+                None => d.collection,
+            },
             ws_rf_words: u("ws_rf_words", d.ws_rf_words as u64) as u32,
             ru_pack_payloads: j
                 .get("ru_pack_payloads")
@@ -337,6 +367,18 @@ impl Collection {
         match self {
             Collection::RepetitiveUnicast => "RU",
             Collection::Gather => "gather",
+            Collection::Ina => "INA",
+        }
+    }
+
+    /// Parse a CLI/JSON spelling (`ru` / `gather` / `ina`, long names and
+    /// the `label()` spellings accepted).
+    pub fn parse(s: &str) -> crate::Result<Collection> {
+        match s {
+            "ru" | "RU" | "unicast" | "repetitive-unicast" => Ok(Collection::RepetitiveUnicast),
+            "gather" => Ok(Collection::Gather),
+            "ina" | "INA" | "in-network-accumulation" => Ok(Collection::Ina),
+            other => anyhow::bail!("unknown collection '{other}' (ru | gather | ina)"),
         }
     }
 }
@@ -438,6 +480,25 @@ mod tests {
         // Configs written before the dataflow field default to OS.
         let legacy = SimConfig::from_json("{}").unwrap();
         assert_eq!(legacy.dataflow, DataflowKind::OutputStationary);
+    }
+
+    #[test]
+    fn collection_selection_roundtrips_and_parses() {
+        let mut c = SimConfig::table1_8x8(2);
+        c.collection = Collection::Ina;
+        let d = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(Collection::parse("ina").unwrap(), Collection::Ina);
+        assert_eq!(Collection::parse("ru").unwrap(), Collection::RepetitiveUnicast);
+        assert_eq!(Collection::parse("gather").unwrap(), Collection::Gather);
+        // label() spellings round-trip through parse().
+        for coll in [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina] {
+            assert_eq!(Collection::parse(coll.label()).unwrap(), coll);
+        }
+        assert!(Collection::parse("broadcast").is_err());
+        // Configs written before the collection field default to gather.
+        let legacy = SimConfig::from_json("{}").unwrap();
+        assert_eq!(legacy.collection, Collection::Gather);
     }
 
     #[test]

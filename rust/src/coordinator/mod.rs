@@ -8,4 +8,4 @@ pub mod report;
 pub mod server;
 pub mod sweep;
 
-pub use experiment::{Experiment, LayerReport, ModelReport};
+pub use experiment::{latency_improvement, power_improvement, Experiment, LayerReport, ModelReport};

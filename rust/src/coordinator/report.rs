@@ -165,7 +165,9 @@ pub fn fig_model_json(points: &[ModelFigPoint]) -> Json {
     )
 }
 
-/// OS-vs-WS study text report (the `noc-dnn compare` output).
+/// OS-vs-WS study text report (the `noc-dnn compare` output): one row
+/// per streaming mode × collection scheme (RU vs gather vs INA), with
+/// both dataflows' latency/energy and the WS-vs-OS ratios.
 pub fn dataflow_compare_text(rows: &[DataflowCompareRow]) -> String {
     let data: Vec<Vec<String>> = rows
         .iter()

@@ -254,14 +254,18 @@ impl DataflowCompareRow {
 }
 
 /// The OS-vs-WS study: run `layers` (whole-model total, §5.3 convention)
-/// under Mesh / one-way / two-way streaming × RU / gather collection,
-/// once per dataflow, on a Table-1 `mesh`×`mesh` configuration with `n`
-/// PEs/router. Streams and collection traffic are produced by the same
-/// [`crate::dataflow::Dataflow`] machinery the figure sweeps use.
+/// under Mesh / one-way / two-way streaming × RU / gather / INA
+/// collection, once per dataflow, on a Table-1 `mesh`×`mesh`
+/// configuration with `n` PEs/router. Streams and collection traffic are
+/// produced by the same [`crate::dataflow::Dataflow`] machinery the
+/// figure sweeps use; the three-way collection axis is the RU vs Gather
+/// vs INA comparison of the `compare` CLI table.
 pub fn dataflow_compare(mesh: usize, n: usize, layers: &[ConvLayer]) -> Vec<DataflowCompareRow> {
     let mut combos = Vec::new();
     for streaming in [Streaming::Mesh, Streaming::OneWay, Streaming::TwoWay] {
-        for collection in [Collection::RepetitiveUnicast, Collection::Gather] {
+        for collection in
+            [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina]
+        {
             combos.push((streaming, collection));
         }
     }
@@ -333,15 +337,16 @@ mod tests {
         // runs through the CLI (`noc-dnn compare`).
         let layer = ConvLayer { name: "t", c: 8, h_in: 10, r: 3, stride: 1, pad: 1, q: 32 };
         let rows = dataflow_compare(8, 2, std::slice::from_ref(&layer));
-        assert_eq!(rows.len(), 6, "3 streaming modes x 2 collection schemes");
+        assert_eq!(rows.len(), 9, "3 streaming modes x 3 collection schemes");
         for r in &rows {
             assert!(r.os_cycles > 0 && r.ws_cycles > 0);
             assert!(r.os_energy_j > 0.0 && r.ws_energy_j > 0.0);
         }
         // All three streaming modes are present for each collection.
-        let gather: Vec<_> =
-            rows.iter().filter(|r| r.collection == Collection::Gather).collect();
-        assert_eq!(gather.len(), 3);
+        for coll in [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina] {
+            let per: Vec<_> = rows.iter().filter(|r| r.collection == coll).collect();
+            assert_eq!(per.len(), 3, "{coll:?} rows missing");
+        }
     }
 
     #[test]

@@ -420,6 +420,31 @@ mod tests {
     }
 
     #[test]
+    fn both_dataflows_drive_ina_collection() {
+        // The driver is collection-generic: the same round loop that runs
+        // RU and gather must run INA for OS and WS alike, delivering every
+        // posted payload while moving no more flit-hops than gather.
+        let layer = small_layer();
+        for kind in [DataflowKind::OutputStationary, DataflowKind::WeightStationary] {
+            for streaming in [Streaming::TwoWay, Streaming::Mesh] {
+                let mut cfg = SimConfig::table1_8x8(4);
+                cfg.dataflow = kind;
+                let ina = run_layer(&cfg, streaming, Collection::Ina, &layer);
+                let g = run_layer(&cfg, streaming, Collection::Gather, &layer);
+                assert_eq!(ina.rounds_total, g.rounds_total);
+                assert!(ina.measured_net.packets_ejected > 0, "{kind:?}/{streaming:?}");
+                assert!(
+                    ina.measured_net.flit_hops <= g.measured_net.flit_hops,
+                    "{kind:?}/{streaming:?}: INA hops {} exceed gather {}",
+                    ina.measured_net.flit_hops,
+                    g.measured_net.flit_hops
+                );
+                assert!(ina.measured_net.ina_folds > 0, "transit NIs must fold psums");
+            }
+        }
+    }
+
+    #[test]
     fn ws_explicit_mapping_matches_config_selected_run() {
         let mut cfg = SimConfig::table1_8x8(2);
         cfg.dataflow = DataflowKind::WeightStationary;

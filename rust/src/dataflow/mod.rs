@@ -46,6 +46,13 @@ pub struct StreamWords {
 }
 
 /// Per-round partial-sum collection shape at each router's NI.
+///
+/// The shape is collection-scheme independent: the same
+/// `payloads_per_node` rides repetitive unicasts, gather packets
+/// (Algorithm 1) or INA packets ([`crate::config::Collection::Ina`]) —
+/// which is what lets every [`Dataflow`] drive all three schemes through
+/// one driver. Under INA the per-node payloads are additionally the
+/// packet's physical psum word count (see [`Dataflow::ina_packet_flits`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PsumCollection {
     /// Result payloads each NI posts per round (the gather `sizeof(P)`).
@@ -141,6 +148,18 @@ pub trait Dataflow {
     /// outputs of the final round are discarded by the memory element.
     fn useful_outputs(&self, layer: &ConvLayer) -> u64;
 
+    /// Flits of one in-network-accumulation result packet under this
+    /// mapping ([`crate::config::Collection::Ina`]): a head plus enough
+    /// body/tail flits for one node's physical psum words. Downstream
+    /// routers *add* into those words instead of appending slots, so the
+    /// packet never grows — this is the `psum_collection` generalization
+    /// that lets any dataflow (OS posts `n` finished outputs, WS posts
+    /// `n/spread` pre-accumulated sums) drive INA collection. Mirrors the
+    /// packet the network stages from `payloads_per_node` pending psums.
+    fn ina_packet_flits(&self, cfg: &SimConfig) -> u32 {
+        cfg.ina_packet_flits(self.psum_collection().payloads_per_node)
+    }
+
     /// Aggregate per-round traffic (derived; used by the driver for
     /// completion targets and deadlock bounds).
     fn traffic_per_round(&self, cfg: &SimConfig) -> RoundTraffic {
@@ -193,6 +212,31 @@ mod tests {
             t.stream_flits,
             8 * sw.row.div_ceil(ppf) + 8 * sw.col.div_ceil(ppf)
         );
+    }
+
+    #[test]
+    fn ina_packet_is_sized_by_physical_words_not_row_population() {
+        // Gather packets grow with the row (3/5/9/17 flits for 1/2/4/8
+        // PEs/router on 8×8); an INA packet only carries one node's words
+        // because downstream psums are added in place.
+        let layer = &alexnet::conv_layers()[2];
+        for (n, want) in [(1usize, 2u32), (2, 2), (4, 2), (8, 3)] {
+            let cfg = SimConfig::table1_8x8(n);
+            let m = build(&cfg, layer);
+            assert_eq!(m.ina_packet_flits(&cfg), want, "n={n}");
+            assert!(
+                (m.ina_packet_flits(&cfg) as usize) < cfg.gather_packet_flits || n == 1,
+                "n={n}: INA packet should undercut the row-sized gather packet"
+            );
+        }
+        // WS spread groups post n/spread pre-accumulated sums; the INA
+        // packet shrinks accordingly.
+        let mut cfg = SimConfig::table1_8x8(8);
+        cfg.dataflow = DataflowKind::WeightStationary;
+        cfg.ws_rf_words = 512; // conv3 spreads 4-wide: 2 payloads/node
+        let ws = build(&cfg, layer);
+        assert_eq!(ws.psum_collection().payloads_per_node, 2);
+        assert_eq!(ws.ina_packet_flits(&cfg), 2);
     }
 
     #[test]

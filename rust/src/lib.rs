@@ -12,6 +12,13 @@
 //!   activations and filter weights directly to PE rows/columns, relieving
 //!   the mesh of one-to-many traffic.
 //!
+//! A third collection scheme goes beyond the source paper:
+//! **in-network accumulation** ([`config::Collection::Ina`], after the
+//! group's follow-up arXiv:2209.10056) — intermediate routers *add*
+//! same-accumulation-space partial sums into a passing packet (and merge
+//! whole packets at the switch), so a small constant-size packet collects
+//! a row where gather needs a row-sized one.
+//!
 //! The crate contains every substrate the paper depends on, rebuilt from
 //! scratch:
 //!
@@ -39,7 +46,8 @@
 //!   Requires the `pjrt` cargo feature (plus the `xla` crate); the default
 //!   offline build ships a stub that fails loudly at artifact load.
 //! * [`config`] — configuration types with JSON round-trip (Table 1
-//!   defaults), including the [`config::DataflowKind`] selector.
+//!   defaults), including the [`config::DataflowKind`] and
+//!   [`config::Collection`] selectors.
 //!
 //! See `ARCHITECTURE.md` at the repository root for the module map and the
 //! simulator's per-cycle tick order.
@@ -66,7 +74,8 @@
 //!
 //! From the CLI: `noc-dnn run --model alexnet --dataflow ws` simulates one
 //! configuration; `noc-dnn compare` runs the full OS-vs-WS study across
-//! all three streaming modes and both collection schemes.
+//! all three streaming modes and all three collection schemes
+//! (RU / gather / INA).
 
 pub mod analytic;
 pub mod config;

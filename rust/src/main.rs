@@ -56,11 +56,12 @@ fn usage() -> &'static str {
 USAGE:
   noc-dnn figure <12|13|14|15|16> [--mesh 8|16] [--n 1|2|4|8] [--json]
   noc-dnn run --model <alexnet|vgg16> [--mesh N] [--n N]
-              [--streaming mesh|one-way|two-way] [--collection ru|gather]
+              [--streaming mesh|one-way|two-way] [--collection ru|gather|ina]
               [--dataflow os|ws] [--rounds-cap K] [--delta D] [--layer NAME]
   noc-dnn compare [--model <alexnet|vgg16>] [--mesh N] [--n N] [--json]
   noc-dnn overhead
   noc-dnn config --show [--mesh N] [--n N] [--dataflow os|ws]
+                 [--collection ru|gather|ina]
 
 FLAGS:
   --dataflow os|ws   dataflow mapping: Output-Stationary (paper default) or
@@ -68,11 +69,14 @@ FLAGS:
                      input patches broadcast on the row buses)
   --streaming MODE   operand distribution: dedicated one-way/two-way buses
                      (Fig. 10) or the mesh itself ('mesh', gather-only [27])
-  --collection C     partial-sum collection: 'gather' packets (Algorithm 1)
-                     or repetitive unicast 'ru'
+  --collection C     partial-sum collection: 'gather' packets (Algorithm 1),
+                     repetitive unicast 'ru', or 'ina' in-network
+                     accumulation (psums added at intermediate routers,
+                     arXiv:2209.10056)
 
 `compare` runs the whole model under OS and WS for every streaming mode x
-collection scheme and prints latency/energy with WS-vs-OS ratios.
+RU/gather/INA collection scheme and prints latency/energy with WS-vs-OS
+ratios.
 "
 }
 
@@ -84,6 +88,9 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
     cfg.delta = args.get_parsed("delta", cfg.delta)?;
     if let Some(df) = args.get("dataflow") {
         cfg.dataflow = DataflowKind::parse(df)?;
+    }
+    if let Some(c) = args.get("collection") {
+        cfg.collection = Collection::parse(c)?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -150,11 +157,8 @@ fn run(args: &Args) -> Result<()> {
         "two-way" => Streaming::TwoWay,
         s => bail!("unknown streaming '{s}'"),
     };
-    let collection = match args.get("collection").unwrap_or("gather") {
-        "ru" | "unicast" => Collection::RepetitiveUnicast,
-        "gather" => Collection::Gather,
-        s => bail!("unknown collection '{s}'"),
-    };
+    // cfg_from already folded --collection into the config.
+    let collection = cfg.collection;
     let mut layers = model_layers(args.get("model").unwrap_or("alexnet"))?;
     if let Some(name) = args.get("layer") {
         layers.retain(|l| l.name == name);

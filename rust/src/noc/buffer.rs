@@ -65,6 +65,16 @@ impl VcBuffer {
     pub fn pop(&mut self) -> Option<Flit> {
         self.fifo.pop_front()
     }
+
+    /// Flit at position `i` from the front (0 = front), if buffered.
+    pub fn get(&self, i: usize) -> Option<&Flit> {
+        self.fifo.get(i)
+    }
+
+    /// Iterate the buffered flits, front to back.
+    pub fn iter(&self) -> impl Iterator<Item = &Flit> {
+        self.fifo.iter()
+    }
 }
 
 /// Credit counters the upstream side keeps for one downstream input port:
@@ -114,6 +124,7 @@ mod tests {
             dst: Coord::new(3, 0),
             len_flits: 4,
             aspace: 0,
+            space: 0,
             inject_cycle: 0,
             deliver_along_path: false,
             carried_payloads: 0,

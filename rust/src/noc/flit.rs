@@ -22,6 +22,11 @@ pub enum PacketType {
     Multicast,
     /// Many-to-one partial-sum collection (the paper's contribution).
     Gather,
+    /// Many-to-one partial-sum collection with in-network accumulation
+    /// (the arXiv:2209.10056 follow-up): routers *add* same-space psums
+    /// into a passing packet — or merge two whole packets — instead of
+    /// appending payload slots, so the packet never grows.
+    Ina,
 }
 
 /// A node coordinate on the mesh. `x` grows eastward (toward the global
@@ -58,8 +63,16 @@ pub struct Flit {
     pub ptype: PacketType,
     pub src: Coord,
     pub dst: Coord,
-    /// Remaining gather payload slots (`ASpace`); meaningful on gather heads.
+    /// Remaining gather payload slots (`ASpace`); meaningful on gather
+    /// heads. On INA heads this field is repurposed to hold the packet's
+    /// *physical* psum word count, which stays constant under accumulation
+    /// (adds happen in place) and prices the router ALU work of a merge.
     pub aspace: u32,
+    /// Accumulation space this packet's psums belong to (INA packets
+    /// only; 0 otherwise). Two psums may be added by a router ALU only
+    /// when they share a space — in practice (row, round) — and a
+    /// destination memory node.
+    pub space: u64,
     /// Index of this flit within its packet (head = 0).
     pub seq: u32,
     /// Total flits in the packet.
@@ -98,6 +111,8 @@ pub struct PacketDesc {
     pub dst: Coord,
     pub len_flits: u32,
     pub aspace: u32,
+    /// Accumulation space tag (INA packets; 0 otherwise).
+    pub space: u64,
     pub inject_cycle: u64,
     pub deliver_along_path: bool,
     /// Result payloads carried by this packet at injection time.
@@ -122,6 +137,7 @@ impl PacketDesc {
             src: self.src,
             dst: self.dst,
             aspace: self.aspace,
+            space: self.space,
             seq: i,
             packet_len: self.len_flits,
             inject_cycle: self.inject_cycle,
@@ -154,6 +170,7 @@ mod tests {
             dst: Coord::new(7, 0),
             len_flits: 3,
             aspace: 8,
+            space: 0,
             inject_cycle: 100,
             deliver_along_path: false,
             carried_payloads: 0,
@@ -174,6 +191,7 @@ mod tests {
             dst: Coord::new(7, 2),
             len_flits: 2,
             aspace: 0,
+            space: 0,
             inject_cycle: 0,
             deliver_along_path: false,
             carried_payloads: 0,

@@ -101,11 +101,19 @@ pub struct NiState {
     /// when several full packets pass in a row.
     pub staged: bool,
     /// Rounds whose results are computed but cannot enter the NI yet: the
-    /// payload queue of Fig. 9 holds one round; further rounds back up
-    /// here until the active round's payloads leave (boarded / injected).
-    /// This is the backpressure that turns network congestion into round
-    /// stalls — the Δ_R / Δ_G the paper measures.
-    pub backlog: std::collections::VecDeque<u32>,
+    /// payload queue of Fig. 9 holds one round (payload count, INA
+    /// accumulation space); further rounds back up here until the active
+    /// round's payloads leave (boarded / injected). This is the
+    /// backpressure that turns network congestion into round stalls — the
+    /// Δ_R / Δ_G the paper measures.
+    pub backlog: std::collections::VecDeque<(u32, u64)>,
+    /// Accumulation space of the pending payloads (`Collection::Ina`):
+    /// a router may only *add* psums that belong to the same space, so a
+    /// passing INA packet of a different round must not fold this NI. The
+    /// network derives it from the round's scheduled post cycle, which is
+    /// node-independent — nodes that skip rounds or activate late out of
+    /// a backlog can never collide with another round's space.
+    pub space: u64,
 }
 
 impl NiState {
@@ -118,6 +126,7 @@ impl NiState {
             is_initiator: false,
             staged: false,
             backlog: std::collections::VecDeque::new(),
+            space: 0,
         }
     }
 }
@@ -141,37 +150,91 @@ pub enum BoardOutcome {
     Full,
 }
 
-/// Algorithm 1: try to board `ni`'s pending payloads onto the passing
-/// gather head `flit`. Mutates `flit.aspace` / `flit.carried_payloads` and
-/// `ni.pending`. Caller handles re-arming on `BoardedPartial` / `Full`.
-pub fn try_board(flit: &mut Flit, ni: &mut NiState) -> BoardOutcome {
-    // if ((F.FT = H) and (F.PT = G) and (F.Dst = P.Dst) and pending)
-    if !flit.is_head() || flit.ptype != PacketType::Gather {
+/// What a passing head does with a transit NI's pending payloads —
+/// gather packets *fill* empty slots (bounded by `ASpace`), INA packets
+/// *accumulate* into existing words (unbounded, one ALU add per word).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoardMode {
+    /// Algorithm 1 of the source paper: occupy payload slots, decrement
+    /// `ASpace`, spill to a fresh packet when full.
+    Fill,
+    /// In-network accumulation (arXiv:2209.10056): add same-space psums
+    /// into the packet's existing words. Requires `flit.space ==
+    /// ni.space`; never runs out of room, so `Full`/`BoardedPartial`
+    /// cannot occur.
+    Accumulate,
+}
+
+/// Shared boarding logic for gather (`BoardMode::Fill`, Algorithm 1) and
+/// INA (`BoardMode::Accumulate`) packets: try to board `ni`'s pending
+/// payloads onto the passing head `flit`. Mutates `flit.aspace` /
+/// `flit.carried_payloads` and `ni.pending`. Caller handles re-arming on
+/// `BoardedPartial` / `Full` (Fill mode only).
+pub fn try_board_mode(flit: &mut Flit, ni: &mut NiState, mode: BoardMode) -> BoardOutcome {
+    let want = match mode {
+        BoardMode::Fill => PacketType::Gather,
+        BoardMode::Accumulate => PacketType::Ina,
+    };
+    // if ((F.FT = H) and (F.PT = G|I) and (F.Dst = P.Dst) and pending)
+    if !flit.is_head() || flit.ptype != want {
         return BoardOutcome::NotApplicable;
     }
     if ni.pending == 0 || flit.dst != ni.dst {
         return BoardOutcome::NotApplicable;
     }
-    // if (F.ASpace >= sizeof(P)) then Load <- 1 ; F.ASpace -= sizeof(P)
-    if flit.aspace == 0 {
-        return BoardOutcome::Full;
-    }
-    let boarded = flit.aspace.min(ni.pending);
-    flit.aspace -= boarded;
-    flit.carried_payloads += boarded;
-    ni.pending -= boarded;
-    if ni.pending == 0 {
-        ni.armed = false;
-        BoardOutcome::BoardedAll(boarded)
-    } else {
-        BoardOutcome::BoardedPartial(boarded)
+    match mode {
+        BoardMode::Fill => {
+            // if (F.ASpace >= sizeof(P)) then Load <- 1 ; F.ASpace -= sizeof(P)
+            if flit.aspace == 0 {
+                return BoardOutcome::Full;
+            }
+            let boarded = flit.aspace.min(ni.pending);
+            flit.aspace -= boarded;
+            flit.carried_payloads += boarded;
+            ni.pending -= boarded;
+            if ni.pending == 0 {
+                ni.armed = false;
+                BoardOutcome::BoardedAll(boarded)
+            } else {
+                BoardOutcome::BoardedPartial(boarded)
+            }
+        }
+        BoardMode::Accumulate => {
+            // Psums of different rounds must not be added together.
+            if flit.space != ni.space {
+                return BoardOutcome::NotApplicable;
+            }
+            let folded = ni.pending;
+            flit.carried_payloads += folded;
+            // `aspace` holds the packet's physical word count under INA;
+            // accumulation adds in place. Every node of a round posts the
+            // same width under the uniform drivers, keeping it constant;
+            // when a randomized workload posts heterogeneous widths the
+            // count widens in place WITHOUT growing the flit count — a
+            // documented modeling approximation (a physical packet sized
+            // for fewer words would need extra flits), acceptable because
+            // same-space psums cover the same outputs and thus the same
+            // width in any physically meaningful mapping.
+            flit.aspace = flit.aspace.max(folded);
+            ni.pending = 0;
+            ni.armed = false;
+            BoardOutcome::BoardedAll(folded)
+        }
     }
 }
 
+/// Algorithm 1: try to board `ni`'s pending payloads onto the passing
+/// gather head `flit` (the `BoardMode::Fill` instantiation of
+/// [`try_board_mode`]).
+pub fn try_board(flit: &mut Flit, ni: &mut NiState) -> BoardOutcome {
+    try_board_mode(flit, ni, BoardMode::Fill)
+}
+
 /// Effective timeout of the node at column `x` (per-router fine-tuning,
-/// see module docs).
+/// see module docs). Saturating: a sentinel δ of `u64::MAX` ("never time
+/// out") must not wrap into an immediate expiry.
 pub fn effective_delta(delta: u64, x: u16) -> u64 {
-    delta + x as u64
+    delta.saturating_add(x as u64)
 }
 
 #[cfg(test)]
@@ -187,6 +250,7 @@ mod tests {
             dst,
             len_flits: 3,
             aspace,
+            space: 0,
             inject_cycle: 0,
             deliver_along_path: false,
             carried_payloads: 1,
@@ -264,5 +328,103 @@ mod tests {
     fn effective_delta_staggers_eastward() {
         assert_eq!(effective_delta(39, 0), 39);
         assert!(effective_delta(39, 9) > effective_delta(39, 8));
+    }
+
+    #[test]
+    fn effective_delta_saturates_near_u64_max() {
+        // A sentinel δ of u64::MAX means "never time out"; the per-column
+        // stagger must not wrap it into an immediate expiry.
+        assert_eq!(effective_delta(u64::MAX, 0), u64::MAX);
+        assert_eq!(effective_delta(u64::MAX, 15), u64::MAX);
+        assert_eq!(effective_delta(u64::MAX - 4, 9), u64::MAX);
+        assert_eq!(effective_delta(u64::MAX - 9, 9), u64::MAX);
+    }
+
+    fn ina_head(words: u32, space: u64, dst: Coord) -> Flit {
+        let mut f = PacketDesc {
+            id: 9,
+            ptype: PacketType::Ina,
+            src: Coord::new(0, 2),
+            dst,
+            len_flits: 2,
+            aspace: words,
+            space,
+            inject_cycle: 0,
+            deliver_along_path: false,
+            carried_payloads: words,
+        }
+        .flit(0);
+        f.ftype = FlitType::Head;
+        f
+    }
+
+    #[test]
+    fn accumulate_mode_folds_everything_without_capacity() {
+        // INA has no ASpace limit: however many psums are pending, they
+        // all fold — the add happens in place, the packet never grows.
+        let dst = Coord::new(8, 2);
+        let mut f = ina_head(4, 7, dst);
+        let mut n = NiState { space: 7, ..ni(29, dst) };
+        assert_eq!(try_board_mode(&mut f, &mut n, BoardMode::Accumulate),
+                   BoardOutcome::BoardedAll(29));
+        assert_eq!(f.carried_payloads, 4 + 29, "represented psums accumulate");
+        assert_eq!(f.aspace, 29, "physical words widen to the larger side");
+        assert_eq!(n.pending, 0);
+        assert!(!n.armed);
+    }
+
+    #[test]
+    fn accumulate_mode_respects_the_space_tag() {
+        // Psums of different rounds must never be added together.
+        let dst = Coord::new(8, 2);
+        let mut f = ina_head(4, 7, dst);
+        let mut n = NiState { space: 8, ..ni(4, dst) };
+        assert_eq!(try_board_mode(&mut f, &mut n, BoardMode::Accumulate),
+                   BoardOutcome::NotApplicable);
+        assert_eq!(n.pending, 4);
+        // Gather packets never fold via the accumulate path and vice versa.
+        let mut g = gather_head(8, dst);
+        let mut n2 = NiState { space: 0, ..ni(4, dst) };
+        assert_eq!(try_board_mode(&mut g, &mut n2, BoardMode::Accumulate),
+                   BoardOutcome::NotApplicable);
+        let mut i = ina_head(4, 0, dst);
+        assert_eq!(try_board_mode(&mut i, &mut n2, BoardMode::Fill),
+                   BoardOutcome::NotApplicable);
+    }
+
+    #[test]
+    fn timeout_firing_when_the_boarding_flit_arrives_boards_instead() {
+        // δ chosen so the farthest node's deadline lands exactly on the
+        // cycle the initiator's head arrives: `deliver_arrivals` runs
+        // before `gather_timeouts` within a cycle, so boarding wins and
+        // the node stages nothing. One cycle earlier (δ−1) the timeout
+        // fires first — but the one-cycle staging latency lets the
+        // arriving head drain the NI and cancel the staged packet, so the
+        // row still emits exactly one packet either way.
+        use crate::config::{Collection, SimConfig};
+        use crate::noc::network::Network;
+        let cfg = SimConfig::table1_8x8(1);
+        let m = cfg.mesh_cols as u64;
+        let per_hop = cfg.kappa() + cfg.link_latency;
+        // Head enters the initiator's router at cycle 1 and reaches
+        // column x at 1 + x·(κ+link); node x's deadline is δ + x.
+        let same_cycle_delta = 1 + (per_hop - 1) * (m - 1);
+        for (delta, want_expiries) in [(same_cycle_delta, 0), (same_cycle_delta - 1, 1)] {
+            let mut c = cfg.clone();
+            c.delta = delta;
+            let mut net = Network::new(&c, Collection::Gather);
+            for x in 0..c.mesh_cols {
+                net.post_result(0, Coord::new(x as u16, 0), 1);
+            }
+            let ok = net.run_until(|n| n.payloads_delivered >= m, 100_000);
+            assert!(ok, "δ={delta}: collection stalled");
+            assert_eq!(
+                net.stats.delta_expiries, want_expiries,
+                "δ={delta}: deliver_arrivals/gather_timeouts ordering drifted"
+            );
+            assert_eq!(net.stats.packets_injected, 1,
+                "δ={delta}: cancel-on-board must keep the row at one packet");
+            assert_eq!(net.stats.gather_boards, m - 1);
+        }
     }
 }

@@ -49,14 +49,36 @@
 //! ## Per-cycle ordering
 //!
 //! 1. apply credit refunds scheduled last cycle;
-//! 2. deliver link arrivals (buffer writes);
+//! 2. deliver link arrivals (buffer writes) — gather boarding and INA
+//!    NI-folds happen here, on head arrival, in the RC slot;
 //! 3. apply scheduled NI posts / operand-stream injections for this cycle;
 //! 4. VC allocation for routed head flits;
-//! 5. switch allocation + traversal (this is where gather boarding and
-//!    stream delivery happen — boarding strictly *before* step 6/7 so a
-//!    boarded NI never stages a redundant packet in the same cycle);
+//! 5. switch allocation + traversal (this is where stream delivery and —
+//!    under [`Collection::Ina`] — same-space packet *merges* happen:
+//!    boarding in step 2 runs strictly before steps 6/7 so a boarded NI
+//!    never stages a redundant packet in the same cycle);
 //! 6. NI injection sources feed one flit each into their local buffers;
-//! 7. gather timeout staging (κ cycles before each armed deadline).
+//! 7. gather/INA timeout staging (one-cycle packet assembly before entry).
+//!
+//! ## In-Network Accumulation ([`Collection::Ina`])
+//!
+//! INA reuses the gather machinery (δ timeouts, leftmost initiator,
+//! cancel-on-board) but *adds* psums instead of appending them:
+//!
+//! * on head arrival (step 2) a transit NI's same-space pending psums are
+//!   folded into the packet by the router ALU at zero latency — the
+//!   accumulate analogue of Algorithm-1 boarding, with no `ASpace` limit;
+//! * during switch allocation (step 5), two complete same-space packets
+//!   requesting the same output port merge: the absorbed packet's flits
+//!   are read out of its VC (buffer reads, upstream credits refunded in
+//!   one batch, its output VC released) and its psums are added into the
+//!   survivor's head. The absorbed flits never traverse the crossbar or
+//!   the link — that is the traffic INA saves.
+//!
+//! `Flit::carried_payloads` keeps counting *represented* psums across
+//! folds and merges (so payload conservation and the driver's completion
+//! targets are collection-independent), while `Flit::aspace` holds the
+//! packet's constant physical word count, which prices the ALU adds.
 //!
 //! ## Topology & memory elements (§5.1)
 //!
@@ -75,7 +97,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use super::buffer::VcState;
 use super::flit::{Coord, Flit, PacketDesc, PacketId, PacketType};
-use super::gather::{effective_delta, try_board, BoardOutcome, NiState};
+use super::gather::{effective_delta, try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
 use super::router::{refresh_vc_state, RouterState};
 use super::routing::{route, Algorithm, Port};
 use super::stats::NetStats;
@@ -129,6 +151,12 @@ struct NiPost {
     node: usize,
     payloads: u32,
     dst: Coord,
+    /// Accumulation space (INA): the scheduled post cycle. All NIs of a
+    /// round are posted for the same cycle, so the cycle is a node-
+    /// independent round id — psums posted for different cycles never
+    /// share a space, even when some nodes skip rounds or activate late
+    /// out of a backlog.
+    space: u64,
 }
 
 /// The simulator.
@@ -260,7 +288,10 @@ impl Network {
         assert!(at >= self.cycle, "cannot post results in the past");
         let dst = self.memory_of_row(node.y as usize);
         let idx = self.node_idx(node);
-        self.ni_posts.entry(at).or_default().push(NiPost { node: idx, payloads, dst });
+        self.ni_posts
+            .entry(at)
+            .or_default()
+            .push(NiPost { node: idx, payloads, dst, space: at });
     }
 
     /// Schedule an operand stream of `words` payload words to enter the
@@ -294,6 +325,7 @@ impl Network {
             dst,
             len_flits: (1 + body) as u32,
             aspace: 0,
+            space: 0,
             inject_cycle: at,
             deliver_along_path: true,
             carried_payloads: 0,
@@ -418,6 +450,20 @@ impl Network {
                     }
                     BoardOutcome::NotApplicable => {}
                 }
+            } else if flit.ptype == PacketType::Ina
+                && flit.is_head()
+                && self.routers[router].coord != flit.src
+            {
+                // INA fold: the router ALU adds this NI's same-space psums
+                // into the passing packet — zero latency, no capacity
+                // limit, one add per folded word.
+                let ni = &mut self.ni[router];
+                if let BoardOutcome::BoardedAll(k) =
+                    try_board_mode(&mut flit, ni, BoardMode::Accumulate)
+                {
+                    self.stats.ina_folds += k as u64;
+                    self.stats.ina_adds += k as u64;
+                }
             }
             self.write_flit(router, port, vc, flit);
         }
@@ -425,20 +471,31 @@ impl Network {
         self.arrivals.push_back(batch);
     }
 
-    /// Stage this node's own gather packet in the NI (one-cycle assembly;
-    /// validated again at head entry — see `noc::gather` docs).
+    /// Stage this node's own gather/INA packet in the NI (one-cycle
+    /// assembly; validated again at head entry — see `noc::gather` docs).
+    /// Gather packets have the fixed Table-1 size; INA packets carry the
+    /// node's physical psum words (head + ⌈pending/slots⌉ flits) and never
+    /// grow, however many downstream psums accumulate into them.
     fn stage_own_gather(&mut self, node: usize) {
         let ni = &self.ni[node];
         if ni.staged || ni.pending == 0 {
             return;
         }
+        let (ptype, len_flits, space) = match self.collection {
+            Collection::Gather => (PacketType::Gather, self.cfg.gather_packet_flits as u32, 0),
+            Collection::Ina => {
+                (PacketType::Ina, self.cfg.ina_packet_flits(ni.pending), ni.space)
+            }
+            Collection::RepetitiveUnicast => unreachable!("RU never stages NI packets"),
+        };
         let desc = PacketDesc {
             id: 0, // assigned at head entry
-            ptype: PacketType::Gather,
+            ptype,
             src: self.routers[node].coord,
             dst: ni.dst,
-            len_flits: self.cfg.gather_packet_flits as u32,
+            len_flits,
             aspace: 0, // computed at head entry
+            space,
             inject_cycle: self.cycle,
             deliver_along_path: false,
             carried_payloads: 0,
@@ -508,10 +565,10 @@ impl Network {
         // which network congestion stretches the round pipeline (Δ_R/Δ_G).
         self.ni[post.node].dst = post.dst;
         if self.ni_busy(post.node) {
-            self.ni[post.node].backlog.push_back(post.payloads);
+            self.ni[post.node].backlog.push_back((post.payloads, post.space));
             self.backlogged_nodes += 1;
         } else {
-            self.activate_round(post.node, post.payloads);
+            self.activate_round(post.node, post.payloads, post.space);
         }
     }
 
@@ -522,8 +579,9 @@ impl Network {
         self.ni[node].pending > 0 || !inj.queue.is_empty() || inj.cur.is_some()
     }
 
-    /// Make one round's payloads live at the NI.
-    fn activate_round(&mut self, node: usize, payloads: u32) {
+    /// Make one round's payloads live at the NI. `space` is the round's
+    /// accumulation-space id (the scheduled post cycle; used by INA only).
+    fn activate_round(&mut self, node: usize, payloads: u32, space: u64) {
         match self.collection {
             Collection::RepetitiveUnicast => {
                 // RU baseline: literal repetitive unicast — each PE's
@@ -549,6 +607,7 @@ impl Network {
                         dst,
                         len_flits: self.cfg.unicast_packet_flits as u32,
                         aspace: 0,
+                        space: 0,
                         inject_cycle: self.cycle,
                         deliver_along_path: false,
                         carried_payloads: carried,
@@ -569,8 +628,28 @@ impl Network {
                     ni.deadline = self.cycle;
                 } else if !ni.armed {
                     ni.armed = true;
-                    ni.deadline = self.cycle + effective_delta(self.cfg.delta, x);
+                    ni.deadline =
+                        self.cycle.saturating_add(effective_delta(self.cfg.delta, x));
                 }
+            }
+            Collection::Ina => {
+                // Same δ machinery as gather, plus the accumulation-space
+                // tag: all NIs posted for one round carry the same space
+                // (the scheduled post cycle), which together with the dst
+                // forms the merge-eligibility key — psums of different
+                // rounds must never be added together, however skewed the
+                // nodes' activation times become under backlog.
+                let x = self.routers[node].coord.x;
+                let ni = &mut self.ni[node];
+                debug_assert_eq!(ni.pending, 0, "INA NI activates one round at a time");
+                ni.pending += payloads;
+                ni.space = space;
+                ni.armed = true;
+                ni.deadline = if ni.is_initiator {
+                    self.cycle
+                } else {
+                    self.cycle.saturating_add(effective_delta(self.cfg.delta, x))
+                };
             }
         }
     }
@@ -584,9 +663,9 @@ impl Network {
             if self.ni[node].backlog.is_empty() || self.ni_busy(node) {
                 continue;
             }
-            let payloads = self.ni[node].backlog.pop_front().unwrap();
+            let (payloads, space) = self.ni[node].backlog.pop_front().unwrap();
             self.backlogged_nodes -= 1;
-            self.activate_round(node, payloads);
+            self.activate_round(node, payloads, space);
         }
     }
 
@@ -671,6 +750,12 @@ impl Network {
                     reqs[op][counts[op]] = idx;
                     counts[op] += 1;
                 }
+            }
+            // INA merge point: complete same-space packets competing for
+            // the same output port collapse into one before arbitration —
+            // the absorbed flits never traverse the crossbar or the link.
+            if self.collection == Collection::Ina {
+                self.merge_ina_requests(ridx, &mut reqs, &mut counts);
             }
             let mut in_port_used = [false; PORTS];
             for out_port_i in 0..PORTS {
@@ -786,6 +871,138 @@ impl Network {
         }
     }
 
+    /// Merge INA packets among one router's SA requesters: within each
+    /// output port's request list, the first complete INA packet of an
+    /// accumulation space survives and every later complete packet of the
+    /// same (space, dst) is absorbed into it. Absorbed entries are removed
+    /// from the request list before arbitration.
+    ///
+    /// Only *complete* buffered packets merge (head at the VC front, tail
+    /// already buffered): a packet whose flits are still on the wire keeps
+    /// wormhole ordering intact and simply merges a cycle later, or
+    /// travels on its own.
+    fn merge_ina_requests(
+        &mut self,
+        ridx: usize,
+        reqs: &mut [[usize; 16]; PORTS],
+        counts: &mut [usize; PORTS],
+    ) {
+        for op in 0..PORTS {
+            if counts[op] < 2 {
+                continue;
+            }
+            let mut i = 0;
+            while i < counts[op] {
+                let survivor = reqs[op][i];
+                let Some(key) = self.ina_complete_head(ridx, survivor) else {
+                    i += 1;
+                    continue;
+                };
+                let mut j = i + 1;
+                while j < counts[op] {
+                    let candidate = reqs[op][j];
+                    if self.ina_complete_head(ridx, candidate) == Some(key) {
+                        self.absorb_ina_packet(ridx, candidate, survivor);
+                        for k in j..counts[op] - 1 {
+                            reqs[op][k] = reqs[op][k + 1];
+                        }
+                        counts[op] -= 1;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// If input VC `idx` fronts a *complete* buffered INA packet, return
+    /// its merge key (accumulation space, destination).
+    fn ina_complete_head(&self, ridx: usize, idx: usize) -> Option<(u64, Coord)> {
+        let buf = &self.routers[ridx].inputs[idx];
+        let head = buf.front()?;
+        if head.ptype != PacketType::Ina || !head.is_head() {
+            return None;
+        }
+        let len = head.packet_len as usize;
+        let tail = buf.get(len - 1)?;
+        if tail.packet_id != head.packet_id {
+            return None;
+        }
+        if len > 1 && !tail.is_tail() {
+            return None;
+        }
+        Some((head.space, head.dst))
+    }
+
+    /// Absorb the complete INA packet fronting input VC `absorbed` into
+    /// the head fronting input VC `survivor` (same router): the router ALU
+    /// adds the absorbed psums into the survivor's words, the absorbed
+    /// flits are read out of the buffer (their upstream credits refunded
+    /// in one batch), and the absorbed packet's output VC is released.
+    fn absorb_ina_packet(&mut self, ridx: usize, absorbed: usize, survivor: usize) {
+        let vcs = self.vcs;
+        let kappa = self.cfg.kappa();
+        let (pid, len, carried, words) = {
+            let f = self.routers[ridx].inputs[absorbed].front().expect("absorbed VC empty");
+            (f.packet_id, f.packet_len as usize, f.carried_payloads, f.aspace)
+        };
+        // SA requesters are Active: release the output VC the absorbed
+        // packet held so a later packet can claim the lane.
+        match self.routers[ridx].inputs[absorbed].state {
+            VcState::Active { out_port, out_vc } => {
+                self.routers[ridx].release_out_vc(Port::from_index(out_port), out_vc, vcs);
+            }
+            s => panic!("INA merge on non-active VC state {s:?}"),
+        }
+        for _ in 0..len {
+            let f = self.routers[ridx].inputs[absorbed].pop().expect("absorbed packet truncated");
+            debug_assert_eq!(f.packet_id, pid, "absorbed a foreign flit");
+        }
+        self.occupancy[ridx] -= len as u32;
+        self.flits_active -= len as u64;
+        // The merge reads the absorbed flits into the ALU; they are not
+        // switched, linked or ejected.
+        self.stats.buffer_reads += len as u64;
+        self.stats.ina_merges += 1;
+        self.stats.ina_adds += words as u64;
+        // Refund the upstream credits for the slots freed all at once.
+        let in_port = Port::from_index(absorbed / vcs);
+        if in_port != Port::Local {
+            let here = self.routers[ridx].coord;
+            if let Some(up) = self.neighbour(here, in_port) {
+                let up_idx = self.node_idx(up);
+                for _ in 0..len {
+                    self.credit_refunds.push((up_idx, in_port.opposite().index(), absorbed % vcs));
+                }
+            }
+        }
+        // Reset the absorbed VC (wormhole ordering guarantees the next
+        // flit, if any, is a fresh head).
+        {
+            let r = &mut self.routers[ridx];
+            r.inputs[absorbed].state = VcState::Idle;
+            if r.inputs[absorbed].is_empty() {
+                r.nonempty_mask &= !(1 << absorbed);
+            } else {
+                r.inputs[absorbed].state = refresh_vc_state(
+                    &r.inputs[absorbed],
+                    &mut r.meta[absorbed],
+                    self.cycle,
+                    kappa,
+                );
+            }
+        }
+        // Fold the represented psums into the survivor; its physical word
+        // count widens to the larger side (adds happen in place).
+        let head = self.routers[ridx].inputs[survivor]
+            .front_mut()
+            .expect("survivor VC empty");
+        debug_assert!(head.is_head() && head.ptype == PacketType::Ina);
+        head.carried_payloads += carried;
+        head.aspace = head.aspace.max(words);
+    }
+
     fn eject(&mut self, flit: Flit) {
         self.stats.flits_ejected += 1;
         if flit.is_head() {
@@ -850,24 +1067,39 @@ impl Network {
             if entry.from_ni {
                 // Cancel-on-board: re-validate against the NI now.
                 let cap = self.cfg.gather_capacity();
+                let x = self.routers[ridx].coord.x;
+                let collection = self.collection;
+                let delta = self.cfg.delta;
+                let cycle = self.cycle;
                 let ni = &mut self.ni[ridx];
                 ni.staged = false;
                 if ni.pending == 0 {
-                    return; // a passing packet collected everything
+                    return; // a passing packet collected/folded everything
                 }
-                let carried = ni.pending.min(cap);
+                let carried = match collection {
+                    Collection::Gather => ni.pending.min(cap),
+                    // INA has no capacity limit: the whole round ships.
+                    Collection::Ina => ni.pending,
+                    Collection::RepetitiveUnicast => {
+                        unreachable!("RU never stages NI packets")
+                    }
+                };
                 ni.pending -= carried;
                 if ni.pending == 0 {
                     ni.armed = false;
                 } else {
-                    // Oversized round (payloads exceed one packet): keep
-                    // the remainder armed for the next opportunity.
+                    // Oversized gather round (payloads exceed one packet):
+                    // keep the remainder armed for the next opportunity.
                     ni.armed = true;
-                    ni.deadline = self.cycle
-                        + effective_delta(self.cfg.delta, self.routers[ridx].coord.x);
+                    ni.deadline = cycle.saturating_add(effective_delta(delta, x));
                 }
                 desc.carried_payloads = carried;
-                desc.aspace = cap - carried;
+                // Gather: remaining payload slots. INA: the packet's
+                // physical psum word count (constant under accumulation).
+                desc.aspace = match collection {
+                    Collection::Gather => cap - carried,
+                    _ => carried,
+                };
                 desc.id = self.alloc_pid();
                 desc.inject_cycle = self.cycle;
                 self.stats.packets_injected += 1;
@@ -905,7 +1137,9 @@ impl Network {
     }
 
     fn gather_timeouts(&mut self) {
-        if self.collection != Collection::Gather {
+        // The δ timeout machinery is shared by gather and INA collection;
+        // RU injects eagerly and never arms it.
+        if self.collection == Collection::RepetitiveUnicast {
             return;
         }
         for ridx in 0..self.ni.len() {
@@ -931,5 +1165,62 @@ impl Network {
 
     pub fn total_buffered_flits(&self) -> usize {
         self.routers.iter().map(|r| r.occupancy()).sum()
+    }
+
+    /// Every result payload the network is still responsible for: posted
+    /// but not yet activated, pending/backlogged at an NI, staged or
+    /// queued in an injector, buffered in a router VC, or in flight on a
+    /// link. At any cycle boundary
+    /// `posted == payloads_delivered + payloads_in_flight()` — the flit
+    /// conservation invariant the property suite pins (no payload is ever
+    /// dropped by VC/switch allocation, boarding, or INA merging).
+    ///
+    /// Payload counts ride on head flits only (`carried_payloads` is
+    /// replicated onto body flits for convenience but represents the
+    /// packet once), and a staged-but-unvalidated NI packet still counts
+    /// via `NiState::pending` (cancel-on-board moves the count exactly
+    /// once).
+    pub fn payloads_in_flight(&self) -> u64 {
+        let mut total = 0u64;
+        for posts in self.ni_posts.values() {
+            total += posts.iter().map(|p| p.payloads as u64).sum::<u64>();
+        }
+        for ni in &self.ni {
+            total += ni.pending as u64;
+            total += ni.backlog.iter().map(|&(p, _)| p as u64).sum::<u64>();
+        }
+        for inj in &self.injectors {
+            for e in &inj.queue {
+                if !e.from_ni {
+                    total += e.desc.carried_payloads as u64;
+                }
+                // from_ni entries: the count still sits in NiState::pending
+                // until head entry validates the packet.
+            }
+            if let Some((desc, seq, _)) = &inj.cur {
+                if *seq == 0 {
+                    // Head not yet buffered; once it is, the buffer scan
+                    // below owns the count.
+                    total += desc.carried_payloads as u64;
+                }
+            }
+        }
+        for r in &self.routers {
+            for buf in &r.inputs {
+                total += buf
+                    .iter()
+                    .filter(|f| f.is_head())
+                    .map(|f| f.carried_payloads as u64)
+                    .sum::<u64>();
+            }
+        }
+        for batch in &self.arrivals {
+            total += batch
+                .iter()
+                .filter(|a| a.flit.is_head())
+                .map(|a| a.flit.carried_payloads as u64)
+                .sum::<u64>();
+        }
+        total
     }
 }

@@ -175,6 +175,7 @@ mod tests {
             dst: Coord::new(3, 0),
             len_flits: 2,
             aspace: 0,
+            space: 0,
             inject_cycle: 10,
             deliver_along_path: false,
             carried_payloads: 0,
@@ -198,6 +199,7 @@ mod tests {
             dst: Coord::new(3, 0),
             len_flits: 2,
             aspace: 0,
+            space: 0,
             inject_cycle: 10,
             deliver_along_path: false,
             carried_payloads: 0,

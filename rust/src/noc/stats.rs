@@ -39,6 +39,17 @@ pub struct NetStats {
     /// `crate::dataflow::ws`). Reported by the round driver from the
     /// mapping's `PsumCollection`, charged by `crate::power`.
     pub ni_accumulations: u64,
+    /// INA (`Collection::Ina`): payloads folded into a passing INA packet
+    /// at the NI boarding point of a transit router (the accumulate
+    /// analogue of `gather_boards` — adds instead of slot fills).
+    pub ina_folds: u64,
+    /// INA: whole packets absorbed into a same-space packet during switch
+    /// allocation (the router merge point; the absorbed packet's flits
+    /// never traverse the crossbar).
+    pub ina_merges: u64,
+    /// INA: router ALU add operations (one per psum word folded at an NI
+    /// or merged from an absorbed packet); priced by `crate::power`.
+    pub ina_adds: u64,
     /// Gather packets initiated after a δ timeout expiry (not counting the
     /// hardwired leftmost initiator).
     pub delta_expiries: u64,
@@ -77,6 +88,9 @@ impl NetStats {
         self.link_traversals += other.link_traversals;
         self.gather_boards += other.gather_boards;
         self.ni_accumulations += other.ni_accumulations;
+        self.ina_folds += other.ina_folds;
+        self.ina_merges += other.ina_merges;
+        self.ina_adds += other.ina_adds;
         self.delta_expiries += other.delta_expiries;
         self.stream_deliveries += other.stream_deliveries;
         self.cycles_simulated = self.cycles_simulated.max(other.cycles_simulated);
@@ -100,6 +114,9 @@ impl NetStats {
             link_traversals: s(self.link_traversals),
             gather_boards: s(self.gather_boards),
             ni_accumulations: s(self.ni_accumulations),
+            ina_folds: s(self.ina_folds),
+            ina_merges: s(self.ina_merges),
+            ina_adds: s(self.ina_adds),
             delta_expiries: s(self.delta_expiries),
             stream_deliveries: s(self.stream_deliveries),
             cycles_simulated: self.cycles_simulated,

@@ -45,12 +45,23 @@ pub fn power_report(
         + net.crossbar_traversals as f64 * re.crossbar_j
         + (net.vc_allocs + net.sa_grants) as f64 * re.arbiter_j
         + net.link_traversals as f64 * re.link_j;
-    if collection == Collection::Gather {
-        // Load generation fires on every gather head passing a router; we
-        // approximate heads by packets × average hops = flit_hops / flits,
-        // but the exact count is the boards + the checks that failed —
-        // charging every board plus one check per hop of gather heads.
-        dyn_j += net.gather_boards as f64 * (re.gather_payload_j + re.gather_logic_j);
+    match collection {
+        Collection::Gather => {
+            // Load generation fires on every gather head passing a router;
+            // we approximate heads by packets × average hops = flit_hops /
+            // flits, but the exact count is the boards + the checks that
+            // failed — charging every board plus one check per hop of
+            // gather heads.
+            dyn_j += net.gather_boards as f64 * (re.gather_payload_j + re.gather_logic_j);
+        }
+        Collection::Ina => {
+            // NI folds reuse the gather boarding hardware (load generator +
+            // payload-queue read) and every folded or merged psum word
+            // costs one router ALU add (Table-2-style INA overhead).
+            dyn_j += net.ina_folds as f64 * (re.gather_payload_j + re.gather_logic_j);
+            dyn_j += net.ina_adds as f64 * re.ina_add_j;
+        }
+        Collection::RepetitiveUnicast => {}
     }
     // NI partial-sum accumulation (WS register-file spill): one adder pass
     // + payload-register write per fold, independent of collection scheme.
@@ -123,6 +134,38 @@ mod tests {
         let one = power_report(&cfg, Streaming::OneWay, Collection::Gather, &stats(0), &bus, 10_000);
         let two = power_report(&cfg, Streaming::TwoWay, Collection::Gather, &stats(0), &bus, 10_000);
         assert!(one.bus_static_j < two.bus_static_j);
+    }
+
+    #[test]
+    fn ina_adds_are_priced_only_under_ina_collection() {
+        let cfg = SimConfig::table1_8x8(1);
+        let net = NetStats { ina_folds: 100, ina_adds: 150, ..stats(0) };
+        let ina =
+            power_report(&cfg, Streaming::TwoWay, Collection::Ina, &net, &BusStats::default(), 1_000);
+        let ru = power_report(
+            &cfg,
+            Streaming::TwoWay,
+            Collection::RepetitiveUnicast,
+            &net,
+            &BusStats::default(),
+            1_000,
+        );
+        assert!(ina.router_dynamic_j > ru.router_dynamic_j, "ALU adds must cost energy");
+        // Same counters under gather collection price boards, not adds.
+        let g_net = NetStats { gather_boards: 100, ..stats(0) };
+        let g = power_report(
+            &cfg,
+            Streaming::TwoWay,
+            Collection::Gather,
+            &g_net,
+            &BusStats::default(),
+            1_000,
+        );
+        assert!(g.router_dynamic_j > 0.0);
+        assert!(
+            ina.router_dynamic_j > g.router_dynamic_j,
+            "INA folds reuse the boarding hardware and add the ALU cost on top"
+        );
     }
 
     #[test]

@@ -26,6 +26,10 @@ pub struct RouterEnergy {
     pub gather_logic_j: f64,
     /// Gather support: enqueue/fill of one payload from the NI queue.
     pub gather_payload_j: f64,
+    /// In-network accumulation: one 32-bit ALU add folding a psum word
+    /// into a passing packet (the Table-2-style INA router overhead of
+    /// arXiv:2209.10056 — adder + operand mux on the datapath).
+    pub ina_add_j: f64,
     /// Static (leakage + clock) power per router, watts.
     pub static_w: f64,
 }
@@ -50,6 +54,11 @@ impl RouterEnergy {
             // payload queue fill (one 32-bit register file write).
             gather_logic_j: 0.12e-12,
             gather_payload_j: 0.22e-12,
+            // A 32-bit ripple/carry-select add at 45 nm is cheaper than an
+            // SRAM access; ~0.1 pJ sits between the arbiter and the
+            // payload-queue write, matching the "small ALU per router"
+            // overhead the INA follow-up reports.
+            ina_add_j: 0.10e-12,
             static_w: 9.8e-3,
         }
     }

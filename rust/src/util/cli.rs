@@ -12,8 +12,12 @@
 //!   (Weight-Stationary; see [`crate::dataflow::ws`]). Long spellings
 //!   `output-stationary` / `weight-stationary` are accepted by
 //!   [`crate::config::DataflowKind::parse`].
-//! * `--streaming <mesh|one-way|two-way>` and `--collection <ru|gather>` —
-//!   the architecture axes of the paper's evaluation.
+//! * `--streaming <mesh|one-way|two-way>` and
+//!   `--collection <ru|gather|ina>` — the architecture axes of the
+//!   evaluation: the paper's repetitive-unicast baseline and gather
+//!   packets, plus in-network accumulation (psums added at intermediate
+//!   routers, arXiv:2209.10056; parsed by
+//!   [`crate::config::Collection::parse`]).
 
 use std::collections::BTreeMap;
 
@@ -134,5 +138,20 @@ mod tests {
         let a = Args::parse(argv(&["run", "--dataflow", "ws"]), &["dataflow"], &[]).unwrap();
         let kind = DataflowKind::parse(a.get("dataflow").unwrap()).unwrap();
         assert_eq!(kind, DataflowKind::WeightStationary);
+    }
+
+    #[test]
+    fn collection_flag_round_trips_to_the_config_parser() {
+        use crate::config::Collection;
+        for (spelling, want) in [
+            ("ru", Collection::RepetitiveUnicast),
+            ("gather", Collection::Gather),
+            ("ina", Collection::Ina),
+        ] {
+            let a =
+                Args::parse(argv(&["run", "--collection", spelling]), &["collection"], &[])
+                    .unwrap();
+            assert_eq!(Collection::parse(a.get("collection").unwrap()).unwrap(), want);
+        }
     }
 }

@@ -52,6 +52,48 @@ fn ru_simulation_matches_eq3_when_uncongested() {
 }
 
 #[test]
+fn ina_simulation_matches_the_generalized_closed_form_when_uncongested() {
+    // INA's zero-load form: compute + M·(κ+link) + (L_ina − 1). Folds at
+    // transit NIs add zero latency (they ride the RC slot exactly like
+    // gather boarding), so the uncongested simulation must match within
+    // the same tolerance as Eqs. (3)/(4).
+    for n in [1usize, 4] {
+        let cfg = SimConfig::table1_8x8(n);
+        let layer = quiet_layer();
+        let sim = run_layer(&cfg, Streaming::TwoWay, Collection::Ina, &layer);
+        let model = analytic::latency_ina(&cfg, Streaming::TwoWay, &layer);
+        let err = rel_err(sim.total_cycles, model);
+        assert!(
+            err < 0.05,
+            "n={n}: INA sim {} vs closed form {model} ({:.1}% off)",
+            sim.total_cycles,
+            err * 100.0
+        );
+    }
+}
+
+#[test]
+fn ws_ina_simulation_matches_the_generalized_closed_form() {
+    // The WS mapping drives INA through the same generalized form (its
+    // packet carries n/spread pre-accumulated words).
+    for idx in [2usize, 3] {
+        let mut cfg = SimConfig::table1_8x8(4);
+        cfg.dataflow = DataflowKind::WeightStationary;
+        let layer = alexnet::conv_layers()[idx].clone();
+        let sim = run_layer(&cfg, Streaming::TwoWay, Collection::Ina, &layer);
+        let model = analytic::latency_ina(&cfg, Streaming::TwoWay, &layer);
+        let err = rel_err(sim.total_cycles, model);
+        assert!(
+            err < 0.05,
+            "{} WS/INA sim {} vs closed form {model} ({:.1}% off)",
+            layer.name,
+            sim.total_cycles,
+            err * 100.0
+        );
+    }
+}
+
+#[test]
 fn congestion_terms_are_nonnegative() {
     // Δ = sim − analytic must be ≥ (slightly below) 0: the closed forms
     // are zero-load lower bounds.

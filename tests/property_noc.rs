@@ -4,17 +4,37 @@
 //! Invariants:
 //! * **conservation** — every posted payload is delivered exactly once,
 //!   for arbitrary mesh sizes, PEs/router, δ, packet sizing and collection
-//!   scheme;
+//!   scheme — and, cycle by cycle, `posted == delivered + in flight`
+//!   (no payload is silently dropped by VC/switch allocation, gather
+//!   boarding or INA merging);
 //! * **no deadlock/livelock** — all scenarios drain within a generous
 //!   cycle bound (XY + credits + wormhole VC discipline);
-//! * **gather economy** — with ample δ, gather never injects more packets
-//!   than repetitive unicast;
-//! * **packet accounting** — injected = ejected after drain.
+//! * **gather/INA economy** — with ample δ, gather never injects more
+//!   packets than repetitive unicast, and INA never moves more flit-hops
+//!   than gather;
+//! * **packet accounting** — injected = ejected (+ INA merges) after
+//!   drain.
+//!
+//! Set `NOC_COLLECTION=ru|gather|ina` to pin every randomized case to one
+//! collection scheme (the CI matrix runs the suite once per mode).
 
 use noc_dnn::config::{Collection, DataflowKind, SimConfig};
 use noc_dnn::noc::network::Network;
 use noc_dnn::noc::Coord;
 use noc_dnn::util::rng::{check_cases, Rng};
+
+/// Random collection scheme, overridable by the `NOC_COLLECTION` env var
+/// so CI can sweep the whole property suite per mode.
+fn random_collection(rng: &mut Rng) -> Collection {
+    match std::env::var("NOC_COLLECTION") {
+        Ok(s) => Collection::parse(&s).expect("NOC_COLLECTION must be ru|gather|ina"),
+        Err(_) => *rng.choose(&[
+            Collection::Gather,
+            Collection::RepetitiveUnicast,
+            Collection::Ina,
+        ]),
+    }
+}
 
 /// Random-but-valid config.
 fn random_cfg(rng: &mut Rng) -> SimConfig {
@@ -35,8 +55,7 @@ fn random_cfg(rng: &mut Rng) -> SimConfig {
 fn prop_payload_conservation_across_configs() {
     check_cases(0xC0FFEE, 60, |rng, case| {
         let cfg = random_cfg(rng);
-        let collection =
-            if rng.chance(0.5) { Collection::Gather } else { Collection::RepetitiveUnicast };
+        let collection = random_collection(rng);
         let rounds = rng.range(1, 3);
         let mut net = Network::new(&cfg, collection);
         let mut posted = 0u64;
@@ -62,6 +81,61 @@ fn prop_payload_conservation_across_configs() {
             cfg.delta,
             cfg.gather_packet_flits,
             collection,
+        );
+    });
+}
+
+#[test]
+fn prop_flit_conservation_holds_every_cycle() {
+    // The strong form of conservation: at *every* cycle boundary of a
+    // randomized run — including one cut off mid-flight at an arbitrary
+    // max_cycle — payloads injected == payloads ejected + payloads merged
+    // into surviving packets (tracked on their heads) + payloads still
+    // pending/staged/buffered. A flit silently dropped by VC or switch
+    // allocation, boarding or INA merging breaks the equality at the
+    // cycle it happens, not just at drain time.
+    check_cases(0xF117C0DE, 40, |rng, case| {
+        let cfg = random_cfg(rng);
+        let collection = random_collection(rng);
+        let rounds = rng.range(1, 3);
+        let mut net = Network::new(&cfg, collection);
+        let mut posted = 0u64;
+        for r in 0..rounds {
+            for y in 0..cfg.mesh_rows {
+                for x in 0..cfg.mesh_cols {
+                    if rng.chance(0.7) {
+                        let p = rng.range(1, cfg.pes_per_router as u64) as u32;
+                        net.post_result(r * 40, Coord::new(x as u16, y as u16), p);
+                        posted += p as u64;
+                    }
+                }
+            }
+        }
+        // Sample the invariant while traffic is in flight...
+        let horizon = rng.range(10, 2_000);
+        net.run_until(
+            |n| {
+                assert_eq!(
+                    posted,
+                    n.payloads_delivered + n.payloads_in_flight(),
+                    "case {case}: payload leak at cycle {} ({:?})",
+                    n.cycle,
+                    collection,
+                );
+                false
+            },
+            horizon,
+        );
+        // ...and after the drain: everything delivered, nothing resident.
+        let ok = net.run_until_idle(2_000_000);
+        assert!(ok, "case {case}: network failed to drain ({collection:?})");
+        assert_eq!(net.payloads_delivered, posted, "case {case}: delivery shortfall");
+        assert_eq!(net.payloads_in_flight(), 0, "case {case}: residue after drain");
+        assert_eq!(net.total_buffered_flits(), 0, "case {case}: flits stuck");
+        assert_eq!(
+            net.stats.packets_injected,
+            net.stats.packets_ejected + net.stats.ina_merges,
+            "case {case}: packet leak (absorbed packets must be the only shortfall)"
         );
     });
 }
@@ -128,6 +202,52 @@ fn prop_gather_injects_no_more_packets_than_ru() {
 }
 
 #[test]
+fn prop_ina_moves_no_more_traffic_than_gather_or_ru() {
+    // INA's whole point: same payloads delivered, strictly less
+    // hop-weighted traffic than gather (small constant packets) which in
+    // turn undercuts RU — under ample δ on Table-1 configurations.
+    check_cases(0x16A, 30, |rng, case| {
+        let mesh = *rng.choose(&[8usize, 16]);
+        let n = *rng.choose(&[1usize, 2, 4, 8]);
+        let cfg = SimConfig::table1(mesh, n);
+        let run = |coll: Collection| {
+            let mut net = Network::new(&cfg, coll);
+            let total = (cfg.mesh_cols * cfg.mesh_rows * n) as u64;
+            for y in 0..cfg.mesh_rows {
+                for x in 0..cfg.mesh_cols {
+                    net.post_result(0, Coord::new(x as u16, y as u16), n as u32);
+                }
+            }
+            // Drain fully so hop counters include the trailing flits.
+            assert!(net.run_until_idle(1_000_000), "case {case}: {coll:?} stalled");
+            assert_eq!(net.payloads_delivered, total, "case {case}: {coll:?} shortfall");
+            net.stats.clone()
+        };
+        let ina = run(Collection::Ina);
+        let g = run(Collection::Gather);
+        let ru = run(Collection::RepetitiveUnicast);
+        assert!(
+            ina.flit_hops <= g.flit_hops,
+            "case {case} (m={mesh} n={n}): INA hops {} !<= gather {}",
+            ina.flit_hops,
+            g.flit_hops
+        );
+        assert!(
+            ina.flit_hops < ru.flit_hops,
+            "case {case} (m={mesh} n={n}): INA hops {} !< RU {}",
+            ina.flit_hops,
+            ru.flit_hops
+        );
+        assert!(
+            ina.packets_injected <= ru.packets_injected,
+            "case {case}: INA injected {} vs RU {}",
+            ina.packets_injected,
+            ru.packets_injected
+        );
+    });
+}
+
+#[test]
 fn prop_gather_packets_bounded_by_row_population() {
     // However adversarial δ is, a row never emits more gather packets per
     // round than it has nodes.
@@ -164,6 +284,11 @@ fn prop_config_json_roundtrip() {
             DataflowKind::OutputStationary
         };
         cfg.ws_rf_words = rng.range(64, 4096) as u32;
+        cfg.collection = *rng.choose(&[
+            Collection::Gather,
+            Collection::RepetitiveUnicast,
+            Collection::Ina,
+        ]);
         let s = cfg.to_json();
         let back = SimConfig::from_json(&s).unwrap();
         assert_eq!(cfg, back, "case {case}: JSON round-trip changed the config");
