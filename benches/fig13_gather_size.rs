@@ -16,7 +16,7 @@ fn main() {
             // Paper §5.2: one large packet is at least as good for
             // latency as two smaller packets.
             assert!(
-                r.one_large.0 >= r.two_small.0 * 0.98,
+                r.get("one_pkt_lat_impr").unwrap() >= r.get("two_pkt_lat_impr").unwrap() * 0.98,
                 "one-packet latency should not lose to two-packet (n={})",
                 r.pes_per_router
             );

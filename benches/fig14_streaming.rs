@@ -10,8 +10,10 @@ fn main() {
     println!("Fig. 14 (8x8 mesh, n=1):");
     print!("{}", report::fig14_text(&rows));
 
-    let avg2 = rows.iter().map(|r| r.two_way).sum::<f64>() / rows.len() as f64;
-    let avg1 = rows.iter().map(|r| r.one_way).sum::<f64>() / rows.len() as f64;
+    let avg2 = rows.iter().filter_map(|r| r.get("two_way_improvement")).sum::<f64>()
+        / rows.len() as f64;
+    let avg1 = rows.iter().filter_map(|r| r.get("one_way_improvement")).sum::<f64>()
+        / rows.len() as f64;
     // Paper: two-way 1.71x, one-way 1.48x on average; the qualitative
     // ordering (both > 1, two-way > one-way) must hold.
     assert!(avg2 > 1.0, "two-way must beat gather-only (avg {avg2})");

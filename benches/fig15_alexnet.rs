@@ -3,12 +3,12 @@
 //! and 16×16 meshes for 1/2/4/8 PEs/router (two-way streaming fabric).
 
 use noc_dnn::coordinator::{report, sweep};
-use noc_dnn::models::alexnet;
+use noc_dnn::models::Network;
 use noc_dnn::util::bench::time_it;
 
 fn main() {
-    let layers = alexnet::conv_layers();
-    let points = sweep::fig_model(&layers, &[8, 16], &[1, 2, 4, 8]);
+    let model = Network::alexnet();
+    let points = sweep::fig_model(&model, &[8, 16], &[1, 2, 4, 8]);
     println!("Fig. 15 — AlexNet, gather vs RU:");
     print!("{}", report::fig_model_text(&points));
 
@@ -18,7 +18,7 @@ fn main() {
             let v: Vec<f64> = points
                 .iter()
                 .filter(|p| p.mesh == mesh && p.pes_per_router == n)
-                .map(|p| p.latency_improvement)
+                .filter_map(|p| p.get("latency_improvement"))
                 .collect();
             v.iter().sum::<f64>() / v.len() as f64
         };
@@ -31,11 +31,11 @@ fn main() {
     let avg16: f64 = points
         .iter()
         .filter(|p| p.mesh == 16 && p.pes_per_router == 8)
-        .map(|p| p.latency_improvement)
+        .filter_map(|p| p.get("latency_improvement"))
         .sum::<f64>()
-        / layers.len() as f64;
+        / model.len() as f64;
     println!("\npaper headline: up to 1.8x latency; ours at 16x16/n=8: {avg16:.2}x");
 
-    let t = time_it(1, || sweep::fig_model(&layers, &[8], &[4]));
+    let t = time_it(1, || sweep::fig_model(&model, &[8], &[4]));
     println!("bench: fig15 slice (5 layers, 8x8, n=4) {t}");
 }

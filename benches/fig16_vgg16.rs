@@ -3,12 +3,12 @@
 //! and 16×16 meshes for 1/2/4/8 PEs/router (two-way streaming fabric).
 
 use noc_dnn::coordinator::{report, sweep};
-use noc_dnn::models::vgg16;
+use noc_dnn::models::Network;
 use noc_dnn::util::bench::time_it;
 
 fn main() {
-    let layers = vgg16::conv_layers();
-    let points = sweep::fig_model(&layers, &[8, 16], &[1, 2, 4, 8]);
+    let model = Network::vgg16();
+    let points = sweep::fig_model(&model, &[8, 16], &[1, 2, 4, 8]);
     println!("Fig. 16 — VGG-16, gather vs RU:");
     print!("{}", report::fig_model_text(&points));
 
@@ -16,7 +16,7 @@ fn main() {
         let v: Vec<f64> = points
             .iter()
             .filter(|p| p.mesh == mesh && p.pes_per_router == n)
-            .map(|p| p.latency_improvement)
+            .filter_map(|p| p.get("latency_improvement"))
             .collect();
         v.iter().sum::<f64>() / v.len() as f64
     };
@@ -31,6 +31,7 @@ fn main() {
         avg(16, 8)
     );
 
-    let t = time_it(1, || sweep::fig_model(&layers[..2], &[8], &[4]));
+    let head = Network::new("vgg16-head", model.layers[..2].to_vec());
+    let t = time_it(1, || sweep::fig_model(&head, &[8], &[4]));
     println!("bench: fig16 slice (2 layers, 8x8, n=4) {t}");
 }

@@ -8,78 +8,93 @@
 //!   from rust): the AlexNet-lite conv stack is executed layer by layer
 //!   with real tensors, each layer checked against the in-tree reference
 //!   convolution, activations chained through a stand-in for pooling.
-//! * **Timing/power** (L3 cycle-accurate NoC): every *full-size* AlexNet
-//!   conv layer is simulated on the 8×8 and 16×16 meshes under repetitive
-//!   unicast and gather collection (two-way streaming), reproducing the
-//!   paper's headline comparison (Fig. 15) and reporting the layer-wise
-//!   and total improvements.
-//! * **Bookkeeping**: the gather payload accounting is cross-checked —
-//!   every output activation the numeric path produced corresponds to
-//!   exactly one gather payload slot in the OS mapping.
+//!   Requires the AOT artifacts (`make artifacts`); skipped with a loud
+//!   note when they are absent, so the timing path still runs in CI.
+//! * **Timing/power** (L3 cycle-accurate NoC): the full-size AlexNet
+//!   model runs through the network executor on the 8×8 and 16×16
+//!   meshes — uniform repetitive-unicast vs uniform gather plans (two-way
+//!   streaming), reproducing the paper's headline comparison (Fig. 15) —
+//!   plus the per-layer `best` plan, showing what per-layer policy
+//!   selection buys over the best uniform plan.
+//! * **Bookkeeping**: when the numeric path ran, the gather payload
+//!   accounting is cross-checked — every output activation the numeric
+//!   path produced corresponds to exactly one gather payload slot in the
+//!   OS mapping.
 //!
-//! Run: `make artifacts && cargo run --release --example alexnet_e2e`
+//! Run: `[make artifacts &&] cargo run --release --example alexnet_e2e`
 
 use noc_dnn::config::SimConfig;
-use noc_dnn::coordinator::experiment::{latency_improvement, power_improvement, Experiment};
+use noc_dnn::coordinator::executor::{best_plan_search, NetworkExecutor, PlanSearchOptions};
+use noc_dnn::coordinator::experiment::{latency_improvement, power_improvement};
 use noc_dnn::coordinator::report::table;
 use noc_dnn::dataflow::os::OsMapping;
-use noc_dnn::models::{alexnet, lite};
+use noc_dnn::models::{lite, Network};
+use noc_dnn::plan::{LayerPolicy, NetworkPlan};
 use noc_dnn::runtime::layer_exec::LayerExecutor;
 use noc_dnn::runtime::{max_abs_diff, reference, Tensor};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    anyhow::ensure!(
-        artifacts.join("manifest.json").exists(),
-        "artifacts not built — run `make artifacts` first"
-    );
+    let have_artifacts = artifacts.join("manifest.json").exists();
 
     // ------------------------------------------------------------------
     // 1) Numeric inference through the PJRT artifacts (AlexNet-lite).
     // ------------------------------------------------------------------
-    println!("== numeric path: AlexNet-lite through PJRT artifacts ==");
-    let mut exec = LayerExecutor::new(&artifacts)?;
     let lite_layers = lite::alexnet_lite();
-    let mut rows = Vec::new();
-    let mut activations = Tensor::random(vec![1, 3, 32, 32], 7);
     let mut total_outputs = 0u64;
-    for (i, layer) in lite_layers.iter().enumerate() {
-        // Chain: adapt the previous activations to this layer's input
-        // shape (stand-in for the pooling/rescale between conv blocks).
-        let input = adapt(&activations, layer.c, layer.h_in, 1000 + i as u64);
-        let weights =
-            Tensor::random(vec![layer.q, layer.c, layer.r, layer.r], 2000 + i as u64);
-        let t0 = std::time::Instant::now();
-        let out = exec.forward(layer, &input, &weights)?;
-        let dt = t0.elapsed();
-        let oracle = reference::conv2d(&input, &weights, layer.stride, layer.pad);
-        let scale = oracle.data.iter().fold(1e-6f32, |m, v| m.max(v.abs()));
-        let diff = max_abs_diff(&out.data, &oracle.data) / scale;
-        anyhow::ensure!(diff < 1e-3, "layer {} numerics diverged: rel {diff}", layer.name);
-        total_outputs += out.len() as u64;
-        rows.push(vec![
-            layer.name.to_string(),
-            format!("{:?}", input.shape),
-            format!("{:?}", out.shape),
-            format!("{diff:.1e}"),
-            format!("{:.1}ms", dt.as_secs_f64() * 1e3),
-        ]);
-        // ReLU + normalize (keeps chained magnitudes bounded, as the
-        // pooling/normalization layers between conv blocks would).
-        let peak = out.data.iter().fold(1e-6f32, |m, v| m.max(v.abs()));
-        activations = Tensor::new(
-            out.shape.clone(),
-            out.data.iter().map(|v| v.max(0.0) / peak).collect(),
+    if have_artifacts {
+        println!("== numeric path: AlexNet-lite through PJRT artifacts ==");
+        let mut exec = LayerExecutor::new(&artifacts)?;
+        let mut rows = Vec::new();
+        let mut activations = Tensor::random(vec![1, 3, 32, 32], 7);
+        for (i, layer) in lite_layers.iter().enumerate() {
+            // Chain: adapt the previous activations to this layer's input
+            // shape (stand-in for the pooling/rescale between conv blocks).
+            let input = adapt(&activations, layer.c, layer.h_in, 1000 + i as u64);
+            let weights =
+                Tensor::random(vec![layer.q, layer.c, layer.r, layer.r], 2000 + i as u64);
+            let t0 = std::time::Instant::now();
+            let out = exec.forward(layer, &input, &weights)?;
+            let dt = t0.elapsed();
+            let oracle = reference::conv2d(&input, &weights, layer.stride, layer.pad);
+            let scale = oracle.data.iter().fold(1e-6f32, |m, v| m.max(v.abs()));
+            let diff = max_abs_diff(&out.data, &oracle.data) / scale;
+            anyhow::ensure!(diff < 1e-3, "layer {} numerics diverged: rel {diff}", layer.name);
+            total_outputs += out.len() as u64;
+            rows.push(vec![
+                layer.name.to_string(),
+                format!("{:?}", input.shape),
+                format!("{:?}", out.shape),
+                format!("{diff:.1e}"),
+                format!("{:.1}ms", dt.as_secs_f64() * 1e3),
+            ]);
+            // ReLU + normalize (keeps chained magnitudes bounded, as the
+            // pooling/normalization layers between conv blocks would).
+            let peak = out.data.iter().fold(1e-6f32, |m, v| m.max(v.abs()));
+            activations = Tensor::new(
+                out.shape.clone(),
+                out.data.iter().map(|v| v.max(0.0) / peak).collect(),
+            );
+        }
+        print!("{}", table(&["layer", "input", "output", "max|d| vs ref", "exec"], &rows));
+        println!("all {} lite layers match the reference conv\n", lite_layers.len());
+    } else {
+        println!(
+            "== numeric path SKIPPED: artifacts not built (run `make artifacts`) ==\n"
         );
     }
-    print!("{}", table(&["layer", "input", "output", "max|d| vs ref", "exec"], &rows));
-    println!("all {} lite layers match the reference conv\n", lite_layers.len());
 
     // ------------------------------------------------------------------
-    // 2) Cycle-accurate NoC simulation of full-size AlexNet (Fig. 15).
+    // 2) Cycle-accurate NoC execution of full-size AlexNet (Fig. 15),
+    //    whole model through the network executor.
     // ------------------------------------------------------------------
     println!("== timing path: full-size AlexNet on the mesh NoC (gather vs RU) ==");
-    let full_layers = alexnet::conv_layers();
+    let model = Network::alexnet();
+    let uniform = |collection| {
+        let mut p = LayerPolicy::proposed();
+        p.collection = collection;
+        NetworkPlan::uniform(p, model.len())
+    };
     for mesh in [8usize, 16] {
         let mut rows = Vec::new();
         let mut tot_g = 0u64;
@@ -89,23 +104,25 @@ fn main() -> anyhow::Result<()> {
         for n in [1usize, 2, 4, 8] {
             let mut cfg = SimConfig::table1(mesh, n);
             cfg.trace_driven = true; // paper's trace methodology (§5.1)
-            for layer in &full_layers {
-                let g = Experiment::proposed(cfg.clone()).run_layer(layer);
-                let ru = Experiment::baseline_ru(cfg.clone()).run_layer(layer);
+            let ex = NetworkExecutor::new(cfg).without_reload();
+            let g = ex.run(&model, &uniform(noc_dnn::config::Collection::Gather))?;
+            let ru =
+                ex.run(&model, &uniform(noc_dnn::config::Collection::RepetitiveUnicast))?;
+            for (gl, rl) in g.layers.iter().zip(&ru.layers) {
                 if n == 4 {
-                    tot_g += g.run.total_cycles;
-                    tot_ru += ru.run.total_cycles;
-                    tot_ge += g.power.total_j;
-                    tot_re += ru.power.total_j;
+                    tot_g += gl.total_cycles;
+                    tot_ru += rl.total_cycles;
+                    tot_ge += gl.report.power.total_j;
+                    tot_re += rl.report.power.total_j;
                 }
                 rows.push(vec![
-                    layer.name.to_string(),
+                    gl.report.layer.clone(),
                     n.to_string(),
-                    g.run.rounds_total.to_string(),
-                    ru.run.total_cycles.to_string(),
-                    g.run.total_cycles.to_string(),
-                    format!("{:.2}", latency_improvement(&ru, &g)),
-                    format!("{:.2}", power_improvement(&ru, &g)),
+                    gl.report.run.rounds_total.to_string(),
+                    rl.total_cycles.to_string(),
+                    gl.total_cycles.to_string(),
+                    format!("{:.2}", latency_improvement(&rl.report, &gl.report)),
+                    format!("{:.2}", power_improvement(&rl.report, &gl.report)),
                 ]);
             }
         }
@@ -125,20 +142,46 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ------------------------------------------------------------------
-    // 3) Gather payload bookkeeping ties the two paths together.
+    // 3) Per-layer policy selection: the `best` plan vs the proposed
+    //    uniform plan, full round timing with inter-layer accounting.
     // ------------------------------------------------------------------
-    let cfg = SimConfig::table1_8x8(1);
-    let mut mapped = 0u64;
-    for layer in &lite_layers {
-        mapped += OsMapping::new(&cfg, layer).useful_outputs(layer);
-    }
+    println!("== per-layer policy selection: best plan vs uniform (8x8, n=4) ==");
+    let cfg = SimConfig::table1_8x8(4);
+    let ex = NetworkExecutor::new(cfg.clone());
+    let search = best_plan_search(&cfg, &model, &PlanSearchOptions::default());
+    let best_run = search.run_report(&cfg, &model);
+    let unif_run = ex.run(&model, &NetworkPlan::uniform(LayerPolicy::proposed(), model.len()))?;
+    print!("{}", noc_dnn::coordinator::report::network_run_text(&best_run));
     anyhow::ensure!(
-        mapped == total_outputs,
-        "gather payload accounting mismatch: OS mapping says {mapped}, numeric path produced {total_outputs}"
+        best_run.total_cycles <= unif_run.total_cycles,
+        "best plan ({}) must not lose to the uniform proposed plan ({})",
+        best_run.total_cycles,
+        unif_run.total_cycles
     );
     println!(
-        "bookkeeping: {total_outputs} output activations == {mapped} gather payload slots (1:1)"
+        "best plan: {} cycles vs uniform two-way/gather/os: {} cycles ({:.3}x)\n",
+        best_run.total_cycles,
+        unif_run.total_cycles,
+        unif_run.total_cycles as f64 / best_run.total_cycles as f64
     );
+
+    // ------------------------------------------------------------------
+    // 4) Gather payload bookkeeping ties the two paths together.
+    // ------------------------------------------------------------------
+    if have_artifacts {
+        let cfg = SimConfig::table1_8x8(1);
+        let mut mapped = 0u64;
+        for layer in &lite_layers {
+            mapped += OsMapping::new(&cfg, layer).useful_outputs(layer);
+        }
+        anyhow::ensure!(
+            mapped == total_outputs,
+            "gather payload accounting mismatch: OS mapping says {mapped}, numeric path produced {total_outputs}"
+        );
+        println!(
+            "bookkeeping: {total_outputs} output activations == {mapped} gather payload slots (1:1)"
+        );
+    }
     println!("alexnet_e2e OK");
     Ok(())
 }

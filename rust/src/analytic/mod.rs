@@ -29,7 +29,8 @@
 
 use crate::config::{Collection, SimConfig, Streaming};
 use crate::dataflow::{build, Dataflow};
-use crate::models::ConvLayer;
+use crate::models::{ConvLayer, Network};
+use crate::plan::{reload_cycles, LayerPolicy, NetworkPlan};
 
 /// Zero-load compute term for any dataflow:
 /// `(stream + T_MAC) · rounds + setup` — for OS exactly the
@@ -126,6 +127,46 @@ pub fn latency(
         Collection::Gather => latency_gather(cfg, streaming, layer),
         Collection::Ina => latency_ina(cfg, streaming, layer),
     }
+}
+
+/// Zero-load latency of one layer under an explicit [`LayerPolicy`]
+/// (the policy's dataflow/collection selectors applied to `cfg`). Bus
+/// streaming policies only — mesh operand delivery has no closed form.
+pub fn latency_policy(cfg: &SimConfig, policy: &LayerPolicy, layer: &ConvLayer) -> u64 {
+    let lcfg = policy.apply(cfg);
+    latency(&lcfg, policy.streaming, policy.collection, layer)
+}
+
+/// Model-scope generalization of Eqs. (3)/(4): the zero-load runtime of a
+/// whole [`Network`] under a [`NetworkPlan`] is the sum over layers of
+/// the per-layer closed form under that layer's policy **plus** the
+/// inter-layer boundary charge ([`reload_cycles`]: layer ℓ's output
+/// volume is layer ℓ+1's input traffic, refilled through the consuming
+/// layer's streaming sources). This is exactly the accounting the
+/// network executor applies to its simulated per-layer totals, so
+/// analytic-vs-sim holds at model scope in the uncongested regime
+/// (`tests/network_exec.rs`).
+///
+/// Panics (through [`compute_cycles_for`]) if any layer's policy uses
+/// mesh streaming — that delivery time is simulated, not closed-form.
+pub fn network_latency(cfg: &SimConfig, model: &Network, plan: &NetworkPlan) -> u64 {
+    assert_eq!(
+        plan.policies.len(),
+        model.len(),
+        "plan '{}' does not match model '{}'",
+        plan.name,
+        model.name
+    );
+    model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, layer)| {
+            let policy = plan.policy(i);
+            latency_policy(cfg, &policy, layer)
+                + reload_cycles(&policy.apply(cfg), policy.streaming, model.input_words(i))
+        })
+        .sum()
 }
 
 /// Closed-form expected hop-weighted traffic (flit-hops, as counted by
@@ -270,6 +311,38 @@ mod tests {
         assert_eq!(row_collection_flit_hops(&cfg, Collection::RepetitiveUnicast, 1), 72);
         assert_eq!(row_collection_flit_hops(&cfg, Collection::Gather, 1), 24);
         assert_eq!(row_collection_flit_hops(&cfg, Collection::Ina, 1), 16);
+    }
+
+    #[test]
+    fn network_latency_sums_per_layer_forms_plus_reload() {
+        use crate::plan::{reload_cycles, LayerPolicy, NetworkPlan};
+        let cfg = SimConfig::table1_8x8(4);
+        let model = Network::alexnet();
+        let plan = NetworkPlan::uniform(LayerPolicy::proposed(), model.len());
+        let total = network_latency(&cfg, &model, &plan);
+        let by_hand: u64 = model
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                latency_gather(&cfg, Streaming::TwoWay, l)
+                    + reload_cycles(&cfg, Streaming::TwoWay, model.input_words(i))
+            })
+            .sum();
+        assert_eq!(total, by_hand);
+        assert!(total > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mesh streaming latency is simulated")]
+    fn network_latency_rejects_mesh_policies() {
+        use crate::plan::{LayerPolicy, NetworkPlan};
+        let cfg = SimConfig::table1_8x8(1);
+        let model = Network::alexnet();
+        let mut policy = LayerPolicy::proposed();
+        policy.streaming = Streaming::Mesh;
+        let plan = NetworkPlan::uniform(policy, model.len());
+        network_latency(&cfg, &model, &plan);
     }
 
     #[test]

@@ -163,6 +163,13 @@ pub struct SimConfig {
     /// rounds are extrapolated from the measured steady state (see
     /// DESIGN.md "Cycle simulation with round extrapolation").
     pub sim_rounds_cap: usize,
+    /// Worker threads for multi-layer / multi-point execution (the
+    /// network executor and plan search fan layers out over this many OS
+    /// threads; CLI `--threads`). `0` means auto (one per core, capped).
+    /// Simulations are pure functions of their inputs, so results are
+    /// bit-identical for every thread count; `threads = 1` additionally
+    /// serializes execution for debugging.
+    pub threads: usize,
     /// Clock frequency in Hz (power reporting only).
     pub clock_hz: f64,
 }
@@ -205,6 +212,7 @@ impl SimConfig {
             ru_pack_payloads: false,
             trace_driven: false,
             sim_rounds_cap: 8,
+            threads: 0,
             clock_hz: 1.0e9,
         }
     }
@@ -305,6 +313,7 @@ impl SimConfig {
             .set("ru_pack_payloads", Json::Bool(self.ru_pack_payloads))
             .set("trace_driven", Json::Bool(self.trace_driven))
             .set("sim_rounds_cap", Json::Num(self.sim_rounds_cap as f64))
+            .set("threads", Json::Num(self.threads as f64))
             .set("clock_hz", Json::Num(self.clock_hz));
         j.to_pretty()
     }
@@ -355,6 +364,7 @@ impl SimConfig {
                 .and_then(Json::as_bool)
                 .unwrap_or(d.trace_driven),
             sim_rounds_cap: us("sim_rounds_cap", d.sim_rounds_cap),
+            threads: us("threads", d.threads),
             clock_hz: j.get("clock_hz").and_then(Json::as_f64).unwrap_or(d.clock_hz),
         };
         cfg.validate()?;
@@ -389,6 +399,26 @@ impl Streaming {
             Streaming::Mesh => "mesh (gather-only)",
             Streaming::OneWay => "one-way bus",
             Streaming::TwoWay => "two-way bus",
+        }
+    }
+
+    /// Short machine-readable spelling (CLI flags, plan JSON).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Streaming::Mesh => "mesh",
+            Streaming::OneWay => "one-way",
+            Streaming::TwoWay => "two-way",
+        }
+    }
+
+    /// Parse a CLI/JSON spelling (`mesh` / `one-way` / `two-way`; the
+    /// `key()` spellings round-trip).
+    pub fn parse(s: &str) -> crate::Result<Streaming> {
+        match s {
+            "mesh" | "gather-only" => Ok(Streaming::Mesh),
+            "one-way" | "oneway" | "1way" => Ok(Streaming::OneWay),
+            "two-way" | "twoway" | "2way" => Ok(Streaming::TwoWay),
+            other => anyhow::bail!("unknown streaming '{other}' (mesh | one-way | two-way)"),
         }
     }
 }
@@ -499,6 +529,29 @@ mod tests {
         // Configs written before the collection field default to gather.
         let legacy = SimConfig::from_json("{}").unwrap();
         assert_eq!(legacy.collection, Collection::Gather);
+    }
+
+    #[test]
+    fn streaming_key_roundtrips_and_parses() {
+        for s in [Streaming::Mesh, Streaming::OneWay, Streaming::TwoWay] {
+            assert_eq!(Streaming::parse(s.key()).unwrap(), s);
+        }
+        assert_eq!(Streaming::parse("two-way").unwrap(), Streaming::TwoWay);
+        assert!(Streaming::parse("bus").is_err());
+    }
+
+    #[test]
+    fn threads_and_rounds_cap_roundtrip_through_json() {
+        let mut c = SimConfig::table1_8x8(4);
+        c.threads = 6;
+        c.sim_rounds_cap = 3;
+        let d = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(d.threads, 6);
+        assert_eq!(d.sim_rounds_cap, 3);
+        // Configs written before the threads field default to auto (0).
+        let legacy = SimConfig::from_json("{}").unwrap();
+        assert_eq!(legacy.threads, 0);
     }
 
     #[test]

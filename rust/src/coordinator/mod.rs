@@ -1,11 +1,14 @@
-//! Experiment orchestration: the [`experiment`] unit, the per-figure
-//! [`sweep`] generators, text/JSON [`report`] formatting and the
-//! leader/worker [`server`] that fans independent simulations out over
-//! threads.
+//! Experiment orchestration: the [`experiment`] unit, the whole-network
+//! [`executor`] (plan-driven model runs with per-layer policies), the
+//! per-figure [`sweep`] generators, text/JSON [`report`] formatting and
+//! the leader/worker [`server`] that fans independent simulations out
+//! over threads.
 
+pub mod executor;
 pub mod experiment;
 pub mod report;
 pub mod server;
 pub mod sweep;
 
+pub use executor::{best_plan, NetworkExecutor, NetworkRunReport};
 pub use experiment::{latency_improvement, power_improvement, Experiment, LayerReport, ModelReport};

@@ -3,7 +3,117 @@
 
 use crate::util::json::Json;
 
-use super::sweep::{DataflowCompareRow, Fig12Series, Fig13Row, Fig14Row, ModelFigPoint};
+use super::executor::NetworkRunReport;
+use super::sweep::{DataflowCompareRow, Fig12Series};
+
+/// One per-layer result row — the single record shared by every per-layer
+/// producer: the figure sweeps (`fig13` / `fig14` / `fig_model`, which
+/// used to carry three near-identical structs) and the network executor's
+/// per-layer rows. A row names its workload point (model, layer, mesh,
+/// PEs/router) plus free-form string `tags` (e.g. the executor's policy
+/// triple) and named scalar `metrics` in presentation order; the text and
+/// JSON renderers below consume the keys directly, so producers stay
+/// declarative.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    pub model: String,
+    pub layer: String,
+    pub mesh: usize,
+    pub pes_per_router: usize,
+    /// Free-form labels, e.g. `("policy", "two-way/gather/os")`.
+    pub tags: Vec<(&'static str, String)>,
+    /// Named scalar metrics, e.g. `("latency_improvement", 1.42)`.
+    pub metrics: Vec<(&'static str, f64)>,
+}
+
+impl LayerResult {
+    pub fn new(
+        model: impl Into<String>,
+        layer: impl Into<String>,
+        mesh: usize,
+        pes_per_router: usize,
+    ) -> LayerResult {
+        LayerResult {
+            model: model.into(),
+            layer: layer.into(),
+            mesh,
+            pes_per_router,
+            tags: Vec::new(),
+            metrics: Vec::new(),
+        }
+    }
+
+    pub fn tag(mut self, key: &'static str, value: impl Into<String>) -> LayerResult {
+        self.tags.push((key, value.into()));
+        self
+    }
+
+    pub fn metric(mut self, key: &'static str, value: f64) -> LayerResult {
+        self.metrics.push((key, value));
+        self
+    }
+
+    /// Look a metric up by key.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+}
+
+/// Format a metric: counts print as integers, ratios with 2 decimals.
+fn metric_cell(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        f2(v)
+    }
+}
+
+/// Render per-layer result rows as an aligned table. Column layout comes
+/// from the first row's tag/metric keys (all rows of one report share
+/// them).
+pub fn layer_results_text(rows: &[LayerResult]) -> String {
+    let Some(first) = rows.first() else { return String::new() };
+    let mut headers: Vec<&str> = vec!["model", "layer", "mesh", "PEs/router"];
+    headers.extend(first.tags.iter().map(|(k, _)| *k));
+    headers.extend(first.metrics.iter().map(|(k, _)| *k));
+    let data: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            let mut cells = vec![
+                r.model.clone(),
+                r.layer.clone(),
+                format!("{0}x{0}", r.mesh),
+                r.pes_per_router.to_string(),
+            ];
+            cells.extend(r.tags.iter().map(|(_, v)| v.clone()));
+            cells.extend(r.metrics.iter().map(|(_, v)| metric_cell(*v)));
+            cells
+        })
+        .collect();
+    table(&headers, &data)
+}
+
+/// JSON array of per-layer result rows.
+pub fn layer_results_json(rows: &[LayerResult]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("model", Json::Str(r.model.clone()))
+                    .set("layer", Json::Str(r.layer.clone()))
+                    .set("mesh", Json::Num(r.mesh as f64))
+                    .set("pes_per_router", Json::Num(r.pes_per_router as f64));
+                for (k, v) in &r.tags {
+                    o.set(k, Json::Str(v.clone()));
+                }
+                for (k, v) in &r.metrics {
+                    o.set(k, Json::Num(*v));
+                }
+                o
+            })
+            .collect(),
+    )
+}
 
 /// Render an aligned text table.
 pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
@@ -97,72 +207,62 @@ pub fn fig12_json(series: &[Fig12Series]) -> Json {
 }
 
 /// Fig. 13 text report.
-pub fn fig13_text(rows: &[Fig13Row]) -> String {
-    let data: Vec<Vec<String>> = rows
-        .iter()
-        .map(|r| {
-            vec![
-                format!("{0}x{0}", r.mesh),
-                r.pes_per_router.to_string(),
-                f2(r.one_large.0),
-                f2(r.one_large.1),
-                f2(r.two_small.0),
-                f2(r.two_small.1),
-            ]
-        })
-        .collect();
-    table(
-        &["mesh", "PEs/router", "1pkt lat.impr", "1pkt pow.impr", "2pkt lat.impr", "2pkt pow.impr"],
-        &data,
-    )
+pub fn fig13_text(rows: &[LayerResult]) -> String {
+    layer_results_text(rows)
 }
 
-/// Fig. 14 text report.
-pub fn fig14_text(rows: &[Fig14Row]) -> String {
-    let mut data: Vec<Vec<String>> = rows
-        .iter()
-        .map(|r| {
-            vec![r.model.to_string(), r.layer.clone(), f2(r.two_way), f2(r.one_way)]
-        })
-        .collect();
-    let avg2 = rows.iter().map(|r| r.two_way).sum::<f64>() / rows.len() as f64;
-    let avg1 = rows.iter().map(|r| r.one_way).sum::<f64>() / rows.len() as f64;
-    data.push(vec!["average".into(), "-".into(), f2(avg2), f2(avg1)]);
-    table(&["model", "layer", "2-way vs gather-only", "1-way vs gather-only"], &data)
+/// Fig. 14 text report: per-layer rows plus the improvement averages the
+/// paper quotes.
+pub fn fig14_text(rows: &[LayerResult]) -> String {
+    let mut data = rows.to_vec();
+    if !rows.is_empty() {
+        let avg = |key: &str| {
+            rows.iter().filter_map(|r| r.get(key)).sum::<f64>() / rows.len() as f64
+        };
+        let mut mean = LayerResult::new("average", "-", rows[0].mesh, rows[0].pes_per_router);
+        for &(k, _) in &rows[0].metrics {
+            mean = mean.metric(k, avg(k));
+        }
+        data.push(mean);
+    }
+    layer_results_text(&data)
 }
 
 /// Figs. 15/16 text report.
-pub fn fig_model_text(points: &[ModelFigPoint]) -> String {
-    let data: Vec<Vec<String>> = points
-        .iter()
-        .map(|p| {
-            vec![
-                p.layer.clone(),
-                format!("{0}x{0}", p.mesh),
-                p.pes_per_router.to_string(),
-                f2(p.latency_improvement),
-                f2(p.power_improvement),
-            ]
-        })
-        .collect();
-    table(&["layer", "mesh", "PEs/router", "latency impr (RU/G)", "power impr (RU/G)"], &data)
+pub fn fig_model_text(points: &[LayerResult]) -> String {
+    layer_results_text(points)
 }
 
-pub fn fig_model_json(points: &[ModelFigPoint]) -> Json {
-    Json::Arr(
-        points
-            .iter()
-            .map(|p| {
-                let mut o = Json::obj();
-                o.set("layer", Json::Str(p.layer.clone()))
-                    .set("mesh", Json::Num(p.mesh as f64))
-                    .set("pes_per_router", Json::Num(p.pes_per_router as f64))
-                    .set("latency_improvement", Json::Num(p.latency_improvement))
-                    .set("power_improvement", Json::Num(p.power_improvement));
-                o
-            })
-            .collect(),
-    )
+pub fn fig_model_json(points: &[LayerResult]) -> Json {
+    layer_results_json(points)
+}
+
+/// Whole-network execution report (`noc-dnn model`): one [`LayerResult`]
+/// row per layer plus the model totals.
+pub fn network_run_text(r: &NetworkRunReport) -> String {
+    let mut out = layer_results_text(&r.rows());
+    out.push_str(&format!(
+        "TOTAL [{} under plan '{}']: {} cycles = {:.3} ms, {:.3} mJ, {} MACs\n",
+        r.model,
+        r.plan,
+        r.total_cycles,
+        r.total_cycles as f64 / r.cfg.clock_hz * 1e3,
+        r.total_energy_j * 1e3,
+        r.total_macs
+    ));
+    out
+}
+
+/// Whole-network execution report as JSON: per-layer rows + model totals.
+pub fn network_run_json(r: &NetworkRunReport) -> Json {
+    let mut o = Json::obj();
+    o.set("model", Json::Str(r.model.clone()))
+        .set("plan", Json::Str(r.plan.clone()))
+        .set("layers", layer_results_json(&r.rows()))
+        .set("total_cycles", Json::Num(r.total_cycles as f64))
+        .set("total_energy_j", Json::Num(r.total_energy_j))
+        .set("total_macs", Json::Num(r.total_macs as f64));
+    o
 }
 
 /// OS-vs-WS study text report (the `noc-dnn compare` output): one row
@@ -240,6 +340,45 @@ mod tests {
     fn float_formats() {
         assert_eq!(f2(1.867), "1.87");
         assert_eq!(f3(0.12345), "0.123");
+    }
+
+    #[test]
+    fn layer_results_render_tags_and_metrics() {
+        let rows = vec![
+            LayerResult::new("alexnet", "conv1", 8, 4)
+                .tag("policy", "two-way/gather/os")
+                .metric("total_cycles", 1234.0)
+                .metric("latency_improvement", 1.421),
+            LayerResult::new("alexnet", "conv2", 8, 4)
+                .tag("policy", "two-way/INA/ws")
+                .metric("total_cycles", 99.0)
+                .metric("latency_improvement", 0.97),
+        ];
+        let t = layer_results_text(&rows);
+        assert!(t.contains("policy"), "tag header missing:\n{t}");
+        assert!(t.contains("two-way/INA/ws"));
+        assert!(t.contains("1234"), "counts render as integers:\n{t}");
+        assert!(t.contains("1.42"), "ratios render with 2 decimals:\n{t}");
+        let j = layer_results_json(&rows);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("layer").unwrap().as_str(), Some("conv1"));
+        assert_eq!(arr[0].get("total_cycles").unwrap().as_u64(), Some(1234));
+        assert_eq!(arr[1].get("policy").unwrap().as_str(), Some("two-way/INA/ws"));
+        assert_eq!(rows[0].get("latency_improvement"), Some(1.421));
+        assert_eq!(rows[0].get("absent"), None);
+        assert!(layer_results_text(&[]).is_empty());
+    }
+
+    #[test]
+    fn fig14_report_appends_the_average_row() {
+        let rows = vec![
+            LayerResult::new("alexnet", "conv1", 8, 1).metric("two_way_improvement", 2.0),
+            LayerResult::new("alexnet", "conv2", 8, 1).metric("two_way_improvement", 3.0),
+        ];
+        let t = fig14_text(&rows);
+        assert!(t.contains("average"));
+        assert!(t.contains("2.50"), "mean of 2 and 3 missing:\n{t}");
     }
 
     #[test]

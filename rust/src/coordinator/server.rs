@@ -51,6 +51,17 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(16)
 }
 
+/// Resolve a `SimConfig::threads`-style knob: `0` means auto
+/// ([`default_workers`]), anything else is an explicit worker count. The
+/// single rule the network executor and the plan search share.
+pub fn resolve_workers(threads: usize) -> usize {
+    if threads == 0 {
+        default_workers()
+    } else {
+        threads
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,5 +82,11 @@ mod tests {
     #[test]
     fn more_workers_than_items_is_fine() {
         assert_eq!(parallel_map(vec![1, 2], 64, |&x: &i32| x), vec![1, 2]);
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_auto() {
+        assert_eq!(resolve_workers(0), default_workers());
+        assert_eq!(resolve_workers(3), 3);
     }
 }

@@ -4,13 +4,16 @@
 //! over these.
 
 use crate::config::{Collection, DataflowKind, SimConfig, Streaming};
-use crate::models::{alexnet, vgg16, ConvLayer};
+use crate::models::{ConvLayer, Network as Model};
 use crate::noc::network::Network;
 use crate::noc::stats::{BusStats, NetStats};
 use crate::noc::Coord;
+use crate::plan::{LayerPolicy, NetworkPlan};
 use crate::power::power_report;
 
+use super::executor::NetworkExecutor;
 use super::experiment::{latency_improvement, power_improvement, Experiment};
+use super::report::LayerResult;
 use super::server::{default_workers, parallel_map};
 
 // ---------------------------------------------------------------------
@@ -93,16 +96,6 @@ pub fn fig12(mesh: usize, kappa_factors: &[u64]) -> Vec<Fig12Series> {
 // Fig. 13 — gather packet size study (1 large vs 2 small packets)
 // ---------------------------------------------------------------------
 
-#[derive(Debug, Clone)]
-pub struct Fig13Row {
-    pub mesh: usize,
-    pub pes_per_router: usize,
-    /// (latency, power) improvement over RU with one full-row packet.
-    pub one_large: (f64, f64),
-    /// (latency, power) improvement over RU with two half-row packets.
-    pub two_small: (f64, f64),
-}
-
 /// Configure the gather packet size for `packets_per_row` packets covering
 /// an `m`-column row with `n` PEs/router (head + payload flits).
 pub fn packet_flits_for_row(cfg: &SimConfig, packets_per_row: usize) -> usize {
@@ -112,8 +105,9 @@ pub fn packet_flits_for_row(cfg: &SimConfig, packets_per_row: usize) -> usize {
 }
 
 /// Fig. 13: latency/power improvement over RU for the two packet-size
-/// policies, on `mesh`×`mesh`, for each PEs/router setting.
-pub fn fig13(mesh: usize, layer: &ConvLayer) -> Vec<Fig13Row> {
+/// policies, on `mesh`×`mesh`, for each PEs/router setting. One
+/// [`LayerResult`] per (mesh, n) with the four improvement metrics.
+pub fn fig13(mesh: usize, layer: &ConvLayer) -> Vec<LayerResult> {
     let jobs: Vec<usize> = vec![1, 2, 4, 8];
     parallel_map(jobs, default_workers(), |&n| {
         let mut base_cfg = SimConfig::table1(mesh, n);
@@ -130,18 +124,14 @@ pub fn fig13(mesh: usize, layer: &ConvLayer) -> Vec<Fig13Row> {
         two.gather_packet_flits = packet_flits_for_row(&two, 2);
         let two_rep = Experiment::proposed(two).run_layer(layer);
 
-        Fig13Row {
-            mesh,
-            pes_per_router: n,
-            one_large: (
-                latency_improvement(&ru, &one_rep),
-                power_improvement(&ru, &one_rep),
-            ),
-            two_small: (
-                latency_improvement(&ru, &two_rep),
-                power_improvement(&ru, &two_rep),
-            ),
-        }
+        // The workload is a single representative layer, not a whole
+        // model — the model column carries the layer's provenance only
+        // through its name.
+        LayerResult::new("-", layer.name, mesh, n)
+            .metric("one_pkt_lat_impr", latency_improvement(&ru, &one_rep))
+            .metric("one_pkt_pow_impr", power_improvement(&ru, &one_rep))
+            .metric("two_pkt_lat_impr", latency_improvement(&ru, &two_rep))
+            .metric("two_pkt_pow_impr", power_improvement(&ru, &two_rep))
     })
 }
 
@@ -149,80 +139,95 @@ pub fn fig13(mesh: usize, layer: &ConvLayer) -> Vec<Fig13Row> {
 // Fig. 14 — streaming architectures vs gather-only [27]
 // ---------------------------------------------------------------------
 
-#[derive(Debug, Clone)]
-pub struct Fig14Row {
-    pub model: &'static str,
-    pub layer: String,
-    /// Runtime-latency improvement of gather + two-way streaming.
-    pub two_way: f64,
-    /// Runtime-latency improvement of gather + one-way streaming.
-    pub one_way: f64,
-}
-
 /// Fig. 14: per conv layer of AlexNet and VGG-16, runtime improvement of
-/// the streaming architectures over the gather-only architecture.
-pub fn fig14(mesh: usize, n: usize) -> Vec<Fig14Row> {
-    let mut jobs: Vec<(&'static str, ConvLayer)> = Vec::new();
-    for l in alexnet::conv_layers() {
-        jobs.push(("alexnet", l));
-    }
-    for l in vgg16::conv_layers() {
-        jobs.push(("vgg16", l));
-    }
-    parallel_map(jobs, default_workers(), |(model, layer)| {
-        let cfg = SimConfig::table1(mesh, n);
-        let base = Experiment::gather_only(cfg.clone()).run_layer(layer);
-        let two = Experiment::proposed(cfg.clone()).run_layer(layer);
-        let one = Experiment::new(cfg, Streaming::OneWay, Collection::Gather).run_layer(layer);
-        Fig14Row {
-            // `model` binds as `&&'static str` through the by-ref closure
-            // argument; copy the inner &'static str out.
-            model: *model,
-            layer: layer.name.to_string(),
-            two_way: latency_improvement(&base, &two),
-            one_way: latency_improvement(&base, &one),
+/// the streaming architectures over the gather-only architecture of [27].
+/// The three architectures are three uniform plans run through the
+/// network executor (which fans the layers out over worker threads); the
+/// per-layer rows are zipped into improvement ratios.
+pub fn fig14(mesh: usize, n: usize) -> Vec<LayerResult> {
+    let cfg = SimConfig::table1(mesh, n);
+    // Paper methodology: per-layer round pipelines, no boundary charge.
+    let ex = NetworkExecutor::new(cfg).without_reload();
+    let uniform = |streaming, layers| {
+        let mut p = LayerPolicy::proposed();
+        p.streaming = streaming;
+        NetworkPlan::uniform(p, layers)
+    };
+    let mut rows = Vec::new();
+    for model in [Model::alexnet(), Model::vgg16()] {
+        let run = |streaming| {
+            ex.run(&model, &uniform(streaming, model.len())).expect("uniform plan matches model")
+        };
+        let base = run(Streaming::Mesh);
+        let two = run(Streaming::TwoWay);
+        let one = run(Streaming::OneWay);
+        for i in 0..model.len() {
+            rows.push(
+                LayerResult::new(model.name.clone(), model.layers[i].name, mesh, n)
+                    .metric(
+                        "two_way_improvement",
+                        latency_improvement(&base.layers[i].report, &two.layers[i].report),
+                    )
+                    .metric(
+                        "one_way_improvement",
+                        latency_improvement(&base.layers[i].report, &one.layers[i].report),
+                    ),
+            );
         }
-    })
+    }
+    rows
 }
 
 // ---------------------------------------------------------------------
 // Figs. 15/16 — per-layer improvement over RU across mesh sizes and n
 // ---------------------------------------------------------------------
 
-#[derive(Debug, Clone)]
-pub struct ModelFigPoint {
-    pub layer: String,
-    pub mesh: usize,
-    pub pes_per_router: usize,
-    pub latency_improvement: f64,
-    pub power_improvement: f64,
-}
-
 /// Figs. 15 (AlexNet) and 16 (VGG-16): for each conv layer, mesh size and
 /// PEs/router, the improvement of gather over RU (both on the two-way
-/// streaming fabric, §5.3).
-pub fn fig_model(layers: &[ConvLayer], meshes: &[usize], ns: &[usize]) -> Vec<ModelFigPoint> {
-    let mut jobs = Vec::new();
-    for layer in layers {
-        for &mesh in meshes {
-            for &n in ns {
-                jobs.push((layer.clone(), mesh, n));
+/// streaming fabric, §5.3). Each (mesh, n, collection) point is one
+/// uniform plan run through the network executor; the flat fan-out over
+/// points (each executor pinned to one worker) keeps the sweep as
+/// parallel as the bespoke per-layer job list it replaces.
+pub fn fig_model(model: &Model, meshes: &[usize], ns: &[usize]) -> Vec<LayerResult> {
+    let mut points = Vec::new();
+    for &mesh in meshes {
+        for &n in ns {
+            for collection in [Collection::RepetitiveUnicast, Collection::Gather] {
+                points.push((mesh, n, collection));
             }
         }
     }
-    parallel_map(jobs, default_workers(), |(layer, mesh, n)| {
-        let mut cfg = SimConfig::table1(*mesh, *n);
+    let runs = parallel_map(points.clone(), default_workers(), |&(mesh, n, collection)| {
+        let mut cfg = SimConfig::table1(mesh, n);
         cfg.trace_driven = true; // §5.1 trace methodology
-        let ru = Experiment::baseline_ru(cfg.clone()).run_layer(layer);
-        let g = Experiment::proposed(cfg).run_layer(layer);
-        ModelFigPoint {
-            layer: layer.name.to_string(),
-            mesh: *mesh,
-            pes_per_router: *n,
-            latency_improvement: latency_improvement(&ru, &g),
-            power_improvement: power_improvement(&ru, &g),
+        cfg.threads = 1; // the sweep itself is the fan-out level
+        let mut p = LayerPolicy::proposed();
+        p.collection = collection;
+        NetworkExecutor::new(cfg)
+            .without_reload()
+            .run(model, &NetworkPlan::uniform(p, model.len()))
+            .expect("uniform plan matches model")
+    });
+    let mut rows = Vec::new();
+    // Points were pushed RU-then-gather per (mesh, n): pair them back up.
+    for (pair, run_pair) in points.chunks(2).zip(runs.chunks(2)) {
+        let (mesh, n, _) = pair[0];
+        let (ru, g) = (&run_pair[0], &run_pair[1]);
+        for i in 0..model.len() {
+            rows.push(
+                LayerResult::new(model.name.clone(), model.layers[i].name, mesh, n)
+                    .metric(
+                        "latency_improvement",
+                        latency_improvement(&ru.layers[i].report, &g.layers[i].report),
+                    )
+                    .metric(
+                        "power_improvement",
+                        power_improvement(&ru.layers[i].report, &g.layers[i].report),
+                    ),
+            );
         }
-    })
+    }
+    rows
 }
 
 // ---------------------------------------------------------------------

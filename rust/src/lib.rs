@@ -32,14 +32,25 @@
 //!   Output-Stationary mapping ([`dataflow::os`]) and a Weight-Stationary
 //!   mapping ([`dataflow::ws`]) where weights are pinned in PE register
 //!   files and input patches are broadcast on the row buses.
-//! * [`models`] — AlexNet / VGG-16 convolution layer shape tables.
+//! * [`models`] — AlexNet / VGG-16 / ResNet-lite convolution layer shape
+//!   tables, plus [`models::Network`]: a whole DNN as a first-class
+//!   executable object (ordered layers + metadata).
+//! * [`plan`] — per-layer execution policies: a
+//!   [`plan::NetworkPlan`] assigns every layer its own
+//!   (streaming × collection × dataflow) triple — uniform, JSON-loaded,
+//!   or the sim-verified per-layer argmin built by
+//!   [`coordinator::executor::best_plan`].
 //! * [`power`] — Orion-3.0-style router energy and DSENT-style bus energy
 //!   models plus the §5.4 area/power overhead roll-up.
 //! * [`analytic`] — the closed-form latency models of Eqs. (3) and (4),
 //!   generalized over the dataflow and cross-checked against simulation.
 //! * [`coordinator`] — experiment orchestration: sweeps, baselines,
-//!   regeneration of every figure in the paper's evaluation section, and
-//!   the OS-vs-WS dataflow study (`noc-dnn compare`).
+//!   regeneration of every figure in the paper's evaluation section, the
+//!   OS-vs-WS dataflow study (`noc-dnn compare`), and the whole-network
+//!   execution engine ([`coordinator::executor::NetworkExecutor`]): runs
+//!   a model under a plan, layer by layer, with inter-layer traffic
+//!   charged at the boundaries and the layers fanned out over worker
+//!   threads (`noc-dnn model`).
 //! * [`runtime`] — PJRT bridge that loads the AOT-compiled JAX/Pallas
 //!   convolution artifacts (`artifacts/*.hlo.txt`) and executes the real
 //!   layer numerics from rust; Python is never on the request path.
@@ -72,10 +83,27 @@
 //! );
 //! ```
 //!
+//! Whole models run through the network executor — each layer under its
+//! own policy, totals rolled up with inter-layer traffic charged at the
+//! boundaries:
+//!
+//! ```no_run
+//! use noc_dnn::config::SimConfig;
+//! use noc_dnn::coordinator::executor::{best_plan, NetworkExecutor};
+//! use noc_dnn::models::Network;
+//!
+//! let cfg = SimConfig::table1_8x8(4);
+//! let model = Network::alexnet(); // or vgg16() / resnet_lite()
+//! let plan = best_plan(&cfg, &model); // per-layer argmin, sim-verified
+//! let run = NetworkExecutor::new(cfg).run(&model, &plan).unwrap();
+//! println!("{} cycles, {:.3} mJ", run.total_cycles, run.total_energy_j * 1e3);
+//! ```
+//!
 //! From the CLI: `noc-dnn run --model alexnet --dataflow ws` simulates one
-//! configuration; `noc-dnn compare` runs the full OS-vs-WS study across
-//! all three streaming modes and all three collection schemes
-//! (RU / gather / INA).
+//! configuration; `noc-dnn model --model alexnet --plan best --json` runs
+//! the whole model under per-layer policies; `noc-dnn compare` runs the
+//! full OS-vs-WS study across all three streaming modes and all three
+//! collection schemes (RU / gather / INA).
 
 pub mod analytic;
 pub mod config;
@@ -84,6 +112,7 @@ pub mod dataflow;
 pub mod models;
 pub mod noc;
 pub mod pe;
+pub mod plan;
 pub mod power;
 pub mod runtime;
 pub mod streaming;

@@ -8,6 +8,8 @@
 //! noc-dnn figure 16                             # VGG-16 vs RU
 //! noc-dnn run --model alexnet [--mesh 8] [--n 4] [--streaming two-way]
 //!             [--collection gather] [--dataflow os|ws] [--rounds-cap 8]
+//! noc-dnn model --model alexnet --plan best     # whole-model executor
+//!               [--threads 0] [--json]          # (per-layer policies)
 //! noc-dnn compare [--model alexnet] [--mesh 8] [--n 4] [--json]
 //!                                               # OS vs WS dataflow study
 //! noc-dnn overhead                              # §5.4 router overhead
@@ -16,8 +18,10 @@
 
 use anyhow::{bail, Result};
 use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming};
+use noc_dnn::coordinator::executor::{best_plan_search, NetworkExecutor, PlanSearchOptions};
 use noc_dnn::coordinator::{report, sweep, Experiment};
-use noc_dnn::models::{alexnet, vgg16, ConvLayer};
+use noc_dnn::models::{alexnet, Network};
+use noc_dnn::plan::{LayerPolicy, NetworkPlan};
 use noc_dnn::power::area::overhead_report;
 use noc_dnn::util::cli::Args;
 
@@ -29,6 +33,8 @@ const VALUED: &[&str] = &[
     "collection",
     "dataflow",
     "rounds-cap",
+    "threads",
+    "plan",
     "delta",
     "layer",
 ];
@@ -43,6 +49,7 @@ fn main() -> Result<()> {
     match args.positional(0).unwrap() {
         "figure" => figure(&args),
         "run" => run(&args),
+        "model" => model_cmd(&args),
         "compare" => compare(&args),
         "overhead" => overhead(&args),
         "config" => config_cmd(&args),
@@ -55,13 +62,18 @@ fn usage() -> &'static str {
 
 USAGE:
   noc-dnn figure <12|13|14|15|16> [--mesh 8|16] [--n 1|2|4|8] [--json]
-  noc-dnn run --model <alexnet|vgg16> [--mesh N] [--n N]
+  noc-dnn run --model <alexnet|vgg16|resnet-lite> [--mesh N] [--n N]
               [--streaming mesh|one-way|two-way] [--collection ru|gather|ina]
               [--dataflow os|ws] [--rounds-cap K] [--delta D] [--layer NAME]
-  noc-dnn compare [--model <alexnet|vgg16>] [--mesh N] [--n N] [--json]
+  noc-dnn model --model <alexnet|vgg16|resnet-lite>
+                [--plan uniform|best|<file.json>] [--mesh N] [--n N]
+                [--streaming MODE] [--collection C] [--dataflow D]
+                [--threads T] [--rounds-cap K] [--json]
+  noc-dnn compare [--model <alexnet|vgg16|resnet-lite>] [--mesh N] [--n N]
+                  [--json]
   noc-dnn overhead
   noc-dnn config --show [--mesh N] [--n N] [--dataflow os|ws]
-                 [--collection ru|gather|ina]
+                 [--collection ru|gather|ina] [--threads T]
 
 FLAGS:
   --dataflow os|ws   dataflow mapping: Output-Stationary (paper default) or
@@ -73,10 +85,20 @@ FLAGS:
                      repetitive unicast 'ru', or 'ina' in-network
                      accumulation (psums added at intermediate routers,
                      arXiv:2209.10056)
+  --plan P           whole-network execution plan: 'uniform' applies the
+                     --streaming/--collection/--dataflow triple to every
+                     layer; 'best' searches the per-layer argmin over the
+                     full policy grid (analytic ranking, sim-verified —
+                     rejects the triple flags, which it would ignore); a
+                     path loads a custom JSON plan (one policy per layer)
+  --threads T        worker threads for the layer fan-out (0 = auto)
 
-`compare` runs the whole model under OS and WS for every streaming mode x
-RU/gather/INA collection scheme and prints latency/energy with WS-vs-OS
-ratios.
+`model` executes a whole DNN through the network executor: per-layer
+flit-accurate simulation, per-layer policies, inter-layer traffic charged
+at the boundaries, per-layer rows + model totals (use --json for machine
+output). `compare` runs the whole model under OS and WS for every
+streaming mode x RU/gather/INA collection scheme and prints latency/energy
+with WS-vs-OS ratios.
 "
 }
 
@@ -85,6 +107,7 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
     let n: usize = args.get_parsed("n", 1)?;
     let mut cfg = SimConfig::table1(mesh, n);
     cfg.sim_rounds_cap = args.get_parsed("rounds-cap", cfg.sim_rounds_cap)?;
+    cfg.threads = args.get_parsed("threads", cfg.threads)?;
     cfg.delta = args.get_parsed("delta", cfg.delta)?;
     if let Some(df) = args.get("dataflow") {
         cfg.dataflow = DataflowKind::parse(df)?;
@@ -96,12 +119,8 @@ fn cfg_from(args: &Args) -> Result<SimConfig> {
     Ok(cfg)
 }
 
-fn model_layers(name: &str) -> Result<Vec<ConvLayer>> {
-    match name {
-        "alexnet" => Ok(alexnet::conv_layers()),
-        "vgg16" => Ok(vgg16::conv_layers()),
-        m => bail!("unknown model '{m}' (alexnet | vgg16)"),
-    }
+fn streaming_from(args: &Args) -> Result<Streaming> {
+    Streaming::parse(args.get("streaming").unwrap_or("two-way"))
 }
 
 fn figure(args: &Args) -> Result<()> {
@@ -133,10 +152,9 @@ fn figure(args: &Args) -> Result<()> {
             print!("{}", report::fig14_text(&rows));
         }
         "15" | "16" => {
-            let layers =
-                if which == "15" { alexnet::conv_layers() } else { vgg16::conv_layers() };
+            let model = if which == "15" { Network::alexnet() } else { Network::vgg16() };
             let name = if which == "15" { "AlexNet" } else { "VGG-16" };
-            let points = sweep::fig_model(&layers, &[8, 16], &[1, 2, 4, 8]);
+            let points = sweep::fig_model(&model, &[8, 16], &[1, 2, 4, 8]);
             if args.get_bool("json") {
                 println!("{}", report::fig_model_json(&points).to_pretty());
             } else {
@@ -151,15 +169,10 @@ fn figure(args: &Args) -> Result<()> {
 
 fn run(args: &Args) -> Result<()> {
     let cfg = cfg_from(args)?;
-    let streaming = match args.get("streaming").unwrap_or("two-way") {
-        "mesh" => Streaming::Mesh,
-        "one-way" => Streaming::OneWay,
-        "two-way" => Streaming::TwoWay,
-        s => bail!("unknown streaming '{s}'"),
-    };
+    let streaming = streaming_from(args)?;
     // cfg_from already folded --collection into the config.
     let collection = cfg.collection;
-    let mut layers = model_layers(args.get("model").unwrap_or("alexnet"))?;
+    let mut layers = Network::by_name(args.get("model").unwrap_or("alexnet"))?.layers;
     if let Some(name) = args.get("layer") {
         layers.retain(|l| l.name == name);
         anyhow::ensure!(!layers.is_empty(), "no layer named '{name}'");
@@ -206,6 +219,62 @@ fn run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn model_cmd(args: &Args) -> Result<()> {
+    let cfg = cfg_from(args)?;
+    let model = Network::by_name(args.get("model").unwrap_or("alexnet"))?;
+    let rep = match args.get("plan").unwrap_or("uniform") {
+        // The search's sim-verified evaluations are exactly what the
+        // executor would recompute — reuse them instead of re-simulating.
+        "best" => {
+            // The search sweeps the whole policy grid; a per-run triple
+            // would be silently discarded, so reject the combination.
+            for flag in ["streaming", "collection", "dataflow"] {
+                anyhow::ensure!(
+                    args.get(flag).is_none(),
+                    "--{flag} only applies to --plan uniform; \
+                     --plan best searches every streaming/collection/dataflow combination"
+                );
+            }
+            best_plan_search(&cfg, &model, &PlanSearchOptions::default())
+                .run_report(&cfg, &model)
+        }
+        "uniform" => {
+            let plan = NetworkPlan::uniform(
+                LayerPolicy {
+                    streaming: streaming_from(args)?,
+                    collection: cfg.collection,
+                    dataflow: cfg.dataflow,
+                },
+                model.len(),
+            );
+            NetworkExecutor::new(cfg).run(&model, &plan)?
+        }
+        path => {
+            let plan = NetworkPlan::from_json(
+                &std::fs::read_to_string(path)
+                    .map_err(|e| anyhow::anyhow!("cannot read plan '{path}': {e}"))?,
+            )?;
+            NetworkExecutor::new(cfg).run(&model, &plan)?
+        }
+    };
+    if args.get_bool("json") {
+        println!("{}", report::network_run_json(&rep).to_pretty());
+    } else {
+        println!(
+            "model {} ({} layers, {} MACs) under plan '{}' on {}x{}, n={}",
+            rep.model,
+            model.len(),
+            rep.total_macs,
+            rep.plan,
+            rep.cfg.mesh_cols,
+            rep.cfg.mesh_rows,
+            rep.cfg.pes_per_router
+        );
+        print!("{}", report::network_run_text(&rep));
+    }
+    Ok(())
+}
+
 fn compare(args: &Args) -> Result<()> {
     let mesh: usize = args.get_parsed("mesh", 8)?;
     let n: usize = args.get_parsed("n", 4)?;
@@ -215,7 +284,7 @@ fn compare(args: &Args) -> Result<()> {
         DataflowKind::parse(df)?;
     }
     let model = args.get("model").unwrap_or("alexnet");
-    let layers = model_layers(model)?;
+    let layers = Network::by_name(model)?.layers;
     let rows = sweep::dataflow_compare(mesh, n, &layers);
     if args.get_bool("json") {
         println!("{}", report::dataflow_compare_json(&rows).to_pretty());

@@ -8,6 +8,7 @@
 
 pub mod alexnet;
 pub mod lite;
+pub mod resnet;
 pub mod vgg16;
 
 /// One convolutional layer, in the paper's notation:
@@ -55,6 +56,126 @@ impl ConvLayer {
     pub fn weights(&self) -> u64 {
         (self.q * self.c * self.r * self.r) as u64
     }
+
+    /// Output feature-map volume in words (`h_out² · Q`) — the traffic the
+    /// layer hands to its successor in a whole-network run.
+    pub fn output_volume(&self) -> u64 {
+        self.p_patches() * self.q as u64
+    }
+
+    /// Input feature-map volume in words (`h_in² · C`).
+    pub fn input_volume(&self) -> u64 {
+        (self.h_in * self.h_in * self.c) as u64
+    }
+}
+
+/// Per-layer metadata of a [`Network`]: position, name and the shape
+/// aggregates the executor and reports key on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerInfo {
+    pub index: usize,
+    pub name: &'static str,
+    /// Total MACs of the layer (`P·Q·C·R·R`).
+    pub macs: u64,
+    /// Output feature-map words (`h_out²·Q`) — the next layer's input
+    /// traffic.
+    pub output_volume: u64,
+    /// Input feature-map words (`h_in²·C`).
+    pub input_volume: u64,
+}
+
+/// A whole DNN as a first-class executable object: a named, ordered list
+/// of convolution layers. This replaces the loose `&[ConvLayer]` tables —
+/// the network executor ([`crate::coordinator::executor`]), the per-layer
+/// policy plans ([`crate::plan`]) and the model-scope closed form
+/// ([`crate::analytic::network_latency`]) all key on layer *positions*
+/// within one `Network`, so the ordered type is what makes inter-layer
+/// accounting (layer ℓ's output volume = layer ℓ+1's input traffic)
+/// well-defined.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<ConvLayer>,
+}
+
+impl Network {
+    /// A custom network. Panics on an empty layer list — a zero-layer
+    /// model has no meaningful runtime.
+    pub fn new(name: impl Into<String>, layers: Vec<ConvLayer>) -> Network {
+        assert!(!layers.is_empty(), "a Network needs at least one layer");
+        Network { name: name.into(), layers }
+    }
+
+    /// The five AlexNet convolution layers.
+    pub fn alexnet() -> Network {
+        Network::new("alexnet", alexnet::conv_layers())
+    }
+
+    /// The thirteen VGG-16 convolution layers.
+    pub fn vgg16() -> Network {
+        Network::new("vgg16", vgg16::conv_layers())
+    }
+
+    /// The ResNet-lite table (stride-2 and 1×1 downsample convolutions —
+    /// shapes the AlexNet/VGG tables never exercise).
+    pub fn resnet_lite() -> Network {
+        Network::new("resnet-lite", resnet::conv_layers())
+    }
+
+    /// Look a model up by its CLI spelling.
+    pub fn by_name(name: &str) -> crate::Result<Network> {
+        match name {
+            "alexnet" => Ok(Network::alexnet()),
+            "vgg16" => Ok(Network::vgg16()),
+            "resnet-lite" | "resnet_lite" | "resnet" => Ok(Network::resnet_lite()),
+            m => anyhow::bail!("unknown model '{m}' (alexnet | vgg16 | resnet-lite)"),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Words crossing the memory boundary ahead of layer `i`: the model
+    /// input volume for layer 0, the **previous layer's output volume**
+    /// otherwise. This is deliberately the producer's volume, not
+    /// `layers[i].input_volume()` — §5.1 generates each feature map
+    /// completely before the next layer starts, so the whole produced map
+    /// drains to memory and is re-streamed at the boundary; pooling (and,
+    /// in linearized tables like ResNet-lite, skipped branches) between
+    /// the two shapes is not modeled, making this an upper-bound
+    /// convention on the boundary traffic.
+    pub fn input_words(&self, i: usize) -> u64 {
+        if i == 0 {
+            self.layers[0].input_volume()
+        } else {
+            self.layers[i - 1].output_volume()
+        }
+    }
+
+    /// Per-layer metadata rows (name, index, MACs, volumes).
+    pub fn layer_infos(&self) -> Vec<LayerInfo> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(index, l)| LayerInfo {
+                index,
+                name: l.name,
+                macs: l.total_macs(),
+                output_volume: l.output_volume(),
+                input_volume: l.input_volume(),
+            })
+            .collect()
+    }
+
+    /// Total MACs across all layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(ConvLayer::total_macs).sum()
+    }
 }
 
 #[cfg(test)]
@@ -74,5 +195,33 @@ mod tests {
     fn vgg_conv_keeps_resolution() {
         let l = ConvLayer { name: "c", c: 64, h_in: 224, r: 3, stride: 1, pad: 1, q: 64 };
         assert_eq!(l.h_out(), 224);
+    }
+
+    #[test]
+    fn network_constructors_and_metadata() {
+        let a = Network::alexnet();
+        assert_eq!(a.name, "alexnet");
+        assert_eq!(a.len(), 5);
+        assert_eq!(Network::vgg16().len(), 13);
+        assert_eq!(Network::by_name("resnet-lite").unwrap(), Network::resnet_lite());
+        assert!(Network::by_name("lenet").is_err());
+
+        let infos = a.layer_infos();
+        assert_eq!(infos.len(), 5);
+        assert_eq!(infos[0].name, "conv1");
+        assert_eq!(infos[0].index, 0);
+        assert_eq!(infos[0].macs, a.layers[0].total_macs());
+        assert_eq!(a.total_macs(), infos.iter().map(|i| i.macs).sum::<u64>());
+    }
+
+    #[test]
+    fn interlayer_traffic_is_the_predecessor_output_volume() {
+        let a = Network::alexnet();
+        // Layer 0 streams the model input; layer i>0 streams layer i-1's
+        // output feature map.
+        assert_eq!(a.input_words(0), (224 * 224 * 3) as u64);
+        assert_eq!(a.input_words(1), a.layers[0].output_volume());
+        assert_eq!(a.layers[0].output_volume(), 55 * 55 * 64);
+        assert_eq!(a.input_words(4), a.layers[3].output_volume());
     }
 }

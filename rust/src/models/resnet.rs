@@ -1,0 +1,73 @@
+//! ResNet-lite convolution layers: a per-stage representative slice of
+//! ResNet-18 [He et al. 2016, torchvision shapes].
+//!
+//! The table exists to exercise mapping/traffic paths the AlexNet and
+//! VGG-16 tables never hit: the stride-2 7×7 stem, the **1×1 downsample
+//! convolutions** (`R = 1`, stride 2 — one MAC-row per output, so the
+//! gather payload-to-compute ratio is extreme) and stride-2 3×3
+//! convolutions at stage boundaries. One basic-block pair per stage keeps
+//! whole-model runs cheap while covering every distinct shape class.
+
+use super::ConvLayer;
+
+/// The eleven ResNet-lite convolution layers.
+pub fn conv_layers() -> Vec<ConvLayer> {
+    vec![
+        // Stem: 7×7 stride-2 (the only R=7 shape in the repo's tables).
+        ConvLayer { name: "conv1", c: 3, h_in: 224, r: 7, stride: 2, pad: 3, q: 64 },
+        // Stage 2 (post-maxpool resolution 56): one basic block.
+        ConvLayer { name: "conv2_1", c: 64, h_in: 56, r: 3, stride: 1, pad: 1, q: 64 },
+        ConvLayer { name: "conv2_2", c: 64, h_in: 56, r: 3, stride: 1, pad: 1, q: 64 },
+        // Stage 3 entry: 1×1 stride-2 projection shortcut + strided block.
+        ConvLayer { name: "conv3_ds", c: 64, h_in: 56, r: 1, stride: 2, pad: 0, q: 128 },
+        ConvLayer { name: "conv3_1", c: 64, h_in: 56, r: 3, stride: 2, pad: 1, q: 128 },
+        ConvLayer { name: "conv3_2", c: 128, h_in: 28, r: 3, stride: 1, pad: 1, q: 128 },
+        // Stage 4.
+        ConvLayer { name: "conv4_ds", c: 128, h_in: 28, r: 1, stride: 2, pad: 0, q: 256 },
+        ConvLayer { name: "conv4_1", c: 128, h_in: 28, r: 3, stride: 2, pad: 1, q: 256 },
+        ConvLayer { name: "conv4_2", c: 256, h_in: 14, r: 3, stride: 1, pad: 1, q: 256 },
+        // Stage 5.
+        ConvLayer { name: "conv5_1", c: 256, h_in: 14, r: 3, stride: 2, pad: 1, q: 512 },
+        ConvLayer { name: "conv5_2", c: 512, h_in: 7, r: 3, stride: 1, pad: 1, q: 512 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_of_the_stride_and_pointwise_shapes() {
+        let ls = conv_layers();
+        assert_eq!(ls.len(), 11);
+        // Stem: (224 + 6 - 7)/2 + 1 = 112.
+        assert_eq!(ls[0].h_out(), 112);
+        // 1×1 stride-2 downsample: (56 - 1)/2 + 1 = 28, MACs/output = C.
+        let ds = ls.iter().find(|l| l.name == "conv3_ds").unwrap();
+        assert_eq!(ds.r, 1);
+        assert_eq!(ds.h_out(), 28);
+        assert_eq!(ds.macs_per_output(), 64);
+        // Strided 3×3: (56 + 2 - 3)/2 + 1 = 28.
+        let s2 = ls.iter().find(|l| l.name == "conv3_1").unwrap();
+        assert_eq!(s2.h_out(), 28);
+        // Downsample and strided conv of one stage agree on the output map.
+        assert_eq!(ds.h_out(), s2.h_out());
+        assert_eq!(ds.q, s2.q);
+    }
+
+    #[test]
+    fn table_covers_shape_classes_absent_from_alexnet_and_vgg() {
+        let ls = conv_layers();
+        assert!(ls.iter().any(|l| l.r == 1), "needs a 1x1 conv");
+        assert!(ls.iter().filter(|l| l.stride == 2).count() >= 4, "needs stride-2 shapes");
+        assert!(ls.iter().any(|l| l.r == 7), "needs the 7x7 stem");
+    }
+
+    #[test]
+    fn mac_count_order_of_magnitude() {
+        // The per-stage slice of ResNet-18 lands at roughly half the full
+        // model's ~1.8 GMACs.
+        let total: u64 = conv_layers().iter().map(|l| l.total_macs()).sum();
+        assert!((500_000_000..2_500_000_000).contains(&total), "total={total}");
+    }
+}

@@ -6,11 +6,13 @@
 //! inside `Network::step`) silently entering the cycle-accurate core.
 
 use noc_dnn::config::{Collection, SimConfig, Streaming};
+use noc_dnn::coordinator::executor::NetworkExecutor;
 use noc_dnn::dataflow::run_layer;
 use noc_dnn::models::ConvLayer;
 use noc_dnn::noc::network::Network;
 use noc_dnn::noc::stats::NetStats;
 use noc_dnn::noc::Coord;
+use noc_dnn::plan::{LayerPolicy, NetworkPlan};
 use noc_dnn::util::rng::Rng;
 
 /// Drive one randomized-but-seeded workload to completion.
@@ -52,6 +54,36 @@ fn same_seed_same_collection_is_bit_identical() {
                  nondeterminism in Network::step"
             );
         }
+    }
+}
+
+#[test]
+fn network_executor_is_bit_identical_and_thread_invariant() {
+    // Model scope: two runs of the same (model, plan, config) must agree
+    // bit for bit at threads = 1, and the totals must not move with the
+    // worker count — each layer simulation is a pure function, and the
+    // leader/worker fan-out preserves layer order.
+    let model = noc_dnn::models::Network::alexnet();
+    let mut plan = NetworkPlan::uniform(LayerPolicy::proposed(), model.len());
+    plan.policies[2].collection = Collection::Ina;
+    let run_with = |threads: usize| {
+        let mut cfg = SimConfig::table1_8x8(2);
+        cfg.sim_rounds_cap = 2;
+        cfg.threads = threads;
+        NetworkExecutor::new(cfg).run(&model, &plan).unwrap()
+    };
+    let a = run_with(1);
+    let b = run_with(1);
+    assert_eq!(a.total_cycles, b.total_cycles, "executor diverged at threads=1");
+    assert_eq!(a.total_energy_j, b.total_energy_j);
+    for (x, y) in a.layers.iter().zip(&b.layers) {
+        assert_eq!(x.report.run.net, y.report.run.net, "layer {} stats diverged", x.index);
+        assert_eq!(x.total_cycles, y.total_cycles);
+    }
+    for threads in [2usize, 4] {
+        let c = run_with(threads);
+        assert_eq!(a.total_cycles, c.total_cycles, "totals moved at threads={threads}");
+        assert_eq!(a.total_energy_j, c.total_energy_j);
     }
 }
 

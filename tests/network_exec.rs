@@ -1,0 +1,187 @@
+//! Whole-network execution engine tests: model-scope analytic-vs-sim
+//! agreement, executor totals as the sum of independently simulated
+//! layers, thread-count invariance, plan JSON round-trips, and the
+//! headline property of the plan search — the `best_per_layer` plan's
+//! total runtime never exceeds any uniform plan's total.
+
+use noc_dnn::analytic;
+use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming};
+use noc_dnn::coordinator::executor::{
+    best_plan_search, NetworkExecutor, PlanSearchOptions,
+};
+use noc_dnn::dataflow::run_layer;
+use noc_dnn::models::Network;
+use noc_dnn::plan::{policy_grid, reload_cycles, LayerPolicy, NetworkPlan};
+
+#[test]
+fn model_scope_analytic_matches_sim_on_alexnet_uniform() {
+    // The model-scope generalization of the per-layer Eq. (3)/(4)
+    // cross-checks: summed closed forms + boundary reloads vs summed
+    // extrapolated simulations + the same reloads, same tolerance class
+    // (5%) as tests/analytic_vs_sim.rs.
+    let cfg = SimConfig::table1_8x8(4);
+    let model = Network::alexnet();
+    let plan = NetworkPlan::uniform(LayerPolicy::proposed(), model.len());
+    let sim = NetworkExecutor::new(cfg.clone()).run(&model, &plan).unwrap();
+    let closed = analytic::network_latency(&cfg, &model, &plan);
+    let err = (sim.total_cycles as f64 - closed as f64).abs() / closed as f64;
+    assert!(
+        err < 0.05,
+        "model-scope sim {} vs closed form {closed} ({:.1}% off)",
+        sim.total_cycles,
+        err * 100.0
+    );
+}
+
+#[test]
+fn executor_totals_equal_sum_of_independently_simulated_layers() {
+    // The executor adds nothing beyond the per-layer driver runs and the
+    // closed-form boundary charges: rerunning each layer independently
+    // through `dataflow::run_layer` under its policy's config reproduces
+    // the executor's totals exactly (simulations are pure functions, so
+    // "fixed seed" is the configuration itself).
+    let mut cfg = SimConfig::table1_8x8(2);
+    cfg.sim_rounds_cap = 3;
+    let model = Network::alexnet();
+    let mut plan = NetworkPlan::uniform(LayerPolicy::proposed(), model.len());
+    plan.policies[1].collection = Collection::Ina;
+    plan.policies[3].dataflow = DataflowKind::WeightStationary;
+    let rep = NetworkExecutor::new(cfg.clone()).run(&model, &plan).unwrap();
+
+    let mut expected_total = 0u64;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let policy = plan.policy(i);
+        let lcfg = policy.apply(&cfg);
+        let run = run_layer(&lcfg, policy.streaming, policy.collection, layer);
+        let reload = reload_cycles(&lcfg, policy.streaming, model.input_words(i));
+        assert_eq!(
+            rep.layers[i].report.run.total_cycles, run.total_cycles,
+            "layer {i} diverged from its independent simulation"
+        );
+        assert_eq!(rep.layers[i].report.run.net, run.net, "layer {i} stats diverged");
+        assert_eq!(rep.layers[i].reload_cycles, reload);
+        expected_total += run.total_cycles + reload;
+    }
+    assert_eq!(rep.total_cycles, expected_total);
+    let energy_sum: f64 = rep.layers.iter().map(|l| l.report.power.total_j).sum();
+    assert!((rep.total_energy_j - energy_sum).abs() < 1e-12);
+}
+
+#[test]
+fn executor_totals_are_invariant_across_thread_counts() {
+    let model = Network::resnet_lite();
+    let plan = NetworkPlan::uniform(LayerPolicy::proposed(), model.len());
+    let run_with = |threads: usize| {
+        let mut cfg = SimConfig::table1_8x8(2);
+        cfg.sim_rounds_cap = 2;
+        cfg.threads = threads;
+        NetworkExecutor::new(cfg).run(&model, &plan).unwrap()
+    };
+    let serial = run_with(1);
+    for threads in [0usize, 2, 4, 8] {
+        let parallel = run_with(threads);
+        assert_eq!(serial.total_cycles, parallel.total_cycles, "threads={threads}");
+        assert_eq!(serial.total_energy_j, parallel.total_energy_j, "threads={threads}");
+        for (a, b) in serial.layers.iter().zip(&parallel.layers) {
+            assert_eq!(a.total_cycles, b.total_cycles);
+            assert_eq!(a.report.run.net, b.report.run.net);
+        }
+    }
+}
+
+#[test]
+fn network_plan_roundtrips_through_json() {
+    let model = Network::vgg16();
+    let mut plan = NetworkPlan::uniform(LayerPolicy::proposed(), model.len());
+    plan.name = "mixed".to_string();
+    plan.policies[0].streaming = Streaming::Mesh;
+    plan.policies[1].collection = Collection::RepetitiveUnicast;
+    plan.policies[2].collection = Collection::Ina;
+    plan.policies[3].dataflow = DataflowKind::WeightStationary;
+    let text = plan.to_json().to_pretty();
+    let back = NetworkPlan::from_json(&text).unwrap();
+    assert_eq!(back, plan);
+    back.validate(&model).unwrap();
+}
+
+#[test]
+fn model_report_json_has_per_layer_rows_and_totals() {
+    // The `noc-dnn model --json` contract: a row per layer plus model
+    // totals.
+    let mut cfg = SimConfig::table1_8x8(2);
+    cfg.sim_rounds_cap = 2;
+    let model = Network::alexnet();
+    let plan = NetworkPlan::uniform(LayerPolicy::proposed(), model.len());
+    let rep = NetworkExecutor::new(cfg).run(&model, &plan).unwrap();
+    let j = noc_dnn::coordinator::report::network_run_json(&rep);
+    let layers = j.get("layers").unwrap().as_arr().unwrap();
+    assert_eq!(layers.len(), model.len());
+    assert_eq!(layers[0].get("layer").unwrap().as_str(), Some("conv1"));
+    assert!(layers[0].get("policy").is_some());
+    assert!(layers[0].get("total_cycles").unwrap().as_u64().unwrap() > 0);
+    // Layer metadata rides along: MACs and output volume per row.
+    assert_eq!(
+        layers[0].get("macs").unwrap().as_u64(),
+        Some(model.layers[0].total_macs())
+    );
+    assert_eq!(
+        layers[0].get("out_words").unwrap().as_u64(),
+        Some(model.layers[0].output_volume())
+    );
+    assert_eq!(
+        j.get("total_cycles").unwrap().as_u64(),
+        Some(rep.total_cycles)
+    );
+    assert!(j.get("total_energy_j").unwrap().as_f64().unwrap() > 0.0);
+}
+
+fn assert_best_beats_every_uniform(model: &Network) {
+    let mut cfg = SimConfig::table1_8x8(2);
+    cfg.sim_rounds_cap = 2; // keep the grid sweep cheap; extrapolation covers the rest
+    // include_mesh + an infinite prune factor make every policy of the
+    // 18-combo grid sim-verified per layer (nothing is analytically
+    // pruned), so best ≤ every uniform holds by construction — the
+    // evaluations are the same deterministic `evaluate_layer` calls the
+    // executor redoes below.
+    let opts = PlanSearchOptions { include_mesh: true, prune_factor: f64::INFINITY };
+    let search = best_plan_search(&cfg, model, &opts);
+    let ex = NetworkExecutor::new(cfg.clone());
+    let best_total = ex.run(model, &search.plan).unwrap().total_cycles;
+    for policy in policy_grid() {
+        let uniform = NetworkPlan::uniform(policy, model.len());
+        let total = ex.run(model, &uniform).unwrap().total_cycles;
+        assert!(
+            best_total <= total,
+            "{}: best plan ({best_total}) lost to uniform {} ({total})",
+            model.name,
+            policy.label()
+        );
+    }
+}
+
+#[test]
+fn best_plan_beats_every_uniform_on_alexnet() {
+    assert_best_beats_every_uniform(&Network::alexnet());
+}
+
+#[test]
+fn best_plan_beats_every_uniform_on_vgg16() {
+    assert_best_beats_every_uniform(&Network::vgg16());
+}
+
+#[test]
+fn resnet_lite_runs_under_every_collection() {
+    // The stride-2 / 1x1 shapes flow through the whole engine.
+    let mut cfg = SimConfig::table1_8x8(2);
+    cfg.sim_rounds_cap = 2;
+    let model = Network::resnet_lite();
+    for collection in [Collection::Gather, Collection::RepetitiveUnicast, Collection::Ina] {
+        let mut p = LayerPolicy::proposed();
+        p.collection = collection;
+        let plan = NetworkPlan::uniform(p, model.len());
+        let rep = NetworkExecutor::new(cfg.clone()).run(&model, &plan).unwrap();
+        assert_eq!(rep.layers.len(), model.len());
+        assert!(rep.total_cycles > 0);
+        assert!(rep.total_energy_j > 0.0);
+    }
+}
