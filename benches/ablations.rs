@@ -14,9 +14,11 @@ use noc_dnn::dataflow::os::OsMapping;
 use noc_dnn::models::alexnet;
 use noc_dnn::noc::network::Network;
 use noc_dnn::noc::Coord;
-use noc_dnn::util::bench::time_it;
+use noc_dnn::util::bench::{bench_args, time_it, BenchReport};
 
 fn main() {
+    let args = bench_args();
+    let mut report = BenchReport::new("ablations", args.quick);
     let layer = &alexnet::conv_layers()[2];
 
     // ---- 1) RU packing ----
@@ -28,11 +30,13 @@ fn main() {
         let literal = Experiment::baseline_ru(cfg.clone()).run_layer(layer);
         cfg.ru_pack_payloads = true;
         let packed = Experiment::baseline_ru(cfg).run_layer(layer);
-        println!(
-            "  n={n}: improvement vs literal RU {:.2}x, vs packed RU {:.2}x",
-            latency_improvement(&literal, &gather),
-            latency_improvement(&packed, &gather),
-        );
+        let vs_literal = latency_improvement(&literal, &gather);
+        let vs_packed = latency_improvement(&packed, &gather);
+        println!("  n={n}: improvement vs literal RU {vs_literal:.2}x, vs packed RU {vs_packed:.2}x");
+        report.add(BenchReport::point(
+            &[("name", "ru_packing")],
+            &[("n", n as f64), ("vs_literal_ru", vs_literal), ("vs_packed_ru", vs_packed)],
+        ));
     }
     println!("  (the paper's reported 1.0-1.84x sits between the two readings)");
 
@@ -51,6 +55,10 @@ fn main() {
             m.col_stream_words,
             rep.run.total_cycles
         );
+        report.add(BenchReport::point(
+            &[("name", "pe_grouping"), ("grouping", grouping.label())],
+            &[("rounds", m.rounds as f64), ("total_cycles", rep.run.total_cycles as f64)],
+        ));
     }
 
     // ---- 3) δ as a fault-tolerance bound (§4.1) ----
@@ -70,10 +78,23 @@ fn main() {
     );
     assert!(net.cycle as i64 >= cfg.delta as i64, "must have waited out delta");
 
+    report.add(BenchReport::point(
+        &[("name", "delta_fault_tolerance")],
+        &[("orphan_delivery_cycle", net.cycle as f64), ("delta", cfg.delta as f64)],
+    ));
+
     let t = time_it(3, || {
         let mut cfg = SimConfig::table1_8x8(4);
         cfg.trace_driven = true;
         Experiment::proposed(cfg).run_layer(layer)
     });
     println!("\nbench: one trace-driven layer experiment {t}");
+    report.add(BenchReport::point(
+        &[("name", "layer_experiment")],
+        &[("median_ns", t.median_ns as f64)],
+    ));
+
+    if let Some(path) = &args.json {
+        report.write(path).expect("failed to write bench JSON");
+    }
 }

@@ -1,17 +1,42 @@
-//! Simulator hot-path microbenchmarks (the §Perf targets of DESIGN.md):
-//! flit throughput of the cycle loop under saturating collection traffic,
-//! plus end-to-end layer-simulation timing.
+//! Simulator hot-path microbenchmarks (the §Perf targets of DESIGN.md).
+//!
+//! Every workload runs on **both** cycle kernels — the event-driven
+//! production core (`noc::network::Network`) and the frozen pre-refactor
+//! reference (`noc::reference::ReferenceNetwork`) — so each run reports a
+//! true before/after speedup on the same machine, and cross-checks that
+//! the two kernels produce identical cycle/hop counts while it measures.
+//!
+//! Workloads:
+//! * **saturate** — every node posts `rounds` rounds of payloads up
+//!   front; the mesh runs congested. The active-router set degenerates
+//!   toward "all routers", so this bounds the bookkeeping overhead.
+//! * **sparse** — one row collects per burst with long idle gaps; the
+//!   drain-tail / gather-window regime where the active set and the
+//!   calendar fast-forward dominate.
+//! * **layer** — end-to-end AlexNet conv3 through the round driver (what
+//!   every paper-figure point costs).
+//!
+//! `--quick` runs the reduced CI matrix; `--json PATH` writes the
+//! machine-readable report (`BENCH_sim_hotpath.json`) that
+//! `scripts/check_bench_regression.py` gates against the committed
+//! baseline.
 
 use noc_dnn::config::{Collection, SimConfig};
 use noc_dnn::coordinator::Experiment;
 use noc_dnn::models::alexnet;
 use noc_dnn::noc::network::Network;
+use noc_dnn::noc::reference::{ReferenceNetwork, SimKernel};
 use noc_dnn::noc::Coord;
-use noc_dnn::util::bench::{fmt_ns, time_it};
+use noc_dnn::util::bench::{bench_args, fmt_ns, time_it, BenchReport, Timing};
+
+const SATURATE_ROUNDS: u64 = 16;
+const SPARSE_BURSTS: u64 = 8;
+/// Idle gap between sparse bursts (cycles) — long enough that the mesh
+/// fully drains and the clock fast-forwards between bursts.
+const SPARSE_GAP: u64 = 2_000;
 
 /// Saturating workload: every node posts `rounds` rounds of payloads.
-fn saturate(cfg: &SimConfig, collection: Collection, rounds: u64) -> (u64, u64) {
-    let mut net = Network::new(cfg, collection);
+fn saturate<K: SimKernel>(mut net: K, cfg: &SimConfig, rounds: u64) -> (u64, u64) {
     for r in 0..rounds {
         for y in 0..cfg.mesh_rows {
             for x in 0..cfg.mesh_cols {
@@ -24,26 +49,142 @@ fn saturate(cfg: &SimConfig, collection: Collection, rounds: u64) -> (u64, u64) 
         }
     }
     let total = rounds * (cfg.mesh_rows * cfg.mesh_cols * cfg.pes_per_router) as u64;
-    let ok = net.run_until(|n| n.payloads_delivered >= total, 10_000_000);
+    let ok = net.run_until_delivered(total, 10_000_000);
     assert!(ok, "saturation run stalled");
-    (net.stats.flit_hops, net.cycle)
+    (net.stats().flit_hops, net.cycle())
+}
+
+/// Drain-heavy workload: one row collects per burst while the rest of
+/// the mesh idles, with quiescent gaps between bursts.
+fn sparse<K: SimKernel>(mut net: K, cfg: &SimConfig, bursts: u64) -> (u64, u64) {
+    let mut posted = 0u64;
+    for b in 0..bursts {
+        let y = (b as usize) % cfg.mesh_rows;
+        for x in 0..cfg.mesh_cols {
+            net.post_result(
+                b * SPARSE_GAP + 1,
+                Coord::new(x as u16, y as u16),
+                cfg.pes_per_router as u32,
+            );
+            posted += cfg.pes_per_router as u64;
+        }
+    }
+    let ok = net.run_until_delivered(posted, 50_000_000);
+    assert!(ok, "sparse run stalled");
+    (net.stats().flit_hops, net.cycle())
+}
+
+struct Measured {
+    hops: u64,
+    cycles: u64,
+    t: Timing,
+}
+
+impl Measured {
+    fn cycles_per_sec(&self) -> f64 {
+        self.cycles as f64 / (self.t.median_ns as f64 / 1e9)
+    }
+
+    fn hops_per_sec(&self) -> f64 {
+        self.hops as f64 / (self.t.median_ns as f64 / 1e9)
+    }
+}
+
+fn measure<K: SimKernel>(
+    reps: usize,
+    make: impl Fn() -> K,
+    run: impl Fn(K) -> (u64, u64),
+) -> Measured {
+    // The workloads are deterministic, so the (hops, cycles) of the last
+    // timed rep represent every rep — no extra untimed run needed
+    // (time_it already does one warm-up internally).
+    let mut last = (0u64, 0u64);
+    let t = time_it(reps, || {
+        last = run(make());
+        last
+    });
+    Measured { hops: last.0, cycles: last.1, t }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record(
+    report: &mut BenchReport,
+    workload: &str,
+    kernel: &str,
+    mesh: usize,
+    n: usize,
+    coll: Collection,
+    m: &Measured,
+) {
+    report.add(BenchReport::point(
+        &[("name", workload), ("kernel", kernel), ("collection", coll.label())],
+        &[
+            ("mesh", mesh as f64),
+            ("n", n as f64),
+            ("cycles", m.cycles as f64),
+            ("flit_hops", m.hops as f64),
+            ("median_ns", m.t.median_ns as f64),
+            ("cycles_per_sec", m.cycles_per_sec()),
+            ("hops_per_sec", m.hops_per_sec()),
+        ],
+    ));
 }
 
 fn main() {
-    for (mesh, n) in [(8usize, 4usize), (16, 4), (16, 8)] {
+    let args = bench_args();
+    let reps = if args.quick { 2 } else { 5 };
+    let matrix: &[(usize, usize)] =
+        if args.quick { &[(16, 8)] } else { &[(8, 4), (16, 4), (16, 8)] };
+    let mut report = BenchReport::new("sim_hotpath", args.quick);
+
+    for &(mesh, n) in matrix {
         let cfg = SimConfig::table1(mesh, n);
         for coll in [Collection::Gather, Collection::RepetitiveUnicast] {
-            let (hops, cycles) = saturate(&cfg, coll, 16);
-            let t = time_it(5, || saturate(&cfg, coll, 16));
-            let hops_per_sec = hops as f64 / (t.median_ns as f64 / 1e9);
-            let cyc_per_sec = cycles as f64 / (t.median_ns as f64 / 1e9);
-            println!(
-                "{mesh:>2}x{mesh} n={n} {:<7} {hops:>7} flit-hops / {cycles:>6} cycles in {:>9}  -> {:>5.1}M hops/s, {:>5.1}M cycles/s",
-                match coll { Collection::Gather => "gather", _ => "RU" },
-                fmt_ns(t.median_ns),
-                hops_per_sec / 1e6,
-                cyc_per_sec / 1e6,
-            );
+            for (workload, run_ev, run_rf) in [
+                (
+                    "saturate",
+                    measure(reps, || Network::new(&cfg, coll), |k| {
+                        saturate(k, &cfg, SATURATE_ROUNDS)
+                    }),
+                    measure(reps, || ReferenceNetwork::new(&cfg, coll), |k| {
+                        saturate(k, &cfg, SATURATE_ROUNDS)
+                    }),
+                ),
+                (
+                    "sparse",
+                    measure(reps, || Network::new(&cfg, coll), |k| {
+                        sparse(k, &cfg, SPARSE_BURSTS)
+                    }),
+                    measure(reps, || ReferenceNetwork::new(&cfg, coll), |k| {
+                        sparse(k, &cfg, SPARSE_BURSTS)
+                    }),
+                ),
+            ] {
+                // The bench doubles as a coarse equivalence check; the
+                // real suite is tests/golden_kernel.rs.
+                assert_eq!(
+                    (run_ev.hops, run_ev.cycles),
+                    (run_rf.hops, run_rf.cycles),
+                    "{workload} {mesh}x{mesh} n={n} {}: kernels diverged",
+                    coll.label()
+                );
+                let speedup = run_rf.t.median_ns as f64 / run_ev.t.median_ns as f64;
+                println!(
+                    "{mesh:>2}x{mesh} n={n} {:<6} {workload:<8} event {:>9} | reference {:>9} \
+                     | {:>5.1}M cyc/s vs {:>5.1}M | speedup {speedup:>5.2}x",
+                    coll.label(),
+                    fmt_ns(run_ev.t.median_ns),
+                    fmt_ns(run_rf.t.median_ns),
+                    run_ev.cycles_per_sec() / 1e6,
+                    run_rf.cycles_per_sec() / 1e6,
+                );
+                record(&mut report, workload, "event", mesh, n, coll, &run_ev);
+                record(&mut report, workload, "reference", mesh, n, coll, &run_rf);
+                report.add(BenchReport::point(
+                    &[("name", "speedup"), ("workload", workload), ("collection", coll.label())],
+                    &[("mesh", mesh as f64), ("n", n as f64), ("event_over_reference", speedup)],
+                ));
+            }
         }
     }
 
@@ -51,8 +192,26 @@ fn main() {
     let layer = &alexnet::conv_layers()[2];
     let mut cfg = SimConfig::table1_16x16(8);
     cfg.trace_driven = true;
-    let t = time_it(5, || Experiment::proposed(cfg.clone()).run_layer(layer));
-    println!("\nlayer sim (16x16, n=8, gather, AlexNet conv3): {t}");
-    let t = time_it(5, || Experiment::baseline_ru(cfg.clone()).run_layer(layer));
-    println!("layer sim (16x16, n=8, RU,     AlexNet conv3): {t}");
+    for coll in [Collection::Gather, Collection::RepetitiveUnicast] {
+        let exp = match coll {
+            Collection::Gather => Experiment::proposed(cfg.clone()),
+            _ => Experiment::baseline_ru(cfg.clone()),
+        };
+        let t = time_it(reps, || exp.run_layer(layer));
+        let label = format!("{},", coll.label());
+        println!("layer sim (16x16, n=8, {label:<6} AlexNet conv3): {t}");
+        report.add(BenchReport::point(
+            &[("name", "layer"), ("kernel", "event"), ("collection", coll.label())],
+            &[
+                ("mesh", 16.0),
+                ("n", 8.0),
+                ("median_ns", t.median_ns as f64),
+                ("ns_per_layer", t.median_ns as f64),
+            ],
+        ));
+    }
+
+    if let Some(path) = &args.json {
+        report.write(path).expect("failed to write bench JSON");
+    }
 }

@@ -30,8 +30,10 @@
 //! uniform plan's total over the searched grid (asserted in
 //! `tests/network_exec.rs`).
 
+use std::sync::Arc;
+
 use crate::config::{SimConfig, Streaming};
-use crate::dataflow::run_layer;
+use crate::dataflow::run_layer_shared;
 use crate::models::{ConvLayer, LayerInfo, Network};
 use crate::plan::{
     bus_policy_grid, mesh_policy_grid, reload_cycles, reload_net_stats, LayerPolicy, NetworkPlan,
@@ -122,8 +124,10 @@ fn evaluate_layer(
     input_words: u64,
     charge_reload: bool,
 ) -> LayerExecution {
-    let lcfg = policy.apply(cfg);
-    let run = run_layer(&lcfg, policy.streaming, policy.collection, layer);
+    // One SimConfig clone per (layer, policy) — the policy application —
+    // shared from here on (`Network` and the power roll-up take the Arc).
+    let lcfg = Arc::new(policy.apply(cfg));
+    let run = run_layer_shared(&lcfg, policy.streaming, policy.collection, layer);
     let reload = if charge_reload {
         reload_cycles(&lcfg, policy.streaming, input_words)
     } else {
@@ -361,6 +365,7 @@ pub fn best_plan(cfg: &SimConfig, model: &Network) -> NetworkPlan {
 mod tests {
     use super::*;
     use crate::config::{Collection, DataflowKind};
+    use crate::dataflow::run_layer;
 
     fn tiny_model() -> Network {
         Network::new(

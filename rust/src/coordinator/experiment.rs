@@ -2,8 +2,10 @@
 //! scheme) applied to a workload. This is the unit every figure sweep and
 //! bench composes.
 
+use std::sync::Arc;
+
 use crate::config::{Collection, SimConfig, Streaming};
-use crate::dataflow::{run_layer, LayerRunResult};
+use crate::dataflow::{run_layer_shared, LayerRunResult};
 use crate::models::ConvLayer;
 use crate::power::{power_report, PowerReport};
 
@@ -56,9 +58,13 @@ impl Experiment {
     }
 
     pub fn run_layer(&self, layer: &ConvLayer) -> LayerReport {
-        let run = run_layer(&self.cfg, self.streaming, self.collection, layer);
+        self.run_layer_with(&Arc::new(self.cfg.clone()), layer)
+    }
+
+    fn run_layer_with(&self, cfg: &Arc<SimConfig>, layer: &ConvLayer) -> LayerReport {
+        let run = run_layer_shared(cfg, self.streaming, self.collection, layer);
         let power = power_report(
-            &self.cfg,
+            cfg,
             self.streaming,
             self.collection,
             &run.net,
@@ -69,7 +75,11 @@ impl Experiment {
     }
 
     pub fn run_model(&self, layers: &[ConvLayer]) -> ModelReport {
-        let layers: Vec<LayerReport> = layers.iter().map(|l| self.run_layer(l)).collect();
+        // One shared config for the whole model: every layer's `Network`
+        // clones the `Arc`, not the `SimConfig`.
+        let cfg = Arc::new(self.cfg.clone());
+        let layers: Vec<LayerReport> =
+            layers.iter().map(|l| self.run_layer_with(&cfg, l)).collect();
         let total_cycles = layers.iter().map(|l| l.run.total_cycles).sum();
         let total_energy_j = layers.iter().map(|l| l.power.total_j).sum();
         ModelReport { layers, total_cycles, total_energy_j }

@@ -31,6 +31,8 @@
 //! and extrapolates total latency and event counts. `EXPERIMENTS.md`
 //! records the cap-sensitivity study validating this.
 
+use std::sync::Arc;
+
 use crate::config::{Collection, SimConfig, Streaming};
 use crate::models::ConvLayer;
 use crate::noc::network::{Network, StreamEdge};
@@ -80,13 +82,36 @@ pub fn run_layer(
     collection: Collection,
     layer: &ConvLayer,
 ) -> LayerRunResult {
+    run_layer_shared(&Arc::new(cfg.clone()), streaming, collection, layer)
+}
+
+/// [`run_layer`] over an already-shared config: callers that evaluate
+/// many (layer, policy) points — the executor, the plan search, the
+/// figure sweeps — hand the same `Arc` to every simulation instead of
+/// deep-cloning `SimConfig` per constructed `Network`.
+pub fn run_layer_shared(
+    cfg: &Arc<SimConfig>,
+    streaming: Streaming,
+    collection: Collection,
+    layer: &ConvLayer,
+) -> LayerRunResult {
     let mapping = build(cfg, layer);
-    run_layer_mapped(cfg, streaming, collection, layer, mapping.as_ref())
+    run_layer_mapped_shared(cfg, streaming, collection, layer, mapping.as_ref())
 }
 
 /// Simulate `layer` under an explicit dataflow mapping.
 pub fn run_layer_mapped(
     cfg: &SimConfig,
+    streaming: Streaming,
+    collection: Collection,
+    layer: &ConvLayer,
+    mapping: &dyn Dataflow,
+) -> LayerRunResult {
+    run_layer_mapped_shared(&Arc::new(cfg.clone()), streaming, collection, layer, mapping)
+}
+
+fn run_layer_mapped_shared(
+    cfg: &Arc<SimConfig>,
     streaming: Streaming,
     collection: Collection,
     layer: &ConvLayer,
@@ -158,7 +183,7 @@ fn extrapolate(
 }
 
 fn run_bus_layer(
-    cfg: &SimConfig,
+    cfg: &Arc<SimConfig>,
     streaming: Streaming,
     collection: Collection,
     layer: &ConvLayer,
@@ -178,7 +203,7 @@ fn run_bus_layer(
     let per_round = mapping.traffic_per_round(cfg).payloads;
     let payloads_per_node = mapping.psum_collection().payloads_per_node;
 
-    let mut net = Network::new(cfg, collection);
+    let mut net = Network::shared(cfg.clone(), collection);
     let mut completions = Vec::with_capacity(sim_rounds as usize);
     // Generous bound: rounds can never take longer than their traffic
     // serialized one flit at a time over the full mesh.
@@ -238,7 +263,7 @@ fn apply_accumulation_counts(result: &mut LayerRunResult, cfg: &SimConfig, mappi
 }
 
 fn run_mesh_layer(
-    cfg: &SimConfig,
+    cfg: &Arc<SimConfig>,
     collection: Collection,
     layer: &ConvLayer,
     mapping: &dyn Dataflow,
@@ -255,7 +280,7 @@ fn run_mesh_layer(
     let col_streams = if words.col > 0 { cfg.mesh_cols as u64 } else { 0 };
     let streams_per_round = row_streams + col_streams;
 
-    let mut net = Network::new(cfg, collection);
+    let mut net = Network::shared(cfg.clone(), collection);
     let mut completions = Vec::with_capacity(sim_rounds as usize);
     // Mesh streams serialize at worst one flit/cycle per row with crossing
     // contention; bound generously.

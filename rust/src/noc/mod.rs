@@ -5,17 +5,24 @@
 //! contributions: gather-supported routing (Algorithm 1, [`gather`]) and
 //! mesh-borne operand multicast streams (the gather-only baseline of [27]).
 //!
-//! See [`network::Network`] for the simulator entry point.
+//! See [`network::Network`] for the simulator entry point. The cycle
+//! kernel is event-driven (active-router set + calendar-queue schedules,
+//! see the [`network`] module docs); the pre-refactor kernel survives as
+//! [`reference::ReferenceNetwork`], the golden twin the equivalence suite
+//! and the hot-path bench compare against.
 
 pub mod buffer;
+pub mod calendar;
 pub mod flit;
 pub mod gather;
 pub mod network;
+pub mod reference;
 pub mod router;
 pub mod routing;
 pub mod stats;
 
 pub use flit::{Coord, Flit, FlitType, PacketDesc, PacketId, PacketType};
 pub use network::{Network, StreamEdge};
+pub use reference::{ReferenceNetwork, SimKernel};
 pub use routing::{Algorithm, Port};
 pub use stats::{BusStats, NetStats};

@@ -1,4 +1,4 @@
-//! The cycle-accurate mesh network simulator.
+//! The cycle-accurate mesh network simulator — event-driven core.
 //!
 //! One [`Network`] owns every router ([`RouterState`]), the inter-router
 //! links, the NI-side gather machinery ([`NiState`]) and the injection
@@ -46,6 +46,43 @@
 //! directly instead of holding credits. `VcBuffer::push` panics on
 //! overflow, so any credit-protocol violation fails loudly in simulation.
 //!
+//! ## The active-router set
+//!
+//! The per-cycle phases below do **not** scan the whole `rows×cols` mesh:
+//! a dense bitset (`active`, one bit per router, iterated in ascending
+//! index order so arbitration and boarding order match a full scan
+//! exactly) tracks the routers that may have work. The invariant is:
+//!
+//! > **a router outside the set has no work and can receive none without
+//! > a wakeup** — no buffered flit, no queued or in-flight injector
+//! > packet, no armed δ timeout with pending payloads, no backlogged
+//! > round.
+//!
+//! Wakeups are exactly the events that create such work: a buffer write
+//! (link arrival or local injection), an NI post activating or
+//! backlogging a round, and an injector push. Credit refunds need no
+//! wakeup: a flit blocked on credits is still buffered upstream, so the
+//! upstream router never left the set. Routers are retired from the set
+//! in one sweep at the end of each cycle (`retire_idle_routers`).
+//! Under saturating traffic the set degenerates to "all routers" and the
+//! kernel behaves like the classic full scan; in the common drain-tail
+//! and gather-window phases it shrinks to the handful of routers that
+//! still hold flits — the dominant cost before this rewrite (the frozen
+//! pre-refactor kernel is kept in [`super::reference`] and the golden
+//! suite pins bit-identical [`NetStats`] between the two).
+//!
+//! ## Event schedules and fast-forward
+//!
+//! Scheduled NI posts and operand streams live in two calendar queues
+//! ([`super::calendar::Calendar`]) — O(1) per cycle instead of a
+//! `BTreeMap` descent — and quiescence is an O(1) counter check
+//! (`flits_active`, `busy_injectors`, `backlogged_nodes`). When the
+//! network is quiescent, [`Network::run_until`] jumps the clock straight
+//! to [`Network::next_event_cycle`] (earliest scheduled post, stream, or
+//! armed δ expiry) instead of ticking. The jump is sound exactly because
+//! quiescence means no component can make progress on its own: every
+//! future state change is initiated by a scheduled event.
+//!
 //! ## Per-cycle ordering
 //!
 //! 1. apply credit refunds scheduled last cycle;
@@ -58,7 +95,8 @@
 //!    boarding in step 2 runs strictly before steps 6/7 so a boarded NI
 //!    never stages a redundant packet in the same cycle);
 //! 6. NI injection sources feed one flit each into their local buffers;
-//! 7. gather/INA timeout staging (one-cycle packet assembly before entry).
+//! 7. gather/INA timeout staging (one-cycle packet assembly before entry);
+//! 8. retire work-less routers from the active set.
 //!
 //! ## In-Network Accumulation ([`Collection::Ina`])
 //!
@@ -93,9 +131,11 @@
 //! streaming buses of `crate::streaming` (which bypass this module
 //! entirely).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 use super::buffer::VcState;
+use super::calendar::Calendar;
 use super::flit::{Coord, Flit, PacketDesc, PacketId, PacketType};
 use super::gather::{effective_delta, try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
 use super::router::{refresh_vc_state, RouterState};
@@ -159,9 +199,15 @@ struct NiPost {
     space: u64,
 }
 
+/// A deferred operand-stream injection.
+type StreamPost = (usize, Port, PacketDesc);
+
 /// The simulator.
 pub struct Network {
-    pub cfg: SimConfig,
+    /// Shared configuration: sweeps construct hundreds of `Network`s from
+    /// one config, so it is reference-counted instead of deep-cloned per
+    /// instance ([`Network::shared`]).
+    pub cfg: Arc<SimConfig>,
     pub collection: Collection,
     alg: Algorithm,
     cols: usize,
@@ -177,8 +223,11 @@ pub struct Network {
     credit_refunds: Vec<(usize, usize, usize)>,
     /// Reused buffer for `apply_credit_refunds`.
     credit_scratch: Vec<(usize, usize, usize)>,
-    ni_posts: BTreeMap<u64, Vec<NiPost>>,
-    stream_posts: BTreeMap<u64, Vec<(usize, Port, PacketDesc)>>,
+    ni_posts: Calendar<NiPost>,
+    stream_posts: Calendar<StreamPost>,
+    /// Reused drain buffers for `apply_posts` (no steady-state allocation).
+    ni_scratch: Vec<NiPost>,
+    stream_scratch: Vec<StreamPost>,
     pub stats: NetStats,
     pub cycle: u64,
     /// Flits resident in buffers or on links.
@@ -194,17 +243,53 @@ pub struct Network {
     pub last_eject_cycle: u64,
     /// Nodes with rounds waiting behind a busy NI (see `apply_ni_post`).
     backlogged_nodes: usize,
+    /// Injection sources holding a queued or in-flight packet — the O(1)
+    /// quiescence check the idle fast-forward relies on.
+    busy_injectors: usize,
     /// Buffered flits per router — lets the VA/SA loops skip idle routers
     /// entirely (the dominant cost at low-to-medium load; see
     /// EXPERIMENTS.md §Perf).
     occupancy: Vec<u32>,
+    /// Active-router set: bit `r` is set while router `r` may have work
+    /// (see the module docs for the invariant). Iterated in ascending
+    /// index order, so phase behavior is bit-identical to a full scan.
+    active: Vec<u64>,
     next_pid: PacketId,
 }
 
 const PORTS: usize = Port::COUNT;
 
+/// Visit every router in the active set, in ascending index order — the
+/// order a full `0..rows·cols` scan would use, which keeps arbitration,
+/// boarding and pid-allocation order bit-identical to the pre-refactor
+/// kernel. Each word is snapshotted before the body runs, so the body may
+/// mutate `$net` freely (including re-marking already-visited routers);
+/// bits set *during* iteration are picked up next cycle, which is sound
+/// because no phase creates same-phase work on another router (see the
+/// module docs). `continue`/`return` inside the body behave as in a plain
+/// nested loop. This is the single copy of the bitset index math.
+macro_rules! for_each_active {
+    ($net:ident, $r:ident, $body:block) => {
+        for w in 0..$net.active.len() {
+            let mut bits = $net.active[w];
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let $r = (w << 6) + b;
+                $body
+            }
+        }
+    };
+}
+
 impl Network {
     pub fn new(cfg: &SimConfig, collection: Collection) -> Self {
+        Self::shared(Arc::new(cfg.clone()), collection)
+    }
+
+    /// Construct a network sharing `cfg` with the caller (and with any
+    /// sibling networks of the same sweep) instead of deep-cloning it.
+    pub fn shared(cfg: Arc<SimConfig>, collection: Collection) -> Self {
         cfg.validate().expect("invalid SimConfig");
         let (cols, rows, vcs) = (cfg.mesh_cols, cfg.mesh_rows, cfg.vcs);
         let mut routers = Vec::with_capacity(cols * rows);
@@ -234,7 +319,6 @@ impl Network {
         }
         let link_window = (cfg.link_latency + 2) as usize;
         Network {
-            cfg: cfg.clone(),
             collection,
             alg: Algorithm::Xy,
             cols,
@@ -246,8 +330,10 @@ impl Network {
             arrivals: (0..link_window).map(|_| Vec::new()).collect(),
             credit_refunds: Vec::new(),
             credit_scratch: Vec::new(),
-            ni_posts: BTreeMap::new(),
-            stream_posts: BTreeMap::new(),
+            ni_posts: Calendar::new(),
+            stream_posts: Calendar::new(),
+            ni_scratch: Vec::new(),
+            stream_scratch: Vec::new(),
             stats: NetStats::default(),
             cycle: 0,
             flits_active: 0,
@@ -257,8 +343,11 @@ impl Network {
             result_packets_ejected: 0,
             last_eject_cycle: 0,
             backlogged_nodes: 0,
+            busy_injectors: 0,
             occupancy: vec![0; cols * rows],
+            active: vec![0; (cols * rows).div_ceil(64)],
             next_pid: 1,
+            cfg,
         }
     }
 
@@ -279,6 +368,75 @@ impl Network {
     }
 
     // ------------------------------------------------------------------
+    // Active-set and quiescence bookkeeping
+    // ------------------------------------------------------------------
+
+    /// Wake a router: it gained work (buffer write, injector push, NI
+    /// activation or backlog) and must be visited by the phase loops.
+    #[inline]
+    fn mark_active(&mut self, router: usize) {
+        self.active[router >> 6] |= 1u64 << (router & 63);
+    }
+
+    /// The active-set invariant, evaluated for one router: any buffered
+    /// flit, injector work, armed δ timeout with pending payloads, or
+    /// backlogged round keeps it in the set.
+    fn router_has_work(&self, r: usize) -> bool {
+        if self.occupancy[r] > 0 {
+            return true;
+        }
+        let base = r * PORTS;
+        for inj in &self.injectors[base..base + PORTS] {
+            if inj.cur.is_some() || !inj.queue.is_empty() {
+                return true;
+            }
+        }
+        let ni = &self.ni[r];
+        (ni.armed && ni.pending > 0) || !ni.backlog.is_empty()
+    }
+
+    /// End-of-cycle sweep: drop routers that no longer satisfy
+    /// `router_has_work` from the active set. (The one bitset walk not on
+    /// `for_each_active!`: it rewrites each word as it goes.)
+    fn retire_idle_routers(&mut self) {
+        for w in 0..self.active.len() {
+            let mut bits = self.active[w];
+            let mut keep = bits;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                if !self.router_has_work((w << 6) + b) {
+                    keep &= !(1u64 << b);
+                }
+            }
+            self.active[w] = keep;
+        }
+    }
+
+    /// Enqueue a packet on an injection source, maintaining the busy
+    /// counter and the active set.
+    fn push_injector(&mut self, ii: usize, entry: InjEntry) {
+        let inj = &mut self.injectors[ii];
+        if inj.cur.is_none() && inj.queue.is_empty() {
+            self.busy_injectors += 1;
+        }
+        inj.queue.push_back(entry);
+        self.mark_active(ii / PORTS);
+    }
+
+    /// Any NI holding an armed δ timeout with pending payloads? Armed NIs
+    /// are always in the active set, so only it is scanned.
+    fn has_armed_pending(&self) -> bool {
+        for_each_active!(self, r, {
+            let ni = &self.ni[r];
+            if ni.armed && ni.pending > 0 {
+                return true;
+            }
+        });
+        false
+    }
+
+    // ------------------------------------------------------------------
     // Scheduling API (used by the round driver)
     // ------------------------------------------------------------------
 
@@ -288,10 +446,7 @@ impl Network {
         assert!(at >= self.cycle, "cannot post results in the past");
         let dst = self.memory_of_row(node.y as usize);
         let idx = self.node_idx(node);
-        self.ni_posts
-            .entry(at)
-            .or_default()
-            .push(NiPost { node: idx, payloads, dst, space: at });
+        self.ni_posts.push(at, NiPost { node: idx, payloads, dst, space: at });
     }
 
     /// Schedule an operand stream of `words` payload words to enter the
@@ -330,7 +485,7 @@ impl Network {
             deliver_along_path: true,
             carried_payloads: 0,
         };
-        self.stream_posts.entry(at).or_default().push((router, port, desc));
+        self.stream_posts.push(at, (router, port, desc));
     }
 
     /// Lowest cycle at which something is scheduled to happen, given an
@@ -340,29 +495,32 @@ impl Network {
         let mut consider = |c: u64| {
             next = Some(next.map_or(c, |n: u64| n.min(c)));
         };
-        if let Some((&c, _)) = self.ni_posts.iter().next() {
+        if let Some(c) = self.ni_posts.next_cycle() {
             consider(c);
         }
-        if let Some((&c, _)) = self.stream_posts.iter().next() {
+        if let Some(c) = self.stream_posts.next_cycle() {
             consider(c);
         }
-        for ni in &self.ni {
+        // Armed δ timers live only on active routers.
+        for_each_active!(self, r, {
+            let ni = &self.ni[r];
             if ni.armed && ni.pending > 0 {
                 consider(ni.deadline.saturating_sub(self.cfg.kappa()).max(self.cycle + 1));
             }
-        }
+        });
         next
     }
 
-    /// True when no flit is in flight and no injector holds work.
+    /// True when no flit is in flight and no injector holds work. O(1):
+    /// the counters are maintained at every mutation site.
     pub fn quiescent(&self) -> bool {
-        self.flits_active == 0
-            && self.backlogged_nodes == 0
-            && self.injectors.iter().all(|i| i.queue.is_empty() && i.cur.is_none())
+        self.flits_active == 0 && self.backlogged_nodes == 0 && self.busy_injectors == 0
     }
 
     /// Advance until `pred` holds or `max_cycle` is reached. Returns true
-    /// if the predicate was satisfied. Fast-forwards through idle gaps.
+    /// if the predicate was satisfied. Fast-forwards through idle gaps:
+    /// with the network quiescent, the clock jumps straight to the next
+    /// scheduled post, stream, or armed δ expiry.
     pub fn run_until(&mut self, mut pred: impl FnMut(&Network) -> bool, max_cycle: u64) -> bool {
         while self.cycle < max_cycle {
             if pred(self) {
@@ -388,7 +546,7 @@ impl Network {
                 n.quiescent()
                     && n.ni_posts.is_empty()
                     && n.stream_posts.is_empty()
-                    && n.ni.iter().all(|s| !(s.armed && s.pending > 0))
+                    && !n.has_armed_pending()
             },
             max_cycle,
         )
@@ -407,6 +565,7 @@ impl Network {
         self.feed_injectors();
         self.gather_timeouts();
         self.drain_backlogs();
+        self.retire_idle_routers();
         self.cycle += 1;
         self.stats.cycles_simulated = self.cycle;
     }
@@ -414,6 +573,8 @@ impl Network {
     fn apply_credit_refunds(&mut self) {
         // Swap-with-scratch keeps the Vec's capacity across cycles (the
         // allocator was ~1/3 of the cycle cost before; EXPERIMENTS §Perf).
+        // No wakeup here: a refund only matters to a router still holding
+        // the blocked flit, which therefore never left the active set.
         std::mem::swap(&mut self.credit_refunds, &mut self.credit_scratch);
         for &(router, out_port, vc) in &self.credit_scratch {
             if let Some(ct) = self.routers[router].out_credits[out_port].as_mut() {
@@ -500,17 +661,17 @@ impl Network {
             deliver_along_path: false,
             carried_payloads: 0,
         };
-        self.injectors[node * PORTS + Port::Local.index()].queue.push_back(InjEntry {
-            desc,
-            from_ni: true,
-            not_before: self.cycle + 1,
-        });
+        self.push_injector(
+            node * PORTS + Port::Local.index(),
+            InjEntry { desc, from_ni: true, not_before: self.cycle + 1 },
+        );
         let ni = &mut self.ni[node];
         ni.staged = true;
         ni.armed = false;
     }
 
-    /// Buffer write common to link arrivals and local injection.
+    /// Buffer write common to link arrivals and local injection. This is
+    /// one of the active-set wakeup points.
     fn write_flit(&mut self, router: usize, port: Port, vc: usize, flit: Flit) {
         let vcs = self.vcs;
         let r = &mut self.routers[router];
@@ -530,32 +691,30 @@ impl Network {
             r.inputs[idx].state =
                 refresh_vc_state(&r.inputs[idx], &mut r.meta[idx], self.cycle, self.cfg.kappa());
         }
+        self.mark_active(router);
     }
 
     fn apply_posts(&mut self) {
-        // Operand streams.
-        while let Some((&c, _)) = self.stream_posts.iter().next() {
-            if c > self.cycle {
-                break;
-            }
-            let (_, entries) = self.stream_posts.pop_first().unwrap();
-            for (router, port, desc) in entries {
-                self.stats.packets_injected += 1;
-                self.injectors[router * PORTS + port.index()]
-                    .queue
-                    .push_back(InjEntry { desc, from_ni: false, not_before: self.cycle });
-            }
+        // Operand streams first, then result posts — ascending cycle
+        // order, FIFO within a cycle: the order the BTreeMap schedules
+        // applied before the calendar queues replaced them.
+        let mut scratch = std::mem::take(&mut self.stream_scratch);
+        self.stream_posts.drain_up_to(self.cycle, &mut scratch);
+        for (router, port, desc) in scratch.drain(..) {
+            self.stats.packets_injected += 1;
+            self.push_injector(
+                router * PORTS + port.index(),
+                InjEntry { desc, from_ni: false, not_before: self.cycle },
+            );
         }
-        // Result posts.
-        while let Some((&c, _)) = self.ni_posts.iter().next() {
-            if c > self.cycle {
-                break;
-            }
-            let (_, posts) = self.ni_posts.pop_first().unwrap();
-            for post in posts {
-                self.apply_ni_post(post);
-            }
+        self.stream_scratch = scratch;
+
+        let mut scratch = std::mem::take(&mut self.ni_scratch);
+        self.ni_posts.drain_up_to(self.cycle, &mut scratch);
+        for post in scratch.drain(..) {
+            self.apply_ni_post(post);
         }
+        self.ni_scratch = scratch;
     }
 
     fn apply_ni_post(&mut self, post: NiPost) {
@@ -564,6 +723,7 @@ impl Network {
         // up (PE output registers stall) — this is the backpressure through
         // which network congestion stretches the round pipeline (Δ_R/Δ_G).
         self.ni[post.node].dst = post.dst;
+        self.mark_active(post.node);
         if self.ni_busy(post.node) {
             self.ni[post.node].backlog.push_back((post.payloads, post.space));
             self.backlogged_nodes += 1;
@@ -596,6 +756,7 @@ impl Network {
                 };
                 let src = self.routers[node].coord;
                 let dst = self.ni[node].dst;
+                let len_flits = self.cfg.unicast_packet_flits as u32;
                 let mut remaining = payloads;
                 while remaining > 0 {
                     let carried = remaining.min(per_pkt);
@@ -605,7 +766,7 @@ impl Network {
                         ptype: PacketType::Unicast,
                         src,
                         dst,
-                        len_flits: self.cfg.unicast_packet_flits as u32,
+                        len_flits,
                         aspace: 0,
                         space: 0,
                         inject_cycle: self.cycle,
@@ -613,9 +774,10 @@ impl Network {
                         carried_payloads: carried,
                     };
                     self.stats.packets_injected += 1;
-                    self.injectors[node * PORTS + Port::Local.index()]
-                        .queue
-                        .push_back(InjEntry { desc, from_ni: false, not_before: self.cycle });
+                    self.push_injector(
+                        node * PORTS + Port::Local.index(),
+                        InjEntry { desc, from_ni: false, not_before: self.cycle },
+                    );
                 }
             }
             Collection::Gather => {
@@ -655,52 +817,56 @@ impl Network {
     }
 
     /// Activate backlogged rounds on nodes whose NI has drained.
+    /// Backlogged nodes are always in the active set.
     fn drain_backlogs(&mut self) {
         if self.backlogged_nodes == 0 {
             return;
         }
-        for node in 0..self.ni.len() {
+        for_each_active!(self, node, {
             if self.ni[node].backlog.is_empty() || self.ni_busy(node) {
                 continue;
             }
             let (payloads, space) = self.ni[node].backlog.pop_front().unwrap();
             self.backlogged_nodes -= 1;
             self.activate_round(node, payloads, space);
-        }
+        });
     }
 
     fn vc_allocate(&mut self) {
+        for_each_active!(self, ridx, {
+            self.vc_allocate_router(ridx);
+        });
+    }
+
+    fn vc_allocate_router(&mut self, ridx: usize) {
         let vcs = self.vcs;
-        for ridx in 0..self.routers.len() {
-            let mut mask = self.routers[ridx].nonempty_mask;
-            while mask != 0 {
-                let idx = mask.trailing_zeros() as usize;
-                mask &= mask - 1;
-                let dst = {
-                    let r = &self.routers[ridx];
-                    match (r.inputs[idx].state, r.inputs[idx].front()) {
-                        (VcState::Routing { sa_ready_cycle }, Some(f))
-                            // VA completes one cycle before SA readiness.
-                            if self.cycle + 1 >= sa_ready_cycle =>
-                        {
-                            f.dst
-                        }
-                        _ => continue,
+        let mut mask = self.routers[ridx].nonempty_mask;
+        while mask != 0 {
+            let idx = mask.trailing_zeros() as usize;
+            mask &= mask - 1;
+            let dst = {
+                let r = &self.routers[ridx];
+                match (r.inputs[idx].state, r.inputs[idx].front()) {
+                    (VcState::Routing { sa_ready_cycle }, Some(f))
+                        // VA completes one cycle before SA readiness.
+                        if self.cycle + 1 >= sa_ready_cycle =>
+                    {
+                        f.dst
                     }
-                };
-                let here = self.routers[ridx].coord;
-                let out_port = route(self.alg, here, dst);
-                let in_port = idx / vcs;
-                let in_vc = idx % vcs;
-                let granted =
-                    self.routers[ridx].allocate_out_vc(out_port, vcs, (in_port, in_vc));
-                if let Some(out_vc) = granted {
-                    self.stats.vc_allocs += 1;
-                    self.routers[ridx].inputs[idx].state = VcState::Active {
-                        out_port: out_port.index(),
-                        out_vc,
-                    };
+                    _ => continue,
                 }
+            };
+            let here = self.routers[ridx].coord;
+            let out_port = route(self.alg, here, dst);
+            let in_port = idx / vcs;
+            let in_vc = idx % vcs;
+            let granted = self.routers[ridx].allocate_out_vc(out_port, vcs, (in_port, in_vc));
+            if let Some(out_vc) = granted {
+                self.stats.vc_allocs += 1;
+                self.routers[ridx].inputs[idx].state = VcState::Active {
+                    out_port: out_port.index(),
+                    out_vc,
+                };
             }
         }
     }
@@ -708,14 +874,17 @@ impl Network {
     fn switch_allocate(&mut self) {
         let vcs = self.vcs;
         let n = PORTS * vcs;
-        for ridx in 0..self.routers.len() {
+        // The request scratch is initialized once per cycle, not once per
+        // router: `counts` guards which entries are live, so stale slots
+        // from an earlier router are never read.
+        let mut reqs = [[usize::MAX; 16]; PORTS];
+        for_each_active!(self, ridx, {
             if self.routers[ridx].nonempty_mask == 0 {
                 continue;
             }
             // One pass over the occupied VCs collects the eligible
             // requesters per output port; classic separable allocation
             // (one grant per output port, one per input port) follows.
-            let mut reqs = [[usize::MAX; 16]; PORTS];
             let mut counts = [0usize; PORTS];
             {
                 let r = &self.routers[ridx];
@@ -779,7 +948,7 @@ impl Network {
                 in_port_used[idx / vcs] = true;
                 self.routers[ridx].sa_rr[out_port_i] = (idx + 1) % n;
             }
-        }
+        });
     }
 
     /// Execute one SA grant: pop the flit, do gather boarding / stream
@@ -881,6 +1050,13 @@ impl Network {
     /// already buffered): a packet whose flits are still on the wire keeps
     /// wormhole ordering intact and simply merges a cycle later, or
     /// travels on its own.
+    ///
+    /// One order-preserving compaction pass per output port: each entry is
+    /// visited once and either kept (first complete packet of its key, or
+    /// not a complete packet) or absorbed into the survivor recorded for
+    /// its key. This replaced an absorb-and-shift loop that was O(n²) in
+    /// the request count under contention; the surviving request order —
+    /// and therefore round-robin arbitration — is unchanged.
     fn merge_ina_requests(
         &mut self,
         ridx: usize,
@@ -891,28 +1067,34 @@ impl Network {
             if counts[op] < 2 {
                 continue;
             }
-            let mut i = 0;
-            while i < counts[op] {
-                let survivor = reqs[op][i];
-                let Some(key) = self.ina_complete_head(ridx, survivor) else {
-                    i += 1;
-                    continue;
-                };
-                let mut j = i + 1;
-                while j < counts[op] {
-                    let candidate = reqs[op][j];
-                    if self.ina_complete_head(ridx, candidate) == Some(key) {
-                        self.absorb_ina_packet(ridx, candidate, survivor);
-                        for k in j..counts[op] - 1 {
-                            reqs[op][k] = reqs[op][k + 1];
+            // Survivor table: (merge key, input VC of the surviving
+            // packet), at most one per request entry.
+            let mut skeys = [(0u64, Coord::new(0, 0)); 16];
+            let mut sidx = [0usize; 16];
+            let mut nsurv = 0usize;
+            let n_req = counts[op];
+            let mut kept = 0usize;
+            for j in 0..n_req {
+                let idx = reqs[op][j];
+                match self.ina_complete_head(ridx, idx) {
+                    Some(key) => {
+                        if let Some(k) = (0..nsurv).find(|&k| skeys[k] == key) {
+                            self.absorb_ina_packet(ridx, idx, sidx[k]);
+                            continue; // entry leaves the request list
                         }
-                        counts[op] -= 1;
-                    } else {
-                        j += 1;
+                        skeys[nsurv] = key;
+                        sidx[nsurv] = idx;
+                        nsurv += 1;
+                        reqs[op][kept] = idx;
+                        kept += 1;
+                    }
+                    None => {
+                        reqs[op][kept] = idx;
+                        kept += 1;
                     }
                 }
-                i += 1;
             }
+            counts[op] = kept;
         }
     }
 
@@ -1005,13 +1187,11 @@ impl Network {
 
     fn eject(&mut self, flit: Flit) {
         self.stats.flits_ejected += 1;
-        if flit.is_head() {
-            if flit.dst.x as usize >= self.cols {
-                // Result packet reached the row memory element.
-                self.payloads_delivered += flit.carried_payloads as u64;
-                if flit.ptype == PacketType::Gather {
-                    self.gather_packets_ejected += 1;
-                }
+        if flit.is_head() && flit.dst.x as usize >= self.cols {
+            // Result packet reached the row memory element.
+            self.payloads_delivered += flit.carried_payloads as u64;
+            if flit.ptype == PacketType::Gather {
+                self.gather_packets_ejected += 1;
             }
         }
         if flit.is_tail() || flit.packet_len == 1 {
@@ -1040,19 +1220,34 @@ impl Network {
     }
 
     fn feed_injectors(&mut self) {
-        for ridx in 0..self.routers.len() {
+        if self.busy_injectors == 0 {
+            return;
+        }
+        // Busy injectors belong to active routers by the set invariant.
+        for_each_active!(self, ridx, {
+            let base = ridx * PORTS;
             for port_i in 0..PORTS {
-                let ii = ridx * PORTS + port_i;
+                let ii = base + port_i;
                 if self.injectors[ii].cur.is_none() && self.injectors[ii].queue.is_empty() {
                     continue;
                 }
-                self.feed_one_injector(ridx, Port::from_index(port_i));
+                self.feed_one_injector(ridx, Port::from_index(port_i), ii);
             }
+        });
+    }
+
+    /// Feed wrapper maintaining the busy-injector counter: the inner
+    /// logic may complete a packet or cancel a staged one, idling the
+    /// source.
+    fn feed_one_injector(&mut self, ridx: usize, port: Port, ii: usize) {
+        self.feed_one_injector_inner(ridx, port, ii);
+        let inj = &self.injectors[ii];
+        if inj.cur.is_none() && inj.queue.is_empty() {
+            self.busy_injectors -= 1;
         }
     }
 
-    fn feed_one_injector(&mut self, ridx: usize, port: Port) {
-        let ii = ridx * PORTS + port.index();
+    fn feed_one_injector_inner(&mut self, ridx: usize, port: Port, ii: usize) {
         // Start the next packet if idle.
         if self.injectors[ii].cur.is_none() {
             let ready = match self.injectors[ii].queue.front() {
@@ -1138,11 +1333,12 @@ impl Network {
 
     fn gather_timeouts(&mut self) {
         // The δ timeout machinery is shared by gather and INA collection;
-        // RU injects eagerly and never arms it.
+        // RU injects eagerly and never arms it. Armed NIs are always in
+        // the active set.
         if self.collection == Collection::RepetitiveUnicast {
             return;
         }
-        for ridx in 0..self.ni.len() {
+        for_each_active!(self, ridx, {
             let ni = &self.ni[ridx];
             if !(ni.armed && ni.pending > 0 && !ni.staged) {
                 continue;
@@ -1155,7 +1351,7 @@ impl Network {
             if !is_initiator {
                 self.stats.delta_expiries += 1;
             }
-        }
+        });
     }
 
     // Exposed for tests.
@@ -1182,9 +1378,7 @@ impl Network {
     /// once).
     pub fn payloads_in_flight(&self) -> u64 {
         let mut total = 0u64;
-        for posts in self.ni_posts.values() {
-            total += posts.iter().map(|p| p.payloads as u64).sum::<u64>();
-        }
+        total += self.ni_posts.iter().map(|p| p.payloads as u64).sum::<u64>();
         for ni in &self.ni {
             total += ni.pending as u64;
             total += ni.backlog.iter().map(|&(p, _)| p as u64).sum::<u64>();

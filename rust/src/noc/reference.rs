@@ -1,0 +1,1065 @@
+//! The frozen **reference kernel**: the cycle-accurate simulator exactly as
+//! it stood before the event-driven rewrite of [`super::network`].
+//!
+//! This module is the golden twin of the production kernel. It keeps the
+//! original orchestration — full `rows×cols` router scans every cycle,
+//! `BTreeMap` post schedules, O(routers·ports) quiescence checks — on top
+//! of the *same* shared components (`router`, `buffer`, `gather`, `flit`,
+//! `routing`, `stats`), so the two kernels can only diverge in the parts
+//! the rewrite actually changed: scheduling and iteration order.
+//!
+//! Two things depend on it:
+//!
+//! * **the golden equivalence suite** (`tests/golden_kernel.rs`) drives
+//!   both kernels through the [`SimKernel`] trait across the full seed
+//!   matrix (3 collections × 2 dataflows × 3 streaming fabrics) and
+//!   asserts bit-identical [`NetStats`] and final cycle counts;
+//! * **`benches/sim_hotpath.rs`** times both kernels on the same
+//!   workloads, so every bench run reports a true before/after speedup.
+//!
+//! Do **not** optimize this module; its value is staying byte-for-byte
+//! faithful to the pre-refactor behavior. See `ARCHITECTURE.md`,
+//! "Event-driven simulation core".
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::buffer::VcState;
+use super::flit::{Coord, Flit, PacketDesc, PacketId, PacketType};
+use super::gather::{effective_delta, try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
+use super::network::{Network, StreamEdge};
+use super::router::{refresh_vc_state, RouterState};
+use super::routing::{route, Algorithm, Port};
+use super::stats::NetStats;
+use crate::config::{Collection, SimConfig};
+
+/// Uniform driving surface over the event-driven kernel and this frozen
+/// reference kernel. The golden equivalence tests and the hot-path bench
+/// are written once against this trait and instantiated for both.
+pub trait SimKernel {
+    /// Schedule `payloads` partial sums to become ready at `node` at
+    /// cycle `at`, destined for the row memory element.
+    fn post_result(&mut self, at: u64, node: Coord, payloads: u32);
+    /// Schedule an operand stream over the mesh (gather-only fabric).
+    fn post_operand_stream(&mut self, at: u64, edge: StreamEdge, words: u64);
+    /// Run until `payloads_delivered >= target` or `max_cycle`.
+    fn run_until_delivered(&mut self, target: u64, max_cycle: u64) -> bool;
+    /// Run until `stream_tails_ejected >= target` or `max_cycle`.
+    fn run_until_stream_tails(&mut self, target: u64, max_cycle: u64) -> bool;
+    /// Drain everything scheduled; false on `max_cycle` overrun.
+    fn run_until_idle(&mut self, max_cycle: u64) -> bool;
+    fn stats(&self) -> &NetStats;
+    fn cycle(&self) -> u64;
+    fn payloads_delivered(&self) -> u64;
+    fn stream_tails_ejected(&self) -> u64;
+    /// Flits resident in router buffers (0 after a complete drain).
+    fn buffered_flits(&self) -> usize;
+    /// Result payloads still owned by the network (0 after a drain).
+    fn payloads_in_flight(&self) -> u64;
+}
+
+impl SimKernel for Network {
+    fn post_result(&mut self, at: u64, node: Coord, payloads: u32) {
+        Network::post_result(self, at, node, payloads);
+    }
+    fn post_operand_stream(&mut self, at: u64, edge: StreamEdge, words: u64) {
+        Network::post_operand_stream(self, at, edge, words);
+    }
+    fn run_until_delivered(&mut self, target: u64, max_cycle: u64) -> bool {
+        self.run_until(|n| n.payloads_delivered >= target, max_cycle)
+    }
+    fn run_until_stream_tails(&mut self, target: u64, max_cycle: u64) -> bool {
+        self.run_until(|n| n.stream_tails_ejected >= target, max_cycle)
+    }
+    fn run_until_idle(&mut self, max_cycle: u64) -> bool {
+        Network::run_until_idle(self, max_cycle)
+    }
+    fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+    fn cycle(&self) -> u64 {
+        self.cycle
+    }
+    fn payloads_delivered(&self) -> u64 {
+        self.payloads_delivered
+    }
+    fn stream_tails_ejected(&self) -> u64 {
+        self.stream_tails_ejected
+    }
+    fn buffered_flits(&self) -> usize {
+        self.total_buffered_flits()
+    }
+    fn payloads_in_flight(&self) -> u64 {
+        Network::payloads_in_flight(self)
+    }
+}
+
+impl SimKernel for ReferenceNetwork {
+    fn post_result(&mut self, at: u64, node: Coord, payloads: u32) {
+        ReferenceNetwork::post_result(self, at, node, payloads);
+    }
+    fn post_operand_stream(&mut self, at: u64, edge: StreamEdge, words: u64) {
+        ReferenceNetwork::post_operand_stream(self, at, edge, words);
+    }
+    fn run_until_delivered(&mut self, target: u64, max_cycle: u64) -> bool {
+        self.run_until(|n| n.payloads_delivered >= target, max_cycle)
+    }
+    fn run_until_stream_tails(&mut self, target: u64, max_cycle: u64) -> bool {
+        self.run_until(|n| n.stream_tails_ejected >= target, max_cycle)
+    }
+    fn run_until_idle(&mut self, max_cycle: u64) -> bool {
+        ReferenceNetwork::run_until_idle(self, max_cycle)
+    }
+    fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+    fn cycle(&self) -> u64 {
+        self.cycle
+    }
+    fn payloads_delivered(&self) -> u64 {
+        self.payloads_delivered
+    }
+    fn stream_tails_ejected(&self) -> u64 {
+        self.stream_tails_ejected
+    }
+    fn buffered_flits(&self) -> usize {
+        self.total_buffered_flits()
+    }
+    fn payloads_in_flight(&self) -> u64 {
+        ReferenceNetwork::payloads_in_flight(self)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The frozen pre-refactor kernel. Everything below is the original
+// `noc::network` implementation, renamed; comments are trimmed to the
+// load-bearing ones (the production module carries the full docs).
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Arrival {
+    router: usize,
+    port: Port,
+    vc: usize,
+    flit: Flit,
+}
+
+#[derive(Debug)]
+struct InjEntry {
+    desc: PacketDesc,
+    from_ni: bool,
+    not_before: u64,
+}
+
+#[derive(Debug, Default)]
+struct Injector {
+    queue: VecDeque<InjEntry>,
+    cur: Option<(PacketDesc, u32, usize)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct NiPost {
+    node: usize,
+    payloads: u32,
+    dst: Coord,
+    space: u64,
+}
+
+/// The pre-refactor simulator (see module docs).
+pub struct ReferenceNetwork {
+    pub cfg: SimConfig,
+    pub collection: Collection,
+    alg: Algorithm,
+    cols: usize,
+    rows: usize,
+    vcs: usize,
+    routers: Vec<RouterState>,
+    ni: Vec<NiState>,
+    injectors: Vec<Injector>,
+    arrivals: VecDeque<Vec<Arrival>>,
+    credit_refunds: Vec<(usize, usize, usize)>,
+    credit_scratch: Vec<(usize, usize, usize)>,
+    ni_posts: BTreeMap<u64, Vec<NiPost>>,
+    stream_posts: BTreeMap<u64, Vec<(usize, Port, PacketDesc)>>,
+    pub stats: NetStats,
+    pub cycle: u64,
+    flits_active: u64,
+    pub payloads_delivered: u64,
+    pub stream_tails_ejected: u64,
+    pub gather_packets_ejected: u64,
+    pub result_packets_ejected: u64,
+    pub last_eject_cycle: u64,
+    backlogged_nodes: usize,
+    occupancy: Vec<u32>,
+    next_pid: PacketId,
+}
+
+const PORTS: usize = Port::COUNT;
+
+impl ReferenceNetwork {
+    pub fn new(cfg: &SimConfig, collection: Collection) -> Self {
+        cfg.validate().expect("invalid SimConfig");
+        let (cols, rows, vcs) = (cfg.mesh_cols, cfg.mesh_rows, cfg.vcs);
+        let mut routers = Vec::with_capacity(cols * rows);
+        for y in 0..rows {
+            for x in 0..cols {
+                let mut nb = [false; PORTS];
+                nb[Port::North.index()] = y > 0;
+                nb[Port::South.index()] = y + 1 < rows;
+                nb[Port::East.index()] = x + 1 < cols;
+                nb[Port::West.index()] = x > 0;
+                nb[Port::Local.index()] = false;
+                routers.push(RouterState::new(
+                    Coord::new(x as u16, y as u16),
+                    vcs,
+                    cfg.buffer_depth,
+                    &nb,
+                ));
+            }
+        }
+        let mut ni: Vec<NiState> = (0..cols * rows).map(|_| NiState::new()).collect();
+        for y in 0..rows {
+            ni[y * cols].is_initiator = true;
+        }
+        let link_window = (cfg.link_latency + 2) as usize;
+        ReferenceNetwork {
+            cfg: cfg.clone(),
+            collection,
+            alg: Algorithm::Xy,
+            cols,
+            rows,
+            vcs,
+            routers,
+            ni,
+            injectors: (0..cols * rows * PORTS).map(|_| Injector::default()).collect(),
+            arrivals: (0..link_window).map(|_| Vec::new()).collect(),
+            credit_refunds: Vec::new(),
+            credit_scratch: Vec::new(),
+            ni_posts: BTreeMap::new(),
+            stream_posts: BTreeMap::new(),
+            stats: NetStats::default(),
+            cycle: 0,
+            flits_active: 0,
+            payloads_delivered: 0,
+            stream_tails_ejected: 0,
+            gather_packets_ejected: 0,
+            result_packets_ejected: 0,
+            last_eject_cycle: 0,
+            backlogged_nodes: 0,
+            occupancy: vec![0; cols * rows],
+            next_pid: 1,
+        }
+    }
+
+    #[inline]
+    fn node_idx(&self, c: Coord) -> usize {
+        c.y as usize * self.cols + c.x as usize
+    }
+
+    pub fn memory_of_row(&self, y: usize) -> Coord {
+        Coord::new(self.cols as u16, y as u16)
+    }
+
+    fn alloc_pid(&mut self) -> PacketId {
+        let id = self.next_pid;
+        self.next_pid += 1;
+        id
+    }
+
+    pub fn post_result(&mut self, at: u64, node: Coord, payloads: u32) {
+        assert!(at >= self.cycle, "cannot post results in the past");
+        let dst = self.memory_of_row(node.y as usize);
+        let idx = self.node_idx(node);
+        self.ni_posts
+            .entry(at)
+            .or_default()
+            .push(NiPost { node: idx, payloads, dst, space: at });
+    }
+
+    pub fn post_operand_stream(&mut self, at: u64, edge: StreamEdge, words: u64) {
+        assert!(at >= self.cycle, "cannot post streams in the past");
+        let ppf = self.cfg.payloads_per_flit() as u64;
+        let body = words.div_ceil(ppf).max(1);
+        let (router, port, dst) = match edge {
+            StreamEdge::Row(y) => (
+                self.node_idx(Coord::new(0, y as u16)),
+                Port::West,
+                Coord::new(self.cols as u16 - 1, y as u16),
+            ),
+            StreamEdge::Col(x) => (
+                self.node_idx(Coord::new(x as u16, 0)),
+                Port::North,
+                Coord::new(x as u16, self.rows as u16 - 1),
+            ),
+        };
+        let src = match edge {
+            StreamEdge::Row(y) => Coord::new(0, y as u16),
+            StreamEdge::Col(x) => Coord::new(x as u16, 0),
+        };
+        let desc = PacketDesc {
+            id: self.alloc_pid(),
+            ptype: PacketType::Multicast,
+            src,
+            dst,
+            len_flits: (1 + body) as u32,
+            aspace: 0,
+            space: 0,
+            inject_cycle: at,
+            deliver_along_path: true,
+            carried_payloads: 0,
+        };
+        self.stream_posts.entry(at).or_default().push((router, port, desc));
+    }
+
+    pub fn next_event_cycle(&self) -> Option<u64> {
+        let mut next: Option<u64> = None;
+        let mut consider = |c: u64| {
+            next = Some(next.map_or(c, |n: u64| n.min(c)));
+        };
+        if let Some((&c, _)) = self.ni_posts.iter().next() {
+            consider(c);
+        }
+        if let Some((&c, _)) = self.stream_posts.iter().next() {
+            consider(c);
+        }
+        for ni in &self.ni {
+            if ni.armed && ni.pending > 0 {
+                consider(ni.deadline.saturating_sub(self.cfg.kappa()).max(self.cycle + 1));
+            }
+        }
+        next
+    }
+
+    pub fn quiescent(&self) -> bool {
+        self.flits_active == 0
+            && self.backlogged_nodes == 0
+            && self.injectors.iter().all(|i| i.queue.is_empty() && i.cur.is_none())
+    }
+
+    pub fn run_until(
+        &mut self,
+        mut pred: impl FnMut(&ReferenceNetwork) -> bool,
+        max_cycle: u64,
+    ) -> bool {
+        while self.cycle < max_cycle {
+            if pred(self) {
+                return true;
+            }
+            if self.quiescent() {
+                match self.next_event_cycle() {
+                    Some(c) if c > self.cycle => self.cycle = c,
+                    Some(_) => {}
+                    None => return pred(self),
+                }
+            }
+            self.step();
+        }
+        pred(self)
+    }
+
+    pub fn run_until_idle(&mut self, max_cycle: u64) -> bool {
+        self.run_until(
+            |n| {
+                n.quiescent()
+                    && n.ni_posts.is_empty()
+                    && n.stream_posts.is_empty()
+                    && n.ni.iter().all(|s| !(s.armed && s.pending > 0))
+            },
+            max_cycle,
+        )
+    }
+
+    pub fn step(&mut self) {
+        self.apply_credit_refunds();
+        self.deliver_arrivals();
+        self.apply_posts();
+        self.vc_allocate();
+        self.switch_allocate();
+        self.feed_injectors();
+        self.gather_timeouts();
+        self.drain_backlogs();
+        self.cycle += 1;
+        self.stats.cycles_simulated = self.cycle;
+    }
+
+    fn apply_credit_refunds(&mut self) {
+        std::mem::swap(&mut self.credit_refunds, &mut self.credit_scratch);
+        for &(router, out_port, vc) in &self.credit_scratch {
+            if let Some(ct) = self.routers[router].out_credits[out_port].as_mut() {
+                ct.refund(vc, self.cfg.buffer_depth);
+            }
+        }
+        self.credit_scratch.clear();
+    }
+
+    fn deliver_arrivals(&mut self) {
+        let mut batch = self.arrivals.pop_front().expect("arrival ring underflow");
+        for Arrival { router, port, vc, mut flit } in batch.drain(..) {
+            flit.arrival = self.cycle;
+            if flit.ptype == PacketType::Gather
+                && flit.is_head()
+                && self.routers[router].coord != flit.src
+            {
+                let ni = &mut self.ni[router];
+                match try_board(&mut flit, ni) {
+                    BoardOutcome::BoardedAll(k) => {
+                        self.stats.gather_boards += k as u64;
+                    }
+                    BoardOutcome::BoardedPartial(k) => {
+                        self.stats.gather_boards += k as u64;
+                        self.stage_own_gather(router);
+                    }
+                    BoardOutcome::Full => {
+                        self.stage_own_gather(router);
+                    }
+                    BoardOutcome::NotApplicable => {}
+                }
+            } else if flit.ptype == PacketType::Ina
+                && flit.is_head()
+                && self.routers[router].coord != flit.src
+            {
+                let ni = &mut self.ni[router];
+                if let BoardOutcome::BoardedAll(k) =
+                    try_board_mode(&mut flit, ni, BoardMode::Accumulate)
+                {
+                    self.stats.ina_folds += k as u64;
+                    self.stats.ina_adds += k as u64;
+                }
+            }
+            self.write_flit(router, port, vc, flit);
+        }
+        self.arrivals.push_back(batch);
+    }
+
+    fn stage_own_gather(&mut self, node: usize) {
+        let ni = &self.ni[node];
+        if ni.staged || ni.pending == 0 {
+            return;
+        }
+        let (ptype, len_flits, space) = match self.collection {
+            Collection::Gather => (PacketType::Gather, self.cfg.gather_packet_flits as u32, 0),
+            Collection::Ina => {
+                (PacketType::Ina, self.cfg.ina_packet_flits(ni.pending), ni.space)
+            }
+            Collection::RepetitiveUnicast => unreachable!("RU never stages NI packets"),
+        };
+        let desc = PacketDesc {
+            id: 0,
+            ptype,
+            src: self.routers[node].coord,
+            dst: ni.dst,
+            len_flits,
+            aspace: 0,
+            space,
+            inject_cycle: self.cycle,
+            deliver_along_path: false,
+            carried_payloads: 0,
+        };
+        self.injectors[node * PORTS + Port::Local.index()].queue.push_back(InjEntry {
+            desc,
+            from_ni: true,
+            not_before: self.cycle + 1,
+        });
+        let ni = &mut self.ni[node];
+        ni.staged = true;
+        ni.armed = false;
+    }
+
+    fn write_flit(&mut self, router: usize, port: Port, vc: usize, flit: Flit) {
+        let vcs = self.vcs;
+        let r = &mut self.routers[router];
+        let idx = port.index() * vcs + vc;
+        let was_empty = r.inputs[idx].is_empty();
+        if flit.is_head() {
+            r.meta[idx].head_arrival = self.cycle;
+        }
+        r.inputs[idx].push(flit);
+        r.nonempty_mask |= 1 << idx;
+        self.occupancy[router] += 1;
+        self.stats.buffer_writes += 1;
+        if was_empty && r.inputs[idx].state == VcState::Idle {
+            r.inputs[idx].state =
+                refresh_vc_state(&r.inputs[idx], &mut r.meta[idx], self.cycle, self.cfg.kappa());
+        }
+    }
+
+    fn apply_posts(&mut self) {
+        while let Some((&c, _)) = self.stream_posts.iter().next() {
+            if c > self.cycle {
+                break;
+            }
+            let (_, entries) = self.stream_posts.pop_first().unwrap();
+            for (router, port, desc) in entries {
+                self.stats.packets_injected += 1;
+                self.injectors[router * PORTS + port.index()]
+                    .queue
+                    .push_back(InjEntry { desc, from_ni: false, not_before: self.cycle });
+            }
+        }
+        while let Some((&c, _)) = self.ni_posts.iter().next() {
+            if c > self.cycle {
+                break;
+            }
+            let (_, posts) = self.ni_posts.pop_first().unwrap();
+            for post in posts {
+                self.apply_ni_post(post);
+            }
+        }
+    }
+
+    fn apply_ni_post(&mut self, post: NiPost) {
+        self.ni[post.node].dst = post.dst;
+        if self.ni_busy(post.node) {
+            self.ni[post.node].backlog.push_back((post.payloads, post.space));
+            self.backlogged_nodes += 1;
+        } else {
+            self.activate_round(post.node, post.payloads, post.space);
+        }
+    }
+
+    fn ni_busy(&self, node: usize) -> bool {
+        let inj = &self.injectors[node * PORTS + Port::Local.index()];
+        self.ni[node].pending > 0 || !inj.queue.is_empty() || inj.cur.is_some()
+    }
+
+    fn activate_round(&mut self, node: usize, payloads: u32, space: u64) {
+        match self.collection {
+            Collection::RepetitiveUnicast => {
+                let per_pkt = if self.cfg.ru_pack_payloads {
+                    (self.cfg.unicast_packet_flits as u32 - 1) * self.cfg.payloads_per_flit()
+                } else {
+                    1
+                };
+                let src = self.routers[node].coord;
+                let dst = self.ni[node].dst;
+                let mut remaining = payloads;
+                while remaining > 0 {
+                    let carried = remaining.min(per_pkt);
+                    remaining -= carried;
+                    let desc = PacketDesc {
+                        id: self.alloc_pid(),
+                        ptype: PacketType::Unicast,
+                        src,
+                        dst,
+                        len_flits: self.cfg.unicast_packet_flits as u32,
+                        aspace: 0,
+                        space: 0,
+                        inject_cycle: self.cycle,
+                        deliver_along_path: false,
+                        carried_payloads: carried,
+                    };
+                    self.stats.packets_injected += 1;
+                    self.injectors[node * PORTS + Port::Local.index()]
+                        .queue
+                        .push_back(InjEntry { desc, from_ni: false, not_before: self.cycle });
+                }
+            }
+            Collection::Gather => {
+                let x = self.routers[node].coord.x;
+                let ni = &mut self.ni[node];
+                ni.pending += payloads;
+                if ni.is_initiator {
+                    ni.armed = true;
+                    ni.deadline = self.cycle;
+                } else if !ni.armed {
+                    ni.armed = true;
+                    ni.deadline =
+                        self.cycle.saturating_add(effective_delta(self.cfg.delta, x));
+                }
+            }
+            Collection::Ina => {
+                let x = self.routers[node].coord.x;
+                let ni = &mut self.ni[node];
+                debug_assert_eq!(ni.pending, 0, "INA NI activates one round at a time");
+                ni.pending += payloads;
+                ni.space = space;
+                ni.armed = true;
+                ni.deadline = if ni.is_initiator {
+                    self.cycle
+                } else {
+                    self.cycle.saturating_add(effective_delta(self.cfg.delta, x))
+                };
+            }
+        }
+    }
+
+    fn drain_backlogs(&mut self) {
+        if self.backlogged_nodes == 0 {
+            return;
+        }
+        for node in 0..self.ni.len() {
+            if self.ni[node].backlog.is_empty() || self.ni_busy(node) {
+                continue;
+            }
+            let (payloads, space) = self.ni[node].backlog.pop_front().unwrap();
+            self.backlogged_nodes -= 1;
+            self.activate_round(node, payloads, space);
+        }
+    }
+
+    fn vc_allocate(&mut self) {
+        let vcs = self.vcs;
+        for ridx in 0..self.routers.len() {
+            let mut mask = self.routers[ridx].nonempty_mask;
+            while mask != 0 {
+                let idx = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                let dst = {
+                    let r = &self.routers[ridx];
+                    match (r.inputs[idx].state, r.inputs[idx].front()) {
+                        (VcState::Routing { sa_ready_cycle }, Some(f))
+                            if self.cycle + 1 >= sa_ready_cycle =>
+                        {
+                            f.dst
+                        }
+                        _ => continue,
+                    }
+                };
+                let here = self.routers[ridx].coord;
+                let out_port = route(self.alg, here, dst);
+                let in_port = idx / vcs;
+                let in_vc = idx % vcs;
+                let granted =
+                    self.routers[ridx].allocate_out_vc(out_port, vcs, (in_port, in_vc));
+                if let Some(out_vc) = granted {
+                    self.stats.vc_allocs += 1;
+                    self.routers[ridx].inputs[idx].state = VcState::Active {
+                        out_port: out_port.index(),
+                        out_vc,
+                    };
+                }
+            }
+        }
+    }
+
+    fn switch_allocate(&mut self) {
+        let vcs = self.vcs;
+        let n = PORTS * vcs;
+        for ridx in 0..self.routers.len() {
+            if self.routers[ridx].nonempty_mask == 0 {
+                continue;
+            }
+            let mut reqs = [[usize::MAX; 16]; PORTS];
+            let mut counts = [0usize; PORTS];
+            {
+                let r = &self.routers[ridx];
+                let mut mask = r.nonempty_mask;
+                while mask != 0 {
+                    let idx = mask.trailing_zeros() as usize;
+                    mask &= mask - 1;
+                    let buf = &r.inputs[idx];
+                    let (op, ovc) = match buf.state {
+                        VcState::Active { out_port, out_vc } => (out_port, out_vc),
+                        _ => continue,
+                    };
+                    let Some(front) = buf.front() else { continue };
+                    if front.arrival >= self.cycle {
+                        continue;
+                    }
+                    if front.is_head() {
+                        let head_ready = r.meta[idx].head_arrival + self.cfg.kappa() - 1;
+                        let ready = head_ready.max(r.meta[idx].front_since + 1);
+                        if self.cycle < ready {
+                            continue;
+                        }
+                    }
+                    if let Some(ct) = &r.out_credits[op] {
+                        if !ct.available(ovc) {
+                            continue;
+                        }
+                    }
+                    reqs[op][counts[op]] = idx;
+                    counts[op] += 1;
+                }
+            }
+            if self.collection == Collection::Ina {
+                self.merge_ina_requests(ridx, &mut reqs, &mut counts);
+            }
+            let mut in_port_used = [false; PORTS];
+            for out_port_i in 0..PORTS {
+                if counts[out_port_i] == 0 {
+                    continue;
+                }
+                let rr = self.routers[ridx].sa_rr[out_port_i];
+                let mut winner: Option<(usize, usize)> = None;
+                for &idx in &reqs[out_port_i][..counts[out_port_i]] {
+                    if in_port_used[idx / vcs] {
+                        continue;
+                    }
+                    let dist = (idx + n - rr) % n;
+                    if winner.map_or(true, |(d, _)| dist < d) {
+                        winner = Some((dist, idx));
+                    }
+                }
+                let Some((_, idx)) = winner else { continue };
+                self.grant(ridx, idx, out_port_i);
+                in_port_used[idx / vcs] = true;
+                self.routers[ridx].sa_rr[out_port_i] = (idx + 1) % n;
+            }
+        }
+    }
+
+    fn grant(&mut self, ridx: usize, idx: usize, out_port_i: usize) {
+        let vcs = self.vcs;
+        let out_port = Port::from_index(out_port_i);
+        let kappa = self.cfg.kappa();
+
+        let out_vc = match self.routers[ridx].inputs[idx].state {
+            VcState::Active { out_port: op, out_vc } => {
+                debug_assert_eq!(op, out_port_i);
+                out_vc
+            }
+            s => panic!("SA granted from non-active VC state {s:?}"),
+        };
+
+        let flit = self.routers[ridx].inputs[idx].pop().expect("SA granted an empty VC");
+        if self.routers[ridx].inputs[idx].is_empty() {
+            self.routers[ridx].nonempty_mask &= !(1 << idx);
+        }
+        self.occupancy[ridx] -= 1;
+        self.stats.buffer_reads += 1;
+        self.stats.sa_grants += 1;
+        self.stats.crossbar_traversals += 1;
+        self.stats.flit_hops += 1;
+
+        if flit.deliver_along_path {
+            self.stats.stream_deliveries += 1;
+        }
+
+        let in_port = Port::from_index(idx / vcs);
+        let in_vc = idx % vcs;
+        if in_port != Port::Local {
+            let here = self.routers[ridx].coord;
+            if let Some(up) = self.neighbour(here, in_port) {
+                let up_idx = self.node_idx(up);
+                self.credit_refunds.push((up_idx, in_port.opposite().index(), in_vc));
+            }
+        }
+
+        if flit.is_tail() || flit.packet_len == 1 {
+            self.routers[ridx].release_out_vc(out_port, out_vc, vcs);
+            let r = &mut self.routers[ridx];
+            r.inputs[idx].state = VcState::Idle;
+            if !r.inputs[idx].is_empty() {
+                r.inputs[idx].state =
+                    refresh_vc_state(&r.inputs[idx], &mut r.meta[idx], self.cycle, kappa);
+            }
+        }
+
+        let here = self.routers[ridx].coord;
+        let ejecting = out_port == Port::Local
+            || (out_port == Port::East
+                && here.x as usize + 1 == self.cols
+                && flit.dst.x as usize >= self.cols);
+        if ejecting {
+            self.eject(flit);
+            self.flits_active -= 1;
+        } else {
+            if let Some(ct) = self.routers[ridx].out_credits[out_port_i].as_mut() {
+                ct.consume(out_vc);
+            }
+            let nb = self
+                .neighbour(here, out_port)
+                .expect("routed toward a missing neighbour");
+            let nb_idx = self.node_idx(nb);
+            self.stats.link_traversals += 1;
+            let delay = (1 + self.cfg.link_latency) as usize;
+            self.arrivals[delay - 1].push(Arrival {
+                router: nb_idx,
+                port: out_port.opposite(),
+                vc: out_vc,
+                flit,
+            });
+        }
+    }
+
+    fn merge_ina_requests(
+        &mut self,
+        ridx: usize,
+        reqs: &mut [[usize; 16]; PORTS],
+        counts: &mut [usize; PORTS],
+    ) {
+        for op in 0..PORTS {
+            if counts[op] < 2 {
+                continue;
+            }
+            let mut i = 0;
+            while i < counts[op] {
+                let survivor = reqs[op][i];
+                let Some(key) = self.ina_complete_head(ridx, survivor) else {
+                    i += 1;
+                    continue;
+                };
+                let mut j = i + 1;
+                while j < counts[op] {
+                    let candidate = reqs[op][j];
+                    if self.ina_complete_head(ridx, candidate) == Some(key) {
+                        self.absorb_ina_packet(ridx, candidate, survivor);
+                        for k in j..counts[op] - 1 {
+                            reqs[op][k] = reqs[op][k + 1];
+                        }
+                        counts[op] -= 1;
+                    } else {
+                        j += 1;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+
+    fn ina_complete_head(&self, ridx: usize, idx: usize) -> Option<(u64, Coord)> {
+        let buf = &self.routers[ridx].inputs[idx];
+        let head = buf.front()?;
+        if head.ptype != PacketType::Ina || !head.is_head() {
+            return None;
+        }
+        let len = head.packet_len as usize;
+        let tail = buf.get(len - 1)?;
+        if tail.packet_id != head.packet_id {
+            return None;
+        }
+        if len > 1 && !tail.is_tail() {
+            return None;
+        }
+        Some((head.space, head.dst))
+    }
+
+    fn absorb_ina_packet(&mut self, ridx: usize, absorbed: usize, survivor: usize) {
+        let vcs = self.vcs;
+        let kappa = self.cfg.kappa();
+        let (pid, len, carried, words) = {
+            let f = self.routers[ridx].inputs[absorbed].front().expect("absorbed VC empty");
+            (f.packet_id, f.packet_len as usize, f.carried_payloads, f.aspace)
+        };
+        match self.routers[ridx].inputs[absorbed].state {
+            VcState::Active { out_port, out_vc } => {
+                self.routers[ridx].release_out_vc(Port::from_index(out_port), out_vc, vcs);
+            }
+            s => panic!("INA merge on non-active VC state {s:?}"),
+        }
+        for _ in 0..len {
+            let f = self.routers[ridx].inputs[absorbed].pop().expect("absorbed packet truncated");
+            debug_assert_eq!(f.packet_id, pid, "absorbed a foreign flit");
+        }
+        self.occupancy[ridx] -= len as u32;
+        self.flits_active -= len as u64;
+        self.stats.buffer_reads += len as u64;
+        self.stats.ina_merges += 1;
+        self.stats.ina_adds += words as u64;
+        let in_port = Port::from_index(absorbed / vcs);
+        if in_port != Port::Local {
+            let here = self.routers[ridx].coord;
+            if let Some(up) = self.neighbour(here, in_port) {
+                let up_idx = self.node_idx(up);
+                for _ in 0..len {
+                    self.credit_refunds.push((up_idx, in_port.opposite().index(), absorbed % vcs));
+                }
+            }
+        }
+        {
+            let r = &mut self.routers[ridx];
+            r.inputs[absorbed].state = VcState::Idle;
+            if r.inputs[absorbed].is_empty() {
+                r.nonempty_mask &= !(1 << absorbed);
+            } else {
+                r.inputs[absorbed].state = refresh_vc_state(
+                    &r.inputs[absorbed],
+                    &mut r.meta[absorbed],
+                    self.cycle,
+                    kappa,
+                );
+            }
+        }
+        let head = self.routers[ridx].inputs[survivor]
+            .front_mut()
+            .expect("survivor VC empty");
+        debug_assert!(head.is_head() && head.ptype == PacketType::Ina);
+        head.carried_payloads += carried;
+        head.aspace = head.aspace.max(words);
+    }
+
+    fn eject(&mut self, flit: Flit) {
+        self.stats.flits_ejected += 1;
+        if flit.is_head() && flit.dst.x as usize >= self.cols {
+            self.payloads_delivered += flit.carried_payloads as u64;
+            if flit.ptype == PacketType::Gather {
+                self.gather_packets_ejected += 1;
+            }
+        }
+        if flit.is_tail() || flit.packet_len == 1 {
+            self.stats.packets_ejected += 1;
+            let lat = self.cycle.saturating_sub(flit.inject_cycle);
+            self.stats.total_packet_latency += lat;
+            self.stats.max_packet_latency = self.stats.max_packet_latency.max(lat);
+            self.last_eject_cycle = self.cycle;
+            if flit.deliver_along_path {
+                self.stream_tails_ejected += 1;
+            }
+            if flit.dst.x as usize >= self.cols {
+                self.result_packets_ejected += 1;
+            }
+        }
+    }
+
+    fn neighbour(&self, c: Coord, p: Port) -> Option<Coord> {
+        match p {
+            Port::North => (c.y > 0).then(|| Coord::new(c.x, c.y - 1)),
+            Port::South => ((c.y as usize + 1) < self.rows).then(|| Coord::new(c.x, c.y + 1)),
+            Port::East => ((c.x as usize + 1) < self.cols).then(|| Coord::new(c.x + 1, c.y)),
+            Port::West => (c.x > 0).then(|| Coord::new(c.x - 1, c.y)),
+            Port::Local => None,
+        }
+    }
+
+    fn feed_injectors(&mut self) {
+        for ridx in 0..self.routers.len() {
+            for port_i in 0..PORTS {
+                let ii = ridx * PORTS + port_i;
+                if self.injectors[ii].cur.is_none() && self.injectors[ii].queue.is_empty() {
+                    continue;
+                }
+                self.feed_one_injector(ridx, Port::from_index(port_i));
+            }
+        }
+    }
+
+    fn feed_one_injector(&mut self, ridx: usize, port: Port) {
+        let ii = ridx * PORTS + port.index();
+        if self.injectors[ii].cur.is_none() {
+            let ready = match self.injectors[ii].queue.front() {
+                Some(e) => e.not_before <= self.cycle,
+                None => return,
+            };
+            if !ready {
+                return;
+            }
+            let entry = self.injectors[ii].queue.pop_front().unwrap();
+            let mut desc = entry.desc;
+            if entry.from_ni {
+                let cap = self.cfg.gather_capacity();
+                let x = self.routers[ridx].coord.x;
+                let collection = self.collection;
+                let delta = self.cfg.delta;
+                let cycle = self.cycle;
+                let ni = &mut self.ni[ridx];
+                ni.staged = false;
+                if ni.pending == 0 {
+                    return;
+                }
+                let carried = match collection {
+                    Collection::Gather => ni.pending.min(cap),
+                    Collection::Ina => ni.pending,
+                    Collection::RepetitiveUnicast => {
+                        unreachable!("RU never stages NI packets")
+                    }
+                };
+                ni.pending -= carried;
+                if ni.pending == 0 {
+                    ni.armed = false;
+                } else {
+                    ni.armed = true;
+                    ni.deadline = cycle.saturating_add(effective_delta(delta, x));
+                }
+                desc.carried_payloads = carried;
+                desc.aspace = match collection {
+                    Collection::Gather => cap - carried,
+                    _ => carried,
+                };
+                desc.id = self.alloc_pid();
+                desc.inject_cycle = self.cycle;
+                self.stats.packets_injected += 1;
+            }
+            self.injectors[ii].cur = Some((desc, 0, usize::MAX));
+        }
+        let vcs = self.vcs;
+        let Some((desc, seq, vc_slot)) = self.injectors[ii].cur.take() else { return };
+        let mut vc = vc_slot;
+        if seq == 0 {
+            let r = &self.routers[ridx];
+            let base = port.index() * vcs;
+            vc = (0..vcs)
+                .max_by_key(|&v| self.cfg.buffer_depth - r.inputs[base + v].len())
+                .unwrap();
+        }
+        let idx = port.index() * vcs + vc;
+        if self.routers[ridx].inputs[idx].has_space() {
+            let flit = {
+                let mut f = desc.flit(seq);
+                f.arrival = self.cycle;
+                f
+            };
+            self.write_flit(ridx, port, vc, flit);
+            self.flits_active += 1;
+            let next = seq + 1;
+            if next < desc.len_flits {
+                self.injectors[ii].cur = Some((desc, next, vc));
+            }
+        } else {
+            self.injectors[ii].cur = Some((desc, seq, vc));
+        }
+    }
+
+    fn gather_timeouts(&mut self) {
+        if self.collection == Collection::RepetitiveUnicast {
+            return;
+        }
+        for ridx in 0..self.ni.len() {
+            let ni = &self.ni[ridx];
+            if !(ni.armed && ni.pending > 0 && !ni.staged) {
+                continue;
+            }
+            if self.cycle < ni.deadline {
+                continue;
+            }
+            let is_initiator = ni.is_initiator;
+            self.stage_own_gather(ridx);
+            if !is_initiator {
+                self.stats.delta_expiries += 1;
+            }
+        }
+    }
+
+    pub fn total_buffered_flits(&self) -> usize {
+        self.routers.iter().map(|r| r.occupancy()).sum()
+    }
+
+    pub fn payloads_in_flight(&self) -> u64 {
+        let mut total = 0u64;
+        for posts in self.ni_posts.values() {
+            total += posts.iter().map(|p| p.payloads as u64).sum::<u64>();
+        }
+        for ni in &self.ni {
+            total += ni.pending as u64;
+            total += ni.backlog.iter().map(|&(p, _)| p as u64).sum::<u64>();
+        }
+        for inj in &self.injectors {
+            for e in &inj.queue {
+                if !e.from_ni {
+                    total += e.desc.carried_payloads as u64;
+                }
+            }
+            if let Some((desc, seq, _)) = &inj.cur {
+                if *seq == 0 {
+                    total += desc.carried_payloads as u64;
+                }
+            }
+        }
+        for r in &self.routers {
+            for buf in &r.inputs {
+                total += buf
+                    .iter()
+                    .filter(|f| f.is_head())
+                    .map(|f| f.carried_payloads as u64)
+                    .sum::<u64>();
+            }
+        }
+        for batch in &self.arrivals {
+            total += batch
+                .iter()
+                .filter(|a| a.flit.is_head())
+                .map(|a| a.flit.carried_payloads as u64)
+                .sum::<u64>();
+        }
+        total
+    }
+}

@@ -3,8 +3,16 @@
 //! Every `benches/*.rs` target is a `harness = false` binary that uses
 //! [`time_it`] for simulator hot-path timing and prints the paper-figure
 //! series alongside. Reported numbers: median, mean, min over `reps`.
+//!
+//! Benches additionally emit a machine-readable [`BenchReport`]
+//! (`BENCH_<name>.json`) when invoked with `--json <path>` — the perf
+//! trajectory CI tracks (uploaded as an artifact, gated against the
+//! committed baseline by `scripts/check_bench_regression.py`). The
+//! shared `--quick` flag selects the reduced CI matrix.
 
 use std::time::Instant;
+
+use super::json::Json;
 
 #[derive(Debug, Clone, Copy)]
 pub struct Timing {
@@ -65,6 +73,88 @@ pub fn time_it<T>(reps: usize, mut f: impl FnMut() -> T) -> Timing {
     }
 }
 
+/// Flags shared by the bench binaries (`harness = false` mains):
+/// `--quick` shrinks the matrix/reps for the CI smoke run, `--json PATH`
+/// writes the [`BenchReport`] beside the human-readable stdout series.
+#[derive(Debug, Default, Clone)]
+pub struct BenchArgs {
+    pub quick: bool,
+    pub json: Option<String>,
+}
+
+/// Parse [`BenchArgs`] from the process arguments. Unknown flags panic
+/// loudly — a typo silently running the full matrix in CI would be worse.
+pub fn bench_args() -> BenchArgs {
+    let mut out = BenchArgs::default();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--quick" => out.quick = true,
+            "--json" => {
+                out.json = Some(args.next().expect("--json requires a path"));
+            }
+            // Cargo unconditionally appends `--bench` when invoking a
+            // bench target (even with `harness = false`); accept and
+            // ignore it so plain `cargo bench` keeps working.
+            "--bench" => {}
+            other => panic!("unknown bench flag '{other}' (--quick | --json PATH)"),
+        }
+    }
+    out
+}
+
+/// Machine-readable bench results: a flat list of measurement points,
+/// each a JSON object of tags (`name`, `kernel`, …) and numeric metrics
+/// (`cycles_per_sec`, `median_ns`, …). `measured` is always true for a
+/// report produced by an actual run — the committed bootstrap baseline
+/// carries `measured: false` until CI numbers are committed.
+#[derive(Debug)]
+pub struct BenchReport {
+    name: String,
+    quick: bool,
+    points: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str, quick: bool) -> BenchReport {
+        BenchReport { name: name.to_string(), quick, points: Vec::new() }
+    }
+
+    /// Record one measurement point.
+    pub fn add(&mut self, point: Json) {
+        self.points.push(point);
+    }
+
+    /// Build a point from string tags and numeric metrics.
+    pub fn point(tags: &[(&str, &str)], metrics: &[(&str, f64)]) -> Json {
+        let mut j = Json::obj();
+        for (k, v) in tags {
+            j.set(k, Json::Str((*v).to_string()));
+        }
+        for (k, v) in metrics {
+            j.set(k, Json::Num(*v));
+        }
+        j
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("bench", Json::Str(self.name.clone()))
+            .set("measured", Json::Bool(true))
+            .set("quick", Json::Bool(self.quick))
+            .set("points", Json::Arr(self.points.clone()));
+        j
+    }
+
+    /// Write the report; prints the destination so CI logs show where the
+    /// artifact came from.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        println!("\nwrote {} point(s) to {path}", self.points.len());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +178,22 @@ mod tests {
         assert_eq!(fmt_ns(1_500), "1.500µs");
         assert_eq!(fmt_ns(2_000_000), "2.000ms");
         assert_eq!(fmt_ns(3_000_000_000), "3.000s");
+    }
+
+    #[test]
+    fn bench_report_roundtrips_through_json() {
+        let mut r = BenchReport::new("sim_hotpath", true);
+        r.add(BenchReport::point(
+            &[("name", "saturate"), ("kernel", "event")],
+            &[("cycles_per_sec", 1.5e6), ("mesh", 16.0)],
+        ));
+        let parsed = crate::util::json::parse(&r.to_json().to_pretty()).unwrap();
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("sim_hotpath"));
+        assert_eq!(parsed.get("measured").and_then(Json::as_bool), Some(true));
+        assert_eq!(parsed.get("quick").and_then(Json::as_bool), Some(true));
+        let pts = parsed.get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(pts.len(), 1);
+        assert_eq!(pts[0].get("kernel").and_then(Json::as_str), Some("event"));
+        assert_eq!(pts[0].get("cycles_per_sec").and_then(Json::as_f64), Some(1.5e6));
     }
 }

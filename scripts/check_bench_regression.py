@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Gate the simulator hot-path throughput against the committed baseline.
+
+Usage: check_bench_regression.py BASELINE.json FRESH.json
+
+* FRESH is the report a CI run just produced (``cargo bench --bench
+  sim_hotpath -- --quick --json ...``).
+* BASELINE is the committed ``BENCH_sim_hotpath.json``. While it carries
+  ``"measured": false`` (bootstrap: the authoring environment had no Rust
+  toolchain) the gate only prints the fresh numbers — commit a measured
+  CI artifact to arm it.
+
+Fails (exit 1) when any event-kernel point's cycles/sec drops more than
+REGRESSION_TOLERANCE below the baseline's matching point. Points are
+matched on (name, kernel, collection, mesh, n); points present on only
+one side are reported but never fail the gate (the matrix may grow).
+"""
+
+import json
+import sys
+
+REGRESSION_TOLERANCE = 0.20  # fail below 80% of baseline cycles/sec
+
+
+def key(p):
+    return (
+        p.get("name"),
+        p.get("kernel"),
+        p.get("collection"),
+        p.get("mesh"),
+        p.get("n"),
+    )
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    baseline, fresh = load(sys.argv[1]), load(sys.argv[2])
+
+    fresh_points = {key(p): p for p in fresh.get("points", [])}
+    speedups = [p for p in fresh.get("points", []) if p.get("name") == "speedup"]
+    for p in speedups:
+        print(
+            f"event/reference speedup [{p.get('workload')} "
+            f"{int(p.get('mesh', 0))}x{int(p.get('mesh', 0))} n={int(p.get('n', 0))} "
+            f"{p.get('collection')}]: {p.get('event_over_reference', 0):.2f}x"
+        )
+
+    if not baseline.get("measured", False):
+        print(
+            f"baseline {sys.argv[1]} is a bootstrap placeholder "
+            '("measured": false) — gate skipped. Commit a measured CI '
+            "artifact to arm the regression check."
+        )
+        return
+
+    failures = []
+    compared = 0
+    for bp in baseline.get("points", []):
+        if bp.get("kernel") != "event" or "cycles_per_sec" not in bp:
+            continue
+        fp = fresh_points.get(key(bp))
+        if fp is None:
+            print(f"note: baseline point {key(bp)} missing from fresh run")
+            continue
+        compared += 1
+        old, new = bp["cycles_per_sec"], fp.get("cycles_per_sec", 0.0)
+        ratio = new / old if old else float("inf")
+        status = "OK" if ratio >= 1.0 - REGRESSION_TOLERANCE else "REGRESSED"
+        print(f"{status}: {key(bp)} {old / 1e6:.2f}M -> {new / 1e6:.2f}M cyc/s ({ratio:.2f}x)")
+        if status == "REGRESSED":
+            failures.append(key(bp))
+
+    if not compared:
+        print("warning: measured baseline held no comparable event-kernel points")
+    if failures:
+        sys.exit(f"cycles/sec regressed >{REGRESSION_TOLERANCE:.0%} on {len(failures)} point(s): {failures}")
+    print(f"gate passed: {compared} point(s) within tolerance")
+
+
+if __name__ == "__main__":
+    main()

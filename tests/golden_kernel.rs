@@ -1,0 +1,220 @@
+//! Golden kernel-equivalence suite: the event-driven simulation core
+//! (`noc::network::Network`) must be **bit-identical** to the frozen
+//! pre-refactor kernel (`noc::reference::ReferenceNetwork`) in every
+//! observable — full `NetStats`, final cycle count, delivered payloads —
+//! across the seed matrix of 3 collection schemes × 2 dataflows × 3
+//! streaming fabrics on AlexNet conv3, plus the 16×16 two-packet regime
+//! and a fast-forward-heavy sparse schedule.
+//!
+//! The golden values are not hardcoded constants: the reference kernel
+//! *is* the recording — both kernels are driven through the identical
+//! schedule (a compact replica of the round driver's bus/mesh loops) in
+//! the same process, so every CI run re-records and re-checks the whole
+//! matrix. A divergence in any counter fails with the offending matrix
+//! point in the message.
+
+use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming};
+use noc_dnn::dataflow::build;
+use noc_dnn::models::alexnet;
+use noc_dnn::noc::network::Network;
+use noc_dnn::noc::reference::{ReferenceNetwork, SimKernel};
+use noc_dnn::noc::{Coord, NetStats, StreamEdge};
+
+const SIM_ROUNDS: u64 = 3;
+
+/// Everything the equivalence assertions compare.
+#[derive(Debug, PartialEq)]
+struct Observed {
+    stats: NetStats,
+    cycle: u64,
+    delivered: u64,
+    stream_tails: u64,
+}
+
+fn observe<K: SimKernel>(net: &K) -> Observed {
+    Observed {
+        stats: net.stats().clone(),
+        cycle: net.cycle(),
+        delivered: net.payloads_delivered(),
+        stream_tails: net.stream_tails_ejected(),
+    }
+}
+
+fn post_round<K: SimKernel>(net: &mut K, cfg: &SimConfig, at: u64, payloads: u32) {
+    for y in 0..cfg.mesh_rows {
+        for x in 0..cfg.mesh_cols {
+            net.post_result(at, Coord::new(x as u16, y as u16), payloads);
+        }
+    }
+}
+
+/// Compact replica of the round driver's bus-streaming schedule
+/// (`dataflow::driver::run_bus_layer`): rounds gated by the closed-form
+/// stream period, collection overlapping the next round's streaming.
+fn drive_bus<K: SimKernel>(
+    net: &mut K,
+    cfg: &SimConfig,
+    streaming: Streaming,
+    layer: &noc_dnn::models::ConvLayer,
+) {
+    let mapping = build(cfg, layer);
+    let period = (mapping.stream_cycles(cfg, streaming) + cfg.t_mac).max(1);
+    let rounds = mapping.rounds().min(SIM_ROUNDS);
+    let per_round = mapping.traffic_per_round(cfg).payloads;
+    let ppn = mapping.psum_collection().payloads_per_node;
+    let bound = (rounds + 2) * period
+        + 40 * per_round * (cfg.mesh_cols as u64 + cfg.gather_packet_flits as u64)
+        + 200_000;
+    let mut ready = period;
+    for r in 0..rounds {
+        post_round(net, cfg, ready, ppn);
+        let ok = net.run_until_delivered((r + 1) * per_round, bound);
+        assert!(ok, "round {r} stalled ({streaming:?})");
+        ready = (ready + period).max(net.cycle() + cfg.t_mac);
+    }
+    assert!(net.run_until_idle(bound), "drain stalled ({streaming:?})");
+}
+
+/// Compact replica of the mesh-streaming schedule
+/// (`dataflow::driver::run_mesh_layer`): operand multicasts over the mesh
+/// itself, next round's streams chasing this round's collection.
+fn drive_mesh<K: SimKernel>(net: &mut K, cfg: &SimConfig, layer: &noc_dnn::models::ConvLayer) {
+    let mapping = build(cfg, layer);
+    let rounds = mapping.rounds().min(SIM_ROUNDS);
+    let traffic = mapping.traffic_per_round(cfg);
+    let per_round = traffic.payloads;
+    let ppn = mapping.psum_collection().payloads_per_node;
+    let words = mapping.stream_words();
+    let row_streams = if words.row > 0 { cfg.mesh_rows as u64 } else { 0 };
+    let col_streams = if words.col > 0 { cfg.mesh_cols as u64 } else { 0 };
+    let streams_per_round = row_streams + col_streams;
+    let bound = (rounds + 2) * (traffic.stream_flits * 8 + 100_000);
+
+    let post_streams = |net: &mut K, at: u64| {
+        if words.row > 0 {
+            for y in 0..cfg.mesh_rows {
+                net.post_operand_stream(at, StreamEdge::Row(y), words.row);
+            }
+        }
+        if words.col > 0 {
+            for x in 0..cfg.mesh_cols {
+                net.post_operand_stream(at, StreamEdge::Col(x), words.col);
+            }
+        }
+    };
+    post_streams(net, 0);
+    for r in 0..rounds {
+        let ok = net.run_until_stream_tails((r + 1) * streams_per_round, bound);
+        assert!(ok, "round {r}: operand streams stalled");
+        let stream_end = net.cycle();
+        if r + 1 < rounds {
+            post_streams(net, stream_end);
+        }
+        post_round(net, cfg, stream_end + cfg.t_mac, ppn);
+        let ok = net.run_until_delivered((r + 1) * per_round, bound);
+        assert!(ok, "round {r}: collection stalled");
+    }
+    assert!(net.run_until_idle(bound), "mesh drain stalled");
+}
+
+fn assert_equivalent(cfg: &SimConfig, streaming: Streaming, collection: Collection, tag: &str) {
+    let layer = &alexnet::conv_layers()[2];
+    let mut event = Network::new(cfg, collection);
+    let mut reference = ReferenceNetwork::new(cfg, collection);
+    match streaming {
+        Streaming::Mesh => {
+            drive_mesh(&mut event, cfg, layer);
+            drive_mesh(&mut reference, cfg, layer);
+        }
+        _ => {
+            drive_bus(&mut event, cfg, streaming, layer);
+            drive_bus(&mut reference, cfg, streaming, layer);
+        }
+    }
+    let (a, b) = (observe(&event), observe(&reference));
+    assert_eq!(
+        a, b,
+        "{tag}: event-driven kernel diverged from the reference kernel \
+         ({streaming:?}/{collection:?}/{:?})",
+        cfg.dataflow
+    );
+    // Both kernels must end fully drained — conservation, not just parity.
+    assert_eq!(event.buffered_flits(), 0, "{tag}: event kernel left flits buffered");
+    assert_eq!(reference.buffered_flits(), 0, "{tag}: reference kernel left flits buffered");
+    assert_eq!(event.payloads_in_flight(), 0, "{tag}: event kernel owes payloads");
+    assert_eq!(reference.payloads_in_flight(), 0, "{tag}: reference kernel owes payloads");
+    assert!(a.delivered > 0, "{tag}: workload delivered nothing");
+    println!(
+        "{tag}: OK — cycle {} hops {} packets {}",
+        a.cycle, a.stats.flit_hops, a.stats.packets_injected
+    );
+}
+
+#[test]
+fn event_kernel_matches_reference_across_the_seed_matrix() {
+    // The full 3 collections × 2 dataflows × 3 fabrics grid on 8×8 n=2
+    // (AlexNet conv3 — the layer the golden headline test also pins).
+    for dataflow in [DataflowKind::OutputStationary, DataflowKind::WeightStationary] {
+        for streaming in [Streaming::TwoWay, Streaming::OneWay, Streaming::Mesh] {
+            for collection in
+                [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina]
+            {
+                let mut cfg = SimConfig::table1_8x8(2);
+                cfg.dataflow = dataflow;
+                let tag = format!(
+                    "{}/{}/{}",
+                    dataflow.label(),
+                    streaming.key(),
+                    collection.label()
+                );
+                assert_equivalent(&cfg, streaming, collection, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn event_kernel_matches_reference_on_16x16_two_packet_regime() {
+    // 16×16 n=8: two gather packets per row (§5.2), the INA merge point
+    // under real contention, and the largest active set.
+    for collection in [Collection::Gather, Collection::Ina] {
+        let cfg = SimConfig::table1_16x16(8);
+        let tag = format!("16x16/{}", collection.label());
+        assert_equivalent(&cfg, Streaming::TwoWay, collection, &tag);
+    }
+}
+
+#[test]
+fn event_kernel_matches_reference_across_fast_forward_gaps() {
+    // Sparse bursts separated by long quiescent stretches: both kernels
+    // must take identical clock jumps (same next_event_cycle semantics)
+    // and land on identical stats. Exercises the calendar-queue window
+    // hops over multi-thousand-cycle gaps.
+    for collection in
+        [Collection::Gather, Collection::RepetitiveUnicast, Collection::Ina]
+    {
+        let cfg = SimConfig::table1_8x8(4);
+        let mut event = Network::new(&cfg, collection);
+        let mut reference = ReferenceNetwork::new(&cfg, collection);
+        let schedule = |net: &mut dyn FnMut(u64, Coord, u32)| {
+            for burst in 0..6u64 {
+                let at = burst * 7_919 + 3; // prime-spaced, far beyond the wheel
+                let y = (burst % 8) as u16;
+                for x in 0..8u16 {
+                    net(at, Coord::new(x, y), cfg.pes_per_router as u32);
+                }
+            }
+        };
+        schedule(&mut |at, c, p| event.post_result(at, c, p));
+        schedule(&mut |at, c, p| SimKernel::post_result(&mut reference, at, c, p));
+        assert!(event.run_until_idle(10_000_000), "event kernel stalled");
+        assert!(reference.run_until_idle(10_000_000), "reference kernel stalled");
+        let (a, b) = (observe(&event), observe(&reference));
+        assert_eq!(a, b, "{collection:?}: kernels diverged across fast-forward gaps");
+        assert!(
+            a.cycle >= 5 * 7_919,
+            "{collection:?}: clock never reached the last burst (cycle {})",
+            a.cycle
+        );
+    }
+}
