@@ -8,9 +8,9 @@
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
-use noc_dnn::config::SimConfig;
-use noc_dnn::coordinator::experiment::{latency_improvement, power_improvement, Experiment};
+use noc_dnn::coordinator::experiment::{latency_improvement, power_improvement};
 use noc_dnn::models::lite;
+use noc_dnn::prelude::*;
 use noc_dnn::runtime::layer_exec::LayerExecutor;
 use noc_dnn::runtime::{max_abs_diff, reference, Tensor};
 
@@ -36,10 +36,18 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(diff < 1e-3, "numeric mismatch");
 
     // --- timing path: cycle-accurate NoC simulation, gather vs RU ---
-    let mut cfg = SimConfig::table1_8x8(4);
-    cfg.trace_driven = true;
-    let gather = Experiment::proposed(cfg.clone()).run_layer(&layer);
-    let ru = Experiment::baseline_ru(cfg).run_layer(&layer);
+    // The typed façade: one builder per scenario, every invalid input a
+    // ConfigError (swap .topology(TopologyKind::Torus) in to change the
+    // fabric).
+    let base = ScenarioBuilder::new().mesh(8).pes_per_router(4).trace_driven(true);
+    let gather = base.build()?.simulate(&layer);
+    let ru = ScenarioBuilder::new()
+        .mesh(8)
+        .pes_per_router(4)
+        .trace_driven(true)
+        .collection(Collection::RepetitiveUnicast)
+        .build()?
+        .simulate(&layer);
     println!("timing:  {} rounds on 8x8 mesh (4 PEs/router)", gather.run.rounds_total);
     println!(
         "         gather: {} cycles, {:.3} uJ   RU: {} cycles, {:.3} uJ",

@@ -83,13 +83,19 @@ fn gather_collection_tail(cfg: &SimConfig, ppn: u64) -> u64 {
 
 /// Eq. (3): repetitive-unicast layer latency, Δ_R = 0.
 ///
-/// `M·κ` is the head-flit latency of the *leftmost* node's result packet
-/// (all nodes transmit in parallel; the leftmost travels farthest), plus
-/// `⌈L/W⌉ − 1` for its remaining flits.
+/// The head term is the *worst-placed* node's result packet (all nodes
+/// transmit in parallel; the farthest-from-memory one dominates), plus
+/// `⌈L/W⌉ − 1` for its remaining flits. On the paper's mesh the worst
+/// node is the leftmost and the term is the `M·κ` of Eq. (3); the hop
+/// count generalizes through
+/// [`crate::noc::topology::Topology::worst_result_hops`] — a torus's
+/// westbound wrap shortcut caps it near `M/2 + 1`, which is the fabric's
+/// analytic RU win. The gather/INA forms below are topology-invariant:
+/// their packets walk the full row on every fabric by construction.
 pub fn latency_ru(cfg: &SimConfig, streaming: Streaming, layer: &ConvLayer) -> u64 {
-    let m = cfg.mesh_cols as u64;
+    let hops = crate::noc::topology::worst_result_hops(cfg);
     let serialization = cfg.unicast_packet_flits as u64 - 1;
-    compute_cycles(cfg, streaming, layer) + m * per_hop(cfg) + serialization
+    compute_cycles(cfg, streaming, layer) + hops * per_hop(cfg) + serialization
 }
 
 /// Eq. (4): gather-supported layer latency, Δ_G = 0.
@@ -343,6 +349,28 @@ mod tests {
         policy.streaming = Streaming::Mesh;
         let plan = NetworkPlan::uniform(policy, model.len());
         network_latency(&cfg, &model, &plan);
+    }
+
+    #[test]
+    fn torus_ru_head_term_undercuts_the_mesh() {
+        use crate::config::TopologyKind;
+        let mesh = SimConfig::table1_8x8(4);
+        let mut torus = mesh.clone();
+        torus.topology = TopologyKind::Torus;
+        // RU benefits from the wrap shortcut; gather is pinned to the
+        // row walk and must be unchanged.
+        assert!(
+            latency_ru(&torus, Streaming::TwoWay, &layer())
+                < latency_ru(&mesh, Streaming::TwoWay, &layer())
+        );
+        assert_eq!(
+            latency_gather(&torus, Streaming::TwoWay, &layer()),
+            latency_gather(&mesh, Streaming::TwoWay, &layer())
+        );
+        assert_eq!(
+            latency_ina(&torus, Streaming::TwoWay, &layer()),
+            latency_ina(&mesh, Streaming::TwoWay, &layer())
+        );
     }
 
     #[test]

@@ -1,0 +1,495 @@
+//! The typed public construction-and-run façade: [`ScenarioBuilder`] →
+//! [`Scenario`].
+//!
+//! Everything the crate can simulate is a *scenario*: a validated
+//! configuration (geometry + topology + dataflow + collection), a
+//! streaming architecture, and the router fabric built from them. The
+//! builder is the one place invalid input is caught — every violation is
+//! a typed [`ConfigError`], never a panic — and the [`Scenario`] it
+//! produces is the single entry point the per-layer driver
+//! ([`Scenario::simulate`]) and the whole-model executor
+//! ([`Scenario::execute`]) hang off. `Experiment`,
+//! `NetworkExecutor::run`'s per-layer evaluation and the free
+//! `run_layer*` functions are all rebased on this seam.
+//!
+//! ```no_run
+//! use noc_dnn::prelude::*;
+//!
+//! # fn main() -> Result<(), ConfigError> {
+//! let scenario = ScenarioBuilder::new()
+//!     .mesh(8)
+//!     .pes_per_router(2)
+//!     .topology(TopologyKind::Torus)
+//!     .streaming(Streaming::TwoWay)
+//!     .collection(Collection::Ina)
+//!     .build()?;
+//! let report = scenario.simulate(&alexnet::conv_layers()[2]);
+//! println!("{} cycles, {:.3} mJ", report.run.total_cycles, report.power.total_j * 1e3);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! ## Geometry semantics
+//!
+//! [`ScenarioBuilder::mesh`] names the **logical PE-array side**. For
+//! mesh and torus fabrics that is also the router radix. Selecting
+//! [`TopologyKind::CMesh`] concentrates 2×2 PE groups onto each router:
+//! the router grid halves per dimension and `pes_per_router` multiplies
+//! by 4, with the gather packet size and δ plateau re-derived for the
+//! smaller radix — the same workload on a thinner fabric.
+//! [`ScenarioBuilder::from_config`] skips all geometry derivation and
+//! treats the given `SimConfig` as the literal router grid.
+
+use std::sync::Arc;
+
+use crate::config::{
+    Collection, ConfigError, DataflowKind, PeGrouping, SimConfig, Streaming, TopologyKind,
+};
+use crate::coordinator::executor::{NetworkExecutor, NetworkRunReport};
+use crate::coordinator::experiment::LayerReport;
+use crate::dataflow::{driver::run_layer_with_fabric, LayerRunResult};
+use crate::models::{ConvLayer, Network as Model};
+use crate::noc::topology::{self, Topology};
+use crate::plan::NetworkPlan;
+use crate::power::power_report;
+
+/// Result of [`Scenario::simulate`]: the per-layer driver run plus the
+/// power roll-up (the record the figure sweeps and `Experiment` report).
+pub type RunReport = LayerReport;
+
+/// PEs concentrated per router when [`TopologyKind::CMesh`] is built
+/// from a logical PE array (a 2×2 group per router).
+pub const CMESH_CONCENTRATION: usize = 4;
+
+/// A deferred configuration edit queued by [`ScenarioBuilder::configure`].
+type ConfigTweak = Box<dyn FnOnce(&mut SimConfig)>;
+
+/// Fluent, validating constructor for [`Scenario`]s.
+///
+/// Defaults reproduce the paper's Table-1 8×8 mesh with 1 PE/router,
+/// two-way streaming and gather collection. Every setter overrides one
+/// axis; [`ScenarioBuilder::build`] derives the remaining Table-1
+/// parameters, validates the whole configuration and returns a typed
+/// [`ConfigError`] on any violation.
+pub struct ScenarioBuilder {
+    base: Option<SimConfig>,
+    mesh: Option<usize>,
+    pes_per_router: Option<usize>,
+    topology: Option<TopologyKind>,
+    streaming: Streaming,
+    collection: Option<Collection>,
+    dataflow: Option<DataflowKind>,
+    pe_grouping: Option<PeGrouping>,
+    delta: Option<u64>,
+    rounds_cap: Option<usize>,
+    threads: Option<usize>,
+    trace_driven: Option<bool>,
+    ws_rf_words: Option<u32>,
+    tweaks: Vec<ConfigTweak>,
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScenarioBuilder {
+    /// Start from the Table-1 defaults (8×8 mesh, 1 PE/router).
+    pub fn new() -> ScenarioBuilder {
+        ScenarioBuilder {
+            base: None,
+            mesh: None,
+            pes_per_router: None,
+            topology: None,
+            streaming: Streaming::TwoWay,
+            collection: None,
+            dataflow: None,
+            pe_grouping: None,
+            delta: None,
+            rounds_cap: None,
+            threads: None,
+            trace_driven: None,
+            ws_rf_words: None,
+            tweaks: Vec::new(),
+        }
+    }
+
+    /// Start from an existing `SimConfig` (its dims are the literal
+    /// router grid — no CMesh geometry derivation is applied). The shim
+    /// the legacy `Experiment`/`run_layer` surfaces use to reach the
+    /// façade.
+    pub fn from_config(cfg: SimConfig) -> ScenarioBuilder {
+        ScenarioBuilder { base: Some(cfg), ..ScenarioBuilder::new() }
+    }
+
+    /// Logical PE-array side (router radix on mesh/torus; halved for a
+    /// concentrated mesh). Default 8. Geometry setters belong to the
+    /// Table-1 derivation path — combining them with
+    /// [`ScenarioBuilder::from_config`] is a [`ConfigError`] at `build()`
+    /// (the base config's geometry is literal; edit it via
+    /// [`ScenarioBuilder::configure`]).
+    pub fn mesh(mut self, m: usize) -> Self {
+        self.mesh = Some(m);
+        self
+    }
+
+    /// PEs per router before any fabric concentration. Default 1. Same
+    /// derivation-path-only rule as [`ScenarioBuilder::mesh`].
+    pub fn pes_per_router(mut self, n: usize) -> Self {
+        self.pes_per_router = Some(n);
+        self
+    }
+
+    /// Router fabric (`mesh` / `torus` / `cmesh`).
+    pub fn topology(mut self, t: TopologyKind) -> Self {
+        self.topology = Some(t);
+        self
+    }
+
+    /// Operand streaming architecture (two-way buses by default).
+    pub fn streaming(mut self, s: Streaming) -> Self {
+        self.streaming = s;
+        self
+    }
+
+    /// Partial-sum collection scheme (gather by default).
+    pub fn collection(mut self, c: Collection) -> Self {
+        self.collection = Some(c);
+        self
+    }
+
+    /// Dataflow mapping (Output-Stationary by default).
+    pub fn dataflow(mut self, d: DataflowKind) -> Self {
+        self.dataflow = Some(d);
+        self
+    }
+
+    /// PE grouping behind each router (§4.4).
+    pub fn pe_grouping(mut self, g: PeGrouping) -> Self {
+        self.pe_grouping = Some(g);
+        self
+    }
+
+    /// Gather timeout δ in cycles (default: the Table-1 plateau derived
+    /// from the final router radix).
+    pub fn delta(mut self, d: u64) -> Self {
+        self.delta = Some(d);
+        self
+    }
+
+    /// Flit-accurate round cap before steady-state extrapolation.
+    pub fn rounds_cap(mut self, cap: usize) -> Self {
+        self.rounds_cap = Some(cap);
+        self
+    }
+
+    /// Worker threads for multi-layer fan-outs (0 = auto).
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = Some(t);
+        self
+    }
+
+    /// Trace-driven round gating (the paper's Fig. 13/15/16 methodology).
+    pub fn trace_driven(mut self, on: bool) -> Self {
+        self.trace_driven = Some(on);
+        self
+    }
+
+    /// Weight-Stationary register-file capacity in words.
+    pub fn ws_rf_words(mut self, words: u32) -> Self {
+        self.ws_rf_words = Some(words);
+        self
+    }
+
+    /// Escape hatch for knobs without a dedicated setter; applied after
+    /// every named setter, still subject to `build()` validation.
+    pub fn configure(mut self, f: impl FnOnce(&mut SimConfig) + 'static) -> Self {
+        self.tweaks.push(Box::new(f));
+        self
+    }
+
+    /// Derive, validate and freeze the scenario. Every invalid input —
+    /// degenerate geometry, an odd PE array under CMesh concentration, a
+    /// torus without dateline VCs, any `SimConfig::validate` violation —
+    /// is a typed [`ConfigError`].
+    pub fn build(self) -> Result<Scenario, ConfigError> {
+        let streaming = self.streaming;
+        let mut cfg = match self.base {
+            Some(base) => {
+                // The base config's geometry is literal; a geometry
+                // setter here would be silently un-derived, so reject it
+                // loudly instead.
+                if self.mesh.is_some() || self.pes_per_router.is_some() {
+                    return Err(ConfigError::invalid(
+                        "builder",
+                        "mesh()/pes_per_router() drive the Table-1 derivation path and \
+                         do not combine with from_config() — the base config's geometry \
+                         is literal; edit it with configure() instead",
+                    ));
+                }
+                base
+            }
+            None => {
+                let kind = self.topology.unwrap_or(TopologyKind::Mesh);
+                let mesh = self.mesh.unwrap_or(8);
+                let pes = self.pes_per_router.unwrap_or(1);
+                let (radix, n) = match kind {
+                    TopologyKind::CMesh => {
+                        if mesh < 4 || mesh % 2 != 0 {
+                            return Err(ConfigError::invalid(
+                                "mesh",
+                                format!(
+                                    "concentrated mesh halves the radix: the PE-array side \
+                                     must be an even number >= 4, got {mesh}"
+                                ),
+                            ));
+                        }
+                        (mesh / 2, pes * CMESH_CONCENTRATION)
+                    }
+                    _ => (mesh, pes),
+                };
+                // table1 re-derives the gather packet size, packets/row
+                // and δ plateau for the (possibly halved) radix.
+                SimConfig::table1(radix, n)
+            }
+        };
+        if let Some(t) = self.topology {
+            cfg.topology = t;
+        }
+        if let Some(c) = self.collection {
+            cfg.collection = c;
+        }
+        if let Some(d) = self.dataflow {
+            cfg.dataflow = d;
+        }
+        if let Some(g) = self.pe_grouping {
+            cfg.pe_grouping = g;
+        }
+        if let Some(d) = self.delta {
+            cfg.delta = d;
+        }
+        if let Some(cap) = self.rounds_cap {
+            cfg.sim_rounds_cap = cap;
+        }
+        if let Some(t) = self.threads {
+            cfg.threads = t;
+        }
+        if let Some(on) = self.trace_driven {
+            cfg.trace_driven = on;
+        }
+        if let Some(w) = self.ws_rf_words {
+            cfg.ws_rf_words = w;
+        }
+        for tweak in self.tweaks {
+            tweak(&mut cfg);
+        }
+        cfg.validate()?;
+        Ok(Scenario {
+            topology: topology::build(&cfg),
+            cfg: Arc::new(cfg),
+            streaming,
+        })
+    }
+}
+
+/// A validated, runnable experiment point: shared config, built router
+/// fabric, streaming architecture. Cheap to clone (two `Arc`s and an
+/// enum); safe to fan out across threads.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    cfg: Arc<SimConfig>,
+    topology: Arc<dyn Topology>,
+    streaming: Streaming,
+}
+
+impl Scenario {
+    /// The validated configuration.
+    pub fn config(&self) -> &SimConfig {
+        &self.cfg
+    }
+
+    /// The configuration `Arc`, for callers constructing many simulations
+    /// from one scenario without deep clones.
+    pub fn shared_config(&self) -> Arc<SimConfig> {
+        self.cfg.clone()
+    }
+
+    /// The router fabric.
+    pub fn topology(&self) -> &dyn Topology {
+        self.topology.as_ref()
+    }
+
+    /// The streaming architecture.
+    pub fn streaming(&self) -> Streaming {
+        self.streaming
+    }
+
+    /// The collection scheme (held by the config).
+    pub fn collection(&self) -> Collection {
+        self.cfg.collection
+    }
+
+    /// Simulate one convolution layer: the flit-accurate round driver
+    /// plus steady-state extrapolation ([`crate::dataflow::driver`]),
+    /// without the power roll-up. Runs on this scenario's own fabric
+    /// `Arc` — the topology [`Scenario::topology`] advertises is, by
+    /// construction, the one simulated.
+    pub fn run_raw(&self, layer: &ConvLayer) -> LayerRunResult {
+        run_layer_with_fabric(
+            &self.cfg,
+            self.topology.clone(),
+            self.streaming,
+            self.cfg.collection,
+            layer,
+        )
+    }
+
+    /// Simulate one convolution layer and roll up power — the single
+    /// per-layer entry point (`Experiment::run_layer` and the executor's
+    /// per-layer evaluation are shims over this).
+    pub fn simulate(&self, layer: &ConvLayer) -> RunReport {
+        let run = self.run_raw(layer);
+        let power = power_report(
+            &self.cfg,
+            self.streaming,
+            self.cfg.collection,
+            &run.net,
+            &run.bus,
+            run.total_cycles,
+        );
+        RunReport { layer: layer.name.to_string(), run, power }
+    }
+
+    /// Execute a whole model under a per-layer plan through the network
+    /// executor (inter-layer reloads charged, layers fanned out over
+    /// `threads` workers). The scenario's own streaming/collection/
+    /// dataflow triple is what a `NetworkPlan::uniform` of
+    /// [`Scenario::uniform_policy`] runs.
+    pub fn execute(&self, model: &Model, plan: &NetworkPlan) -> crate::Result<NetworkRunReport> {
+        NetworkExecutor::new(self.cfg.as_ref().clone()).run(model, plan)
+    }
+
+    /// This scenario's (streaming × collection × dataflow) triple as a
+    /// per-layer policy — `NetworkPlan::uniform(scenario.uniform_policy(),
+    /// model.len())` runs the whole model under exactly this scenario.
+    pub fn uniform_policy(&self) -> crate::plan::LayerPolicy {
+        crate::plan::LayerPolicy {
+            streaming: self.streaming,
+            collection: self.cfg.collection,
+            dataflow: self.cfg.dataflow,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::alexnet;
+
+    #[test]
+    fn builder_defaults_match_table1() {
+        let s = ScenarioBuilder::new().build().unwrap();
+        assert_eq!(*s.config(), SimConfig::table1_8x8(1));
+        assert_eq!(s.streaming(), Streaming::TwoWay);
+        assert_eq!(s.collection(), Collection::Gather);
+        assert_eq!(s.topology().kind(), TopologyKind::Mesh);
+    }
+
+    #[test]
+    fn cmesh_halves_the_radix_and_concentrates() {
+        let s = ScenarioBuilder::new()
+            .mesh(8)
+            .pes_per_router(2)
+            .topology(TopologyKind::CMesh)
+            .build()
+            .unwrap();
+        let c = s.config();
+        assert_eq!((c.mesh_cols, c.mesh_rows), (4, 4));
+        assert_eq!(c.pes_per_router, 8);
+        assert_eq!(c.gather_packet_flits, SimConfig::gather_flits_for(8));
+        // δ plateau re-derived for the smaller radix.
+        assert_eq!(c.delta, SimConfig::table1(4, 8).delta);
+        assert_eq!(s.topology().dims(), (4, 4));
+        assert_eq!(s.topology().concentration(), 8);
+    }
+
+    #[test]
+    fn builder_rejects_bad_geometry_with_typed_errors() {
+        assert!(matches!(
+            ScenarioBuilder::new().mesh(7).topology(TopologyKind::CMesh).build(),
+            Err(ConfigError::Invalid { what: "mesh", .. })
+        ));
+        assert!(matches!(
+            ScenarioBuilder::new().mesh(0).build(),
+            Err(ConfigError::Invalid { what: "mesh", .. })
+        ));
+        assert!(matches!(
+            ScenarioBuilder::new()
+                .topology(TopologyKind::Torus)
+                .configure(|c| c.vcs = 1)
+                .build(),
+            Err(ConfigError::Invalid { what: "vcs", .. })
+        ));
+        assert!(matches!(
+            ScenarioBuilder::new().rounds_cap(1).build(),
+            Err(ConfigError::Invalid { what: "sim_rounds_cap", .. })
+        ));
+        // Geometry setters do not combine with from_config (the base
+        // config's dims are literal — silently ignoring the request
+        // would simulate the wrong geometry).
+        assert!(matches!(
+            ScenarioBuilder::from_config(SimConfig::table1_8x8(1)).mesh(16).build(),
+            Err(ConfigError::Invalid { what: "builder", .. })
+        ));
+        assert!(matches!(
+            ScenarioBuilder::from_config(SimConfig::table1_8x8(1)).pes_per_router(4).build(),
+            Err(ConfigError::Invalid { what: "builder", .. })
+        ));
+    }
+
+    #[test]
+    fn from_config_keeps_literal_dims() {
+        let mut cfg = SimConfig::table1(4, 8);
+        cfg.topology = TopologyKind::CMesh;
+        let s = ScenarioBuilder::from_config(cfg.clone()).build().unwrap();
+        assert_eq!(s.config().mesh_cols, 4);
+        assert_eq!(s.config().pes_per_router, 8);
+        assert_eq!(s.topology().kind(), TopologyKind::CMesh);
+    }
+
+    #[test]
+    fn simulate_matches_the_legacy_free_function() {
+        let mut base = SimConfig::table1_8x8(2);
+        base.sim_rounds_cap = 2;
+        let s = ScenarioBuilder::from_config(base.clone())
+            .collection(Collection::Gather)
+            .build()
+            .unwrap();
+        let facade = s.simulate(&alexnet::conv_layers()[0]);
+        let mut legacy_cfg = base;
+        legacy_cfg.collection = Collection::Gather;
+        let legacy = crate::dataflow::run_layer(
+            &legacy_cfg,
+            Streaming::TwoWay,
+            Collection::Gather,
+            &alexnet::conv_layers()[0],
+        );
+        assert_eq!(facade.run.total_cycles, legacy.total_cycles);
+        assert_eq!(facade.run.net, legacy.net);
+    }
+
+    #[test]
+    fn uniform_policy_mirrors_the_scenario_triple() {
+        let s = ScenarioBuilder::new()
+            .streaming(Streaming::OneWay)
+            .collection(Collection::Ina)
+            .dataflow(DataflowKind::WeightStationary)
+            .build()
+            .unwrap();
+        let p = s.uniform_policy();
+        assert_eq!(p.streaming, Streaming::OneWay);
+        assert_eq!(p.collection, Collection::Ina);
+        assert_eq!(p.dataflow, DataflowKind::WeightStationary);
+    }
+}

@@ -1,0 +1,99 @@
+//! Typed configuration errors.
+//!
+//! Every public construction and parse path of the crate —
+//! [`super::SimConfig::validate`], the keyword parsers
+//! ([`super::Streaming::parse`], [`super::Collection::parse`],
+//! [`super::DataflowKind::parse`], [`super::TopologyKind::parse`]), plan
+//! JSON loading ([`crate::plan::NetworkPlan::from_json`]) and the
+//! [`crate::api::ScenarioBuilder`] façade — reports failures as a
+//! [`ConfigError`] instead of panicking. The CLI prints the error and
+//! exits nonzero; library callers can match on the variant.
+//!
+//! `ConfigError` implements [`std::error::Error`], so it converts into
+//! the crate-wide `anyhow`-style [`crate::Result`] with `?`.
+
+use std::fmt;
+
+/// A configuration was invalid or could not be parsed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfigError {
+    /// A CLI/JSON keyword did not match any known spelling
+    /// (e.g. `--collection broadcast`).
+    UnknownKeyword {
+        /// Which selector was being parsed (`"collection"`, `"topology"`, …).
+        what: &'static str,
+        /// The spelling that failed to parse.
+        got: String,
+        /// The accepted spellings, for the error message.
+        expected: &'static str,
+    },
+    /// A field (or combination of fields) holds an invalid value
+    /// (e.g. a torus with a single virtual channel).
+    Invalid {
+        /// Which field or constraint was violated.
+        what: &'static str,
+        /// Human-readable explanation.
+        reason: String,
+    },
+    /// A JSON document failed to parse or is missing required structure.
+    Json {
+        /// Which document was being loaded (`"SimConfig"`, `"plan"`, …).
+        what: &'static str,
+        /// Parser or structural error text.
+        reason: String,
+    },
+}
+
+impl ConfigError {
+    /// Shorthand for an [`ConfigError::Invalid`] with a formatted reason.
+    pub fn invalid(what: &'static str, reason: impl fmt::Display) -> ConfigError {
+        ConfigError::Invalid { what, reason: reason.to_string() }
+    }
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::UnknownKeyword { what, got, expected } => {
+                write!(f, "unknown {what} '{got}' (expected {expected})")
+            }
+            ConfigError::Invalid { what, reason } => {
+                write!(f, "invalid {what}: {reason}")
+            }
+            ConfigError::Json { what, reason } => {
+                write!(f, "malformed {what} JSON: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ConfigError::UnknownKeyword {
+            what: "collection",
+            got: "broadcast".into(),
+            expected: "ru | gather | ina",
+        };
+        let s = e.to_string();
+        assert!(s.contains("collection") && s.contains("broadcast") && s.contains("gather"));
+        let e = ConfigError::invalid("vcs", "torus dateline rule needs >= 2 VCs");
+        assert!(e.to_string().contains("vcs"));
+    }
+
+    #[test]
+    fn converts_into_the_crate_result_with_question_mark() {
+        fn inner() -> crate::Result<()> {
+            let failed: Result<(), ConfigError> = Err(ConfigError::invalid("mesh", "too small"));
+            failed?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(err.to_string().contains("too small"));
+    }
+}

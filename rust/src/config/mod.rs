@@ -6,6 +6,63 @@
 
 use crate::util::json::Json;
 
+mod error;
+
+pub use error::ConfigError;
+
+/// Which router fabric connects the PEs (see [`crate::noc::topology`]).
+///
+/// The paper evaluates a plain mesh only; the other fabrics generalize
+/// its streaming/gather mechanisms. The kind is a plain config key — the
+/// behavioral object is the [`crate::noc::topology::Topology`] trait,
+/// built from a config by [`crate::noc::topology::build`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// The paper's 2D mesh: XY routing, memory elements off the east
+    /// edge. The default, and the only fabric the frozen reference
+    /// kernel ([`crate::noc::reference`]) supports.
+    Mesh,
+    /// 2D torus: the mesh plus wraparound links on both dimensions.
+    /// Collection semantics (gather paths, operand streams) keep the
+    /// mesh's row/column walks; unicast result traffic takes ring-minimal
+    /// routes, protected from deadlock by a dateline VC rule (needs
+    /// `vcs >= 2`).
+    Torus,
+    /// Concentrated mesh: `c` PEs share each router (via the existing
+    /// `pes_per_router` / [`PeGrouping`] machinery), halving the router
+    /// radix per dimension. Routing is XY on the smaller grid.
+    CMesh,
+}
+
+impl TopologyKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TopologyKind::Mesh => "mesh",
+            TopologyKind::Torus => "torus",
+            TopologyKind::CMesh => "cmesh",
+        }
+    }
+
+    /// Short machine-readable spelling (CLI `--topology`, config JSON).
+    pub fn key(&self) -> &'static str {
+        self.label()
+    }
+
+    /// Parse a CLI/JSON spelling (`mesh` / `torus` / `cmesh`, long names
+    /// accepted).
+    pub fn parse(s: &str) -> Result<TopologyKind, ConfigError> {
+        match s {
+            "mesh" => Ok(TopologyKind::Mesh),
+            "torus" => Ok(TopologyKind::Torus),
+            "cmesh" | "concentrated-mesh" | "cmesh4" => Ok(TopologyKind::CMesh),
+            other => Err(ConfigError::UnknownKeyword {
+                what: "topology",
+                got: other.to_string(),
+                expected: "mesh | torus | cmesh",
+            }),
+        }
+    }
+}
 
 /// Which dataflow maps a convolution layer onto the mesh (see
 /// [`crate::dataflow::Dataflow`]). The paper evaluates Output-Stationary
@@ -31,11 +88,15 @@ impl DataflowKind {
     }
 
     /// Parse a CLI/JSON spelling (`os` / `ws`, long names accepted).
-    pub fn parse(s: &str) -> crate::Result<DataflowKind> {
+    pub fn parse(s: &str) -> Result<DataflowKind, ConfigError> {
         match s {
             "os" | "output-stationary" => Ok(DataflowKind::OutputStationary),
             "ws" | "weight-stationary" => Ok(DataflowKind::WeightStationary),
-            other => anyhow::bail!("unknown dataflow '{other}' (os | ws)"),
+            other => Err(ConfigError::UnknownKeyword {
+                what: "dataflow",
+                got: other.to_string(),
+                expected: "os | ws",
+            }),
         }
     }
 }
@@ -97,6 +158,12 @@ impl PeGrouping {
 /// Network + PE configuration (Table 1) and simulator controls.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimConfig {
+    /// Router fabric connecting the PEs (CLI `--topology mesh|torus|cmesh`).
+    /// `mesh_cols`/`mesh_rows` are always the *router* grid — for a
+    /// concentrated mesh they are the already-halved radix (the
+    /// [`crate::api::ScenarioBuilder`] derives them from the logical PE
+    /// array).
+    pub topology: TopologyKind,
     /// Mesh columns (M in the paper; X dimension, gather direction is +X).
     pub mesh_cols: usize,
     /// Mesh rows (N in the paper; Y dimension).
@@ -180,9 +247,14 @@ impl SimConfig {
     /// Gather packet sizes follow the paper: 3, 5, 9, 17 flits for
     /// 1, 2, 4, 8 PEs/router; one gather packet per row on 8×8, two on
     /// 16×16 (§5.2 conclusion).
+    ///
+    /// `n` outside the paper's {1, 2, 4, 8} uses the generalized gather
+    /// packet sizing of [`SimConfig::gather_flits_for`] (a concentrated
+    /// mesh concentrates to n = 16/32); degenerate geometry is caught by
+    /// [`SimConfig::validate`], never by a panic here.
     pub fn table1(m: usize, n: usize) -> Self {
-        assert!(matches!(n, 1 | 2 | 4 | 8), "paper evaluates n ∈ {{1,2,4,8}}");
         SimConfig {
+            topology: TopologyKind::Mesh,
             mesh_cols: m,
             mesh_rows: m,
             vcs: 2,
@@ -200,7 +272,7 @@ impl SimConfig {
             // node before timeout. The paper folds link traversal into κ;
             // our model charges the Table-1 link cycle explicitly, so the
             // equivalent plateau is (N-1)·(κ+link)+κ (see noc::gather docs).
-            delta: (m as u64 - 1) * (4 + 1) + 4,
+            delta: (m as u64).saturating_sub(1) * (4 + 1) + 4,
             bus_words_per_cycle: 4,
             pe_grouping: PeGrouping::Column,
             dataflow: DataflowKind::OutputStationary,
@@ -272,26 +344,51 @@ impl SimConfig {
         self.router_pipeline
     }
 
-    /// Validate internal consistency.
-    pub fn validate(&self) -> crate::Result<()> {
-        anyhow::ensure!(self.mesh_cols >= 2 && self.mesh_rows >= 1, "mesh too small");
-        anyhow::ensure!(self.vcs >= 1, "need at least one VC");
-        anyhow::ensure!(self.buffer_depth >= 1, "need at least one buffer slot");
-        anyhow::ensure!(self.flit_bits % self.gather_payload_bits == 0,
-            "flit size must be a multiple of the gather payload size");
-        anyhow::ensure!(self.gather_packet_flits >= 2, "gather packet needs head + body");
-        anyhow::ensure!(self.unicast_packet_flits >= 2, "unicast packet needs head + body");
-        anyhow::ensure!(self.gather_packets_per_row >= 1, "need at least one gather packet");
-        anyhow::ensure!(self.router_pipeline >= 2, "pipeline must cover RC/VA + SA/ST");
-        anyhow::ensure!(self.sim_rounds_cap >= 2, "need >= 2 simulated rounds to extrapolate");
-        anyhow::ensure!(self.ws_rf_words >= 1, "WS register file needs at least one word");
+    /// Validate internal consistency. Every violation is a typed
+    /// [`ConfigError`] — this is the single gate the public construction
+    /// paths ([`crate::api::ScenarioBuilder::build`], JSON loading, the
+    /// CLI) rely on instead of panicking.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        fn check(cond: bool, what: &'static str, reason: &str) -> Result<(), ConfigError> {
+            if cond {
+                Ok(())
+            } else {
+                Err(ConfigError::invalid(what, reason))
+            }
+        }
+        check(self.mesh_cols >= 2 && self.mesh_rows >= 1, "mesh", "mesh too small")?;
+        check(self.pes_per_router >= 1, "pes_per_router", "need at least one PE per router")?;
+        check(self.vcs >= 1, "vcs", "need at least one VC")?;
+        check(self.buffer_depth >= 1, "buffer_depth", "need at least one buffer slot")?;
+        check(
+            self.gather_payload_bits > 0 && self.flit_bits % self.gather_payload_bits == 0,
+            "flit_bits",
+            "flit size must be a non-zero multiple of the gather payload size",
+        )?;
+        check(self.gather_packet_flits >= 2, "gather_packet_flits", "gather packet needs head + body")?;
+        check(self.unicast_packet_flits >= 2, "unicast_packet_flits", "unicast packet needs head + body")?;
+        check(self.gather_packets_per_row >= 1, "gather_packets_per_row", "need at least one gather packet")?;
+        check(self.router_pipeline >= 2, "router_pipeline", "pipeline must cover RC/VA + SA/ST")?;
+        check(self.sim_rounds_cap >= 2, "sim_rounds_cap", "need >= 2 simulated rounds to extrapolate")?;
+        check(self.ws_rf_words >= 1, "ws_rf_words", "WS register file needs at least one word")?;
+        if self.topology == TopologyKind::Torus {
+            // The dateline deadlock-avoidance rule splits the VCs into two
+            // classes per link (see `noc::topology::Torus2D`).
+            check(self.vcs >= 2, "vcs", "torus dateline VC rule needs >= 2 virtual channels")?;
+            check(
+                self.mesh_rows >= 2,
+                "mesh",
+                "torus wraparound needs >= 2 rows (a 1-row ring self-loops)",
+            )?;
+        }
         Ok(())
     }
 
     /// Serialize to JSON (see `crate::util::json`).
     pub fn to_json(&self) -> String {
         let mut j = Json::obj();
-        j.set("mesh_cols", Json::Num(self.mesh_cols as f64))
+        j.set("topology", Json::Str(self.topology.key().to_string()))
+            .set("mesh_cols", Json::Num(self.mesh_cols as f64))
             .set("mesh_rows", Json::Num(self.mesh_rows as f64))
             .set("vcs", Json::Num(self.vcs as f64))
             .set("buffer_depth", Json::Num(self.buffer_depth as f64))
@@ -321,12 +418,17 @@ impl SimConfig {
     /// Deserialize from JSON produced by [`SimConfig::to_json`]. Missing
     /// fields fall back to Table-1 8×8 / 1-PE defaults so configs stay
     /// forward-compatible.
-    pub fn from_json(s: &str) -> crate::Result<SimConfig> {
-        let j = crate::util::json::parse(s)?;
+    pub fn from_json(s: &str) -> Result<SimConfig, ConfigError> {
+        let j = crate::util::json::parse(s)
+            .map_err(|e| ConfigError::Json { what: "SimConfig", reason: e.to_string() })?;
         let d = SimConfig::default();
         let u = |k: &str, dv: u64| j.get(k).and_then(Json::as_u64).unwrap_or(dv);
         let us = |k: &str, dv: usize| j.get(k).and_then(Json::as_usize).unwrap_or(dv);
         let cfg = SimConfig {
+            topology: match j.get("topology").and_then(Json::as_str) {
+                Some(s) => TopologyKind::parse(s)?,
+                None => d.topology,
+            },
             mesh_cols: us("mesh_cols", d.mesh_cols),
             mesh_rows: us("mesh_rows", d.mesh_rows),
             vcs: us("vcs", d.vcs),
@@ -383,12 +485,16 @@ impl Collection {
 
     /// Parse a CLI/JSON spelling (`ru` / `gather` / `ina`, long names and
     /// the `label()` spellings accepted).
-    pub fn parse(s: &str) -> crate::Result<Collection> {
+    pub fn parse(s: &str) -> Result<Collection, ConfigError> {
         match s {
             "ru" | "RU" | "unicast" | "repetitive-unicast" => Ok(Collection::RepetitiveUnicast),
             "gather" => Ok(Collection::Gather),
             "ina" | "INA" | "in-network-accumulation" => Ok(Collection::Ina),
-            other => anyhow::bail!("unknown collection '{other}' (ru | gather | ina)"),
+            other => Err(ConfigError::UnknownKeyword {
+                what: "collection",
+                got: other.to_string(),
+                expected: "ru | gather | ina",
+            }),
         }
     }
 }
@@ -413,12 +519,16 @@ impl Streaming {
 
     /// Parse a CLI/JSON spelling (`mesh` / `one-way` / `two-way`; the
     /// `key()` spellings round-trip).
-    pub fn parse(s: &str) -> crate::Result<Streaming> {
+    pub fn parse(s: &str) -> Result<Streaming, ConfigError> {
         match s {
             "mesh" | "gather-only" => Ok(Streaming::Mesh),
             "one-way" | "oneway" | "1way" => Ok(Streaming::OneWay),
             "two-way" | "twoway" | "2way" => Ok(Streaming::TwoWay),
-            other => anyhow::bail!("unknown streaming '{other}' (mesh | one-way | two-way)"),
+            other => Err(ConfigError::UnknownKeyword {
+                what: "streaming",
+                got: other.to_string(),
+                expected: "mesh | one-way | two-way",
+            }),
         }
     }
 }
@@ -562,5 +672,68 @@ mod tests {
         let mut c = SimConfig::default();
         c.gather_packet_flits = 1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn topology_key_roundtrips_and_parses() {
+        for t in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
+            assert_eq!(TopologyKind::parse(t.key()).unwrap(), t);
+        }
+        assert_eq!(TopologyKind::parse("concentrated-mesh").unwrap(), TopologyKind::CMesh);
+        assert!(matches!(
+            TopologyKind::parse("hypercube"),
+            Err(ConfigError::UnknownKeyword { what: "topology", .. })
+        ));
+        // Configs written before the topology field default to mesh.
+        let legacy = SimConfig::from_json("{}").unwrap();
+        assert_eq!(legacy.topology, TopologyKind::Mesh);
+        // And the field round-trips.
+        let mut c = SimConfig::table1_8x8(2);
+        c.topology = TopologyKind::Torus;
+        assert_eq!(SimConfig::from_json(&c.to_json()).unwrap(), c);
+    }
+
+    #[test]
+    fn parse_errors_are_typed_not_panics() {
+        assert!(matches!(
+            Collection::parse("broadcast"),
+            Err(ConfigError::UnknownKeyword { what: "collection", .. })
+        ));
+        assert!(matches!(
+            Streaming::parse("bus"),
+            Err(ConfigError::UnknownKeyword { what: "streaming", .. })
+        ));
+        assert!(matches!(
+            DataflowKind::parse("systolic"),
+            Err(ConfigError::UnknownKeyword { what: "dataflow", .. })
+        ));
+        assert!(matches!(
+            SimConfig::from_json("{nonsense"),
+            Err(ConfigError::Json { what: "SimConfig", .. })
+        ));
+    }
+
+    #[test]
+    fn torus_demands_dateline_vcs() {
+        let mut c = SimConfig::table1_8x8(2);
+        c.topology = TopologyKind::Torus;
+        c.validate().unwrap();
+        c.vcs = 1;
+        assert!(matches!(c.validate(), Err(ConfigError::Invalid { what: "vcs", .. })));
+        // The same single-VC config is fine on a plain mesh.
+        c.topology = TopologyKind::Mesh;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn table1_tolerates_off_grid_n_without_panicking() {
+        // Concentrated meshes produce n = 16/32; table1 must size the
+        // gather packet via the generalized formula instead of asserting.
+        let c = SimConfig::table1(4, 16);
+        assert_eq!(c.gather_packet_flits, SimConfig::gather_flits_for(16));
+        c.validate().unwrap();
+        // Degenerate geometry is a typed validate error, not a panic.
+        assert!(SimConfig::table1(0, 1).validate().is_err());
+        assert!(SimConfig::table1(8, 0).validate().is_err());
     }
 }

@@ -29,11 +29,13 @@
 //! minimum wins — so the resulting plan's total can never exceed any
 //! uniform plan's total over the searched grid (asserted in
 //! `tests/network_exec.rs`).
+//!
+//! Per-layer evaluation is rebased on the [`crate::api::Scenario`]
+//! façade: each (layer, policy) point builds a scenario and runs through
+//! `Scenario::run_raw`, the same entry the public API exposes.
 
-use std::sync::Arc;
-
+use crate::api::ScenarioBuilder;
 use crate::config::{SimConfig, Streaming};
-use crate::dataflow::run_layer_shared;
 use crate::models::{ConvLayer, LayerInfo, Network};
 use crate::plan::{
     bus_policy_grid, mesh_policy_grid, reload_cycles, reload_net_stats, LayerPolicy, NetworkPlan,
@@ -124,10 +126,17 @@ fn evaluate_layer(
     input_words: u64,
     charge_reload: bool,
 ) -> LayerExecution {
-    // One SimConfig clone per (layer, policy) — the policy application —
-    // shared from here on (`Network` and the power roll-up take the Arc).
-    let lcfg = Arc::new(policy.apply(cfg));
-    let run = run_layer_shared(&lcfg, policy.streaming, policy.collection, layer);
+    // One scenario per (layer, policy) — the policy applied to the base
+    // config, validated and frozen behind an Arc the `Network` and the
+    // power roll-up share. This is the same per-layer entry point
+    // `Scenario::simulate` exposes publicly; the executor only differs in
+    // charging the boundary reload before pricing power.
+    let scenario = ScenarioBuilder::from_config(policy.apply(cfg))
+        .streaming(policy.streaming)
+        .build()
+        .expect("invalid SimConfig");
+    let lcfg = scenario.shared_config();
+    let run = scenario.run_raw(layer);
     let reload = if charge_reload {
         reload_cycles(&lcfg, policy.streaming, input_words)
     } else {

@@ -1,13 +1,17 @@
 //! One experiment = (network config, streaming architecture, collection
 //! scheme) applied to a workload. This is the unit every figure sweep and
 //! bench composes.
+//!
+//! `Experiment` predates the [`crate::api::Scenario`] façade and is now a
+//! thin shim over it: [`Experiment::run_layer`] builds a scenario once
+//! and delegates to [`crate::api::Scenario::simulate`], so the sweeps and
+//! the typed public API cannot drift apart.
 
-use std::sync::Arc;
-
+use crate::api::{Scenario, ScenarioBuilder};
 use crate::config::{Collection, SimConfig, Streaming};
-use crate::dataflow::{run_layer_shared, LayerRunResult};
+use crate::dataflow::LayerRunResult;
 use crate::models::ConvLayer;
-use crate::power::{power_report, PowerReport};
+use crate::power::PowerReport;
 
 /// An architecture point under evaluation.
 #[derive(Debug, Clone)]
@@ -57,29 +61,27 @@ impl Experiment {
         Experiment::new(cfg, Streaming::Mesh, Collection::Gather)
     }
 
-    pub fn run_layer(&self, layer: &ConvLayer) -> LayerReport {
-        self.run_layer_with(&Arc::new(self.cfg.clone()), layer)
+    /// The [`Scenario`] this experiment denotes. Panics on an invalid
+    /// `cfg` — exactly the failure `Network::shared` raised before the
+    /// façade existed; callers wanting a typed error build the scenario
+    /// themselves through [`ScenarioBuilder`].
+    pub fn scenario(&self) -> Scenario {
+        ScenarioBuilder::from_config(self.cfg.clone())
+            .streaming(self.streaming)
+            .collection(self.collection)
+            .build()
+            .expect("invalid SimConfig")
     }
 
-    fn run_layer_with(&self, cfg: &Arc<SimConfig>, layer: &ConvLayer) -> LayerReport {
-        let run = run_layer_shared(cfg, self.streaming, self.collection, layer);
-        let power = power_report(
-            cfg,
-            self.streaming,
-            self.collection,
-            &run.net,
-            &run.bus,
-            run.total_cycles,
-        );
-        LayerReport { layer: layer.name.to_string(), run, power }
+    pub fn run_layer(&self, layer: &ConvLayer) -> LayerReport {
+        self.scenario().simulate(layer)
     }
 
     pub fn run_model(&self, layers: &[ConvLayer]) -> ModelReport {
-        // One shared config for the whole model: every layer's `Network`
-        // clones the `Arc`, not the `SimConfig`.
-        let cfg = Arc::new(self.cfg.clone());
-        let layers: Vec<LayerReport> =
-            layers.iter().map(|l| self.run_layer_with(&cfg, l)).collect();
+        // One scenario for the whole model: every layer's `Network`
+        // clones the config `Arc`, not the `SimConfig`.
+        let scenario = self.scenario();
+        let layers: Vec<LayerReport> = layers.iter().map(|l| scenario.simulate(l)).collect();
         let total_cycles = layers.iter().map(|l| l.run.total_cycles).sum();
         let total_energy_j = layers.iter().map(|l| l.power.total_j).sum();
         ModelReport { layers, total_cycles, total_energy_j }

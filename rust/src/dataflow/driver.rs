@@ -37,6 +37,7 @@ use crate::config::{Collection, SimConfig, Streaming};
 use crate::models::ConvLayer;
 use crate::noc::network::{Network, StreamEdge};
 use crate::noc::stats::{BusStats, NetStats};
+use crate::noc::topology::{self, Topology};
 
 use super::{build, Dataflow};
 
@@ -88,15 +89,29 @@ pub fn run_layer(
 /// [`run_layer`] over an already-shared config: callers that evaluate
 /// many (layer, policy) points — the executor, the plan search, the
 /// figure sweeps — hand the same `Arc` to every simulation instead of
-/// deep-cloning `SimConfig` per constructed `Network`.
+/// deep-cloning `SimConfig` per constructed `Network`. The router fabric
+/// is built from `cfg.topology`.
 pub fn run_layer_shared(
     cfg: &Arc<SimConfig>,
     streaming: Streaming,
     collection: Collection,
     layer: &ConvLayer,
 ) -> LayerRunResult {
+    run_layer_with_fabric(cfg, topology::build(cfg), streaming, collection, layer)
+}
+
+/// [`run_layer_shared`] over a pre-built router fabric — the
+/// [`crate::api::Scenario`] path: the fabric the scenario advertises is,
+/// by construction, the one the simulation runs on.
+pub fn run_layer_with_fabric(
+    cfg: &Arc<SimConfig>,
+    topo: Arc<dyn Topology>,
+    streaming: Streaming,
+    collection: Collection,
+    layer: &ConvLayer,
+) -> LayerRunResult {
     let mapping = build(cfg, layer);
-    run_layer_mapped_shared(cfg, streaming, collection, layer, mapping.as_ref())
+    run_layer_mapped_fabric(cfg, &topo, streaming, collection, layer, mapping.as_ref())
 }
 
 /// Simulate `layer` under an explicit dataflow mapping.
@@ -107,11 +122,14 @@ pub fn run_layer_mapped(
     layer: &ConvLayer,
     mapping: &dyn Dataflow,
 ) -> LayerRunResult {
-    run_layer_mapped_shared(&Arc::new(cfg.clone()), streaming, collection, layer, mapping)
+    let cfg = Arc::new(cfg.clone());
+    let topo = topology::build(&cfg);
+    run_layer_mapped_fabric(&cfg, &topo, streaming, collection, layer, mapping)
 }
 
-fn run_layer_mapped_shared(
+fn run_layer_mapped_fabric(
     cfg: &Arc<SimConfig>,
+    topo: &Arc<dyn Topology>,
     streaming: Streaming,
     collection: Collection,
     layer: &ConvLayer,
@@ -119,9 +137,9 @@ fn run_layer_mapped_shared(
 ) -> LayerRunResult {
     match streaming {
         Streaming::OneWay | Streaming::TwoWay => {
-            run_bus_layer(cfg, streaming, collection, layer, mapping)
+            run_bus_layer(cfg, topo, streaming, collection, layer, mapping)
         }
-        Streaming::Mesh => run_mesh_layer(cfg, collection, layer, mapping),
+        Streaming::Mesh => run_mesh_layer(cfg, topo, collection, layer, mapping),
     }
 }
 
@@ -184,6 +202,7 @@ fn extrapolate(
 
 fn run_bus_layer(
     cfg: &Arc<SimConfig>,
+    topo: &Arc<dyn Topology>,
     streaming: Streaming,
     collection: Collection,
     layer: &ConvLayer,
@@ -203,7 +222,7 @@ fn run_bus_layer(
     let per_round = mapping.traffic_per_round(cfg).payloads;
     let payloads_per_node = mapping.psum_collection().payloads_per_node;
 
-    let mut net = Network::shared(cfg.clone(), collection);
+    let mut net = Network::with_topology(cfg.clone(), topo.clone(), collection);
     let mut completions = Vec::with_capacity(sim_rounds as usize);
     // Generous bound: rounds can never take longer than their traffic
     // serialized one flit at a time over the full mesh.
@@ -264,6 +283,7 @@ fn apply_accumulation_counts(result: &mut LayerRunResult, cfg: &SimConfig, mappi
 
 fn run_mesh_layer(
     cfg: &Arc<SimConfig>,
+    topo: &Arc<dyn Topology>,
     collection: Collection,
     layer: &ConvLayer,
     mapping: &dyn Dataflow,
@@ -280,7 +300,7 @@ fn run_mesh_layer(
     let col_streams = if words.col > 0 { cfg.mesh_cols as u64 } else { 0 };
     let streams_per_round = row_streams + col_streams;
 
-    let mut net = Network::shared(cfg.clone(), collection);
+    let mut net = Network::with_topology(cfg.clone(), topo.clone(), collection);
     let mut completions = Vec::with_capacity(sim_rounds as usize);
     // Mesh streams serialize at worst one flit/cycle per row with crossing
     // contention; bound generously.

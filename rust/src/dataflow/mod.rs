@@ -27,7 +27,9 @@ pub mod driver;
 pub mod os;
 pub mod ws;
 
-pub use driver::{run_layer, run_layer_mapped, run_layer_shared, LayerRunResult};
+pub use driver::{
+    run_layer, run_layer_mapped, run_layer_shared, run_layer_with_fabric, LayerRunResult,
+};
 pub use os::OsMapping;
 pub use ws::WsMapping;
 

@@ -60,52 +60,64 @@
 //!   defaults), including the [`config::DataflowKind`] and
 //!   [`config::Collection`] selectors.
 //!
-//! See `ARCHITECTURE.md` at the repository root for the module map and the
-//! simulator's per-cycle tick order.
+//! See `ARCHITECTURE.md` at the repository root for the module map, the
+//! simulator's per-cycle tick order, and the topology layer.
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use noc_dnn::config::{DataflowKind, SimConfig};
-//! use noc_dnn::coordinator::Experiment;
-//! use noc_dnn::models::alexnet;
+//! The public surface is the [`prelude`]: a [`api::ScenarioBuilder`]
+//! constructs a validated [`api::Scenario`] (typed [`config::ConfigError`]
+//! on any invalid input — no panicking constructors), and the scenario is
+//! the single entry point for per-layer simulation and whole-model
+//! execution:
 //!
-//! let mut cfg = SimConfig::table1_8x8(4); // 8x8 mesh, 4 PEs/router
-//! // Pick the dataflow: the paper's Output-Stationary is the default;
-//! // Weight-Stationary pins weights and broadcasts input patches.
-//! cfg.dataflow = DataflowKind::WeightStationary;
+//! ```no_run
+//! use noc_dnn::prelude::*;
+//!
+//! // 8x8 PE array concentrated onto a 4x4 router grid, Weight-Stationary
+//! // dataflow, in-network accumulation. Swap TopologyKind::CMesh for
+//! // ::Torus or ::Mesh to change the fabric — nothing else changes.
+//! let scenario = ScenarioBuilder::new()
+//!     .mesh(8)
+//!     .pes_per_router(4)
+//!     .topology(TopologyKind::CMesh)
+//!     .dataflow(DataflowKind::WeightStationary)
+//!     .collection(Collection::Ina)
+//!     .build()?;
 //! let layer = &alexnet::conv_layers()[0];
-//! let report = Experiment::proposed(cfg).run_layer(layer);
+//! let report = scenario.simulate(layer);
 //! println!(
 //!     "latency = {} cycles under the {} dataflow",
 //!     report.run.total_cycles,
 //!     report.run.dataflow
 //! );
+//! # Ok::<(), noc_dnn::config::ConfigError>(())
 //! ```
 //!
-//! Whole models run through the network executor — each layer under its
-//! own policy, totals rolled up with inter-layer traffic charged at the
+//! Whole models run through the same scenario — each layer under its own
+//! policy, totals rolled up with inter-layer traffic charged at the
 //! boundaries:
 //!
 //! ```no_run
-//! use noc_dnn::config::SimConfig;
-//! use noc_dnn::coordinator::executor::{best_plan, NetworkExecutor};
-//! use noc_dnn::models::Network;
+//! use noc_dnn::prelude::*;
 //!
-//! let cfg = SimConfig::table1_8x8(4);
+//! let scenario = ScenarioBuilder::new().mesh(8).pes_per_router(4).build()?;
 //! let model = Network::alexnet(); // or vgg16() / resnet_lite()
-//! let plan = best_plan(&cfg, &model); // per-layer argmin, sim-verified
-//! let run = NetworkExecutor::new(cfg).run(&model, &plan).unwrap();
+//! let plan = best_plan(scenario.config(), &model); // per-layer argmin, sim-verified
+//! let run = scenario.execute(&model, &plan).unwrap();
 //! println!("{} cycles, {:.3} mJ", run.total_cycles, run.total_energy_j * 1e3);
+//! # Ok::<(), noc_dnn::config::ConfigError>(())
 //! ```
 //!
 //! From the CLI: `noc-dnn run --model alexnet --dataflow ws` simulates one
-//! configuration; `noc-dnn model --model alexnet --plan best --json` runs
-//! the whole model under per-layer policies; `noc-dnn compare` runs the
-//! full OS-vs-WS study across all three streaming modes and all three
-//! collection schemes (RU / gather / INA).
+//! configuration (`--topology mesh|torus|cmesh` selects the fabric);
+//! `noc-dnn model --model alexnet --plan best --json` runs the whole model
+//! under per-layer policies; `noc-dnn compare` runs the full OS-vs-WS
+//! study across all three streaming modes and all three collection
+//! schemes (RU / gather / INA).
 
 pub mod analytic;
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;
@@ -117,6 +129,28 @@ pub mod power;
 pub mod runtime;
 pub mod streaming;
 pub mod util;
+
+/// One-stop imports for the public API: the scenario façade, the config
+/// selectors, models, plans and the most-used entry points.
+pub mod prelude {
+    pub use crate::api::{RunReport, Scenario, ScenarioBuilder};
+    pub use crate::config::{
+        Collection, ConfigError, DataflowKind, PeGrouping, SimConfig, Streaming, TopologyKind,
+    };
+    pub use crate::coordinator::executor::{best_plan, NetworkExecutor, NetworkRunReport};
+    pub use crate::coordinator::Experiment;
+    pub use crate::dataflow::run_layer;
+    pub use crate::models::{alexnet, ConvLayer, Network};
+    pub use crate::noc::topology::Topology;
+    pub use crate::plan::{LayerPolicy, NetworkPlan};
+}
+
+/// The north-star spelling of this crate's namespace: `pallas::prelude`
+/// is [`prelude`] — embedders that standardize on the `pallas` name can
+/// `use noc_dnn::pallas::prelude::*`.
+pub mod pallas {
+    pub use crate::prelude;
+}
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -17,9 +17,10 @@
 //! ```
 
 use anyhow::{bail, Result};
-use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming};
+use noc_dnn::api::ScenarioBuilder;
+use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming, TopologyKind};
 use noc_dnn::coordinator::executor::{best_plan_search, NetworkExecutor, PlanSearchOptions};
-use noc_dnn::coordinator::{report, sweep, Experiment};
+use noc_dnn::coordinator::{report, sweep};
 use noc_dnn::models::{alexnet, Network};
 use noc_dnn::plan::{LayerPolicy, NetworkPlan};
 use noc_dnn::power::area::overhead_report;
@@ -29,6 +30,7 @@ const VALUED: &[&str] = &[
     "mesh",
     "n",
     "model",
+    "topology",
     "streaming",
     "collection",
     "dataflow",
@@ -40,7 +42,17 @@ const VALUED: &[&str] = &[
 ];
 const BOOLEAN: &[&str] = &["json", "show", "help"];
 
-fn main() -> Result<()> {
+fn main() {
+    // Every failure — flag typos, unknown keywords, invalid geometry,
+    // malformed plan JSON — surfaces as a printed error and a nonzero
+    // exit, never an unwinding panic.
+    if let Err(e) = cli_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
+}
+
+fn cli_main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), VALUED, BOOLEAN)?;
     if args.get_bool("help") || args.positional(0).is_none() {
         print!("{}", usage());
@@ -63,24 +75,31 @@ fn usage() -> &'static str {
 USAGE:
   noc-dnn figure <12|13|14|15|16> [--mesh 8|16] [--n 1|2|4|8] [--json]
   noc-dnn run --model <alexnet|vgg16|resnet-lite> [--mesh N] [--n N]
+              [--topology mesh|torus|cmesh]
               [--streaming mesh|one-way|two-way] [--collection ru|gather|ina]
               [--dataflow os|ws] [--rounds-cap K] [--delta D] [--layer NAME]
   noc-dnn model --model <alexnet|vgg16|resnet-lite>
                 [--plan uniform|best|<file.json>] [--mesh N] [--n N]
-                [--streaming MODE] [--collection C] [--dataflow D]
-                [--threads T] [--rounds-cap K] [--json]
+                [--topology T] [--streaming MODE] [--collection C]
+                [--dataflow D] [--threads T] [--rounds-cap K] [--json]
   noc-dnn compare [--model <alexnet|vgg16|resnet-lite>] [--mesh N] [--n N]
                   [--json]
   noc-dnn overhead
-  noc-dnn config --show [--mesh N] [--n N] [--dataflow os|ws]
+  noc-dnn config --show [--mesh N] [--n N] [--topology T] [--dataflow os|ws]
                  [--collection ru|gather|ina] [--threads T]
 
 FLAGS:
+  --topology T       router fabric: 'mesh' (the paper's, default), 'torus'
+                     (wraparound links; unicast results take ring-minimal
+                     routes under a dateline VC rule) or 'cmesh'
+                     (concentrated mesh: 2x2 PE groups per router — the
+                     --mesh PE-array side maps onto a half-radix router
+                     grid with 4x the PEs per router)
   --dataflow os|ws   dataflow mapping: Output-Stationary (paper default) or
                      Weight-Stationary (weights pinned in PE register files,
                      input patches broadcast on the row buses)
   --streaming MODE   operand distribution: dedicated one-way/two-way buses
-                     (Fig. 10) or the mesh itself ('mesh', gather-only [27])
+                     (Fig. 10) or the fabric itself ('mesh', gather-only [27])
   --collection C     partial-sum collection: 'gather' packets (Algorithm 1),
                      repetitive unicast 'ru', or 'ina' in-network
                      accumulation (psums added at intermediate routers,
@@ -102,21 +121,39 @@ with WS-vs-OS ratios.
 "
 }
 
-fn cfg_from(args: &Args) -> Result<SimConfig> {
-    let mesh: usize = args.get_parsed("mesh", 8)?;
-    let n: usize = args.get_parsed("n", 1)?;
-    let mut cfg = SimConfig::table1(mesh, n);
-    cfg.sim_rounds_cap = args.get_parsed("rounds-cap", cfg.sim_rounds_cap)?;
-    cfg.threads = args.get_parsed("threads", cfg.threads)?;
-    cfg.delta = args.get_parsed("delta", cfg.delta)?;
+/// Build the scenario through the typed [`ScenarioBuilder`] façade:
+/// `--mesh` names the logical PE-array side, which `--topology cmesh`
+/// concentrates onto a half-radix router grid; every invalid combination
+/// is a typed `ConfigError` printed by `main`. Built once per command —
+/// `run` drives it directly, the other commands take its config.
+fn scenario_from(args: &Args) -> Result<noc_dnn::api::Scenario> {
+    let mut b = ScenarioBuilder::new()
+        .mesh(args.get_parsed("mesh", 8)?)
+        .pes_per_router(args.get_parsed("n", 1)?)
+        .streaming(streaming_from(args)?);
+    if let Some(t) = args.get("topology") {
+        b = b.topology(TopologyKind::parse(t)?);
+    }
     if let Some(df) = args.get("dataflow") {
-        cfg.dataflow = DataflowKind::parse(df)?;
+        b = b.dataflow(DataflowKind::parse(df)?);
     }
     if let Some(c) = args.get("collection") {
-        cfg.collection = Collection::parse(c)?;
+        b = b.collection(Collection::parse(c)?);
     }
-    cfg.validate()?;
-    Ok(cfg)
+    if args.get("rounds-cap").is_some() {
+        b = b.rounds_cap(args.get_parsed("rounds-cap", 0)?);
+    }
+    if args.get("threads").is_some() {
+        b = b.threads(args.get_parsed("threads", 0)?);
+    }
+    if args.get("delta").is_some() {
+        b = b.delta(args.get_parsed("delta", 0)?);
+    }
+    Ok(b.build()?)
+}
+
+fn cfg_from(args: &Args) -> Result<SimConfig> {
+    Ok(scenario_from(args)?.config().clone())
 }
 
 fn streaming_from(args: &Args) -> Result<Streaming> {
@@ -124,6 +161,12 @@ fn streaming_from(args: &Args) -> Result<Streaming> {
 }
 
 fn figure(args: &Args) -> Result<()> {
+    // The figure sweeps reproduce the paper's mesh-only evaluation; a
+    // silently ignored fabric flag would mislabel the output.
+    anyhow::ensure!(
+        args.get("topology").is_none(),
+        "--topology only applies to run/model/config; the paper figures are mesh-only"
+    );
     let which = args.positional(1).ok_or_else(|| anyhow::anyhow!("figure needs a number"))?;
     let mesh: usize = args.get_parsed("mesh", 8)?;
     match which {
@@ -168,36 +211,35 @@ fn figure(args: &Args) -> Result<()> {
 }
 
 fn run(args: &Args) -> Result<()> {
-    let cfg = cfg_from(args)?;
-    let streaming = streaming_from(args)?;
-    // cfg_from already folded --collection into the config.
-    let collection = cfg.collection;
+    // One scenario for the whole command: the façade validates once and
+    // every layer simulation shares its config Arc.
+    let scenario = scenario_from(args)?;
+    let cfg = scenario.config();
     let mut layers = Network::by_name(args.get("model").unwrap_or("alexnet"))?.layers;
     if let Some(name) = args.get("layer") {
         layers.retain(|l| l.name == name);
         anyhow::ensure!(!layers.is_empty(), "no layer named '{name}'");
     }
-    let exp = Experiment::new(cfg.clone(), streaming, collection);
     println!(
-        "running {} layer(s) on {}x{} mesh, n={}, dataflow={}, streaming={}, collection={}",
+        "running {} layer(s) on {}x{} {} routers, n={}, dataflow={}, streaming={}, collection={}",
         layers.len(),
         cfg.mesh_cols,
         cfg.mesh_rows,
+        cfg.topology.label(),
         cfg.pes_per_router,
         cfg.dataflow.label(),
-        streaming.label(),
-        collection.label()
+        scenario.streaming().label(),
+        scenario.collection().label()
     );
-    let m = exp.run_model(&layers);
-    let rows: Vec<Vec<String>> = m
-        .layers
+    let reports: Vec<_> = layers.iter().map(|l| scenario.simulate(l)).collect();
+    let rows: Vec<Vec<String>> = reports
         .iter()
         .map(|l| {
             vec![
                 l.layer.clone(),
                 l.run.rounds_total.to_string(),
                 l.run.total_cycles.to_string(),
-                format!("{:.3}", l.run.total_seconds(&cfg) * 1e3),
+                format!("{:.3}", l.run.total_seconds(cfg) * 1e3),
                 format!("{:.3}", l.power.total_j * 1e3),
                 format!("{:.1}", l.power.avg_power_w * 1e3),
             ]
@@ -210,11 +252,13 @@ fn run(args: &Args) -> Result<()> {
             &rows
         )
     );
+    let total_cycles: u64 = reports.iter().map(|l| l.run.total_cycles).sum();
+    let total_energy_j: f64 = reports.iter().map(|l| l.power.total_j).sum();
     println!(
         "TOTAL: {} cycles = {:.3} ms, {:.3} mJ",
-        m.total_cycles,
-        m.total_cycles as f64 / cfg.clock_hz * 1e3,
-        m.total_energy_j * 1e3
+        total_cycles,
+        total_cycles as f64 / cfg.clock_hz * 1e3,
+        total_energy_j * 1e3
     );
     Ok(())
 }
@@ -276,6 +320,13 @@ fn model_cmd(args: &Args) -> Result<()> {
 }
 
 fn compare(args: &Args) -> Result<()> {
+    // The OS-vs-WS study sweeps the mesh fabric only; reject rather than
+    // silently ignore a fabric request (same convention as --plan best's
+    // triple-flag rejection).
+    anyhow::ensure!(
+        args.get("topology").is_none(),
+        "--topology only applies to run/model/config; the compare study is mesh-only"
+    );
     let mesh: usize = args.get_parsed("mesh", 8)?;
     let n: usize = args.get_parsed("n", 4)?;
     // --dataflow is accepted for symmetry with `run` but the study always

@@ -7,9 +7,13 @@
 //!
 //! See [`network::Network`] for the simulator entry point. The cycle
 //! kernel is event-driven (active-router set + calendar-queue schedules,
-//! see the [`network`] module docs); the pre-refactor kernel survives as
-//! [`reference::ReferenceNetwork`], the golden twin the equivalence suite
-//! and the hot-path bench compare against.
+//! see the [`network`] module docs) and topology-polymorphic: the router
+//! fabric — geometry, links, deterministic routing, VC classes — is the
+//! [`topology::Topology`] trait (`Mesh2D` / `Torus2D` /
+//! `ConcentratedMesh`). The pre-refactor kernel survives as
+//! [`reference::ReferenceNetwork`] — frozen **mesh-only**, the golden
+//! twin the equivalence suite and the hot-path bench compare `Mesh2D`
+//! against.
 
 pub mod buffer;
 pub mod calendar;
@@ -20,9 +24,11 @@ pub mod reference;
 pub mod router;
 pub mod routing;
 pub mod stats;
+pub mod topology;
 
 pub use flit::{Coord, Flit, FlitType, PacketDesc, PacketId, PacketType};
 pub use network::{Network, StreamEdge};
 pub use reference::{ReferenceNetwork, SimKernel};
 pub use routing::{Algorithm, Port};
 pub use stats::{BusStats, NetStats};
+pub use topology::{BusAttachments, ConcentratedMesh, Mesh2D, Topology, Torus2D};

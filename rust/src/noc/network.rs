@@ -121,15 +121,21 @@
 //! ## Topology & memory elements (§5.1)
 //!
 //! Routers live at `(x, y)`, `x ∈ [0, cols)` eastward, `y ∈ [0, rows)`
-//! southward. The global memory of row `y` is the virtual node
-//! `(cols, y)`: packets routed to it leave the east edge and are sunk
-//! unconditionally (the memory ingest is never the bottleneck, as in the
-//! paper). Operand streams enter at the west edge (input activations, one
-//! per row) and the north edge (filter weights, one per column) — either
-//! over the mesh itself (`deliver_along_path` multicast wormhole streams,
-//! the "gather-only" baseline architecture) or over the dedicated
-//! streaming buses of `crate::streaming` (which bypass this module
-//! entirely).
+//! southward; links, route decisions and VC-class restrictions come from
+//! the [`Topology`] fabric built from `SimConfig::topology`
+//! ([`super::topology`]): the paper's `Mesh2D` (bit-identical to the
+//! pre-topology hardwired geometry), `Torus2D` (wraparound links for
+//! unicast result traffic under a dateline VC rule) and
+//! `ConcentratedMesh` (halved radix, `c` PEs per router). The global
+//! memory of row `y` is the virtual node `(cols, y)` on every fabric:
+//! packets routed to it leave the east edge and are sunk unconditionally
+//! (the memory ingest is never the bottleneck, as in the paper). Operand
+//! streams enter at the west edge (input activations, one per row) and
+//! the north edge (filter weights, one per column) — either over the
+//! fabric itself (`deliver_along_path` multicast wormhole streams, the
+//! "gather-only" baseline architecture; these walk rows/columns without
+//! wrapping on every fabric) or over the dedicated streaming buses of
+//! `crate::streaming` (which bypass this module entirely).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -139,8 +145,9 @@ use super::calendar::Calendar;
 use super::flit::{Coord, Flit, PacketDesc, PacketId, PacketType};
 use super::gather::{effective_delta, try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
 use super::router::{refresh_vc_state, RouterState};
-use super::routing::{route, Algorithm, Port};
+use super::routing::Port;
 use super::stats::NetStats;
+use super::topology::{self, Topology};
 use crate::config::{Collection, SimConfig};
 
 /// A flit in flight on a link, due to be written into a buffer.
@@ -209,7 +216,12 @@ pub struct Network {
     /// instance ([`Network::shared`]).
     pub cfg: Arc<SimConfig>,
     pub collection: Collection,
-    alg: Algorithm,
+    /// The router fabric: geometry, links and deterministic routing. The
+    /// kernel asks it for every route decision, neighbor lookup and VC
+    /// class; `Mesh2D` reproduces the pre-topology hardwired behavior
+    /// bit-identically (pinned against the frozen reference kernel by the
+    /// golden suite).
+    topo: Arc<dyn Topology>,
     cols: usize,
     rows: usize,
     vcs: usize,
@@ -289,27 +301,55 @@ impl Network {
 
     /// Construct a network sharing `cfg` with the caller (and with any
     /// sibling networks of the same sweep) instead of deep-cloning it.
+    /// The router fabric is built from `cfg.topology`
+    /// ([`topology::build`]); use [`Network::with_topology`] to inject a
+    /// pre-built fabric.
     pub fn shared(cfg: Arc<SimConfig>, collection: Collection) -> Self {
+        let topo = topology::build(&cfg);
+        Self::with_topology(cfg, topo, collection)
+    }
+
+    /// Construct a network over an explicit [`Topology`] (which must span
+    /// the config's router grid). The typed construction path is
+    /// [`crate::api::ScenarioBuilder`]; this constructor — like
+    /// [`Network::new`] — expects an already-validated config.
+    pub fn with_topology(
+        cfg: Arc<SimConfig>,
+        topo: Arc<dyn Topology>,
+        collection: Collection,
+    ) -> Self {
         cfg.validate().expect("invalid SimConfig");
+        assert_eq!(
+            topo.dims(),
+            (cfg.mesh_cols, cfg.mesh_rows),
+            "topology grid does not match the config's router grid"
+        );
+        // The config key must agree with the injected fabric: validate()
+        // enforces per-fabric requirements (e.g. the torus dateline rule
+        // needs vcs >= 2) keyed on cfg.topology, and the analytic/
+        // streaming closed forms read the key — a mismatched fabric would
+        // dodge validation and silently model the wrong network.
+        assert_eq!(
+            topo.kind(),
+            cfg.topology,
+            "injected topology does not match cfg.topology"
+        );
         let (cols, rows, vcs) = (cfg.mesh_cols, cfg.mesh_rows, cfg.vcs);
         let mut routers = Vec::with_capacity(cols * rows);
         for y in 0..rows {
             for x in 0..cols {
                 // Which output ports have a downstream router to credit?
-                // East at the east edge is the memory sink (no credits);
-                // other edge ports simply never get routed to.
+                // Ports with no link (mesh edges; East at the east edge is
+                // the memory sink) carry no tracker. On a torus every port
+                // has a wrap link — the east-edge East tracker simply never
+                // has credits consumed by ejecting flits.
+                let here = Coord::new(x as u16, y as u16);
                 let mut nb = [false; PORTS];
-                nb[Port::North.index()] = y > 0;
-                nb[Port::South.index()] = y + 1 < rows;
-                nb[Port::East.index()] = x + 1 < cols;
-                nb[Port::West.index()] = x > 0;
+                for p in [Port::North, Port::South, Port::East, Port::West] {
+                    nb[p.index()] = topo.neighbor(here, p).is_some();
+                }
                 nb[Port::Local.index()] = false; // ejection: NI always sinks
-                routers.push(RouterState::new(
-                    Coord::new(x as u16, y as u16),
-                    vcs,
-                    cfg.buffer_depth,
-                    &nb,
-                ));
+                routers.push(RouterState::new(here, vcs, cfg.buffer_depth, &nb));
             }
         }
         let mut ni: Vec<NiState> = (0..cols * rows).map(|_| NiState::new()).collect();
@@ -320,7 +360,7 @@ impl Network {
         let link_window = (cfg.link_latency + 2) as usize;
         Network {
             collection,
-            alg: Algorithm::Xy,
+            topo,
             cols,
             rows,
             vcs,
@@ -359,6 +399,21 @@ impl Network {
     /// Memory element coordinate for row `y` (virtual east column).
     pub fn memory_of_row(&self, y: usize) -> Coord {
         Coord::new(self.cols as u16, y as u16)
+    }
+
+    /// Is a hop out of `out_port` at `here` toward `dst` an ejection
+    /// (unconditional sink, no credits, no VC class)? Local always; East
+    /// at the east-edge column when the destination is the row memory
+    /// element. The single copy of this predicate — VC allocation (class
+    /// selection) and `grant` (eject vs forward, credit consumption) must
+    /// agree on it or a flit could be classed as a link hop yet ejected,
+    /// or forwarded over a torus wrap link instead of sunk at memory.
+    #[inline]
+    fn is_memory_ejection(&self, here: Coord, out_port: Port, dst: Coord) -> bool {
+        out_port == Port::Local
+            || (out_port == Port::East
+                && here.x as usize + 1 == self.cols
+                && dst.x as usize >= self.cols)
     }
 
     fn alloc_pid(&mut self) -> PacketId {
@@ -844,23 +899,39 @@ impl Network {
         while mask != 0 {
             let idx = mask.trailing_zeros() as usize;
             mask &= mask - 1;
-            let dst = {
+            let (dst, src, ptype) = {
                 let r = &self.routers[ridx];
                 match (r.inputs[idx].state, r.inputs[idx].front()) {
                     (VcState::Routing { sa_ready_cycle }, Some(f))
                         // VA completes one cycle before SA readiness.
                         if self.cycle + 1 >= sa_ready_cycle =>
                     {
-                        f.dst
+                        (f.dst, f.src, f.ptype)
                     }
                     _ => continue,
                 }
             };
             let here = self.routers[ridx].coord;
-            let out_port = route(self.alg, here, dst);
+            let out_port = self.topo.route(ptype, here, dst);
+            // Ejection hops sink unconditionally and carry no VC-class
+            // restriction; for link hops the topology may confine
+            // allocation to one VC class (the torus dateline rule — a
+            // no-op on the mesh).
+            let class = if self.is_memory_ejection(here, out_port, dst) {
+                None
+            } else {
+                self.topo.vc_class(ptype, src, here, dst, out_port)
+            };
             let in_port = idx / vcs;
             let in_vc = idx % vcs;
-            let granted = self.routers[ridx].allocate_out_vc(out_port, vcs, (in_port, in_vc));
+            let granted = match class {
+                None => self.routers[ridx].allocate_out_vc(out_port, vcs, (in_port, in_vc)),
+                Some(c) => {
+                    let half = (vcs / 2).max(1);
+                    let (lo, hi) = if c == 0 { (0, half) } else { (half, vcs) };
+                    self.routers[ridx].allocate_out_vc_range(out_port, lo, hi, vcs, (in_port, in_vc))
+                }
+            };
             if let Some(out_vc) = granted {
                 self.stats.vc_allocs += 1;
                 self.routers[ridx].inputs[idx].state = VcState::Active {
@@ -986,14 +1057,18 @@ impl Network {
         // --- upstream credit refund (the slot we just freed) ---
         let in_port = Port::from_index(idx / vcs);
         let in_vc = idx % vcs;
-        if in_port != Port::Local {
+        // Flits injected at this router (`src == here`: Local results, or
+        // the West/North operand-stream sources) freed a slot no upstream
+        // router holds credits for. On the mesh the source-port check is
+        // redundant with the missing-neighbour check below; on a torus the
+        // edge ports DO have (wrap) neighbours, so without it a stream
+        // flit would refund a credit the wrap upstream never spent.
+        if in_port != Port::Local && flit.src != self.routers[ridx].coord {
             let here = self.routers[ridx].coord;
             if let Some(up) = self.neighbour(here, in_port) {
                 let up_idx = self.node_idx(up);
                 self.credit_refunds.push((up_idx, in_port.opposite().index(), in_vc));
             }
-            // else: edge injection port (West/North memory side) — the
-            // injector checks buffer space directly, no credits to refund.
         }
 
         // --- tail: release the output VC and refresh the input VC ---
@@ -1009,11 +1084,7 @@ impl Network {
 
         // --- forward or eject ---
         let here = self.routers[ridx].coord;
-        let ejecting = out_port == Port::Local
-            || (out_port == Port::East
-                && here.x as usize + 1 == self.cols
-                && flit.dst.x as usize >= self.cols);
-        if ejecting {
+        if self.is_memory_ejection(here, out_port, flit.dst) {
             self.eject(flit);
             self.flits_active -= 1;
         } else {
@@ -1125,9 +1196,9 @@ impl Network {
     fn absorb_ina_packet(&mut self, ridx: usize, absorbed: usize, survivor: usize) {
         let vcs = self.vcs;
         let kappa = self.cfg.kappa();
-        let (pid, len, carried, words) = {
+        let (pid, len, carried, words, absorbed_src) = {
             let f = self.routers[ridx].inputs[absorbed].front().expect("absorbed VC empty");
-            (f.packet_id, f.packet_len as usize, f.carried_payloads, f.aspace)
+            (f.packet_id, f.packet_len as usize, f.carried_payloads, f.aspace, f.src)
         };
         // SA requesters are Active: release the output VC the absorbed
         // packet held so a later packet can claim the lane.
@@ -1148,9 +1219,10 @@ impl Network {
         self.stats.buffer_reads += len as u64;
         self.stats.ina_merges += 1;
         self.stats.ina_adds += words as u64;
-        // Refund the upstream credits for the slots freed all at once.
+        // Refund the upstream credits for the slots freed all at once
+        // (skipping locally-injected packets, as in `grant`).
         let in_port = Port::from_index(absorbed / vcs);
-        if in_port != Port::Local {
+        if in_port != Port::Local && absorbed_src != self.routers[ridx].coord {
             let here = self.routers[ridx].coord;
             if let Some(up) = self.neighbour(here, in_port) {
                 let up_idx = self.node_idx(up);
@@ -1210,13 +1282,7 @@ impl Network {
     }
 
     fn neighbour(&self, c: Coord, p: Port) -> Option<Coord> {
-        match p {
-            Port::North => (c.y > 0).then(|| Coord::new(c.x, c.y - 1)),
-            Port::South => ((c.y as usize + 1) < self.rows).then(|| Coord::new(c.x, c.y + 1)),
-            Port::East => ((c.x as usize + 1) < self.cols).then(|| Coord::new(c.x + 1, c.y)),
-            Port::West => (c.x > 0).then(|| Coord::new(c.x - 1, c.y)),
-            Port::Local => None,
-        }
+        self.topo.neighbor(c, p)
     }
 
     fn feed_injectors(&mut self) {
@@ -1352,6 +1418,11 @@ impl Network {
                 self.stats.delta_expiries += 1;
             }
         });
+    }
+
+    /// The router fabric this network simulates.
+    pub fn topology(&self) -> &dyn Topology {
+        self.topo.as_ref()
     }
 
     // Exposed for tests.

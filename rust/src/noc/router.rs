@@ -89,9 +89,24 @@ impl RouterState {
     /// VC index. Prefers the VC with the most downstream credits so long
     /// packets pick the least-congested lane.
     pub fn allocate_out_vc(&mut self, out_port: Port, vcs: usize, holder: (usize, usize)) -> Option<usize> {
+        self.allocate_out_vc_range(out_port, 0, vcs, vcs, holder)
+    }
+
+    /// [`RouterState::allocate_out_vc`] restricted to the VC index range
+    /// `lo..hi` — the topology dateline rule confines a packet to one VC
+    /// class per link (see [`super::topology::Topology::vc_class`]); the
+    /// unrestricted call is the full range, so mesh behavior is untouched.
+    pub fn allocate_out_vc_range(
+        &mut self,
+        out_port: Port,
+        lo: usize,
+        hi: usize,
+        vcs: usize,
+        holder: (usize, usize),
+    ) -> Option<usize> {
         let base = out_port.index() * vcs;
         let mut best: Option<(usize, u32)> = None;
-        for vc in 0..vcs {
+        for vc in lo..hi.min(vcs) {
             if self.out_vc_holder[base + vc].is_none() {
                 let credits = match &self.out_credits[out_port.index()] {
                     Some(ct) => ct.count(vc),
@@ -163,6 +178,18 @@ mod tests {
         assert!(r.allocate_out_vc(Port::East, 2, (1, 0)).is_none());
         r.release_out_vc(Port::East, 1, 2);
         assert!(r.allocate_out_vc(Port::East, 2, (1, 0)).is_some());
+    }
+
+    #[test]
+    fn range_allocation_confines_the_vc_class() {
+        let mut r = router();
+        // Class 1 on 2 VCs = index range 1..2 only.
+        let vc = r.allocate_out_vc_range(Port::East, 1, 2, 2, (0, 0)).unwrap();
+        assert_eq!(vc, 1);
+        // Class 1 exhausted even though VC0 is free.
+        assert!(r.allocate_out_vc_range(Port::East, 1, 2, 2, (1, 0)).is_none());
+        // Class 0 still allocates.
+        assert_eq!(r.allocate_out_vc_range(Port::East, 0, 1, 2, (1, 0)), Some(0));
     }
 
     #[test]

@@ -1,0 +1,620 @@
+//! Route-aware topology abstraction over the router fabric.
+//!
+//! The cycle-accurate kernel ([`super::network::Network`]) moves flits
+//! between routers; *which* routers exist, how they are linked, and which
+//! output port a packet takes are questions this module answers through
+//! the [`Topology`] trait. Three fabrics implement it:
+//!
+//! * [`Mesh2D`] — the paper's plain mesh, bit-identical to the hardwired
+//!   geometry the kernel shipped with (the frozen reference kernel in
+//!   [`super::reference`] keeps that geometry inline; the golden
+//!   equivalence suite pins `Mesh2D` against it).
+//! * [`Torus2D`] — mesh plus wraparound links. Collection-semantic
+//!   traffic (gather/INA row walks, operand multicast streams) keeps the
+//!   mesh's dimension-ordered paths, so Algorithm 1 still visits every
+//!   NI of a row; unicast result traffic takes ring-minimal routes and a
+//!   **dateline VC rule** keeps them deadlock-free (see below).
+//! * [`ConcentratedMesh`] — `c` PEs share one router via the existing
+//!   `pes_per_router` machinery, halving the router radix per dimension;
+//!   routing is plain XY on the smaller grid.
+//!
+//! ## Determinism and deadlock freedom
+//!
+//! Every implementation's [`Topology::route`] is a *deterministic*
+//! function of `(packet type, here, dst)` — no adaptivity, no RNG — so
+//! simulations stay bit-reproducible. Deadlock freedom per fabric:
+//!
+//! * `Mesh2D` / `ConcentratedMesh`: dimension-ordered XY — the canonical
+//!   turn-free order (X settles before Y; no cyclic channel dependency).
+//! * `Torus2D`: gather/INA/multicast packets use the mesh's XY order and
+//!   never cross a wraparound link. Unicast packets route ring-minimal
+//!   per dimension (X then Y, ties break away from the wrap) and obey the
+//!   dateline rule: the VC space is split into two classes; a packet
+//!   occupies class-0 VCs until its path crosses the dimension's dateline
+//!   (the wrap link), class-1 VCs from the wrap hop on
+//!   ([`Topology::vc_class`]). Any cycle around a ring would need the
+//!   wrap link in class 0 — which the rule forbids — so the channel
+//!   dependency graph stays acyclic. This is why
+//!   [`crate::config::SimConfig::validate`] demands `vcs >= 2` on a
+//!   torus.
+//!
+//! ## Memory elements
+//!
+//! All fabrics keep the paper's memory placement: the row-`y` global
+//! memory is the virtual node `(cols, y)` behind the east edge, reached
+//! by ejecting east at column `cols − 1`. On the torus the *physical*
+//! wrap link between columns `cols − 1` and `0` lets westbound unicasts
+//! shortcut to the memory column ([`Topology::result_hops`] shrinks from
+//! `cols − x` to `min(cols − x, x + 2)`), which is the fabric's latency
+//! win for the repetitive-unicast baseline.
+
+use std::fmt;
+use std::sync::Arc;
+
+use super::flit::{Coord, PacketType};
+use super::routing::{route as dimension_route, Algorithm, Port};
+use crate::config::{SimConfig, TopologyKind};
+
+/// Streaming-unit placement for the bus fabrics of `crate::streaming`:
+/// how many row/column buses exist and how many NIs each drives. Derived
+/// from the router grid — concentration shrinks the bus count along with
+/// the radix (each NI then feeds `c` PEs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BusAttachments {
+    /// Input-activation streaming units (one per router row). Drives the
+    /// word accounting of `streaming::per_round_bus_stats`.
+    pub row_buses: usize,
+    /// Weight streaming units (one per router column). Also consumed by
+    /// the bus word accounting.
+    pub col_buses: usize,
+    /// NIs attached to each row bus (placement metadata: the §4.4
+    /// all-have-space gate spans this many NIs).
+    pub nis_per_row_bus: usize,
+    /// NIs attached to each col bus (placement metadata).
+    pub nis_per_col_bus: usize,
+}
+
+/// A router fabric: geometry (dims/links) plus deterministic routing.
+///
+/// Implementations must uphold:
+///
+/// * **route/neighbor consistency** — whenever `route` returns a
+///   non-ejection port, `neighbor(here, port)` is `Some` and repeated
+///   application reaches `dst` (progress);
+/// * **no self-loops** — `neighbor(c, p) != Some(c)`;
+/// * **determinism** — `route` depends only on its arguments;
+/// * **documented deadlock freedom** (see the module docs per impl).
+///
+/// These laws are pinned by `tests/topology_laws.rs`.
+pub trait Topology: fmt::Debug + Send + Sync {
+    /// Which config key builds this fabric.
+    fn kind(&self) -> TopologyKind;
+
+    /// Router grid as `(cols, rows)`.
+    fn dims(&self) -> (usize, usize);
+
+    /// PEs concentrated behind each router (1 unless the fabric itself
+    /// concentrates). Metadata for reports/tests — the kernel's per-NI
+    /// behavior is always driven by `SimConfig::pes_per_router`, which
+    /// the [`crate::api::ScenarioBuilder`] keeps in sync with this value
+    /// when it derives a concentrated mesh.
+    fn concentration(&self) -> usize {
+        1
+    }
+
+    /// The router reached from `node` through output port `port`
+    /// (`None` for fabric edges and for `Port::Local`).
+    fn neighbor(&self, node: Coord, port: Port) -> Option<Coord>;
+
+    /// Output port at `here` for a packet of `ptype` headed to `dst`.
+    /// `dst.x >= cols` addresses the row memory element (eject east at
+    /// the edge column). Deterministic and deadlock-free per impl.
+    fn route(&self, ptype: PacketType, here: Coord, dst: Coord) -> Port;
+
+    /// VC-class restriction for the hop leaving `here` through `out`
+    /// toward `dst` (packet injected at `src`). `None` = unrestricted
+    /// (the mesh behavior); `Some(0)`/`Some(1)` confine VC allocation to
+    /// the lower/upper half of the VC space (the torus dateline rule).
+    fn vc_class(
+        &self,
+        ptype: PacketType,
+        src: Coord,
+        here: Coord,
+        dst: Coord,
+        out: Port,
+    ) -> Option<usize> {
+        let _ = (ptype, src, here, dst, out);
+        None
+    }
+
+    /// Ordered routers a row-collection (gather/INA) packet traverses for
+    /// `row` — initiator first, ejecting router last.
+    ///
+    /// **Descriptive, not prescriptive**: the kernel steers gather/INA
+    /// packets through [`Topology::route`] hop by hop, so this method
+    /// must equal the walk `route` induces for gather packets — it is
+    /// the queryable form of that walk for tests, analytics and NI
+    /// placement, and `tests/topology_laws.rs` pins the agreement. A
+    /// fabric that wants a different collection path must change
+    /// `route`'s gather arm (and this view with it), not just this
+    /// method.
+    fn gather_path(&self, row: usize) -> Vec<Coord> {
+        let (cols, _) = self.dims();
+        (0..cols).map(|x| Coord::new(x as u16, row as u16)).collect()
+    }
+
+    /// Streaming-unit placement for the bus architectures.
+    fn bus_attachments(&self) -> BusAttachments {
+        let (cols, rows) = self.dims();
+        BusAttachments {
+            row_buses: rows,
+            col_buses: cols,
+            nis_per_row_bus: cols,
+            nis_per_col_bus: rows,
+        }
+    }
+
+    /// Routers a unicast result packet from `node` traverses to its row
+    /// memory element, inclusive of the ejecting router.
+    fn result_hops(&self, node: Coord) -> u64;
+
+    /// Worst-case [`Topology::result_hops`] over a row — the head-latency
+    /// term of the analytic RU closed form (Eq. (3) uses `M` on the
+    /// mesh).
+    fn worst_result_hops(&self) -> u64 {
+        let (cols, _) = self.dims();
+        (0..cols)
+            .map(|x| self.result_hops(Coord::new(x as u16, 0)))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Build the fabric selected by `cfg.topology` over the config's router
+/// grid. This is the single construction seam the kernel, the analytic
+/// forms and the streaming model share.
+pub fn build(cfg: &SimConfig) -> Arc<dyn Topology> {
+    match cfg.topology {
+        TopologyKind::Mesh => Arc::new(Mesh2D::new(cfg.mesh_cols, cfg.mesh_rows)),
+        TopologyKind::Torus => Arc::new(Torus2D::new(cfg.mesh_cols, cfg.mesh_rows)),
+        TopologyKind::CMesh => {
+            Arc::new(ConcentratedMesh::new(cfg.mesh_cols, cfg.mesh_rows, cfg.pes_per_router))
+        }
+    }
+}
+
+/// Run `f` against the config's fabric **on the stack** — no `Arc`, no
+/// heap allocation. For the closed-form consumers on hot paths (the
+/// analytic forms inside the plan search, the per-run bus accounting),
+/// where [`build`]'s boxed fabric per call would be pure overhead.
+pub fn with_fabric<T>(cfg: &SimConfig, f: impl FnOnce(&dyn Topology) -> T) -> T {
+    match cfg.topology {
+        TopologyKind::Mesh => f(&Mesh2D::new(cfg.mesh_cols, cfg.mesh_rows)),
+        TopologyKind::Torus => f(&Torus2D::new(cfg.mesh_cols, cfg.mesh_rows)),
+        TopologyKind::CMesh => {
+            f(&ConcentratedMesh::new(cfg.mesh_cols, cfg.mesh_rows, cfg.pes_per_router))
+        }
+    }
+}
+
+/// [`Topology::worst_result_hops`] of the config's fabric, without
+/// constructing a boxed trait object (plan-search hot path).
+pub fn worst_result_hops(cfg: &SimConfig) -> u64 {
+    with_fabric(cfg, |t| t.worst_result_hops())
+}
+
+/// [`Topology::bus_attachments`] of the config's fabric, allocation-free.
+pub fn bus_attachments(cfg: &SimConfig) -> BusAttachments {
+    with_fabric(cfg, |t| t.bus_attachments())
+}
+
+// ---------------------------------------------------------------------
+// Mesh2D
+// ---------------------------------------------------------------------
+
+/// The paper's plain 2D mesh: XY routing, no wraparound, memory off the
+/// east edge. Reproduces the kernel's original hardwired geometry
+/// bit-identically (routing delegates to the same
+/// [`super::routing::route`] the pre-topology kernel called).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mesh2D {
+    cols: usize,
+    rows: usize,
+}
+
+impl Mesh2D {
+    pub fn new(cols: usize, rows: usize) -> Mesh2D {
+        Mesh2D { cols, rows }
+    }
+}
+
+impl Topology for Mesh2D {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Mesh
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.cols, self.rows)
+    }
+
+    fn neighbor(&self, c: Coord, p: Port) -> Option<Coord> {
+        match p {
+            Port::North => (c.y > 0).then(|| Coord::new(c.x, c.y - 1)),
+            Port::South => ((c.y as usize + 1) < self.rows).then(|| Coord::new(c.x, c.y + 1)),
+            Port::East => ((c.x as usize + 1) < self.cols).then(|| Coord::new(c.x + 1, c.y)),
+            Port::West => (c.x > 0).then(|| Coord::new(c.x - 1, c.y)),
+            Port::Local => None,
+        }
+    }
+
+    fn route(&self, _ptype: PacketType, here: Coord, dst: Coord) -> Port {
+        // Deadlock-free order: X settles fully before Y (XY dimension
+        // order), identical for every packet type.
+        dimension_route(Algorithm::Xy, here, dst)
+    }
+
+    fn result_hops(&self, node: Coord) -> u64 {
+        self.cols as u64 - node.x as u64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Torus2D
+// ---------------------------------------------------------------------
+
+/// Ring distances: (hops moving +1 mod dim, hops moving −1 mod dim).
+fn ring_delta(from: u16, to: u16, dim: u16) -> (u16, u16) {
+    let fwd = (to + dim - from) % dim;
+    (fwd, (dim - fwd) % dim)
+}
+
+/// 2D torus: the mesh plus wraparound links in both dimensions.
+///
+/// Routing order (documented deadlock-free order of this impl):
+///
+/// * gather / INA / multicast packets: the mesh's XY walk — these packets
+///   *are* their path (a gather packet must pass every NI of its row, an
+///   operand stream must deliver to every router it covers), so the wrap
+///   links are off-limits to them;
+/// * unicast packets: ring-minimal X, then ring-minimal Y (ties break to
+///   the positive direction), under the dateline VC rule of
+///   [`Topology::vc_class`]. Memory destinations (`dst.x >= cols`) route
+///   to the edge column ring-minimally — westbound wraps are exactly the
+///   shortcut that makes RU collection cheaper on this fabric — and
+///   eject east there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Torus2D {
+    cols: usize,
+    rows: usize,
+}
+
+impl Torus2D {
+    pub fn new(cols: usize, rows: usize) -> Torus2D {
+        Torus2D { cols, rows }
+    }
+
+    /// X-dimension target column: memory destinations clamp to the east
+    /// edge column (where ejection happens).
+    fn target_x(&self, dst: Coord) -> u16 {
+        if dst.x as usize >= self.cols {
+            self.cols as u16 - 1
+        } else {
+            dst.x
+        }
+    }
+
+    /// Class of the downstream buffer for a hop moving `positive`ly (+1
+    /// mod dim) or negatively from `here`, on a dimension of size `dim`,
+    /// for the deterministic ring-minimal path `src → t`:
+    /// 0 before the dateline (the wrap link), 1 from the wrap hop on.
+    fn dim_class(src: u16, here: u16, t: u16, dim: u16, positive: bool) -> usize {
+        if positive {
+            // Path src, src+1, …, t (mod dim); wraps iff t < src.
+            if t >= src {
+                0
+            } else if here == dim - 1 || here < src {
+                1
+            } else {
+                0
+            }
+        } else {
+            // Path src, src−1, …, t (mod dim); wraps iff t > src.
+            if t <= src {
+                0
+            } else if here == 0 || here > src {
+                1
+            } else {
+                0
+            }
+        }
+    }
+}
+
+impl Topology for Torus2D {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::Torus
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.cols, self.rows)
+    }
+
+    fn neighbor(&self, c: Coord, p: Port) -> Option<Coord> {
+        let (cols, rows) = (self.cols as u16, self.rows as u16);
+        match p {
+            Port::North => Some(Coord::new(c.x, (c.y + rows - 1) % rows)),
+            Port::South => Some(Coord::new(c.x, (c.y + 1) % rows)),
+            Port::East => Some(Coord::new((c.x + 1) % cols, c.y)),
+            Port::West => Some(Coord::new((c.x + cols - 1) % cols, c.y)),
+            Port::Local => None,
+        }
+    }
+
+    fn route(&self, ptype: PacketType, here: Coord, dst: Coord) -> Port {
+        if ptype != PacketType::Unicast {
+            // Collection/stream semantics pin the mesh walk (see above).
+            return dimension_route(Algorithm::Xy, here, dst);
+        }
+        let (cols, rows) = (self.cols as u16, self.rows as u16);
+        let tx = self.target_x(dst);
+        if here.x != tx {
+            let (east, west) = ring_delta(here.x, tx, cols);
+            return if east <= west { Port::East } else { Port::West };
+        }
+        if here.y != dst.y {
+            let (south, north) = ring_delta(here.y, dst.y, rows);
+            return if south <= north { Port::South } else { Port::North };
+        }
+        if dst.x as usize >= self.cols {
+            Port::East // eject to the row memory element
+        } else {
+            Port::Local
+        }
+    }
+
+    fn vc_class(
+        &self,
+        ptype: PacketType,
+        src: Coord,
+        here: Coord,
+        dst: Coord,
+        out: Port,
+    ) -> Option<usize> {
+        if ptype != PacketType::Unicast {
+            return None; // XY walks never wrap: unrestricted, as on the mesh
+        }
+        let (cols, rows) = (self.cols as u16, self.rows as u16);
+        match out {
+            Port::East => {
+                Some(Self::dim_class(src.x, here.x, self.target_x(dst), cols, true))
+            }
+            Port::West => {
+                Some(Self::dim_class(src.x, here.x, self.target_x(dst), cols, false))
+            }
+            Port::South => Some(Self::dim_class(src.y, here.y, dst.y, rows, true)),
+            Port::North => Some(Self::dim_class(src.y, here.y, dst.y, rows, false)),
+            Port::Local => None,
+        }
+    }
+
+    fn result_hops(&self, node: Coord) -> u64 {
+        // East: routers node.x ..= cols−1 (cols − x of them).
+        // West: node.x + 1 routers down to column 0, the wrap hop to the
+        // edge column, then eject there — x + 2 total.
+        let east = self.cols as u64 - node.x as u64;
+        let west = node.x as u64 + 2;
+        east.min(west)
+    }
+}
+
+// ---------------------------------------------------------------------
+// ConcentratedMesh
+// ---------------------------------------------------------------------
+
+/// Concentrated mesh: `c` PEs share each router, halving the router
+/// radix per dimension relative to the PE array. The fabric itself is a
+/// plain XY mesh over the smaller grid — concentration lives in the NI
+/// (`SimConfig::pes_per_router` and [`crate::config::PeGrouping`] decide
+/// how the co-located PEs share streams), so every routing/deadlock
+/// property of [`Mesh2D`] carries over verbatim.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConcentratedMesh {
+    mesh: Mesh2D,
+    concentration: usize,
+}
+
+impl ConcentratedMesh {
+    pub fn new(cols: usize, rows: usize, concentration: usize) -> ConcentratedMesh {
+        ConcentratedMesh { mesh: Mesh2D::new(cols, rows), concentration }
+    }
+}
+
+impl Topology for ConcentratedMesh {
+    fn kind(&self) -> TopologyKind {
+        TopologyKind::CMesh
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        self.mesh.dims()
+    }
+
+    fn concentration(&self) -> usize {
+        self.concentration
+    }
+
+    fn neighbor(&self, c: Coord, p: Port) -> Option<Coord> {
+        self.mesh.neighbor(c, p)
+    }
+
+    fn route(&self, ptype: PacketType, here: Coord, dst: Coord) -> Port {
+        self.mesh.route(ptype, here, dst)
+    }
+
+    fn result_hops(&self, node: Coord) -> u64 {
+        self.mesh.result_hops(node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn walk_unicast(t: &dyn Topology, src: Coord, dst: Coord, max: usize) -> Vec<Coord> {
+        let mut path = vec![src];
+        let mut here = src;
+        while here != dst {
+            assert!(path.len() <= max, "route from {src:?} to {dst:?} did not converge");
+            let p = t.route(PacketType::Unicast, here, dst);
+            here = t.neighbor(here, p).expect("routed into a missing link");
+            path.push(here);
+        }
+        path
+    }
+
+    #[test]
+    fn mesh_matches_the_kernel_geometry() {
+        let m = Mesh2D::new(8, 8);
+        assert_eq!(m.dims(), (8, 8));
+        assert_eq!(m.neighbor(Coord::new(0, 0), Port::West), None);
+        assert_eq!(m.neighbor(Coord::new(7, 3), Port::East), None);
+        assert_eq!(m.neighbor(Coord::new(3, 3), Port::East), Some(Coord::new(4, 3)));
+        // Memory-bound routing ejects east at the edge.
+        assert_eq!(
+            m.route(PacketType::Gather, Coord::new(7, 2), Coord::new(8, 2)),
+            Port::East
+        );
+        assert_eq!(m.result_hops(Coord::new(0, 0)), 8);
+        assert_eq!(m.worst_result_hops(), 8);
+    }
+
+    #[test]
+    fn torus_wraps_every_edge_without_self_loops() {
+        let t = Torus2D::new(8, 4);
+        assert_eq!(t.neighbor(Coord::new(0, 0), Port::West), Some(Coord::new(7, 0)));
+        assert_eq!(t.neighbor(Coord::new(7, 0), Port::East), Some(Coord::new(0, 0)));
+        assert_eq!(t.neighbor(Coord::new(0, 0), Port::North), Some(Coord::new(0, 3)));
+        assert_eq!(t.neighbor(Coord::new(0, 3), Port::South), Some(Coord::new(0, 0)));
+        for y in 0..4u16 {
+            for x in 0..8u16 {
+                for p in [Port::North, Port::South, Port::East, Port::West] {
+                    let n = t.neighbor(Coord::new(x, y), p).unwrap();
+                    assert_ne!(n, Coord::new(x, y), "self-loop at ({x},{y}) {p:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn torus_unicast_takes_ring_minimal_paths() {
+        let t = Torus2D::new(8, 8);
+        // 6 → 1 eastward is 3 wrapped hops, not 5 westward.
+        let p = walk_unicast(&t, Coord::new(6, 0), Coord::new(1, 0), 16);
+        assert_eq!(p.len() - 1, 3);
+        // Worst case per dimension is ⌈dim/2⌉.
+        for sx in 0..8u16 {
+            for dx in 0..8u16 {
+                let hops = walk_unicast(&t, Coord::new(sx, 2), Coord::new(dx, 5), 32).len() - 1;
+                assert!(hops as u64 <= 4 + 4, "({sx}→{dx}) took {hops} hops");
+            }
+        }
+    }
+
+    #[test]
+    fn torus_memory_shortcut_beats_the_mesh_for_westside_nodes() {
+        let t = Torus2D::new(8, 8);
+        let m = Mesh2D::new(8, 8);
+        assert_eq!(t.result_hops(Coord::new(0, 0)), 2); // wrap + eject
+        assert_eq!(m.result_hops(Coord::new(0, 0)), 8);
+        assert!(t.worst_result_hops() < m.worst_result_hops());
+        // Eastside nodes keep the direct path.
+        assert_eq!(t.result_hops(Coord::new(7, 0)), 1);
+    }
+
+    #[test]
+    fn torus_gather_and_streams_never_wrap() {
+        let t = Torus2D::new(8, 8);
+        // A gather packet at the initiator column routes east along the
+        // row (the XY walk), not backwards over the wrap link.
+        assert_eq!(
+            t.route(PacketType::Gather, Coord::new(0, 3), Coord::new(8, 3)),
+            Port::East
+        );
+        assert_eq!(
+            t.route(PacketType::Multicast, Coord::new(0, 3), Coord::new(7, 3)),
+            Port::East
+        );
+        assert_eq!(t.gather_path(3).len(), 8);
+        assert_eq!(t.gather_path(3)[0], Coord::new(0, 3));
+    }
+
+    #[test]
+    fn dateline_classes_flip_exactly_at_the_wrap() {
+        let t = Torus2D::new(8, 8);
+        let src = Coord::new(6, 0);
+        let dst = Coord::new(1, 0); // eastward wrapped path 6,7,0,1
+        for (here, want) in [(6u16, 0usize), (7, 1), (0, 1)] {
+            assert_eq!(
+                t.vc_class(PacketType::Unicast, src, Coord::new(here, 0), dst, Port::East),
+                Some(want),
+                "east hop at x={here}"
+            );
+        }
+        // Westbound memory shortcut from column 1: path 1, 0, wrap→7.
+        let mem = Coord::new(8, 0);
+        let src = Coord::new(1, 0);
+        assert_eq!(
+            t.vc_class(PacketType::Unicast, src, Coord::new(1, 0), mem, Port::West),
+            Some(0)
+        );
+        assert_eq!(
+            t.vc_class(PacketType::Unicast, src, Coord::new(0, 0), mem, Port::West),
+            Some(1)
+        );
+        // Non-unicast packets are never class-restricted.
+        assert_eq!(t.vc_class(PacketType::Gather, src, src, mem, Port::East), None);
+        // Unwrapped paths stay in class 0 end to end.
+        let m2 = Mesh2D::new(8, 8);
+        assert_eq!(m2.vc_class(PacketType::Unicast, src, src, mem, Port::East), None);
+        assert_eq!(
+            t.vc_class(PacketType::Unicast, Coord::new(2, 0), Coord::new(5, 0), mem, Port::East),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn cmesh_is_a_smaller_mesh_with_concentration() {
+        let c = ConcentratedMesh::new(4, 4, 8);
+        assert_eq!(c.kind(), TopologyKind::CMesh);
+        assert_eq!(c.dims(), (4, 4));
+        assert_eq!(c.concentration(), 8);
+        assert_eq!(c.neighbor(Coord::new(0, 0), Port::West), None);
+        assert_eq!(c.worst_result_hops(), 4);
+        let b = c.bus_attachments();
+        assert_eq!((b.row_buses, b.nis_per_row_bus), (4, 4));
+    }
+
+    #[test]
+    fn stack_fabric_helpers_agree_with_build() {
+        for kind in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
+            let mut cfg = SimConfig::table1_8x8(2);
+            cfg.topology = kind;
+            let boxed = build(&cfg);
+            assert_eq!(worst_result_hops(&cfg), boxed.worst_result_hops(), "{kind:?}");
+            assert_eq!(bus_attachments(&cfg), boxed.bus_attachments(), "{kind:?}");
+            assert_eq!(with_fabric(&cfg, |t| t.kind()), kind);
+        }
+    }
+
+    #[test]
+    fn build_follows_the_config_key() {
+        let mut cfg = SimConfig::table1_8x8(2);
+        assert_eq!(build(&cfg).kind(), TopologyKind::Mesh);
+        cfg.topology = TopologyKind::Torus;
+        assert_eq!(build(&cfg).kind(), TopologyKind::Torus);
+        cfg.topology = TopologyKind::CMesh;
+        let t = build(&cfg);
+        assert_eq!(t.kind(), TopologyKind::CMesh);
+        assert_eq!(t.dims(), (8, 8)); // dims are always the literal router grid
+        assert_eq!(t.concentration(), 2);
+    }
+}

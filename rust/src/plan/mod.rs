@@ -22,7 +22,7 @@
 //!   function of the *consuming* layer's policy only, so per-layer argmin
 //!   composes to the whole-model optimum.
 
-use crate::config::{Collection, DataflowKind, SimConfig, Streaming};
+use crate::config::{Collection, ConfigError, DataflowKind, SimConfig, Streaming};
 use crate::models::Network;
 use crate::noc::stats::NetStats;
 use crate::util::json::{self, Json};
@@ -75,8 +75,9 @@ impl LayerPolicy {
     }
 
     /// Parse one policy object. Missing fields fall back to the paper's
-    /// proposed triple, so sparse plan files stay readable.
-    pub fn from_json(j: &Json) -> crate::Result<LayerPolicy> {
+    /// proposed triple, so sparse plan files stay readable. Unknown
+    /// keyword spellings are typed [`ConfigError`]s.
+    pub fn from_json(j: &Json) -> Result<LayerPolicy, ConfigError> {
         let d = LayerPolicy::proposed();
         Ok(LayerPolicy {
             streaming: match j.get("streaming").and_then(Json::as_str) {
@@ -118,15 +119,19 @@ impl NetworkPlan {
 
     /// A plan is valid for a model when it names exactly one policy per
     /// layer.
-    pub fn validate(&self, model: &Network) -> crate::Result<()> {
-        anyhow::ensure!(
-            self.policies.len() == model.len(),
-            "plan '{}' has {} policies but model '{}' has {} layers",
-            self.name,
-            self.policies.len(),
-            model.name,
-            model.len()
-        );
+    pub fn validate(&self, model: &Network) -> Result<(), ConfigError> {
+        if self.policies.len() != model.len() {
+            return Err(ConfigError::invalid(
+                "plan",
+                format!(
+                    "plan '{}' has {} policies but model '{}' has {} layers",
+                    self.name,
+                    self.policies.len(),
+                    model.name,
+                    model.len()
+                ),
+            ));
+        }
         Ok(())
     }
 
@@ -140,16 +145,27 @@ impl NetworkPlan {
     }
 
     /// Parse a plan document: `{"name": ..., "policies": [{...}, ...]}`.
-    pub fn from_json(s: &str) -> crate::Result<NetworkPlan> {
-        let j = json::parse(s)?;
+    /// Every failure — parser errors, missing structure, unknown policy
+    /// keywords — is a typed [`ConfigError`], end to end.
+    pub fn from_json(s: &str) -> Result<NetworkPlan, ConfigError> {
+        let j = json::parse(s)
+            .map_err(|e| ConfigError::Json { what: "plan", reason: e.to_string() })?;
         let policies = j
             .get("policies")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("plan JSON needs a 'policies' array"))?
+            .ok_or_else(|| ConfigError::Json {
+                what: "plan",
+                reason: "needs a 'policies' array".to_string(),
+            })?
             .iter()
             .map(LayerPolicy::from_json)
-            .collect::<crate::Result<Vec<_>>>()?;
-        anyhow::ensure!(!policies.is_empty(), "plan has no policies");
+            .collect::<Result<Vec<_>, ConfigError>>()?;
+        if policies.is_empty() {
+            return Err(ConfigError::Json {
+                what: "plan",
+                reason: "plan has no policies".to_string(),
+            });
+        }
         Ok(NetworkPlan {
             name: j
                 .get("name")
@@ -316,9 +332,19 @@ mod tests {
         // Wrong layer count is rejected.
         let short = NetworkPlan::uniform(LayerPolicy::proposed(), 3);
         assert!(short.validate(&model).is_err());
-        // Garbage documents are rejected.
-        assert!(NetworkPlan::from_json("{}").is_err());
-        assert!(NetworkPlan::from_json(r#"{"policies":[{"collection":"x"}]}"#).is_err());
+        // Garbage documents are rejected with typed errors, end to end.
+        assert!(matches!(
+            NetworkPlan::from_json("{}"),
+            Err(ConfigError::Json { what: "plan", .. })
+        ));
+        assert!(matches!(
+            NetworkPlan::from_json(r#"{"policies":[{"collection":"x"}]}"#),
+            Err(ConfigError::UnknownKeyword { what: "collection", .. })
+        ));
+        assert!(matches!(
+            NetworkPlan::from_json("not json at all"),
+            Err(ConfigError::Json { what: "plan", .. })
+        ));
     }
 
     #[test]

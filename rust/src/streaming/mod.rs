@@ -87,24 +87,28 @@ impl StreamUnit {
 
 /// Streaming-bus activity for ONE round of a dataflow's schedule (power
 /// accounting input). Word demand and the active window both come from the
-/// [`Dataflow`] mapping, so OS and WS account identically through the same
-/// code path. Mesh streaming has no buses.
+/// [`Dataflow`] mapping; the bus *count* comes from the topology's
+/// [`crate::noc::topology::Topology::bus_attachments`] (one unit per
+/// router row/column — a concentrated mesh therefore runs half the buses,
+/// each feeding NIs that serve `c` PEs), so OS and WS and every fabric
+/// account through the same code path. Mesh streaming has no buses.
 pub fn per_round_bus_stats(
     cfg: &SimConfig,
     streaming: Streaming,
     mapping: &dyn Dataflow,
 ) -> BusStats {
+    let att = crate::noc::topology::bus_attachments(cfg);
     let w = mapping.stream_words();
     match streaming {
         Streaming::TwoWay => BusStats {
-            row_words: cfg.mesh_rows as u64 * w.row,
-            col_words: cfg.mesh_cols as u64 * w.col,
+            row_words: att.row_buses as u64 * w.row,
+            col_words: att.col_buses as u64 * w.col,
             active_cycles: mapping.stream_cycles(cfg, streaming),
         },
         Streaming::OneWay => BusStats {
             // The shared per-row link carries inputs and weights interleaved
             // (Fig. 10(b)); weight words ride the row bus.
-            row_words: cfg.mesh_rows as u64 * (w.row + w.col),
+            row_words: att.row_buses as u64 * (w.row + w.col),
             col_words: 0,
             active_cycles: mapping.stream_cycles(cfg, streaming),
         },

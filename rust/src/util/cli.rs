@@ -18,6 +18,14 @@
 //!   packets, plus in-network accumulation (psums added at intermediate
 //!   routers, arXiv:2209.10056; parsed by
 //!   [`crate::config::Collection::parse`]).
+//! * `--topology <mesh|torus|cmesh>` — the router fabric
+//!   ([`crate::config::TopologyKind::parse`]); `main.rs` folds it through
+//!   the [`crate::api::ScenarioBuilder`], so `cmesh` concentrates the
+//!   `--mesh` PE array onto a half-radix router grid.
+//!
+//! Unknown spellings for any of these are typed
+//! [`crate::config::ConfigError`]s: the binary prints them and exits
+//! nonzero instead of unwinding.
 
 use std::collections::BTreeMap;
 

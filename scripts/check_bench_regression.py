@@ -1,7 +1,9 @@
 #!/usr/bin/env python3
 """Gate the simulator hot-path throughput against the committed baseline.
 
-Usage: check_bench_regression.py BASELINE.json FRESH.json
+Usage:
+    check_bench_regression.py BASELINE.json FRESH.json
+    check_bench_regression.py --promote BASELINE.json FRESH.json
 
 * FRESH is the report a CI run just produced (``cargo bench --bench
   sim_hotpath -- --quick --json ...``).
@@ -10,6 +12,13 @@ Usage: check_bench_regression.py BASELINE.json FRESH.json
   toolchain) the gate only prints the fresh numbers — commit a measured
   CI artifact to arm it.
 
+``--promote`` arms the gate: if (and only if) the committed baseline is
+still the bootstrap placeholder and FRESH carries ``"measured": true``
+with event-kernel points, FRESH is copied over BASELINE and the script
+exits 0 so the calling workflow can commit it; otherwise it exits 1 and
+the workflow skips the commit. CI runs this on pushes to main, so the
+first real bench run anywhere replaces the placeholder automatically.
+
 Fails (exit 1) when any event-kernel point's cycles/sec drops more than
 REGRESSION_TOLERANCE below the baseline's matching point. Points are
 matched on (name, kernel, collection, mesh, n); points present on only
@@ -17,6 +26,7 @@ one side are reported but never fail the gate (the matrix may grow).
 """
 
 import json
+import shutil
 import sys
 
 REGRESSION_TOLERANCE = 0.20  # fail below 80% of baseline cycles/sec
@@ -37,7 +47,35 @@ def load(path):
         return json.load(f)
 
 
+def promote(baseline_path, fresh_path):
+    """Replace a bootstrap baseline with the first measured report."""
+    baseline, fresh = load(baseline_path), load(fresh_path)
+    if baseline.get("measured", False):
+        print(f"baseline {baseline_path} is already measured — nothing to promote")
+        return 1
+    if not fresh.get("measured", False):
+        print(f"fresh report {fresh_path} is not a measured run — refusing to promote")
+        return 1
+    event_points = [
+        p for p in fresh.get("points", [])
+        if p.get("kernel") == "event" and "cycles_per_sec" in p
+    ]
+    if not event_points:
+        print(f"fresh report {fresh_path} holds no event-kernel points — refusing to promote")
+        return 1
+    shutil.copyfile(fresh_path, baseline_path)
+    print(
+        f"promoted {fresh_path} -> {baseline_path}: regression gate armed with "
+        f"{len(event_points)} event-kernel point(s)"
+    )
+    return 0
+
+
 def main():
+    if sys.argv[1:2] == ["--promote"]:
+        if len(sys.argv) != 4:
+            sys.exit(__doc__)
+        sys.exit(promote(sys.argv[2], sys.argv[3]))
     if len(sys.argv) != 3:
         sys.exit(__doc__)
     baseline, fresh = load(sys.argv[1]), load(sys.argv[2])

@@ -118,6 +118,10 @@ fn drive_mesh<K: SimKernel>(net: &mut K, cfg: &SimConfig, layer: &noc_dnn::model
 }
 
 fn assert_equivalent(cfg: &SimConfig, streaming: Streaming, collection: Collection, tag: &str) {
+    // The reference kernel is frozen mesh-only; golden equivalence is
+    // asserted on Mesh2D (the other fabrics are covered by
+    // tests/topology_laws.rs conservation and law suites).
+    assert_eq!(cfg.topology, noc_dnn::config::TopologyKind::Mesh);
     let layer = &alexnet::conv_layers()[2];
     let mut event = Network::new(cfg, collection);
     let mut reference = ReferenceNetwork::new(cfg, collection);

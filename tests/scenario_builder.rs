@@ -1,0 +1,198 @@
+//! Integration tests for the `ScenarioBuilder` → `Scenario` façade: the
+//! typed-error contract (no public constructor or parse path panics on
+//! invalid input), prelude ergonomics, and the acceptance matrix — AlexNet
+//! conv3 end-to-end on `Torus2D` and `ConcentratedMesh` under all three
+//! collection schemes.
+
+use noc_dnn::prelude::*;
+
+fn conv3() -> ConvLayer {
+    alexnet::conv_layers()[2].clone()
+}
+
+#[test]
+fn torus_and_cmesh_run_alexnet_conv3_under_every_collection() {
+    for topology in [TopologyKind::Torus, TopologyKind::CMesh] {
+        for collection in
+            [Collection::Gather, Collection::RepetitiveUnicast, Collection::Ina]
+        {
+            let scenario = ScenarioBuilder::new()
+                .mesh(8)
+                .pes_per_router(2)
+                .topology(topology)
+                .collection(collection)
+                .rounds_cap(2)
+                .build()
+                .unwrap_or_else(|e| panic!("{topology:?}/{collection:?}: {e}"));
+            let report = scenario.simulate(&conv3());
+            assert!(
+                report.run.total_cycles >= report.run.simulated_cycles,
+                "{topology:?}/{collection:?}"
+            );
+            assert!(
+                report.run.measured_net.packets_ejected > 0,
+                "{topology:?}/{collection:?}: nothing reached the memory"
+            );
+            assert!(report.power.total_j > 0.0, "{topology:?}/{collection:?}");
+            // The fabric actually reached the simulation.
+            assert_eq!(scenario.topology().kind(), topology);
+            if topology == TopologyKind::CMesh {
+                assert_eq!(scenario.config().mesh_cols, 4);
+                assert_eq!(scenario.config().pes_per_router, 8);
+            }
+        }
+    }
+}
+
+#[test]
+fn torus_survives_mesh_streaming_and_weight_stationary() {
+    // Mesh streaming posts operand multicasts at the west/north edge
+    // injection ports — which on a torus also terminate wrap links; this
+    // pins the injection/credit interaction (and WS exercises column-free
+    // steady-state streams).
+    for dataflow in [DataflowKind::OutputStationary, DataflowKind::WeightStationary] {
+        let scenario = ScenarioBuilder::new()
+            .mesh(8)
+            .pes_per_router(2)
+            .topology(TopologyKind::Torus)
+            .streaming(Streaming::Mesh)
+            .dataflow(dataflow)
+            .rounds_cap(2)
+            .build()
+            .unwrap();
+        let report = scenario.simulate(&conv3());
+        assert!(report.run.measured_net.packets_ejected > 0, "{dataflow:?}");
+        assert!(report.run.measured_net.stream_deliveries > 0, "{dataflow:?}");
+    }
+}
+
+#[test]
+fn torus_ru_moves_fewer_flit_hops_than_the_mesh() {
+    let run = |topology| {
+        ScenarioBuilder::new()
+            .mesh(8)
+            .pes_per_router(2)
+            .topology(topology)
+            .collection(Collection::RepetitiveUnicast)
+            .rounds_cap(2)
+            .build()
+            .unwrap()
+            .simulate(&conv3())
+    };
+    let mesh = run(TopologyKind::Mesh);
+    let torus = run(TopologyKind::Torus);
+    assert!(
+        torus.run.measured_net.flit_hops < mesh.run.measured_net.flit_hops,
+        "torus {} vs mesh {}",
+        torus.run.measured_net.flit_hops,
+        mesh.run.measured_net.flit_hops
+    );
+}
+
+#[test]
+fn scenario_executes_whole_models_with_plans() {
+    let scenario = ScenarioBuilder::new()
+        .mesh(8)
+        .pes_per_router(2)
+        .topology(TopologyKind::Torus)
+        .rounds_cap(2)
+        .build()
+        .unwrap();
+    let model = Network::new(
+        "tiny",
+        vec![
+            ConvLayer { name: "t1", c: 4, h_in: 8, r: 3, stride: 1, pad: 1, q: 16 },
+            ConvLayer { name: "t2", c: 16, h_in: 8, r: 1, stride: 2, pad: 0, q: 8 },
+        ],
+    );
+    let plan = NetworkPlan::uniform(scenario.uniform_policy(), model.len());
+    let run = scenario.execute(&model, &plan).unwrap();
+    assert_eq!(run.layers.len(), 2);
+    assert_eq!(
+        run.total_cycles,
+        run.layers.iter().map(|l| l.total_cycles).sum::<u64>()
+    );
+    // A mismatched plan is a typed error surfaced through the Result.
+    let bad = NetworkPlan::uniform(scenario.uniform_policy(), 5);
+    assert!(scenario.execute(&model, &bad).is_err());
+}
+
+#[test]
+fn no_public_construction_or_parse_path_panics_on_invalid_input() {
+    // Keyword parsers.
+    assert!(matches!(
+        Collection::parse("broadcast"),
+        Err(ConfigError::UnknownKeyword { what: "collection", .. })
+    ));
+    assert!(matches!(
+        Streaming::parse("quantum"),
+        Err(ConfigError::UnknownKeyword { what: "streaming", .. })
+    ));
+    assert!(matches!(
+        DataflowKind::parse("rs"),
+        Err(ConfigError::UnknownKeyword { what: "dataflow", .. })
+    ));
+    assert!(matches!(
+        TopologyKind::parse("ring"),
+        Err(ConfigError::UnknownKeyword { what: "topology", .. })
+    ));
+    // Builder geometry.
+    assert!(matches!(
+        ScenarioBuilder::new().mesh(1).build(),
+        Err(ConfigError::Invalid { .. })
+    ));
+    assert!(matches!(
+        ScenarioBuilder::new().mesh(7).topology(TopologyKind::CMesh).build(),
+        Err(ConfigError::Invalid { what: "mesh", .. })
+    ));
+    // Torus needs dateline VCs.
+    assert!(matches!(
+        ScenarioBuilder::new()
+            .topology(TopologyKind::Torus)
+            .configure(|c| c.vcs = 1)
+            .build(),
+        Err(ConfigError::Invalid { what: "vcs", .. })
+    ));
+    // Config JSON.
+    assert!(matches!(
+        SimConfig::from_json("{\"topology\": \"moebius\"}"),
+        Err(ConfigError::UnknownKeyword { what: "topology", .. })
+    ));
+    assert!(matches!(
+        SimConfig::from_json("]["),
+        Err(ConfigError::Json { .. })
+    ));
+    // Plan JSON, end to end.
+    assert!(matches!(
+        NetworkPlan::from_json("{\"policies\": [{\"streaming\": \"teleport\"}]}"),
+        Err(ConfigError::UnknownKeyword { what: "streaming", .. })
+    ));
+    assert!(matches!(
+        NetworkPlan::from_json("{}"),
+        Err(ConfigError::Json { what: "plan", .. })
+    ));
+    // Errors render with enough context to act on.
+    let msg = ScenarioBuilder::new()
+        .mesh(7)
+        .topology(TopologyKind::CMesh)
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(msg.contains("mesh") && msg.contains('7'), "unhelpful error: {msg}");
+}
+
+#[test]
+fn prelude_covers_the_quickstart_surface() {
+    // Everything the README/lib.rs quickstarts name resolves from the
+    // prelude alone (this file imports nothing else); `pallas::prelude`
+    // is the same module.
+    let scenario: Scenario = ScenarioBuilder::new().mesh(8).build().unwrap();
+    let _: &SimConfig = scenario.config();
+    let report: RunReport = scenario.simulate(&conv3());
+    assert!(report.run.total_cycles > 0);
+    let model = Network::alexnet();
+    let _plan: NetworkPlan = NetworkPlan::uniform(LayerPolicy::proposed(), model.len());
+    use noc_dnn::pallas::prelude as p2;
+    let again = p2::ScenarioBuilder::new().mesh(8).build().unwrap();
+    assert_eq!(again.config(), scenario.config());
+}

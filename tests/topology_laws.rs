@@ -1,0 +1,299 @@
+//! Property tests for the [`Topology`] trait laws (see
+//! `rust/src/noc/topology.rs`): route minimality on the mesh, torus
+//! wraparound hop bounds, route/neighbor consistency, no self-loops, and
+//! dateline VC-class monotonicity — plus kernel-level equivalence pinning
+//! `Mesh2D` to the pre-topology hardwired geometry.
+
+use noc_dnn::config::{Collection, SimConfig, TopologyKind};
+use noc_dnn::noc::topology::{build, ConcentratedMesh, Mesh2D, Topology, Torus2D};
+use noc_dnn::noc::{Coord, Network, PacketType, Port};
+use noc_dnn::util::rng::{check_cases, Rng};
+
+fn fabrics() -> Vec<Box<dyn Topology>> {
+    vec![
+        Box::new(Mesh2D::new(8, 8)),
+        Box::new(Torus2D::new(8, 8)),
+        Box::new(Torus2D::new(6, 4)),
+        Box::new(ConcentratedMesh::new(4, 4, 8)),
+    ]
+}
+
+fn random_node(rng: &mut Rng, t: &dyn Topology) -> Coord {
+    let (cols, rows) = t.dims();
+    Coord::new(rng.below(cols as u64) as u16, rng.below(rows as u64) as u16)
+}
+
+/// Walk `route` hop by hop via `neighbor` until `dst`; panics on a
+/// missing link or non-convergence. Returns the hop count.
+fn walk(t: &dyn Topology, src: Coord, dst: Coord) -> u64 {
+    let (cols, rows) = t.dims();
+    let mut here = src;
+    let mut hops = 0u64;
+    while here != dst {
+        assert!(
+            hops <= (cols + rows) as u64 + 2,
+            "{:?}: route {src:?} -> {dst:?} did not converge (at {here:?})",
+            t.kind()
+        );
+        let p = t.route(PacketType::Unicast, here, dst);
+        assert_ne!(p, Port::Local, "route returned Local before arrival");
+        here = t
+            .neighbor(here, p)
+            .unwrap_or_else(|| panic!("{:?}: routed into missing link {p:?} at {here:?}", t.kind()));
+        hops += 1;
+    }
+    hops
+}
+
+#[test]
+fn prop_mesh_routes_are_minimal() {
+    check_cases(0x7071, 200, |rng, _| {
+        let m = Mesh2D::new(8, 8);
+        let (src, dst) = (random_node(rng, &m), random_node(rng, &m));
+        assert_eq!(walk(&m, src, dst), src.manhattan(&dst));
+    });
+}
+
+#[test]
+fn prop_torus_hops_bounded_by_half_dims() {
+    // Ring-minimal routing: at most ⌈dim/2⌉ hops per dimension.
+    check_cases(0x7072, 300, |rng, _| {
+        for t in [Torus2D::new(8, 8), Torus2D::new(6, 4), Torus2D::new(5, 3)] {
+            let (cols, rows) = t.dims();
+            let (src, dst) = (random_node(rng, &t), random_node(rng, &t));
+            let bound = (cols as u64).div_ceil(2) + (rows as u64).div_ceil(2);
+            let hops = walk(&t, src, dst);
+            assert!(hops <= bound, "{src:?}->{dst:?} on {cols}x{rows}: {hops} > {bound}");
+            // And never worse than the mesh's manhattan walk.
+            assert!(hops <= src.manhattan(&dst));
+        }
+    });
+}
+
+#[test]
+fn prop_route_neighbor_consistency_and_no_self_loops() {
+    check_cases(0x7073, 200, |rng, _| {
+        for t in fabrics() {
+            let t = t.as_ref();
+            let node = random_node(rng, t);
+            for p in [Port::North, Port::South, Port::East, Port::West] {
+                if let Some(n) = t.neighbor(node, p) {
+                    assert_ne!(n, node, "{:?}: self-loop at {node:?} {p:?}", t.kind());
+                }
+            }
+            // walk() itself asserts that every routed port has a link.
+            let dst = random_node(rng, t);
+            walk(t, node, dst);
+        }
+    });
+}
+
+#[test]
+fn prop_memory_routes_reach_the_east_edge_in_result_hops() {
+    // Unicast result packets: the route to the virtual memory node
+    // (cols, y) must reach the east-edge column and eject there, in
+    // exactly `result_hops` router traversals (ejecting router included).
+    check_cases(0x7074, 200, |rng, _| {
+        for t in fabrics() {
+            let t = t.as_ref();
+            let (cols, _) = t.dims();
+            let node = random_node(rng, t);
+            let mem = Coord::new(cols as u16, node.y);
+            let mut here = node;
+            let mut routers = 1u64; // the source router itself
+            loop {
+                let p = t.route(PacketType::Unicast, here, mem);
+                if here.x as usize == cols - 1 && p == Port::East {
+                    break; // ejection into the memory element
+                }
+                assert!(routers <= cols as u64 + 2, "{:?}: no ejection", t.kind());
+                here = t.neighbor(here, p).expect("routed into missing link");
+                routers += 1;
+            }
+            assert_eq!(here.y, node.y, "{:?}: result left its row", t.kind());
+            assert_eq!(routers, t.result_hops(node), "{:?} from {node:?}", t.kind());
+            assert!(t.result_hops(node) <= t.worst_result_hops());
+        }
+    });
+}
+
+#[test]
+fn prop_dateline_classes_are_monotone_per_dimension() {
+    // Along any torus unicast path: class is 0 until the wrap hop, 1 from
+    // it on, and never returns to 0 within the dimension. Non-unicast
+    // packets and the mesh are never class-restricted.
+    check_cases(0x7075, 300, |rng, _| {
+        let t = Torus2D::new(8, 8);
+        let (src, dst) = (random_node(rng, &t), random_node(rng, &t));
+        let mut here = src;
+        let mut last_class_x: Option<usize> = None;
+        let mut guard = 0;
+        while here != dst {
+            let p = t.route(PacketType::Unicast, here, dst);
+            let class = t.vc_class(PacketType::Unicast, src, here, dst, p);
+            assert!(matches!(class, Some(0) | Some(1)), "unicast hop without a class");
+            if matches!(p, Port::East | Port::West) {
+                if let (Some(prev), Some(now)) = (last_class_x, class) {
+                    assert!(now >= prev, "class regressed {prev} -> {now} in X");
+                }
+                last_class_x = class;
+            }
+            assert_eq!(
+                t.vc_class(PacketType::Gather, src, here, dst, p),
+                None,
+                "gather packets must stay unrestricted"
+            );
+            here = t.neighbor(here, p).unwrap();
+            guard += 1;
+            assert!(guard < 32);
+        }
+        let m = Mesh2D::new(8, 8);
+        assert_eq!(m.vc_class(PacketType::Unicast, src, src, dst, Port::East), None);
+    });
+}
+
+#[test]
+fn gather_paths_pin_the_row_walk_on_every_fabric() {
+    // gather_path is the descriptive twin of route()'s gather arm: the
+    // hop-by-hop walk a gather packet actually takes (initiator to the
+    // ejecting east-edge router) must equal the advertised path exactly.
+    for t in fabrics() {
+        let (cols, rows) = t.dims();
+        for row in 0..rows {
+            let path = t.gather_path(row);
+            assert_eq!(path.len(), cols, "{:?}", t.kind());
+            for (x, c) in path.iter().enumerate() {
+                assert_eq!(*c, Coord::new(x as u16, row as u16), "{:?}", t.kind());
+            }
+            let mem = Coord::new(cols as u16, row as u16);
+            let mut here = path[0];
+            let mut walked = vec![here];
+            loop {
+                let p = t.route(PacketType::Gather, here, mem);
+                if here.x as usize == cols - 1 {
+                    assert_eq!(p, Port::East, "{:?}: no ejection at the edge", t.kind());
+                    break;
+                }
+                here = t.neighbor(here, p).expect("gather walk hit a missing link");
+                walked.push(here);
+                assert!(walked.len() <= cols, "{:?}: gather walk diverged", t.kind());
+            }
+            assert_eq!(walked, path, "{:?}: route() disagrees with gather_path", t.kind());
+        }
+    }
+}
+
+#[test]
+fn default_network_topology_is_the_frozen_mesh() {
+    // The golden equivalence suite (tests/golden_kernel.rs) compares the
+    // event kernel against the frozen mesh-only reference kernel on the
+    // table-1 config — which therefore must keep building Mesh2D.
+    let cfg = SimConfig::table1_8x8(2);
+    assert_eq!(cfg.topology, TopologyKind::Mesh);
+    let net = Network::new(&cfg, Collection::Gather);
+    assert_eq!(net.topology().kind(), TopologyKind::Mesh);
+    assert_eq!(net.topology().dims(), (8, 8));
+}
+
+#[test]
+fn explicit_mesh_topology_is_bit_identical_to_the_default() {
+    use std::sync::Arc;
+    let cfg = Arc::new(SimConfig::table1_8x8(2));
+    let drive = |net: &mut Network| {
+        for r in 0..3u64 {
+            for y in 0..8 {
+                for x in 0..8 {
+                    net.post_result(r * 40, Coord::new(x, y), 2);
+                }
+            }
+        }
+        assert!(net.run_until_idle(1_000_000), "drain stalled");
+    };
+    let mut by_key = Network::shared(cfg.clone(), Collection::Gather);
+    let mut explicit = Network::with_topology(
+        cfg.clone(),
+        Arc::new(Mesh2D::new(8, 8)),
+        Collection::Gather,
+    );
+    drive(&mut by_key);
+    drive(&mut explicit);
+    assert_eq!(by_key.stats, explicit.stats);
+    assert_eq!(by_key.cycle, explicit.cycle);
+    assert_eq!(by_key.payloads_delivered, explicit.payloads_delivered);
+}
+
+#[test]
+fn torus_network_drains_unicast_results_with_fewer_hops() {
+    // RU collection on the torus takes the westside wrap shortcut: the
+    // same workload must complete with strictly fewer flit-hops than on
+    // the mesh, conserving every payload, under the dateline VC rule.
+    let mesh_cfg = SimConfig::table1_8x8(2);
+    let mut torus_cfg = mesh_cfg.clone();
+    torus_cfg.topology = TopologyKind::Torus;
+    let run = |cfg: &SimConfig| {
+        let mut net = Network::new(cfg, Collection::RepetitiveUnicast);
+        let mut posted = 0u64;
+        for r in 0..3u64 {
+            for y in 0..8 {
+                for x in 0..8 {
+                    net.post_result(r * 60, Coord::new(x, y), 2);
+                    posted += 2;
+                }
+            }
+        }
+        assert!(net.run_until_idle(1_000_000), "drain stalled on {:?}", cfg.topology);
+        assert_eq!(net.payloads_delivered, posted, "{:?} lost payloads", cfg.topology);
+        assert_eq!(net.payloads_in_flight(), 0);
+        net.stats.flit_hops
+    };
+    let mesh_hops = run(&mesh_cfg);
+    let torus_hops = run(&torus_cfg);
+    assert!(
+        torus_hops < mesh_hops,
+        "torus RU hops {torus_hops} should undercut mesh {mesh_hops}"
+    );
+}
+
+#[test]
+fn torus_gather_collection_matches_the_mesh_exactly() {
+    // Gather/INA packets are pinned to the eastward row walk on every
+    // fabric; with no unicast traffic in flight a torus run must be
+    // bit-identical to the mesh run.
+    for collection in [Collection::Gather, Collection::Ina] {
+        let mesh_cfg = SimConfig::table1_8x8(2);
+        let mut torus_cfg = mesh_cfg.clone();
+        torus_cfg.topology = TopologyKind::Torus;
+        let run = |cfg: &SimConfig| {
+            let mut net = Network::new(cfg, collection);
+            for r in 0..3u64 {
+                for y in 0..8 {
+                    for x in 0..8 {
+                        net.post_result(r * 60, Coord::new(x, y), 2);
+                    }
+                }
+            }
+            assert!(net.run_until_idle(1_000_000), "drain stalled");
+            (net.stats.clone(), net.cycle, net.payloads_delivered)
+        };
+        assert_eq!(run(&mesh_cfg), run(&torus_cfg), "{collection:?}");
+    }
+}
+
+#[test]
+fn cmesh_runs_the_same_workload_on_half_the_radix() {
+    let cfg = SimConfig::table1(4, 8); // 4x4 routers, 8 PEs each
+    let mut cmesh_cfg = cfg.clone();
+    cmesh_cfg.topology = TopologyKind::CMesh;
+    let mut net = Network::new(&cmesh_cfg, Collection::Gather);
+    let mut posted = 0u64;
+    for y in 0..4 {
+        for x in 0..4 {
+            net.post_result(0, Coord::new(x, y), 8);
+            posted += 8;
+        }
+    }
+    assert!(net.run_until_idle(1_000_000), "cmesh drain stalled");
+    assert_eq!(net.payloads_delivered, posted);
+    assert_eq!(net.topology().concentration(), 8);
+    assert_eq!(build(&cmesh_cfg).kind(), TopologyKind::CMesh);
+}
