@@ -16,6 +16,13 @@
 //! * **layer** — end-to-end AlexNet conv3 through the round driver (what
 //!   every paper-figure point costs).
 //!
+//! * **big-mesh-probes-off / big-mesh-probes-on** — the saturating
+//!   workload on a 32×32 fabric, event kernel only, with the per-link
+//!   observability probes (`SimConfig::probes`) off and on. Distinct
+//!   point names keep the two regimes as separate regression-gate keys;
+//!   the run also asserts the probed kernel's cycle/hop counts are
+//!   bit-identical to the unprobed one (probes are observation-only).
+//!
 //! `--quick` runs the reduced CI matrix; `--json PATH` writes the
 //! machine-readable report (`BENCH_sim_hotpath.json`) that
 //! `scripts/check_bench_regression.py` gates against the committed
@@ -186,6 +193,41 @@ fn main() {
                 ));
             }
         }
+    }
+
+    // Big-mesh probe overhead: 32x32, event kernel only (the frozen
+    // reference is mesh-only and would dominate the wall clock at this
+    // size), saturating workload with the per-link probes off then on.
+    {
+        let big_mesh = 32usize;
+        let big_n = 2usize;
+        let rounds = if args.quick { 2 } else { 4 };
+        let coll = Collection::Gather;
+        let mut cfg_off = SimConfig::table1(big_mesh, big_n);
+        cfg_off.probes = false;
+        let mut cfg_on = cfg_off.clone();
+        cfg_on.probes = true;
+        let off = measure(reps, || Network::new(&cfg_off, coll), |k| {
+            saturate(k, &cfg_off, rounds)
+        });
+        let on = measure(reps, || Network::new(&cfg_on, coll), |k| {
+            saturate(k, &cfg_on, rounds)
+        });
+        // Probes must observe without perturbing: same cycles, same hops.
+        assert_eq!(
+            (off.hops, off.cycles),
+            (on.hops, on.cycles),
+            "32x32 probes-on run diverged from its probes-off twin"
+        );
+        let overhead = on.t.median_ns as f64 / off.t.median_ns as f64;
+        println!(
+            "{big_mesh}x{big_mesh} n={big_n} gather saturate probes off {:>9} | on {:>9} \
+             | probe overhead {overhead:>5.2}x",
+            fmt_ns(off.t.median_ns),
+            fmt_ns(on.t.median_ns),
+        );
+        record(&mut report, "big-mesh-probes-off", "event", big_mesh, big_n, coll, &off);
+        record(&mut report, "big-mesh-probes-on", "event", big_mesh, big_n, coll, &on);
     }
 
     // End-to-end layer simulation timing (what every figure point costs).

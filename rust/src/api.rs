@@ -84,6 +84,7 @@ pub struct ScenarioBuilder {
     rounds_cap: Option<usize>,
     threads: Option<usize>,
     trace_driven: Option<bool>,
+    probes: Option<bool>,
     ws_rf_words: Option<u32>,
     tweaks: Vec<ConfigTweak>,
 }
@@ -110,6 +111,7 @@ impl ScenarioBuilder {
             rounds_cap: None,
             threads: None,
             trace_driven: None,
+            probes: None,
             ws_rf_words: None,
             tweaks: Vec::new(),
         }
@@ -196,6 +198,15 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Per-link observability probes ([`crate::noc::probes`]). When on,
+    /// every simulated layer carries a `ProbeReport` in
+    /// `LayerRunResult::probes`; when off (the default) the kernel runs
+    /// probe-free and bit-identical.
+    pub fn probes(mut self, on: bool) -> Self {
+        self.probes = Some(on);
+        self
+    }
+
     /// Weight-Stationary register-file capacity in words.
     pub fn ws_rf_words(mut self, words: u32) -> Self {
         self.ws_rf_words = Some(words);
@@ -277,6 +288,9 @@ impl ScenarioBuilder {
         }
         if let Some(on) = self.trace_driven {
             cfg.trace_driven = on;
+        }
+        if let Some(on) = self.probes {
+            cfg.probes = on;
         }
         if let Some(w) = self.ws_rf_words {
             cfg.ws_rf_words = w;
@@ -394,6 +408,25 @@ mod tests {
         assert_eq!(s.streaming(), Streaming::TwoWay);
         assert_eq!(s.collection(), Collection::Gather);
         assert_eq!(s.topology().kind(), TopologyKind::Mesh);
+    }
+
+    #[test]
+    fn probes_setter_surfaces_a_report_through_simulate() {
+        let layer = &alexnet::conv_layers()[0];
+        let on = ScenarioBuilder::new()
+            .rounds_cap(2)
+            .probes(true)
+            .build()
+            .unwrap()
+            .simulate(layer);
+        let p = on.run.probes.as_ref().expect("probes on must yield a report");
+        assert_eq!(p.total_flits, on.run.measured_net.link_traversals);
+        assert!(p.max_utilization() > 0.0);
+        // Probe-off runs carry no report and identical aggregates.
+        let off = ScenarioBuilder::new().rounds_cap(2).build().unwrap().simulate(layer);
+        assert!(off.run.probes.is_none());
+        assert_eq!(on.run.net, off.run.net);
+        assert_eq!(on.run.total_cycles, off.run.total_cycles);
     }
 
     #[test]

@@ -237,6 +237,13 @@ pub struct SimConfig {
     /// bit-identical for every thread count; `threads = 1` additionally
     /// serializes execution for debugging.
     pub threads: usize,
+    /// Enable the per-link observability probes
+    /// ([`crate::noc::probes`]): per-directed-link / per-VC traversal and
+    /// credit-block counters plus a cycle-bucketed utilization series,
+    /// surfaced as a `ProbeReport` and by `noc-dnn analyze`. Off by
+    /// default: the probe-off hot path carries no probe state at all and
+    /// is bit-identical to the unprobed kernel.
+    pub probes: bool,
     /// Clock frequency in Hz (power reporting only).
     pub clock_hz: f64,
 }
@@ -285,6 +292,7 @@ impl SimConfig {
             trace_driven: false,
             sim_rounds_cap: 8,
             threads: 0,
+            probes: false,
             clock_hz: 1.0e9,
         }
     }
@@ -411,6 +419,7 @@ impl SimConfig {
             .set("trace_driven", Json::Bool(self.trace_driven))
             .set("sim_rounds_cap", Json::Num(self.sim_rounds_cap as f64))
             .set("threads", Json::Num(self.threads as f64))
+            .set("probes", Json::Bool(self.probes))
             .set("clock_hz", Json::Num(self.clock_hz));
         j.to_pretty()
     }
@@ -467,6 +476,7 @@ impl SimConfig {
                 .unwrap_or(d.trace_driven),
             sim_rounds_cap: us("sim_rounds_cap", d.sim_rounds_cap),
             threads: us("threads", d.threads),
+            probes: j.get("probes").and_then(Json::as_bool).unwrap_or(d.probes),
             clock_hz: j.get("clock_hz").and_then(Json::as_f64).unwrap_or(d.clock_hz),
         };
         cfg.validate()?;
@@ -662,6 +672,19 @@ mod tests {
         // Configs written before the threads field default to auto (0).
         let legacy = SimConfig::from_json("{}").unwrap();
         assert_eq!(legacy.threads, 0);
+    }
+
+    #[test]
+    fn probes_roundtrip_through_json_and_default_off() {
+        let mut c = SimConfig::table1_8x8(4);
+        c.probes = true;
+        let d = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, d);
+        assert!(d.probes);
+        // Configs written before the probes field stay probe-free.
+        let legacy = SimConfig::from_json("{}").unwrap();
+        assert!(!legacy.probes);
+        assert!(!SimConfig::table1_8x8(1).probes);
     }
 
     #[test]

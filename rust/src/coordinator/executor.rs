@@ -68,13 +68,25 @@ pub struct LayerExecution {
 impl LayerExecution {
     /// This layer's row in the shared per-layer result record.
     pub fn as_result(&self, model: &str, cfg: &SimConfig) -> LayerResult {
-        LayerResult::new(model, self.report.layer.clone(), cfg.mesh_cols, cfg.pes_per_router)
-            .tag("policy", self.policy.label())
-            .metric("rounds", self.report.run.rounds_total as f64)
-            .metric("sim_cycles", self.report.run.total_cycles as f64)
-            .metric("reload_cycles", self.reload_cycles as f64)
-            .metric("total_cycles", self.total_cycles as f64)
-            .metric("energy_mj", self.report.power.total_j * 1e3)
+        let mut row = LayerResult::new(
+            model,
+            self.report.layer.clone(),
+            cfg.mesh_cols,
+            cfg.pes_per_router,
+        )
+        .tag("policy", self.policy.label())
+        .metric("rounds", self.report.run.rounds_total as f64)
+        .metric("sim_cycles", self.report.run.total_cycles as f64)
+        .metric("reload_cycles", self.reload_cycles as f64)
+        .metric("total_cycles", self.total_cycles as f64)
+        .metric("energy_mj", self.report.power.total_j * 1e3);
+        // Diagnostic column when the run carried probes (`cfg.probes`):
+        // the measured max per-link utilization — the contention signal
+        // `best_plan` reports surface next to the analytic ranking.
+        if let Some(p) = &self.report.run.probes {
+            row = row.metric("max_link_util", p.max_utilization());
+        }
+        row
     }
 }
 
@@ -349,9 +361,20 @@ pub fn best_plan_search(
             .collect();
         let evaluated: Vec<(LayerPolicy, u64)> =
             evals.iter().map(|(p, e)| (*p, e.total_cycles)).collect();
+        // Measured contention signal: with `cfg.probes` on, exact
+        // total_cycles ties break toward the candidate with the lower
+        // measured max link utilization (more headroom). Probe-off runs
+        // carry no report, every candidate reads 0.0, and the earliest
+        // grid entry keeps winning ties exactly as before.
+        let max_util = |e: &LayerExecution| {
+            e.report.run.probes.as_ref().map(|p| p.max_utilization()).unwrap_or(0.0)
+        };
         let mut best_idx = 0;
         for (k, (_, e)) in evals.iter().enumerate().skip(1) {
-            if e.total_cycles < evals[best_idx].1.total_cycles {
+            let b = &evals[best_idx].1;
+            if e.total_cycles < b.total_cycles
+                || (e.total_cycles == b.total_cycles && max_util(e) < max_util(b))
+            {
                 best_idx = k;
             }
         }

@@ -1,6 +1,7 @@
 //! Report formatting: aligned text tables (what the paper's figures plot)
 //! and JSON for downstream tooling.
 
+use crate::noc::probes::ProbeReport;
 use crate::util::json::Json;
 
 use super::executor::NetworkRunReport;
@@ -265,6 +266,137 @@ pub fn network_run_json(r: &NetworkRunReport) -> Json {
     o
 }
 
+/// Text link-utilization heatmap for one analyzed layer (`noc-dnn
+/// analyze`): a router grid whose cells show the utilization (percent of
+/// the one-flit-per-cycle link capacity) of the router's hottest
+/// *outgoing* link, suffixed with that link's direction letter; `·`
+/// marks routers that sent nothing. A top-links table follows, so the
+/// per-direction detail behind each cell is one glance away.
+pub fn probe_heatmap_text(layer: &str, p: &ProbeReport) -> String {
+    let (mut cols, mut rows) = (0u16, 0u16);
+    for l in &p.links {
+        cols = cols.max(l.from.x + 1).max(l.to.x + 1);
+        rows = rows.max(l.from.y + 1).max(l.to.y + 1);
+    }
+    let mut out = format!(
+        "link-utilization heatmap [{layer}] ({} cycles; % of link capacity, \
+         hottest outgoing direction per router)\n",
+        p.cycles
+    );
+    let mut headers: Vec<String> = vec!["y\\x".to_string()];
+    headers.extend((0..cols).map(|x| x.to_string()));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let grid: Vec<Vec<String>> = (0..rows)
+        .map(|y| {
+            let mut cells = vec![y.to_string()];
+            for x in 0..cols {
+                let hot = p
+                    .links
+                    .iter()
+                    .filter(|l| l.from.x == x && l.from.y == y)
+                    .fold(None, |best: Option<&crate::noc::probes::LinkRecord>, l| {
+                        match best {
+                            Some(b) if b.flits >= l.flits => Some(b),
+                            _ => Some(l),
+                        }
+                    });
+                cells.push(match hot {
+                    Some(l) if l.flits > 0 => {
+                        format!("{:.1}{}", 100.0 * l.utilization(p.cycles), l.port.letter())
+                    }
+                    _ => "·".to_string(),
+                });
+            }
+            cells
+        })
+        .collect();
+    out.push_str(&table(&header_refs, &grid));
+    // Top links by traffic, ties in row-major order (stable sort).
+    let mut by_flits: Vec<&crate::noc::probes::LinkRecord> =
+        p.links.iter().filter(|l| l.flits > 0).collect();
+    by_flits.sort_by(|a, b| b.flits.cmp(&a.flits));
+    if !by_flits.is_empty() {
+        out.push_str("hottest links:\n");
+        let data: Vec<Vec<String>> = by_flits
+            .iter()
+            .take(5)
+            .map(|l| {
+                vec![
+                    l.label(),
+                    l.flits.to_string(),
+                    l.payloads.to_string(),
+                    l.stream_flits.to_string(),
+                    l.result_flits().to_string(),
+                    l.peak_bucket_flits.to_string(),
+                    l.blocked_total().to_string(),
+                    f2(100.0 * l.utilization(p.cycles)),
+                ]
+            })
+            .collect();
+        out.push_str(&table(
+            &["link", "flits", "payloads", "stream", "result", "peak/bkt", "blocked", "util%"],
+            &data,
+        ));
+    }
+    out
+}
+
+/// Bottleneck-attribution table (`noc-dnn analyze`): per layer, the link
+/// that bounds the run, its dominant traffic stage, utilization, busiest
+/// VC and credit-blocked cycles.
+pub fn bottleneck_table_text(layers: &[(String, ProbeReport)]) -> String {
+    let data: Vec<Vec<String>> = layers
+        .iter()
+        .map(|(name, p)| match p.bottleneck() {
+            Some(b) => vec![
+                name.clone(),
+                p.cycles.to_string(),
+                b.label(),
+                b.stage.label().to_string(),
+                f2(100.0 * b.utilization),
+                b.vc.to_string(),
+                b.blocked_cycles.to_string(),
+                p.total_flits.to_string(),
+            ],
+            None => vec![
+                name.clone(),
+                p.cycles.to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "0.00".to_string(),
+                "-".to_string(),
+                "0".to_string(),
+                "0".to_string(),
+            ],
+        })
+        .collect();
+    table(
+        &["layer", "cycles", "bottleneck", "stage", "util%", "vc", "blocked", "link flits"],
+        &data,
+    )
+}
+
+/// `noc-dnn analyze --json`: per-layer probe snapshots (links, series,
+/// bottleneck attribution) under the model header.
+pub fn analyze_json(model: &str, layers: &[(String, ProbeReport)]) -> Json {
+    let mut o = Json::obj();
+    o.set("model", Json::Str(model.to_string()));
+    o.set(
+        "layers",
+        Json::Arr(
+            layers
+                .iter()
+                .map(|(name, p)| {
+                    let mut l = p.to_json();
+                    l.set("layer", Json::Str(name.clone()));
+                    l
+                })
+                .collect(),
+        ),
+    );
+    o
+}
+
 /// OS-vs-WS study text report (the `noc-dnn compare` output): one row
 /// per streaming mode × collection scheme (RU vs gather vs INA), with
 /// both dataflows' latency/energy and the WS-vs-OS ratios.
@@ -379,6 +511,48 @@ mod tests {
         let t = fig14_text(&rows);
         assert!(t.contains("average"));
         assert!(t.contains("2.50"), "mean of 2 and 3 missing:\n{t}");
+    }
+
+    #[test]
+    fn analyze_reports_render_heatmap_bottleneck_and_json() {
+        use crate::noc::probes::LinkProbes;
+        use crate::noc::topology::Mesh2D;
+        use crate::noc::Port;
+        let topo = Mesh2D::new(2, 2);
+        let mut probes = LinkProbes::new(4, 2);
+        // Router (0,1) east is the hot link: 3 collection flits.
+        for c in 0..3 {
+            probes.record_traversal(2, Port::East.index(), 0, c, c == 0, 2, false);
+        }
+        probes.record_traversal(0, Port::South.index(), 1, 0, false, 0, true);
+        let p = probes.report(&topo, 2, 2, 100);
+        let hm = probe_heatmap_text("conv1", &p);
+        assert!(hm.contains("conv1"), "layer header missing:\n{hm}");
+        assert!(hm.contains("3.0E"), "hot-cell percent+direction missing:\n{hm}");
+        assert!(hm.contains("·"), "idle routers marked:\n{hm}");
+        assert!(hm.contains("(0,1)->E(1,1)"), "top-links table missing:\n{hm}");
+        let bt = bottleneck_table_text(&[("conv1".to_string(), p.clone())]);
+        assert!(bt.contains("(0,1)->E(1,1)"), "bottleneck link missing:\n{bt}");
+        assert!(bt.contains("collection"), "stage missing:\n{bt}");
+        let j = analyze_json("alexnet", &[("conv1".to_string(), p)]);
+        assert_eq!(j.get("model").unwrap().as_str(), Some("alexnet"));
+        let layers = j.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers[0].get("layer").unwrap().as_str(), Some("conv1"));
+        assert_eq!(
+            layers[0].get("bottleneck").unwrap().get("stage").unwrap().as_str(),
+            Some("collection")
+        );
+        assert!(layers[0].get("links").unwrap().as_arr().unwrap().len() >= 8);
+    }
+
+    #[test]
+    fn bottleneck_table_handles_idle_layers() {
+        use crate::noc::probes::LinkProbes;
+        use crate::noc::topology::Mesh2D;
+        let p = LinkProbes::new(4, 2).report(&Mesh2D::new(2, 2), 2, 2, 10);
+        let t = bottleneck_table_text(&[("idle".to_string(), p)]);
+        assert!(t.contains("idle"));
+        assert!(t.contains("-"), "idle layers render placeholders:\n{t}");
     }
 
     #[test]

@@ -36,6 +36,7 @@ use std::sync::Arc;
 use crate::config::{Collection, SimConfig, Streaming};
 use crate::models::ConvLayer;
 use crate::noc::network::{Network, StreamEdge};
+use crate::noc::probes::ProbeReport;
 use crate::noc::stats::{BusStats, NetStats};
 use crate::noc::topology::{self, Topology};
 
@@ -66,6 +67,11 @@ pub struct LayerRunResult {
     pub bus: BusStats,
     /// Raw counters for the simulated prefix.
     pub measured_net: NetStats,
+    /// Per-link observability snapshot for the simulated prefix —
+    /// present iff `cfg.probes` was on. Like [`measured_net`](Self::measured_net)
+    /// it is *not* extrapolated: `probes.total_flits` reconciles with
+    /// `measured_net.link_traversals` bit-exactly.
+    pub probes: Option<ProbeReport>,
 }
 
 impl LayerRunResult {
@@ -197,6 +203,7 @@ fn extrapolate(
         net,
         bus: bus_per_round.scaled(rounds as f64),
         measured_net: outcome.net,
+        probes: None,
     }
 }
 
@@ -269,6 +276,7 @@ fn run_bus_layer(
     // Setup-phase bus words (WS weight loads) are charged energy too.
     result.bus.merge(&mapping.setup_bus_stats(cfg, streaming));
     apply_accumulation_counts(&mut result, cfg, mapping);
+    result.probes = net.probe_report();
     result
 }
 
@@ -356,9 +364,12 @@ fn run_mesh_layer(
         BusStats::default(),
     );
     // Setup-phase mesh traffic (WS weight distribution) is charged router
-    // energy in closed form, since wave boundaries are not simulated.
+    // energy in closed form, since wave boundaries are not simulated —
+    // its closed-form link_traversals are merged into `net` only, never
+    // into the probes, which record simulated traffic exclusively.
     result.net.merge(&mapping.setup_net_stats(cfg, Streaming::Mesh));
     apply_accumulation_counts(&mut result, cfg, mapping);
+    result.probes = net.probe_report();
     result
 }
 

@@ -12,6 +12,9 @@
 //!               [--threads 0] [--json]          # (per-layer policies)
 //! noc-dnn compare [--model alexnet] [--mesh 8] [--n 4] [--json]
 //!                                               # OS vs WS dataflow study
+//! noc-dnn analyze --model alexnet [--layer NAME] [--json]
+//!                                               # per-link utilization +
+//!                                               # bottleneck attribution
 //! noc-dnn overhead                              # §5.4 router overhead
 //! noc-dnn config --show [--mesh 8] [--n 1]      # print Table-1 config JSON
 //! ```
@@ -63,6 +66,7 @@ fn cli_main() -> Result<()> {
         "run" => run(&args),
         "model" => model_cmd(&args),
         "compare" => compare(&args),
+        "analyze" => analyze(&args),
         "overhead" => overhead(&args),
         "config" => config_cmd(&args),
         cmd => bail!("unknown command '{cmd}'\n{}", usage()),
@@ -84,6 +88,9 @@ USAGE:
                 [--dataflow D] [--threads T] [--rounds-cap K] [--json]
   noc-dnn compare [--model <alexnet|vgg16|resnet-lite>] [--mesh N] [--n N]
                   [--json]
+  noc-dnn analyze [--model <alexnet|vgg16|resnet-lite>] [--layer NAME]
+                  [--mesh N] [--n N] [--topology T] [--streaming MODE]
+                  [--collection C] [--dataflow D] [--rounds-cap K] [--json]
   noc-dnn overhead
   noc-dnn config --show [--mesh N] [--n N] [--topology T] [--dataflow os|ws]
                  [--collection ru|gather|ina] [--threads T]
@@ -117,7 +124,11 @@ flit-accurate simulation, per-layer policies, inter-layer traffic charged
 at the boundaries, per-layer rows + model totals (use --json for machine
 output). `compare` runs the whole model under OS and WS for every
 streaming mode x RU/gather/INA collection scheme and prints latency/energy
-with WS-vs-OS ratios.
+with WS-vs-OS ratios. `analyze` re-runs the selected layers with the
+per-link observability probes on and reports where the fabric saturates:
+a bottleneck-attribution table (which link/VC/stage bounds each layer)
+and a link-utilization heatmap per layer; --json emits the full
+per-directed-link counters and the cycle-bucketed utilization series.
 "
 }
 
@@ -349,6 +360,55 @@ fn compare(args: &Args) -> Result<()> {
             "(WS pins weights in PE register files and broadcasts one patch/round \
              on the row buses; OS streams n patches/router and one filter/column.)"
         );
+    }
+    Ok(())
+}
+
+fn analyze(args: &Args) -> Result<()> {
+    // Same scenario façade as `run`, but with the per-link probes forced
+    // on — `analyze` exists to look at the measured link counters, so
+    // there is no probe-off variant to configure.
+    let base = scenario_from(args)?;
+    let mut cfg = base.config().clone();
+    cfg.probes = true;
+    let scenario = ScenarioBuilder::from_config(cfg).streaming(base.streaming()).build()?;
+    let cfg = scenario.config();
+    let model = args.get("model").unwrap_or("alexnet");
+    let mut layers = Network::by_name(model)?.layers;
+    if let Some(name) = args.get("layer") {
+        layers.retain(|l| l.name == name);
+        anyhow::ensure!(!layers.is_empty(), "no layer named '{name}'");
+    }
+    let analyzed: Vec<(String, noc_dnn::noc::ProbeReport)> = layers
+        .iter()
+        .map(|l| {
+            let run = scenario.run_raw(l);
+            let probes = run.probes.expect("probes were forced on for analyze");
+            (l.name.to_string(), probes)
+        })
+        .collect();
+    if args.get_bool("json") {
+        println!("{}", report::analyze_json(model, &analyzed).to_pretty());
+        return Ok(());
+    }
+    println!(
+        "analyzing {} layer(s) of {} on {}x{} {} routers, n={}, dataflow={}, \
+         streaming={}, collection={} (probes on, measured prefix)",
+        analyzed.len(),
+        model,
+        cfg.mesh_cols,
+        cfg.mesh_rows,
+        cfg.topology.label(),
+        cfg.pes_per_router,
+        cfg.dataflow.label(),
+        scenario.streaming().label(),
+        scenario.collection().label()
+    );
+    println!("bottleneck attribution (per layer):");
+    print!("{}", report::bottleneck_table_text(&analyzed));
+    for (name, p) in &analyzed {
+        println!();
+        print!("{}", report::probe_heatmap_text(name, p));
     }
     Ok(())
 }

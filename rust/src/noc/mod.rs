@@ -20,6 +20,7 @@ pub mod calendar;
 pub mod flit;
 pub mod gather;
 pub mod network;
+pub mod probes;
 pub mod reference;
 pub mod router;
 pub mod routing;
@@ -28,6 +29,7 @@ pub mod topology;
 
 pub use flit::{Coord, Flit, FlitType, PacketDesc, PacketId, PacketType};
 pub use network::{Network, StreamEdge};
+pub use probes::{Bottleneck, BottleneckStage, LinkRecord, ProbeReport, BUCKET_CYCLES};
 pub use reference::{ReferenceNetwork, SimKernel};
 pub use routing::{Algorithm, Port};
 pub use stats::{BusStats, NetStats};

@@ -144,6 +144,7 @@ use super::buffer::VcState;
 use super::calendar::Calendar;
 use super::flit::{Coord, Flit, PacketDesc, PacketId, PacketType};
 use super::gather::{effective_delta, try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
+use super::probes::{LinkProbes, ProbeReport};
 use super::router::{refresh_vc_state, RouterState};
 use super::routing::Port;
 use super::stats::NetStats;
@@ -266,6 +267,10 @@ pub struct Network {
     /// (see the module docs for the invariant). Iterated in ascending
     /// index order, so phase behavior is bit-identical to a full scan.
     active: Vec<u64>,
+    /// Per-link observability counters (`cfg.probes`); `None` keeps the
+    /// probe-off hot path allocation-free and bit-identical (the probes
+    /// only ever observe — see [`super::probes`]).
+    probes: Option<Box<LinkProbes>>,
     next_pid: PacketId,
 }
 
@@ -386,9 +391,22 @@ impl Network {
             busy_injectors: 0,
             occupancy: vec![0; cols * rows],
             active: vec![0; (cols * rows).div_ceil(64)],
+            probes: cfg
+                .probes
+                .then(|| Box::new(LinkProbes::new(cols * rows, vcs))),
             next_pid: 1,
             cfg,
         }
+    }
+
+    /// Snapshot the per-link observability counters, or `None` when the
+    /// network was built with `cfg.probes == false`. Counters cover
+    /// everything simulated so far; `ProbeReport::total_flits` equals
+    /// `self.stats.link_traversals` bit-exactly at any cycle boundary.
+    pub fn probe_report(&self) -> Option<ProbeReport> {
+        self.probes.as_ref().map(|p| {
+            p.report(self.topo.as_ref(), self.cols as u16, self.rows as u16, self.cycle)
+        })
     }
 
     #[inline]
@@ -984,6 +1002,11 @@ impl Network {
                     // Credits toward downstream (None = ejection sink).
                     if let Some(ct) = &r.out_credits[op] {
                         if !ct.available(ovc) {
+                            // Probe record site #2: one requester-cycle
+                            // blocked on credit toward (link, out VC).
+                            if let Some(p) = self.probes.as_mut() {
+                                p.record_blocked(ridx, op, ovc);
+                            }
                             continue;
                         }
                     }
@@ -1097,6 +1120,21 @@ impl Network {
                 .expect("routed toward a missing neighbour");
             let nb_idx = self.node_idx(nb);
             self.stats.link_traversals += 1;
+            // Probe record site #1: every link_traversals increment is
+            // mirrored per directed link — ejections (the branch above)
+            // and INA absorbs never reach here, so the per-link sums
+            // partition this aggregate bit-exactly.
+            if let Some(p) = self.probes.as_mut() {
+                p.record_traversal(
+                    ridx,
+                    out_port_i,
+                    out_vc,
+                    self.cycle,
+                    flit.is_head(),
+                    flit.carried_payloads,
+                    flit.deliver_along_path,
+                );
+            }
             // ST (next cycle) + link. The ring was already popped for the
             // current cycle, so slot 0 is cycle+1: index delay−1 ⇒ arrival
             // at cycle + delay, giving the κ+link per-hop latency of

@@ -1,0 +1,562 @@
+//! Per-link observability probes (`SimConfig::probes`).
+//!
+//! `NetStats` reports whole-run aggregates; this module records *where*
+//! traffic goes: one counter block per **directed link** — identified by
+//! (source router, output port) — with a per-VC breakdown. The record
+//! sites live in the event-driven kernel:
+//!
+//! * **Traversal** — the forward branch of `Network::grant`, immediately
+//!   next to `NetStats::link_traversals += 1`. Every probe flit count is
+//!   therefore a partition of `link_traversals`: ejections into the
+//!   memory column and in-network-accumulation absorbs never touch a
+//!   link and are never recorded, so
+//!   `Σ links flits == NetStats.link_traversals` holds bit-exactly at
+//!   every cycle boundary (pinned by `tests/probe_invariants.rs`).
+//! * **Credit block** — the switch-allocation skip taken when the output
+//!   VC has no credit. Each skip adds one *requester-cycle* to the
+//!   blocked counter of the (link, VC) that refused the grant.
+//!
+//! Probes are strictly observational: they read flit metadata already in
+//! scope at the record sites and never influence allocation, routing, or
+//! timing. With `SimConfig::probes == false` (the default) the network
+//! carries no probe state at all — the hot path stays allocation-free
+//! and bit-identical to the unprobed kernel, which the `golden_kernel`
+//! suite and `tests/determinism.rs` pin.
+//!
+//! Snapshots are taken with [`crate::noc::network::Network::probe_report`],
+//! which resolves link endpoints through the active
+//! [`crate::noc::topology::Topology`] (torus wrap links included) and
+//! returns a [`ProbeReport`]. At the layer-driver level the report covers
+//! the *measured prefix* — the simulated rounds before extrapolation —
+//! exactly like `LayerRunResult::measured_net`.
+
+use super::flit::Coord;
+use super::routing::Port;
+use super::topology::Topology;
+use crate::util::json::Json;
+
+/// Width of one utilization-series bucket in cycles. Chosen so a typical
+/// layer prefix (10⁴–10⁶ cycles) yields tens-to-hundreds of points.
+pub const BUCKET_CYCLES: u64 = 1024;
+
+/// Mutable per-link counter state carried by the network while
+/// `SimConfig::probes` is on. Flat `Vec`s indexed by
+/// `router_index * Port::COUNT + port_index` (times `vcs` for the per-VC
+/// planes) keep recording O(1), allocation-free after construction, and
+/// deterministic — no hash maps anywhere.
+#[derive(Debug, Clone)]
+pub struct LinkProbes {
+    vcs: usize,
+    /// Flits that traversed each directed link.
+    flits: Vec<u64>,
+    /// Gather/result payloads carried across each link (head flits only).
+    payloads: Vec<u64>,
+    /// Traversals by operand-stream flits (`deliver_along_path`); the
+    /// complement (`flits - stream_flits`) is result/collection traffic.
+    stream_flits: Vec<u64>,
+    /// Traversals per (link, output VC).
+    per_vc_flits: Vec<u64>,
+    /// Requester-cycles blocked on credit per (link, output VC).
+    blocked: Vec<u64>,
+    /// Lazy-rolled per-link bucket state for peak-demand tracking.
+    bucket_id: Vec<u64>,
+    bucket_cur: Vec<u64>,
+    bucket_peak: Vec<u64>,
+    /// Network-wide link traversals per [`BUCKET_CYCLES`] bucket.
+    series: Vec<u64>,
+}
+
+impl LinkProbes {
+    pub fn new(routers: usize, vcs: usize) -> LinkProbes {
+        let links = routers * Port::COUNT;
+        LinkProbes {
+            vcs,
+            flits: vec![0; links],
+            payloads: vec![0; links],
+            stream_flits: vec![0; links],
+            per_vc_flits: vec![0; links * vcs],
+            blocked: vec![0; links * vcs],
+            // u64::MAX forces the first traversal of each link to open a
+            // fresh bucket (cycle 0 lives in bucket 0).
+            bucket_id: vec![u64::MAX; links],
+            bucket_cur: vec![0; links],
+            bucket_peak: vec![0; links],
+            series: Vec::new(),
+        }
+    }
+
+    /// Record one flit crossing the directed link (`ridx`, `port`) on
+    /// output VC `vc` at `cycle`. Called from the forward branch of
+    /// `grant` only — never for ejections or INA absorbs.
+    #[inline]
+    pub fn record_traversal(
+        &mut self,
+        ridx: usize,
+        port: usize,
+        vc: usize,
+        cycle: u64,
+        is_head: bool,
+        carried_payloads: u32,
+        along_path: bool,
+    ) {
+        let li = ridx * Port::COUNT + port;
+        self.flits[li] += 1;
+        self.per_vc_flits[li * self.vcs + vc] += 1;
+        if is_head {
+            self.payloads[li] += carried_payloads as u64;
+        }
+        if along_path {
+            self.stream_flits[li] += 1;
+        }
+        let bucket = cycle / BUCKET_CYCLES;
+        if self.bucket_id[li] != bucket {
+            self.bucket_id[li] = bucket;
+            self.bucket_cur[li] = 0;
+        }
+        self.bucket_cur[li] += 1;
+        if self.bucket_cur[li] > self.bucket_peak[li] {
+            self.bucket_peak[li] = self.bucket_cur[li];
+        }
+        let bi = bucket as usize;
+        if bi >= self.series.len() {
+            self.series.resize(bi + 1, 0);
+        }
+        self.series[bi] += 1;
+    }
+
+    /// Record one requester-cycle blocked on credit for output VC `vc`
+    /// of the directed link (`ridx`, `port`).
+    #[inline]
+    pub fn record_blocked(&mut self, ridx: usize, port: usize, vc: usize) {
+        self.blocked[(ridx * Port::COUNT + port) * self.vcs + vc] += 1;
+    }
+
+    /// Snapshot the counters into an owned [`ProbeReport`], resolving
+    /// link endpoints through `topo`. Only physical links are emitted:
+    /// (router, port) pairs where the topology wires a neighbour — on the
+    /// torus that includes every wrap link. `Port::Local` is never a
+    /// link (local traffic ejects or is absorbed before `grant`).
+    pub fn report(&self, topo: &dyn Topology, cols: u16, rows: u16, cycles: u64) -> ProbeReport {
+        let mut links = Vec::new();
+        let mut total_flits = 0u64;
+        let mut total_payloads = 0u64;
+        let mut total_blocked = 0u64;
+        for y in 0..rows {
+            for x in 0..cols {
+                let from = Coord::new(x, y);
+                let ridx = y as usize * cols as usize + x as usize;
+                for pi in 0..Port::COUNT {
+                    let port = Port::from_index(pi);
+                    if port == Port::Local {
+                        continue;
+                    }
+                    let Some(to) = topo.neighbor(from, port) else {
+                        continue;
+                    };
+                    let li = ridx * Port::COUNT + pi;
+                    let per_vc =
+                        self.per_vc_flits[li * self.vcs..(li + 1) * self.vcs].to_vec();
+                    let blocked = self.blocked[li * self.vcs..(li + 1) * self.vcs].to_vec();
+                    total_flits += self.flits[li];
+                    total_payloads += self.payloads[li];
+                    total_blocked += blocked.iter().sum::<u64>();
+                    links.push(LinkRecord {
+                        from,
+                        to,
+                        port,
+                        flits: self.flits[li],
+                        payloads: self.payloads[li],
+                        stream_flits: self.stream_flits[li],
+                        per_vc_flits: per_vc,
+                        blocked_cycles: blocked,
+                        peak_bucket_flits: self.bucket_peak[li],
+                    });
+                }
+            }
+        }
+        ProbeReport {
+            cycles,
+            bucket_cycles: BUCKET_CYCLES,
+            links,
+            series: self.series.clone(),
+            total_flits,
+            total_payloads,
+            total_blocked_cycles: total_blocked,
+        }
+    }
+}
+
+/// Counters for one directed link, part of a [`ProbeReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkRecord {
+    /// Source router of the directed link.
+    pub from: Coord,
+    /// Destination router (wrap neighbour on the torus).
+    pub to: Coord,
+    /// Output port at `from` the link hangs off.
+    pub port: Port,
+    /// Flits that traversed the link.
+    pub flits: u64,
+    /// Result payloads carried across (summed from head flits).
+    pub payloads: u64,
+    /// Traversals by multicast operand-stream flits; the rest
+    /// (`flits - stream_flits`) is collection/result traffic.
+    pub stream_flits: u64,
+    /// Traversals per output VC (`Σ == flits`).
+    pub per_vc_flits: Vec<u64>,
+    /// Requester-cycles blocked on missing credit, per output VC.
+    pub blocked_cycles: Vec<u64>,
+    /// Most flits observed inside any single [`BUCKET_CYCLES`] window.
+    pub peak_bucket_flits: u64,
+}
+
+impl LinkRecord {
+    /// Flits carried per cycle of the observed window (one flit per
+    /// cycle is the physical ceiling, so this is a true utilization).
+    pub fn utilization(&self, cycles: u64) -> f64 {
+        self.flits as f64 / cycles.max(1) as f64
+    }
+
+    /// Collection/result flits (complement of [`stream_flits`](Self::stream_flits)).
+    pub fn result_flits(&self) -> u64 {
+        self.flits - self.stream_flits
+    }
+
+    /// Total blocked requester-cycles across VCs.
+    pub fn blocked_total(&self) -> u64 {
+        self.blocked_cycles.iter().sum()
+    }
+
+    /// Compact label, e.g. `(6,2)->E(7,2)`.
+    pub fn label(&self) -> String {
+        format!(
+            "({},{})->{}({},{})",
+            self.from.x,
+            self.from.y,
+            self.port.letter(),
+            self.to.x,
+            self.to.y
+        )
+    }
+}
+
+/// Which pipeline stage the bottleneck link's traffic belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BottleneckStage {
+    /// Result collection (unicast / gather / INA) bound for memory.
+    Collection,
+    /// Multicast operand streaming over the mesh.
+    OperandStreaming,
+}
+
+impl BottleneckStage {
+    pub fn label(self) -> &'static str {
+        match self {
+            BottleneckStage::Collection => "collection",
+            BottleneckStage::OperandStreaming => "operand-streaming",
+        }
+    }
+}
+
+/// The link that bounds a run, with attribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bottleneck {
+    /// Source router of the bottleneck link.
+    pub from: Coord,
+    /// Destination router.
+    pub to: Coord,
+    /// Output port at `from`.
+    pub port: Port,
+    /// Flits carried by the link over the observed window.
+    pub flits: u64,
+    /// `flits / cycles` — fraction of the link's one-flit-per-cycle
+    /// capacity consumed.
+    pub utilization: f64,
+    /// Busiest output VC on the link.
+    pub vc: usize,
+    /// Blocked requester-cycles charged to the link (all VCs).
+    pub blocked_cycles: u64,
+    /// Dominant traffic class on the link.
+    pub stage: BottleneckStage,
+}
+
+impl Bottleneck {
+    /// Compact label, e.g. `(6,2)->E(7,2)`.
+    pub fn label(&self) -> String {
+        format!(
+            "({},{})->{}({},{})",
+            self.from.x,
+            self.from.y,
+            self.port.letter(),
+            self.to.x,
+            self.to.y
+        )
+    }
+}
+
+/// Immutable snapshot of the per-link probes for one run (or one
+/// simulated layer prefix).
+///
+/// Produced by `Network::probe_report` and surfaced as
+/// `LayerRunResult::probes` through `Scenario::simulate` and
+/// `NetworkExecutor`. All counters cover the **measured prefix** only —
+/// like `measured_net`, nothing here is extrapolated, and
+/// [`total_flits`](Self::total_flits) reconciles bit-exactly with the
+/// prefix's `NetStats::link_traversals`.
+///
+/// The report derives `PartialEq` so determinism tests can require it to
+/// be bit-identical across repeated seeded runs and executor thread
+/// counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProbeReport {
+    /// Cycles in the observed window (the network's final cycle).
+    pub cycles: u64,
+    /// Width of one [`series`](Self::series) bucket ([`BUCKET_CYCLES`]).
+    pub bucket_cycles: u64,
+    /// One record per physical directed link (torus wraps included).
+    pub links: Vec<LinkRecord>,
+    /// Network-wide link traversals per bucket (index `b` covers cycles
+    /// `[b * bucket_cycles, (b+1) * bucket_cycles)`).
+    pub series: Vec<u64>,
+    /// `Σ links flits` — equals the prefix `NetStats::link_traversals`.
+    pub total_flits: u64,
+    /// `Σ links payloads`.
+    pub total_payloads: u64,
+    /// `Σ links blocked_cycles` across all VCs.
+    pub total_blocked_cycles: u64,
+}
+
+impl ProbeReport {
+    /// The highest per-link utilization, in [0, 1].
+    pub fn max_utilization(&self) -> f64 {
+        self.hottest().map(|l| l.utilization(self.cycles)).unwrap_or(0.0)
+    }
+
+    /// The link carrying the most flits. Ties resolve to the earliest
+    /// link in row-major (y, x, port) order, keeping the answer
+    /// deterministic.
+    pub fn hottest(&self) -> Option<&LinkRecord> {
+        self.links
+            .iter()
+            .fold(None, |best: Option<&LinkRecord>, l| match best {
+                Some(b) if b.flits >= l.flits => Some(b),
+                _ if l.flits > 0 => Some(l),
+                _ => best,
+            })
+    }
+
+    /// Attribute the run's bottleneck: the hottest link, its busiest VC,
+    /// and the traffic class that dominates it. `None` when no flit
+    /// crossed any link.
+    pub fn bottleneck(&self) -> Option<Bottleneck> {
+        let l = self.hottest()?;
+        let vc = l
+            .per_vc_flits
+            .iter()
+            .enumerate()
+            .fold((0usize, 0u64), |acc, (i, &f)| if f > acc.1 { (i, f) } else { acc })
+            .0;
+        let stage = if l.stream_flits > l.result_flits() {
+            BottleneckStage::OperandStreaming
+        } else {
+            BottleneckStage::Collection
+        };
+        Some(Bottleneck {
+            from: l.from,
+            to: l.to,
+            port: l.port,
+            flits: l.flits,
+            utilization: l.utilization(self.cycles),
+            vc,
+            blocked_cycles: l.blocked_total(),
+            stage,
+        })
+    }
+
+    /// Machine-readable form used by `noc-dnn analyze --json`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("cycles", Json::Num(self.cycles as f64))
+            .set("bucket_cycles", Json::Num(self.bucket_cycles as f64))
+            .set("total_flits", Json::Num(self.total_flits as f64))
+            .set("total_payloads", Json::Num(self.total_payloads as f64))
+            .set("total_blocked_cycles", Json::Num(self.total_blocked_cycles as f64))
+            .set("max_link_utilization", Json::Num(self.max_utilization()))
+            .set(
+                "series",
+                Json::Arr(self.series.iter().map(|&v| Json::Num(v as f64)).collect()),
+            );
+        let links = self
+            .links
+            .iter()
+            .map(|l| {
+                let mut o = Json::obj();
+                o.set("link", Json::Str(l.label()))
+                    .set(
+                        "from",
+                        Json::Arr(vec![
+                            Json::Num(l.from.x as f64),
+                            Json::Num(l.from.y as f64),
+                        ]),
+                    )
+                    .set(
+                        "to",
+                        Json::Arr(vec![Json::Num(l.to.x as f64), Json::Num(l.to.y as f64)]),
+                    )
+                    .set("port", Json::Str(l.port.letter().to_string()))
+                    .set("flits", Json::Num(l.flits as f64))
+                    .set("payloads", Json::Num(l.payloads as f64))
+                    .set("stream_flits", Json::Num(l.stream_flits as f64))
+                    .set("result_flits", Json::Num(l.result_flits() as f64))
+                    .set(
+                        "per_vc_flits",
+                        Json::Arr(
+                            l.per_vc_flits.iter().map(|&v| Json::Num(v as f64)).collect(),
+                        ),
+                    )
+                    .set(
+                        "blocked_cycles",
+                        Json::Arr(
+                            l.blocked_cycles.iter().map(|&v| Json::Num(v as f64)).collect(),
+                        ),
+                    )
+                    .set("peak_bucket_flits", Json::Num(l.peak_bucket_flits as f64))
+                    .set("utilization", Json::Num(l.utilization(self.cycles)));
+                o
+            })
+            .collect();
+        j.set("links", Json::Arr(links));
+        if let Some(b) = self.bottleneck() {
+            let mut o = Json::obj();
+            o.set("link", Json::Str(b.label()))
+                .set("port", Json::Str(b.port.letter().to_string()))
+                .set("utilization", Json::Num(b.utilization))
+                .set("flits", Json::Num(b.flits as f64))
+                .set("vc", Json::Num(b.vc as f64))
+                .set("blocked_cycles", Json::Num(b.blocked_cycles as f64))
+                .set("stage", Json::Str(b.stage.label().to_string()));
+            j.set("bottleneck", o);
+        } else {
+            j.set("bottleneck", Json::Null);
+        }
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::topology::Mesh2D;
+
+    fn probes_2x2() -> (LinkProbes, Mesh2D) {
+        (LinkProbes::new(4, 2), Mesh2D::new(2, 2))
+    }
+
+    #[test]
+    fn traversals_partition_into_links_and_vcs() {
+        let (mut p, topo) = probes_2x2();
+        // Router (0,0) east twice on vc 0, once on vc 1; (0,1) east once.
+        p.record_traversal(0, Port::East.index(), 0, 5, true, 3, false);
+        p.record_traversal(0, Port::East.index(), 0, 6, false, 0, false);
+        p.record_traversal(0, Port::East.index(), 1, 7, true, 1, true);
+        p.record_traversal(2, Port::East.index(), 0, 7, true, 2, false);
+        let r = p.report(&topo, 2, 2, 100);
+        assert_eq!(r.total_flits, 4);
+        assert_eq!(r.total_payloads, 6);
+        let e00 = r
+            .links
+            .iter()
+            .find(|l| l.from == Coord::new(0, 0) && l.port == Port::East)
+            .unwrap();
+        assert_eq!(e00.flits, 3);
+        assert_eq!(e00.per_vc_flits, vec![2, 1]);
+        assert_eq!(e00.stream_flits, 1);
+        assert_eq!(e00.result_flits(), 2);
+        assert_eq!(e00.payloads, 4);
+        assert_eq!(e00.to, Coord::new(1, 0));
+        assert_eq!(e00.label(), "(0,0)->E(1,0)");
+    }
+
+    #[test]
+    fn nonexistent_mesh_edges_are_not_links() {
+        let (p, topo) = probes_2x2();
+        let r = p.report(&topo, 2, 2, 1);
+        // 2x2 mesh: 4 bidirectional edges = 8 directed links, no wraps.
+        assert_eq!(r.links.len(), 8);
+        assert!(r.links.iter().all(|l| l.port != Port::Local));
+    }
+
+    #[test]
+    fn peak_tracks_the_busiest_bucket_and_series_is_gap_free() {
+        let (mut p, topo) = probes_2x2();
+        let e = Port::East.index();
+        // Bucket 0: 2 flits; long idle gap; bucket 3: 1 flit.
+        p.record_traversal(0, e, 0, 10, false, 0, false);
+        p.record_traversal(0, e, 0, 11, false, 0, false);
+        p.record_traversal(0, e, 0, 3 * BUCKET_CYCLES + 1, false, 0, false);
+        let r = p.report(&topo, 2, 2, 4 * BUCKET_CYCLES);
+        let l = r
+            .links
+            .iter()
+            .find(|l| l.from == Coord::new(0, 0) && l.port == Port::East)
+            .unwrap();
+        assert_eq!(l.peak_bucket_flits, 2);
+        assert_eq!(r.series, vec![2, 0, 0, 1]);
+    }
+
+    #[test]
+    fn bottleneck_names_the_strictly_hottest_link() {
+        let (mut p, topo) = probes_2x2();
+        let e = Port::East.index();
+        p.record_traversal(0, e, 0, 1, false, 0, false);
+        p.record_traversal(2, e, 1, 1, false, 0, false);
+        p.record_traversal(2, e, 1, 2, false, 0, false);
+        p.record_blocked(2, e, 1);
+        let r = p.report(&topo, 2, 2, 10);
+        let b = r.bottleneck().unwrap();
+        assert_eq!(b.from, Coord::new(0, 1));
+        assert_eq!(b.port, Port::East);
+        assert_eq!(b.vc, 1);
+        assert_eq!(b.blocked_cycles, 1);
+        assert_eq!(b.stage, BottleneckStage::Collection);
+        assert!((b.utilization - 0.2).abs() < 1e-12);
+        assert_eq!(r.total_blocked_cycles, 1);
+    }
+
+    #[test]
+    fn stream_dominated_link_attributes_to_operand_streaming() {
+        let (mut p, topo) = probes_2x2();
+        let e = Port::East.index();
+        p.record_traversal(0, e, 0, 1, true, 0, true);
+        p.record_traversal(0, e, 0, 2, false, 0, true);
+        p.record_traversal(0, e, 0, 3, true, 1, false);
+        let r = p.report(&topo, 2, 2, 10);
+        assert_eq!(r.bottleneck().unwrap().stage, BottleneckStage::OperandStreaming);
+    }
+
+    #[test]
+    fn empty_network_has_no_bottleneck() {
+        let (p, topo) = probes_2x2();
+        let r = p.report(&topo, 2, 2, 10);
+        assert_eq!(r.bottleneck(), None);
+        assert_eq!(r.max_utilization(), 0.0);
+        assert_eq!(r.hottest(), None);
+    }
+
+    #[test]
+    fn json_shape_carries_links_and_bottleneck() {
+        let (mut p, topo) = probes_2x2();
+        p.record_traversal(0, Port::East.index(), 0, 1, true, 2, false);
+        let j = p.report(&topo, 2, 2, 10).to_json();
+        assert_eq!(j.get("total_flits").unwrap().as_u64(), Some(1));
+        assert_eq!(
+            j.get("bottleneck").unwrap().get("stage").unwrap().as_str(),
+            Some("collection")
+        );
+        let links = j.get("links").unwrap().as_arr().unwrap();
+        assert_eq!(links.len(), 8);
+        // Round-trips through the crate's JSON printer/parser.
+        let back = crate::util::json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(back.get("total_flits").unwrap().as_u64(), Some(1));
+    }
+}

@@ -32,6 +32,18 @@ impl Port {
         }
     }
 
+    /// One-letter label for compact link names in probe reports
+    /// (`(6,2)->E(7,2)`).
+    pub fn letter(self) -> char {
+        match self {
+            Port::North => 'N',
+            Port::South => 'S',
+            Port::East => 'E',
+            Port::West => 'W',
+            Port::Local => 'L',
+        }
+    }
+
     /// The port on the neighbouring router that receives what we emit from
     /// this output port (links connect opposite ports).
     pub fn opposite(self) -> Port {

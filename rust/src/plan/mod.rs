@@ -21,6 +21,12 @@
 //!   the executor and by [`crate::analytic::network_latency`], and a
 //!   function of the *consuming* layer's policy only, so per-layer argmin
 //!   composes to the whole-model optimum.
+//!
+//! With `SimConfig::probes` on, the search's sim-verified evaluations
+//! also carry the measured per-link contention signal
+//! ([`crate::noc::probes::ProbeReport`]): `best_plan` reports gain a
+//! `max_link_util` diagnostic column, and exact total-cycle ties break
+//! toward the candidate with more link headroom.
 
 use crate::config::{Collection, ConfigError, DataflowKind, SimConfig, Streaming};
 use crate::models::Network;
@@ -252,6 +258,12 @@ pub fn reload_cycles(cfg: &SimConfig, streaming: Streaming, words: u64) -> u64 {
 /// (the same accounting `Dataflow::setup_net_stats` applies to WS weight
 /// loads). Bus streaming charges reload words to the row buses instead;
 /// zero here.
+///
+/// Closed-form, never simulated — so these `link_traversals` exist only
+/// in the merged/priced aggregates, never in the per-link probe counters
+/// ([`crate::noc::probes`]), which record simulated traffic exclusively.
+/// Probe conservation tests therefore reconcile against the raw
+/// `measured_net`, not against merged stats.
 pub fn reload_net_stats(cfg: &SimConfig, streaming: Streaming, words: u64) -> NetStats {
     if streaming != Streaming::Mesh || words == 0 {
         return NetStats::default();

@@ -15,9 +15,16 @@ Usage:
 ``--promote`` arms the gate: if (and only if) the committed baseline is
 still the bootstrap placeholder and FRESH carries ``"measured": true``
 with event-kernel points, FRESH is copied over BASELINE and the script
-exits 0 so the calling workflow can commit it; otherwise it exits 1 and
-the workflow skips the commit. CI runs this on pushes to main, so the
-first real bench run anywhere replaces the placeholder automatically.
+exits 0 so the calling workflow can commit it. A *benign* refusal — the
+baseline is already measured, or FRESH is not a promotable report —
+exits 2 so the workflow can skip the commit; any other exit status
+(missing file, malformed JSON) is an unexpected error the workflow must
+fail on rather than silently never arming the gate.
+
+If FRESH does not exist at the given path, both modes fall back to a
+recursive glob for its basename — ``download-artifact`` has changed its
+extraction layout (flat vs. per-artifact subdirectory) across major
+versions, and a layout change must not read as "nothing to promote".
 
 Fails (exit 1) when any event-kernel point's cycles/sec drops more than
 REGRESSION_TOLERANCE below the baseline's matching point. Points are
@@ -25,11 +32,14 @@ matched on (name, kernel, collection, mesh, n); points present on only
 one side are reported but never fail the gate (the matrix may grow).
 """
 
+import glob
 import json
+import os
 import shutil
 import sys
 
 REGRESSION_TOLERANCE = 0.20  # fail below 80% of baseline cycles/sec
+EXIT_SKIP = 2  # benign --promote refusal: nothing to do, not an error
 
 
 def key(p):
@@ -42,8 +52,21 @@ def key(p):
     )
 
 
+def resolve(path):
+    """Find the report file, tolerating artifact-extraction subdirectories."""
+    if os.path.exists(path):
+        return path
+    hits = sorted(glob.glob(f"**/{os.path.basename(path)}", recursive=True))
+    if len(hits) == 1:
+        print(f"note: {path} not at the expected location, using {hits[0]}")
+        return hits[0]
+    if hits:
+        sys.exit(f"ambiguous report location for {path}: {hits}")
+    sys.exit(f"report {path} not found (and no {os.path.basename(path)} anywhere below .)")
+
+
 def load(path):
-    with open(path) as f:
+    with open(resolve(path)) as f:
         return json.load(f)
 
 
@@ -52,18 +75,18 @@ def promote(baseline_path, fresh_path):
     baseline, fresh = load(baseline_path), load(fresh_path)
     if baseline.get("measured", False):
         print(f"baseline {baseline_path} is already measured — nothing to promote")
-        return 1
+        return EXIT_SKIP
     if not fresh.get("measured", False):
         print(f"fresh report {fresh_path} is not a measured run — refusing to promote")
-        return 1
+        return EXIT_SKIP
     event_points = [
         p for p in fresh.get("points", [])
         if p.get("kernel") == "event" and "cycles_per_sec" in p
     ]
     if not event_points:
         print(f"fresh report {fresh_path} holds no event-kernel points — refusing to promote")
-        return 1
-    shutil.copyfile(fresh_path, baseline_path)
+        return EXIT_SKIP
+    shutil.copyfile(resolve(fresh_path), baseline_path)
     print(
         f"promoted {fresh_path} -> {baseline_path}: regression gate armed with "
         f"{len(event_points)} event-kernel point(s)"

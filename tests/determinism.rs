@@ -11,16 +11,23 @@ use noc_dnn::dataflow::run_layer;
 use noc_dnn::models::ConvLayer;
 use noc_dnn::noc::network::Network;
 use noc_dnn::noc::stats::NetStats;
-use noc_dnn::noc::Coord;
+use noc_dnn::noc::{Coord, ProbeReport};
 use noc_dnn::plan::{LayerPolicy, NetworkPlan};
 use noc_dnn::util::rng::Rng;
 
-/// Drive one randomized-but-seeded workload to completion.
-fn run_once(seed: u64, collection: Collection) -> (NetStats, u64, u64) {
+/// Drive one randomized-but-seeded workload to completion, optionally
+/// with the per-link probes on (the returned report is `None` iff
+/// `probes` is false).
+fn run_once(
+    seed: u64,
+    collection: Collection,
+    probes: bool,
+) -> (NetStats, u64, u64, Option<ProbeReport>) {
     let mut rng = Rng::new(seed);
     let n = *rng.choose(&[1usize, 2, 4, 8]);
     let mut cfg = SimConfig::table1_8x8(n);
     cfg.delta = rng.range(0, 2 * cfg.delta);
+    cfg.probes = probes;
     let mut net = Network::new(&cfg, collection);
     let mut posted = 0u64;
     for round in 0..rng.range(2, 4) {
@@ -37,7 +44,7 @@ fn run_once(seed: u64, collection: Collection) -> (NetStats, u64, u64) {
     let ok = net.run_until_idle(2_000_000);
     assert!(ok, "workload failed to drain");
     assert_eq!(net.payloads_delivered, posted);
-    (net.stats.clone(), net.payloads_delivered, net.cycle)
+    (net.stats.clone(), net.payloads_delivered, net.cycle, net.probe_report())
 }
 
 #[test]
@@ -46,12 +53,64 @@ fn same_seed_same_collection_is_bit_identical() {
         [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina]
     {
         for seed in [42u64, 0xDECAF, 7_777_777] {
-            let a = run_once(seed, collection);
-            let b = run_once(seed, collection);
+            let a = run_once(seed, collection, false);
+            let b = run_once(seed, collection, false);
             assert_eq!(
                 a, b,
                 "{collection:?} seed {seed}: two identical runs diverged — \
                  nondeterminism in Network::step"
+            );
+        }
+    }
+}
+
+#[test]
+fn probes_do_not_perturb_the_simulation() {
+    // `SimConfig::probes` is strictly observational: the probe-on run
+    // must produce the same NetStats, delivery count and final cycle as
+    // its probe-off twin, for every collection scheme. A probe that
+    // influenced allocation, routing or timing diverges here.
+    for collection in
+        [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina]
+    {
+        for seed in [42u64, 0xDECAF] {
+            let (stats_on, delivered_on, cycle_on, probes) =
+                run_once(seed, collection, true);
+            let (stats_off, delivered_off, cycle_off, none) =
+                run_once(seed, collection, false);
+            assert!(none.is_none(), "probe-off run carried probe state");
+            assert_eq!(
+                stats_on, stats_off,
+                "{collection:?} seed {seed}: probes changed the statistics"
+            );
+            assert_eq!(delivered_on, delivered_off);
+            assert_eq!(
+                cycle_on, cycle_off,
+                "{collection:?} seed {seed}: probes changed the timing"
+            );
+            let p = probes.expect("probe-on run must surface a report");
+            assert_eq!(
+                p.total_flits, stats_on.link_traversals,
+                "{collection:?} seed {seed}: probe totals diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn probe_report_is_bit_identical_across_repeated_runs() {
+    // The report itself — every per-link, per-VC and per-bucket counter —
+    // is part of the simulator's deterministic output surface.
+    for collection in
+        [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina]
+    {
+        for seed in [7u64, 0xBAD_5EED] {
+            let a = run_once(seed, collection, true);
+            let b = run_once(seed, collection, true);
+            assert_eq!(
+                a.3, b.3,
+                "{collection:?} seed {seed}: ProbeReport diverged between \
+                 two identical runs"
             );
         }
     }
@@ -70,6 +129,9 @@ fn network_executor_is_bit_identical_and_thread_invariant() {
         let mut cfg = SimConfig::table1_8x8(2);
         cfg.sim_rounds_cap = 2;
         cfg.threads = threads;
+        // Probes on: the per-link reports are part of the surface that
+        // must not move with the worker count.
+        cfg.probes = true;
         NetworkExecutor::new(cfg).run(&model, &plan).unwrap()
     };
     let a = run_with(1);
@@ -79,11 +141,24 @@ fn network_executor_is_bit_identical_and_thread_invariant() {
     for (x, y) in a.layers.iter().zip(&b.layers) {
         assert_eq!(x.report.run.net, y.report.run.net, "layer {} stats diverged", x.index);
         assert_eq!(x.total_cycles, y.total_cycles);
+        assert_eq!(
+            x.report.run.probes, y.report.run.probes,
+            "layer {} probe report diverged at threads=1",
+            x.index
+        );
+        assert!(x.report.run.probes.is_some(), "probes on but layer {} lost it", x.index);
     }
     for threads in [2usize, 4] {
         let c = run_with(threads);
         assert_eq!(a.total_cycles, c.total_cycles, "totals moved at threads={threads}");
         assert_eq!(a.total_energy_j, c.total_energy_j);
+        for (x, z) in a.layers.iter().zip(&c.layers) {
+            assert_eq!(
+                x.report.run.probes, z.report.run.probes,
+                "layer {} probe report moved at threads={threads}",
+                x.index
+            );
+        }
     }
 }
 

@@ -1,0 +1,373 @@
+//! Invariant pyramid for the per-link observability layer
+//! (`SimConfig::probes`, `noc::probes`).
+//!
+//! Base — **conservation**: the per-link probe counters are a partition
+//! of the aggregate `NetStats` the simulator already maintains, so at
+//! *every* cycle boundary — mid-flight, immediately after an idle
+//! fast-forward jump, and after drain —
+//! `Σ links flits == NetStats::link_traversals` bit-exactly, per-VC
+//! planes sum back to their link totals, stream + result classes
+//! partition every link, and the utilization series accounts for every
+//! traversal. Randomized over mesh/torus/cmesh × all three collection
+//! schemes (honouring the `NOC_COLLECTION` CI matrix pin).
+//!
+//! Middle — **exactness**: on workloads with closed-form traffic
+//! (repetitive unicast, capacity-limited gather) the probe totals equal
+//! the analytic flit-hop forms of `analytic::row_collection_flit_hops`
+//! minus the ejection hops that never cross a link.
+//!
+//! Tip — **attribution**: a synthetic single-row hotspot has a known
+//! strictly-hottest link (the east-most link of the posted row — link
+//! load is monotone non-decreasing eastward and strictly maximal on the
+//! last link once ≥ 2 packets cross it); `ProbeReport::bottleneck` must
+//! name that link, its stage, and survive the mesh → torus swap
+//! unchanged (gather collection never takes wrap links).
+
+use noc_dnn::analytic;
+use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming, TopologyKind};
+use noc_dnn::dataflow::run_layer;
+use noc_dnn::models::ConvLayer;
+use noc_dnn::noc::network::Network;
+use noc_dnn::noc::{BottleneckStage, Coord, Port, ProbeReport};
+use noc_dnn::util::rng::{check_cases, Rng};
+
+/// Random collection scheme, overridable by the `NOC_COLLECTION` env var
+/// (the CI matrix runs the suite once per mode).
+fn random_collection(rng: &mut Rng) -> Collection {
+    match std::env::var("NOC_COLLECTION") {
+        Ok(s) => Collection::parse(&s).expect("NOC_COLLECTION must be ru|gather|ina"),
+        Err(_) => *rng.choose(&[
+            Collection::Gather,
+            Collection::RepetitiveUnicast,
+            Collection::Ina,
+        ]),
+    }
+}
+
+/// Random-but-valid probe-on config over all three fabrics.
+fn random_cfg(rng: &mut Rng) -> SimConfig {
+    let mesh = *rng.choose(&[4usize, 5, 8, 11]);
+    let n = *rng.choose(&[1usize, 2, 4, 8]);
+    let mut cfg = SimConfig::table1(if mesh >= 8 { mesh } else { 8 }, n);
+    cfg.mesh_cols = mesh;
+    cfg.mesh_rows = mesh;
+    cfg.topology = *rng.choose(&[
+        TopologyKind::Mesh,
+        TopologyKind::Torus,
+        TopologyKind::CMesh,
+    ]);
+    cfg.delta = rng.range(0, 3 * cfg.delta);
+    cfg.gather_packet_flits = rng.range(2, 20) as usize;
+    cfg.sim_rounds_cap = 4;
+    cfg.probes = true;
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Assert every internal-consistency invariant of one snapshot, and that
+/// its totals partition the network's own aggregates.
+fn assert_probe_invariants(net: &Network, where_: &str) {
+    let p = net.probe_report().expect("probes were enabled");
+    assert_eq!(
+        p.total_flits, net.stats.link_traversals,
+        "{where_}: per-link flit sums do not partition link_traversals"
+    );
+    assert_eq!(
+        p.total_flits,
+        p.links.iter().map(|l| l.flits).sum::<u64>(),
+        "{where_}: total_flits is not the sum of its links"
+    );
+    assert_eq!(
+        p.total_payloads,
+        p.links.iter().map(|l| l.payloads).sum::<u64>(),
+        "{where_}: total_payloads is not the sum of its links"
+    );
+    assert_eq!(
+        p.total_blocked_cycles,
+        p.links.iter().map(|l| l.blocked_total()).sum::<u64>(),
+        "{where_}: total_blocked_cycles is not the sum of its links"
+    );
+    assert_eq!(
+        p.series.iter().sum::<u64>(),
+        p.total_flits,
+        "{where_}: utilization series loses traversals"
+    );
+    for l in &p.links {
+        assert_eq!(
+            l.per_vc_flits.iter().sum::<u64>(),
+            l.flits,
+            "{where_}: VC planes of {} do not sum to the link total",
+            l.label()
+        );
+        assert!(
+            l.stream_flits <= l.flits,
+            "{where_}: {} has more stream flits than flits",
+            l.label()
+        );
+        assert_eq!(
+            l.stream_flits + l.result_flits(),
+            l.flits,
+            "{where_}: stream/result classes of {} do not partition it",
+            l.label()
+        );
+        assert!(
+            l.peak_bucket_flits <= l.flits,
+            "{where_}: {} peak bucket exceeds its lifetime total",
+            l.label()
+        );
+        assert!(
+            l.flits == 0 || l.peak_bucket_flits > 0,
+            "{where_}: {} carried flits but recorded no peak",
+            l.label()
+        );
+    }
+    if p.total_flits > 0 {
+        assert!(p.bottleneck().is_some(), "{where_}: traffic flowed but no bottleneck");
+        assert!(p.max_utilization() > 0.0, "{where_}: utilization lost the traffic");
+    } else {
+        assert_eq!(p.bottleneck(), None, "{where_}: bottleneck out of thin air");
+    }
+}
+
+#[test]
+fn prop_link_sums_partition_netstats_across_fabrics() {
+    check_cases(0x0B5E7E, 40, |rng, case| {
+        let cfg = random_cfg(rng);
+        let collection = random_collection(rng);
+        let mut net = Network::new(&cfg, collection);
+        let mut posted = 0u64;
+        for r in 0..rng.range(1, 3) {
+            for y in 0..cfg.mesh_rows {
+                for x in 0..cfg.mesh_cols {
+                    if rng.chance(0.7) {
+                        let p = rng.range(1, cfg.pes_per_router as u64) as u32;
+                        net.post_result(r * 50, Coord::new(x as u16, y as u16), p);
+                        posted += p as u64;
+                    }
+                }
+            }
+        }
+        // Sample the invariants at a handful of mid-flight cycle
+        // boundaries (cheap aggregates every boundary, full snapshot per
+        // horizon), then once more after the drain.
+        let mut horizon = 0u64;
+        for _ in 0..4 {
+            horizon += rng.range(10, 700);
+            net.run_until(|_| false, horizon);
+            assert_probe_invariants(&net, &format!("case {case} @{} {collection:?}", net.cycle));
+        }
+        let ok = net.run_until_idle(2_000_000);
+        assert!(ok, "case {case}: failed to drain ({collection:?} {:?})", cfg.topology);
+        assert_eq!(net.payloads_delivered, posted, "case {case}: delivery shortfall");
+        assert_probe_invariants(&net, &format!("case {case} drained {collection:?}"));
+    });
+}
+
+#[test]
+fn prop_probe_invariants_survive_fast_forward_jumps() {
+    // Bursts separated by multi-thousand-cycle idle gaps force the
+    // quiescent fast-forward (and calendar-window hops) between bursts;
+    // the per-link partition must hold right across every jump — a
+    // traversal recorded into the wrong bucket or double-counted by the
+    // clock jump breaks series/total reconciliation here.
+    check_cases(0xFA57_0B5, 20, |rng, case| {
+        let cfg = random_cfg(rng);
+        let collection = random_collection(rng);
+        let mut net = Network::new(&cfg, collection);
+        let mut posted = 0u64;
+        let mut at = 0u64;
+        for _ in 0..rng.range(2, 5) {
+            at += rng.range(3_000, 40_000);
+            for y in 0..cfg.mesh_rows {
+                if rng.chance(0.6) {
+                    let x = rng.below(cfg.mesh_cols as u64) as u16;
+                    let p = rng.range(1, cfg.pes_per_router as u64) as u32;
+                    net.post_result(at, Coord::new(x, y as u16), p);
+                    posted += p as u64;
+                }
+            }
+            // Run into (and past) this burst, then audit the snapshot.
+            net.run_until(|_| false, at + rng.range(1, 2_000));
+            assert_probe_invariants(&net, &format!("case {case} jump@{}", net.cycle));
+        }
+        if posted == 0 {
+            net.post_result(at, Coord::new(0, 0), 1);
+            posted = 1;
+        }
+        let ok = net.run_until_idle(at + 2_000_000);
+        assert!(ok, "case {case}: failed to drain after jumps");
+        assert_eq!(net.payloads_delivered, posted, "case {case}: shortfall after jumps");
+        assert_probe_invariants(&net, &format!("case {case} drained after jumps"));
+        // The series must span the whole jump-heavy schedule gap-free.
+        let p = net.probe_report().unwrap();
+        assert!(
+            (p.series.len() as u64) <= net.cycle / p.bucket_cycles + 1,
+            "case {case}: series has buckets past the final cycle"
+        );
+    });
+}
+
+#[test]
+fn prop_driver_probe_report_covers_the_measured_prefix() {
+    // Driver level: for every streaming × collection × dataflow policy,
+    // the surfaced ProbeReport reconciles with the *measured* (never the
+    // extrapolated) NetStats — the same contract `measured_net` keeps.
+    let layer = ConvLayer { name: "probe", c: 8, h_in: 10, r: 3, stride: 1, pad: 1, q: 24 };
+    for dataflow in [DataflowKind::OutputStationary, DataflowKind::WeightStationary] {
+        for streaming in [Streaming::TwoWay, Streaming::OneWay, Streaming::Mesh] {
+            for collection in
+                [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina]
+            {
+                let mut cfg = SimConfig::table1_8x8(4);
+                cfg.dataflow = dataflow;
+                cfg.sim_rounds_cap = 2;
+                cfg.probes = true;
+                let r = run_layer(&cfg, streaming, collection, &layer);
+                let tag = format!("{dataflow:?}/{streaming:?}/{collection:?}");
+                let p = r.probes.as_ref().unwrap_or_else(|| {
+                    panic!("{tag}: probes on but no report surfaced")
+                });
+                assert_eq!(
+                    p.total_flits, r.measured_net.link_traversals,
+                    "{tag}: probe totals diverge from the measured prefix"
+                );
+                assert_eq!(
+                    p.total_flits,
+                    p.links.iter().map(|l| l.flits).sum::<u64>(),
+                    "{tag}: link sums broken at driver level"
+                );
+                if p.total_flits > 0 {
+                    assert!(p.bottleneck().is_some(), "{tag}: no bottleneck attributed");
+                }
+                // Probes never contaminate the extrapolated aggregates:
+                // the probe-off run of the same policy is bit-identical.
+                let mut off = cfg.clone();
+                off.probes = false;
+                let q = run_layer(&off, streaming, collection, &layer);
+                assert!(q.probes.is_none(), "{tag}: probe-off run produced a report");
+                assert_eq!(q.net, r.net, "{tag}: probes changed the simulation");
+                assert_eq!(q.total_cycles, r.total_cycles, "{tag}: probes changed timing");
+            }
+        }
+    }
+}
+
+#[test]
+fn ru_probe_totals_match_the_closed_form_exactly() {
+    // Repetitive unicast has contention-independent traffic: node x of a
+    // row sends ppn 2-flit packets that cross M−x routers each (the
+    // analytic flit-hop form), of which exactly one hop per flit is the
+    // memory ejection — which never crosses a link. The probe layer must
+    // land on the closed form minus those ejection hops, flit for flit.
+    let cfg = {
+        let mut c = SimConfig::table1_8x8(4);
+        c.probes = true;
+        c
+    };
+    let ppn = 4u32;
+    let m = cfg.mesh_cols as u64;
+    let mut net = Network::new(&cfg, Collection::RepetitiveUnicast);
+    let y = 3u16;
+    for x in 0..cfg.mesh_cols {
+        net.post_result(0, Coord::new(x as u16, y), ppn);
+    }
+    assert!(net.run_until_idle(1_000_000), "RU row failed to drain");
+    let hops = analytic::row_collection_flit_hops(&cfg, Collection::RepetitiveUnicast, ppn);
+    assert_eq!(net.stats.flit_hops, hops, "simulated hops diverge from Eq. form");
+    // m·ppn packets of unicast_packet_flits flits eject exactly once each.
+    let ejection_hops = m * ppn as u64 * cfg.unicast_packet_flits as u64;
+    let p = net.probe_report().unwrap();
+    assert_eq!(p.total_flits, hops - ejection_hops);
+    assert_eq!(net.stats.link_traversals, hops - ejection_hops);
+    // Each payload rides one packet across (M−1−x) links: Σ = ppn·M(M−1)/2.
+    assert_eq!(p.total_payloads, ppn as u64 * m * (m - 1) / 2);
+    // Only the posted row's east links carry traffic, monotone eastward:
+    // link x→x+1 carries the (x+1)·ppn packets of nodes 0..=x.
+    for l in &p.links {
+        if l.flits == 0 {
+            continue;
+        }
+        assert_eq!(l.port, Port::East, "{}: RU traffic off the east path", l.label());
+        assert_eq!(l.from.y, y, "{}: RU traffic left its row", l.label());
+        let expect = (l.from.x as u64 + 1) * ppn as u64 * cfg.unicast_packet_flits as u64;
+        assert_eq!(l.flits, expect, "{}: unexpected flit count", l.label());
+        assert_eq!(l.payloads, (l.from.x as u64 + 1) * ppn as u64, "{}", l.label());
+    }
+}
+
+/// Build the capacity-limited gather hotspot: η == ppn makes every node
+/// of the posted row initiate its own (full) gather packet — boarding is
+/// impossible, so the packet census is timing-independent and the east-
+/// most link `(M−2,y)→E` is *strictly* hottest in every δ regime.
+fn gather_hotspot(topology: TopologyKind) -> (SimConfig, ProbeReport, Network) {
+    let mut cfg = SimConfig::table1_8x8(4);
+    cfg.topology = topology;
+    // η = (Lg−1)·(flit_bits/payload_bits) = 1·4: one node fills a packet.
+    cfg.gather_packet_flits = 2;
+    cfg.probes = true;
+    cfg.validate().unwrap();
+    let ppn = 4u32;
+    let mut net = Network::new(&cfg, Collection::Gather);
+    let y = 2u16;
+    for x in 0..cfg.mesh_cols {
+        net.post_result(0, Coord::new(x as u16, y), ppn);
+    }
+    assert!(net.run_until_idle(1_000_000), "{topology:?} hotspot failed to drain");
+    assert_eq!(net.payloads_delivered, cfg.mesh_cols as u64 * ppn as u64);
+    let p = net.probe_report().unwrap();
+    (cfg, p, net)
+}
+
+#[test]
+fn bottleneck_attribution_pins_the_hotspot_link_on_mesh_and_torus() {
+    for topology in [TopologyKind::Mesh, TopologyKind::Torus] {
+        let (cfg, p, net) = gather_hotspot(topology);
+        let m = cfg.mesh_cols as u64;
+        let lg = cfg.gather_packet_flits as u64;
+        assert_eq!(p.total_flits, net.stats.link_traversals, "{topology:?}");
+        // Analytic census: packet i initiates at column i and crosses
+        // M−i routers; the M·Lg ejection hops never touch a link.
+        let hops = analytic::row_collection_flit_hops(&cfg, Collection::Gather, 4);
+        assert_eq!(net.stats.flit_hops, hops, "{topology:?}: hop census moved");
+        assert_eq!(p.total_flits, hops - m * lg, "{topology:?}: link census moved");
+        // Attribution: strictly hottest is the east-most link of the row,
+        // and the traffic on it is collection, not operand streaming.
+        let b = p.bottleneck().unwrap_or_else(|| panic!("{topology:?}: no bottleneck"));
+        assert_eq!(b.from, Coord::new(cfg.mesh_cols as u16 - 2, 2), "{topology:?}");
+        assert_eq!(b.to, Coord::new(cfg.mesh_cols as u16 - 1, 2), "{topology:?}");
+        assert_eq!(b.port, Port::East, "{topology:?}");
+        assert_eq!(b.stage, BottleneckStage::Collection, "{topology:?}");
+        assert_eq!(b.flits, (m - 1) * lg, "{topology:?}: hottest-link census moved");
+        assert!(b.utilization > 0.0 && b.utilization <= 1.0, "{topology:?}");
+        // Per-link: load is strictly increasing eastward along the row,
+        // and nothing leaves it — on the torus that also proves gather
+        // took no wrap link (the wrap's record would sit off-row or
+        // westbound and fail here).
+        for l in &p.links {
+            if l.flits == 0 {
+                continue;
+            }
+            assert_eq!(l.port, Port::East, "{topology:?} {}: off east path", l.label());
+            assert_eq!(l.from.y, 2, "{topology:?} {}: left the row", l.label());
+            assert_eq!(
+                l.flits,
+                (l.from.x as u64 + 1) * lg,
+                "{topology:?} {}: unexpected census",
+                l.label()
+            );
+            assert_eq!(l.payloads, (l.from.x as u64 + 1) * 4, "{topology:?}");
+        }
+    }
+}
+
+#[test]
+fn torus_emits_wrap_links_in_the_report() {
+    // The report's link list comes from the topology, not the mesh
+    // assumption: an M×M torus has 4·M² directed links (every port of
+    // every router is wired), a mesh only 4·M(M−1).
+    let (_, mesh_report, _) = gather_hotspot(TopologyKind::Mesh);
+    let (cfg, torus_report, _) = gather_hotspot(TopologyKind::Torus);
+    let m = cfg.mesh_cols;
+    assert_eq!(mesh_report.links.len(), 4 * m * (m - 1));
+    assert_eq!(torus_report.links.len(), 4 * m * m);
+}

@@ -200,6 +200,58 @@ fn prop_flit_conservation_holds_across_fast_forward_jumps() {
 }
 
 #[test]
+fn prop_probe_partition_reconciles_with_netstats() {
+    // With probes on, the per-link observability counters are a strict
+    // partition of the aggregates this suite already pins: link sums
+    // equal `NetStats::link_traversals` bit-exactly both mid-flight and
+    // after drain, and turning probes on changes no simulated outcome
+    // (same delivery count at the same final cycle as the probe-off
+    // twin). The deeper pyramid lives in `tests/probe_invariants.rs`.
+    check_cases(0x9B0B35, 30, |rng, case| {
+        let mut cfg = random_cfg(rng);
+        let collection = random_collection(rng);
+        let mut schedule: Vec<(u64, Coord, u32)> = Vec::new();
+        for y in 0..cfg.mesh_rows {
+            for x in 0..cfg.mesh_cols {
+                if rng.chance(0.7) {
+                    schedule.push((
+                        rng.range(0, 100),
+                        Coord::new(x as u16, y as u16),
+                        rng.range(1, cfg.pes_per_router as u64) as u32,
+                    ));
+                }
+            }
+        }
+        let run = |probes: bool, cfg: &mut SimConfig| {
+            cfg.probes = probes;
+            let mut net = Network::new(cfg, collection);
+            for &(at, node, p) in &schedule {
+                net.post_result(at, node, p);
+            }
+            let horizon = 500;
+            net.run_until(|_| false, horizon);
+            if let Some(p) = net.probe_report() {
+                assert_eq!(
+                    p.total_flits, net.stats.link_traversals,
+                    "case {case}: probe partition broken mid-flight ({collection:?})"
+                );
+            }
+            assert!(net.run_until_idle(2_000_000), "case {case}: failed to drain");
+            if let Some(p) = net.probe_report() {
+                assert_eq!(
+                    p.total_flits, net.stats.link_traversals,
+                    "case {case}: probe partition broken after drain ({collection:?})"
+                );
+            }
+            (net.stats.clone(), net.payloads_delivered, net.cycle)
+        };
+        let on = run(true, &mut cfg);
+        let off = run(false, &mut cfg);
+        assert_eq!(on, off, "case {case}: probes changed the simulation ({collection:?})");
+    });
+}
+
+#[test]
 fn prop_network_drains_completely() {
     check_cases(0xBEEF, 40, |rng, case| {
         let cfg = random_cfg(rng);
