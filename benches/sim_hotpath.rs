@@ -23,6 +23,12 @@
 //!   the run also asserts the probed kernel's cycle/hop counts are
 //!   bit-identical to the unprobed one (probes are observation-only).
 //!
+//! * **big-mesh-workers-w{1,2,4,8}** — the saturating workload on a
+//!   64×64 fabric under the intra-layer parallel kernel
+//!   (`SimConfig::intra_workers`), event kernel only. One point name —
+//!   one regression-gate key — per worker count, and every parallel run
+//!   is asserted bit-identical to the workers=1 run it is compared to.
+//!
 //! `--quick` runs the reduced CI matrix; `--json PATH` writes the
 //! machine-readable report (`BENCH_sim_hotpath.json`) that
 //! `scripts/check_bench_regression.py` gates against the committed
@@ -228,6 +234,58 @@ fn main() {
         );
         record(&mut report, "big-mesh-probes-off", "event", big_mesh, big_n, coll, &off);
         record(&mut report, "big-mesh-probes-on", "event", big_mesh, big_n, coll, &on);
+    }
+
+    // Intra-layer parallel kernel: 64x64 saturating gather, event kernel
+    // only, at 1/2/4/8 band workers. Distinct point names per worker
+    // count keep each point a separate regression-gate key, and every
+    // parallel run is asserted bit-identical to the workers=1 baseline
+    // while it is being timed.
+    {
+        let big_mesh = 64usize;
+        let big_n = 2usize;
+        let rounds = if args.quick { 1 } else { 2 };
+        let coll = Collection::Gather;
+        let mut baseline: Option<Measured> = None;
+        for workers in [1usize, 2, 4, 8] {
+            let mut cfg = SimConfig::table1(big_mesh, big_n);
+            cfg.probes = false;
+            cfg.intra_workers = workers;
+            let m = measure(reps, || Network::new(&cfg, coll), |k| {
+                saturate(k, &cfg, rounds)
+            });
+            if let Some(base) = &baseline {
+                assert_eq!(
+                    (m.hops, m.cycles),
+                    (base.hops, base.cycles),
+                    "64x64 workers={workers} run diverged from the sequential kernel"
+                );
+                let speedup = base.t.median_ns as f64 / m.t.median_ns as f64;
+                println!(
+                    "{big_mesh}x{big_mesh} n={big_n} gather saturate workers {workers} {:>9} \
+                     | vs workers 1 {:>9} | speedup {speedup:>5.2}x",
+                    fmt_ns(m.t.median_ns),
+                    fmt_ns(base.t.median_ns),
+                );
+            } else {
+                println!(
+                    "{big_mesh}x{big_mesh} n={big_n} gather saturate workers {workers} {:>9}",
+                    fmt_ns(m.t.median_ns),
+                );
+            }
+            record(
+                &mut report,
+                &format!("big-mesh-workers-w{workers}"),
+                "event",
+                big_mesh,
+                big_n,
+                coll,
+                &m,
+            );
+            if workers == 1 {
+                baseline = Some(m);
+            }
+        }
     }
 
     // End-to-end layer simulation timing (what every figure point costs).

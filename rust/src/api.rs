@@ -83,6 +83,7 @@ pub struct ScenarioBuilder {
     delta: Option<u64>,
     rounds_cap: Option<usize>,
     threads: Option<usize>,
+    intra_workers: Option<usize>,
     trace_driven: Option<bool>,
     probes: Option<bool>,
     ws_rf_words: Option<u32>,
@@ -110,6 +111,7 @@ impl ScenarioBuilder {
             delta: None,
             rounds_cap: None,
             threads: None,
+            intra_workers: None,
             trace_driven: None,
             probes: None,
             ws_rf_words: None,
@@ -189,6 +191,15 @@ impl ScenarioBuilder {
     /// Worker threads for multi-layer fan-outs (0 = auto).
     pub fn threads(mut self, t: usize) -> Self {
         self.threads = Some(t);
+        self
+    }
+
+    /// Band workers *inside* each simulation — the deterministic
+    /// intra-layer parallel kernel of [`crate::noc::parallel`] (1 =
+    /// sequential kernel, the default; results are bit-identical at any
+    /// count).
+    pub fn intra_workers(mut self, w: usize) -> Self {
+        self.intra_workers = Some(w);
         self
     }
 
@@ -285,6 +296,9 @@ impl ScenarioBuilder {
         }
         if let Some(t) = self.threads {
             cfg.threads = t;
+        }
+        if let Some(w) = self.intra_workers {
+            cfg.intra_workers = w;
         }
         if let Some(on) = self.trace_driven {
             cfg.trace_driven = on;

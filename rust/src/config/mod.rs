@@ -237,6 +237,17 @@ pub struct SimConfig {
     /// bit-identical for every thread count; `threads = 1` additionally
     /// serializes execution for debugging.
     pub threads: usize,
+    /// Worker threads *inside* one network simulation (the intra-layer
+    /// parallel kernel, [`crate::noc::parallel`]): the router grid is
+    /// sharded into contiguous row bands, one band per worker, and the
+    /// band-local pipeline phases run concurrently with deferred effects
+    /// merged in ascending band order at a per-cycle barrier — results
+    /// are bit-identical to the sequential kernel for every worker
+    /// count. `1` (the default) selects today's sequential kernel with
+    /// zero extra state. The executor clamps `threads × intra_workers`
+    /// against the machine's core budget so nested fan-out cannot
+    /// oversubscribe (see `coordinator::executor`).
+    pub intra_workers: usize,
     /// Enable the per-link observability probes
     /// ([`crate::noc::probes`]): per-directed-link / per-VC traversal and
     /// credit-block counters plus a cycle-bucketed utilization series,
@@ -292,6 +303,7 @@ impl SimConfig {
             trace_driven: false,
             sim_rounds_cap: 8,
             threads: 0,
+            intra_workers: 1,
             probes: false,
             clock_hz: 1.0e9,
         }
@@ -379,6 +391,11 @@ impl SimConfig {
         check(self.router_pipeline >= 2, "router_pipeline", "pipeline must cover RC/VA + SA/ST")?;
         check(self.sim_rounds_cap >= 2, "sim_rounds_cap", "need >= 2 simulated rounds to extrapolate")?;
         check(self.ws_rf_words >= 1, "ws_rf_words", "WS register file needs at least one word")?;
+        check(
+            self.intra_workers >= 1,
+            "intra_workers",
+            "need at least one intra-layer worker (1 = sequential kernel)",
+        )?;
         if self.topology == TopologyKind::Torus {
             // The dateline deadlock-avoidance rule splits the VCs into two
             // classes per link (see `noc::topology::Torus2D`).
@@ -419,6 +436,7 @@ impl SimConfig {
             .set("trace_driven", Json::Bool(self.trace_driven))
             .set("sim_rounds_cap", Json::Num(self.sim_rounds_cap as f64))
             .set("threads", Json::Num(self.threads as f64))
+            .set("intra_workers", Json::Num(self.intra_workers as f64))
             .set("probes", Json::Bool(self.probes))
             .set("clock_hz", Json::Num(self.clock_hz));
         j.to_pretty()
@@ -476,6 +494,7 @@ impl SimConfig {
                 .unwrap_or(d.trace_driven),
             sim_rounds_cap: us("sim_rounds_cap", d.sim_rounds_cap),
             threads: us("threads", d.threads),
+            intra_workers: us("intra_workers", d.intra_workers),
             probes: j.get("probes").and_then(Json::as_bool).unwrap_or(d.probes),
             clock_hz: j.get("clock_hz").and_then(Json::as_f64).unwrap_or(d.clock_hz),
         };
@@ -672,6 +691,25 @@ mod tests {
         // Configs written before the threads field default to auto (0).
         let legacy = SimConfig::from_json("{}").unwrap();
         assert_eq!(legacy.threads, 0);
+    }
+
+    #[test]
+    fn intra_workers_roundtrip_through_json_and_default_sequential() {
+        let mut c = SimConfig::table1_8x8(4);
+        c.intra_workers = 4;
+        let d = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(d.intra_workers, 4);
+        // Configs written before the field default to the sequential kernel.
+        let legacy = SimConfig::from_json("{}").unwrap();
+        assert_eq!(legacy.intra_workers, 1);
+        // Zero workers is a typed validate error, not a silent sequential run.
+        let mut bad = SimConfig::default();
+        bad.intra_workers = 0;
+        assert!(matches!(
+            bad.validate(),
+            Err(ConfigError::Invalid { what: "intra_workers", .. })
+        ));
     }
 
     #[test]

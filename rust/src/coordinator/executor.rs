@@ -44,7 +44,7 @@ use crate::power::power_report;
 
 use super::experiment::LayerReport;
 use super::report::LayerResult;
-use super::server::{parallel_map, resolve_workers};
+use super::server::{parallel_map, resolve_workers_clamped};
 
 /// One layer of a network run: the per-layer driver result plus the
 /// inter-layer boundary charge.
@@ -202,9 +202,11 @@ impl NetworkExecutor {
         self
     }
 
-    /// Worker threads for the layer fan-out.
+    /// Worker threads for the layer fan-out, clamped so `layer workers ×
+    /// cfg.intra_workers` (each simulation's band threads) stays within
+    /// the host budget — see [`resolve_workers_clamped`].
     pub fn workers(&self) -> usize {
-        resolve_workers(self.cfg.threads)
+        resolve_workers_clamped(self.cfg.threads, self.cfg.intra_workers)
     }
 
     /// Run `model` under `plan`.
@@ -322,7 +324,7 @@ pub fn best_plan_search(
     model: &Network,
     opts: &PlanSearchOptions,
 ) -> PlanSearch {
-    let workers = resolve_workers(cfg.threads);
+    let workers = resolve_workers_clamped(cfg.threads, cfg.intra_workers);
     let jobs: Vec<usize> = (0..model.len()).collect();
     let layers = parallel_map(jobs, workers, |&i| {
         let layer = &model.layers[i];

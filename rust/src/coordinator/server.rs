@@ -62,6 +62,17 @@ pub fn resolve_workers(threads: usize) -> usize {
     }
 }
 
+/// Resolve the layer fan-out width with the intra-layer kernel's fan-out
+/// accounted for: each layer worker spawns `intra_workers` band threads
+/// per simulated cycle (`SimConfig::intra_workers`), so the product
+/// `layer workers × intra_workers` is clamped to [`default_workers`].
+/// At least one layer worker always survives the clamp, and the clamp
+/// never *raises* an explicit `threads` setting.
+pub fn resolve_workers_clamped(threads: usize, intra_workers: usize) -> usize {
+    let per_sim = intra_workers.max(1);
+    resolve_workers(threads).min((default_workers() / per_sim).max(1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +99,21 @@ mod tests {
     fn zero_threads_resolves_to_auto() {
         assert_eq!(resolve_workers(0), default_workers());
         assert_eq!(resolve_workers(3), 3);
+    }
+
+    #[test]
+    fn intra_workers_clamp_bounds_the_thread_product() {
+        let host = default_workers();
+        // Sequential kernel: the clamp is a no-op.
+        assert_eq!(resolve_workers_clamped(0, 1), host);
+        assert_eq!(resolve_workers_clamped(3, 1), 3);
+        // Wide intra-layer kernel: layer workers shrink so the product
+        // stays within the host budget...
+        assert!(resolve_workers_clamped(0, 4) * 4 <= host.max(4));
+        // ...but never below one layer worker, even when the intra-layer
+        // fan-out alone exceeds the host.
+        assert_eq!(resolve_workers_clamped(8, host * 2), 1);
+        // The clamp never raises an explicit small setting.
+        assert_eq!(resolve_workers_clamped(1, 2), 1);
     }
 }

@@ -39,6 +39,7 @@ const VALUED: &[&str] = &[
     "dataflow",
     "rounds-cap",
     "threads",
+    "intra-workers",
     "plan",
     "delta",
     "layer",
@@ -118,6 +119,11 @@ FLAGS:
                      rejects the triple flags, which it would ignore); a
                      path loads a custom JSON plan (one policy per layer)
   --threads T        worker threads for the layer fan-out (0 = auto)
+  --intra-workers W  band workers inside each simulation (the
+                     deterministic intra-layer parallel kernel; 1 =
+                     sequential, results bit-identical at any count; the
+                     layer fan-out is clamped so threads x W stays within
+                     the host)
 
 `model` executes a whole DNN through the network executor: per-layer
 flit-accurate simulation, per-layer policies, inter-layer traffic charged
@@ -156,6 +162,9 @@ fn scenario_from(args: &Args) -> Result<noc_dnn::api::Scenario> {
     }
     if args.get("threads").is_some() {
         b = b.threads(args.get_parsed("threads", 0)?);
+    }
+    if args.get("intra-workers").is_some() {
+        b = b.intra_workers(args.get_parsed("intra-workers", 1)?);
     }
     if args.get("delta").is_some() {
         b = b.delta(args.get_parsed("delta", 0)?);

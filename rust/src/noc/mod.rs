@@ -20,6 +20,7 @@ pub mod calendar;
 pub mod flit;
 pub mod gather;
 pub mod network;
+pub mod parallel;
 pub mod probes;
 pub mod reference;
 pub mod router;

@@ -144,7 +144,8 @@ use super::buffer::VcState;
 use super::calendar::Calendar;
 use super::flit::{Coord, Flit, PacketDesc, PacketId, PacketType};
 use super::gather::{effective_delta, try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
-use super::probes::{LinkProbes, ProbeReport};
+use super::parallel::{self, ParState};
+use super::probes::{LinkProbes, ProbeReport, BUCKET_CYCLES};
 use super::router::{refresh_vc_state, RouterState};
 use super::routing::Port;
 use super::stats::NetStats;
@@ -152,34 +153,36 @@ use super::topology::{self, Topology};
 use crate::config::{Collection, SimConfig};
 
 /// A flit in flight on a link, due to be written into a buffer.
+/// (`pub(super)`: the intra-layer parallel kernel's band mailboxes carry
+/// these across the cycle barrier — see [`super::parallel`].)
 #[derive(Debug)]
-struct Arrival {
-    router: usize,
-    port: Port,
-    vc: usize,
-    flit: Flit,
+pub(super) struct Arrival {
+    pub(super) router: usize,
+    pub(super) port: Port,
+    pub(super) vc: usize,
+    pub(super) flit: Flit,
 }
 
 /// An entry in an injection source's queue.
 #[derive(Debug)]
-struct InjEntry {
-    desc: PacketDesc,
+pub(super) struct InjEntry {
+    pub(super) desc: PacketDesc,
     /// Staged by the NI gather machinery: re-validated against the NI's
     /// pending count when the head is about to enter the router (cancel-on
     /// -board, see `noc::gather` module docs).
-    from_ni: bool,
+    pub(super) from_ni: bool,
     /// Earliest cycle the head may enter the router (the packet-format
     /// unit of Fig. 9 takes one cycle to assemble staged gather packets).
-    not_before: u64,
+    pub(super) not_before: u64,
 }
 
 /// One injection source: feeds at most one flit per cycle into a single
 /// input port of its router (the NI↔router bandwidth of Fig. 9).
 #[derive(Debug, Default)]
-struct Injector {
-    queue: VecDeque<InjEntry>,
+pub(super) struct Injector {
+    pub(super) queue: VecDeque<InjEntry>,
     /// In-progress packet: (desc, next flit seq, chosen VC).
-    cur: Option<(PacketDesc, u32, usize)>,
+    pub(super) cur: Option<(PacketDesc, u32, usize)>,
 }
 
 /// Where an operand stream enters the mesh.
@@ -271,6 +274,10 @@ pub struct Network {
     /// probe-off hot path allocation-free and bit-identical (the probes
     /// only ever observe — see [`super::probes`]).
     probes: Option<Box<LinkProbes>>,
+    /// Intra-layer parallel kernel state (`cfg.intra_workers > 1` on a
+    /// shardable grid — see [`super::parallel`]); `None` keeps the
+    /// sequential hot path carrying nothing but this discriminant.
+    par: Option<Box<ParState>>,
     next_pid: PacketId,
 }
 
@@ -394,6 +401,7 @@ impl Network {
             probes: cfg
                 .probes
                 .then(|| Box::new(LinkProbes::new(cols * rows, vcs))),
+            par: ParState::for_grid(cfg.intra_workers, cols, rows),
             next_pid: 1,
             cfg,
         }
@@ -630,6 +638,10 @@ impl Network {
     // ------------------------------------------------------------------
 
     pub fn step(&mut self) {
+        if self.par.is_some() {
+            self.step_parallel();
+            return;
+        }
         self.apply_credit_refunds();
         self.deliver_arrivals();
         self.apply_posts();
@@ -641,6 +653,127 @@ impl Network {
         self.retire_idle_routers();
         self.cycle += 1;
         self.stats.cycles_simulated = self.cycle;
+    }
+
+    /// One clock under the intra-layer parallel kernel
+    /// (`cfg.intra_workers > 1`). The phase order matches [`Network::step`]
+    /// exactly; the two band-parallel sections — link delivery with
+    /// gather boarding / INA folds, and fused VA + SA — fan out over
+    /// contiguous row bands and merge their deferred effects in ascending
+    /// band order at the per-cycle barrier, which keeps every observable
+    /// bit-identical to the sequential kernel (see [`super::parallel`]).
+    fn step_parallel(&mut self) {
+        self.apply_credit_refunds();
+        self.deliver_arrivals_parallel();
+        self.apply_posts();
+        self.va_sa_parallel();
+        self.feed_injectors();
+        self.gather_timeouts();
+        self.drain_backlogs();
+        self.retire_idle_routers();
+        self.cycle += 1;
+        self.stats.cycles_simulated = self.cycle;
+    }
+
+    /// Band-parallel `deliver_arrivals`: the cycle's arrival batch is
+    /// partitioned by destination band (per-band relative order = batch
+    /// order; arrivals to different bands touch disjoint state, so
+    /// cross-band interleaving is unobservable), each band delivers
+    /// concurrently, and the deferred effects merge at the barrier.
+    fn deliver_arrivals_parallel(&mut self) {
+        let mut par = self.par.take().expect("parallel step without ParState");
+        let mut batch = self.arrivals.pop_front().expect("arrival ring underflow");
+        for a in batch.drain(..) {
+            let b = par.band_of(a.router);
+            par.inboxes[b].push(a);
+        }
+        self.arrivals.push_back(batch);
+        {
+            let shared = parallel::Shared {
+                cfg: &self.cfg,
+                topo: self.topo.as_ref(),
+                collection: self.collection,
+                cols: self.cols,
+                vcs: self.vcs,
+                cycle: self.cycle,
+                active: &self.active,
+            };
+            // Deliver records no probe counters (both record sites live
+            // in SA/grant), so no band probe views are built here.
+            let mut bands = parallel::make_bands(
+                &par.bands,
+                &mut self.routers,
+                &mut self.ni,
+                &mut self.injectors,
+                &mut self.occupancy,
+                None,
+            );
+            parallel::run_deliver(&shared, &mut bands, &mut par.effects, &mut par.inboxes);
+        }
+        self.absorb_band_effects(&mut par.effects);
+        self.par = Some(par);
+    }
+
+    /// Band-parallel fused `vc_allocate` + `switch_allocate`: each worker
+    /// runs VA then SA over its band's active routers (neither pass reads
+    /// another router's state); grants defer forwarded flits, credit
+    /// refunds and counters through the band mailbox.
+    fn va_sa_parallel(&mut self) {
+        let mut par = self.par.take().expect("parallel step without ParState");
+        {
+            let shared = parallel::Shared {
+                cfg: &self.cfg,
+                topo: self.topo.as_ref(),
+                collection: self.collection,
+                cols: self.cols,
+                vcs: self.vcs,
+                cycle: self.cycle,
+                active: &self.active,
+            };
+            let mut bands = parallel::make_bands(
+                &par.bands,
+                &mut self.routers,
+                &mut self.ni,
+                &mut self.injectors,
+                &mut self.occupancy,
+                self.probes.as_deref_mut(),
+            );
+            parallel::run_va_sa(&shared, &mut bands, &mut par.effects);
+        }
+        self.absorb_band_effects(&mut par.effects);
+        self.par = Some(par);
+    }
+
+    /// Merge the per-band deferred effects in ascending band order — the
+    /// order a sequential ascending-router-index scan would have produced
+    /// them — keeping every counter, forwarded flit, credit refund and
+    /// probe series bucket bit-identical to the sequential kernel.
+    fn absorb_band_effects(&mut self, effects: &mut [parallel::Effects]) {
+        let delay = (1 + self.cfg.link_latency) as usize;
+        let bucket = self.cycle / BUCKET_CYCLES;
+        for fx in effects.iter_mut() {
+            // A band delta leaves `cycles_simulated` at 0, so merge's max
+            // keeps the network's value untouched.
+            self.stats.merge(&fx.stats);
+            self.flits_active -= fx.flits_active_sub;
+            self.payloads_delivered += fx.payloads_delivered;
+            self.stream_tails_ejected += fx.stream_tails_ejected;
+            self.gather_packets_ejected += fx.gather_packets_ejected;
+            self.result_packets_ejected += fx.result_packets_ejected;
+            if fx.tail_ejected {
+                self.last_eject_cycle = self.cycle;
+            }
+            self.busy_injectors += fx.busy_injectors_add;
+            for &r in fx.wakes.iter() {
+                self.mark_active(r);
+            }
+            self.credit_refunds.append(&mut fx.credit_refunds);
+            self.arrivals[delay - 1].append(&mut fx.arrivals_out);
+            if let Some(p) = self.probes.as_mut() {
+                p.bump_series(bucket, fx.series_flits);
+            }
+            fx.reset();
+        }
     }
 
     fn apply_credit_refunds(&mut self) {

@@ -1,0 +1,878 @@
+//! Deterministic intra-layer parallel kernel: row-band sharding of one
+//! network simulation.
+//!
+//! `SimConfig::threads` fans out *across* layers (one simulation per OS
+//! thread, `coordinator::executor`); this module parallelizes *inside*
+//! one simulation. The router grid is cut into contiguous **row bands**
+//! — `rows.div_ceil(workers)` rows each, the last band ragged when the
+//! row count does not divide — and the band-local phases of one clock
+//! run concurrently, one band per scoped worker thread:
+//!
+//! * **deliver** (link arrivals + gather boarding / INA folds): the
+//!   cycle's arrival batch is partitioned by destination band, order
+//!   preserved within each band, and each worker writes only its band's
+//!   buffers and NIs;
+//! * **VA + SA** (VC allocation, switch allocation, grants, INA merges):
+//!   both passes touch only the granting router's own state — output-VC
+//!   holders, credit trackers, round-robin pointers — so a worker runs
+//!   VA then SA over its band's active routers back to back.
+//!
+//! Everything a phase would write *outside* its band is deferred into a
+//! per-band `Effects` mailbox instead of applied in place: flits put
+//! on a link (they arrive `1 + link_latency` cycles later, so the
+//! sequential kernel defers them too), upstream credit refunds (applied
+//! next cycle), stat counter deltas, active-set wakeups and the probe
+//! utilization-series count. At the per-cycle barrier (the end of
+//! [`std::thread::scope`]) the owner merges the mailboxes **in
+//! ascending band order** — exactly the order a sequential ascending-
+//! router-index scan produces them — so arbitration, boarding, packet-id
+//! assignment and every counter stay bit-identical to the sequential
+//! kernel (`tests/golden_kernel.rs` and `tests/determinism.rs` pin
+//! this at workers 1/2/4/8).
+//!
+//! The remaining phases of the cycle (credit refunds, calendar posts,
+//! injector feeding, δ timeouts, backlog drain, active-set retirement)
+//! stay sequential in [`Network::step_parallel`]: they are cheap O(live
+//! work) scans, and they are where packet ids are allocated — keeping
+//! `next_pid` single-threaded is what makes pid assignment trivially
+//! deterministic.
+//!
+//! Threads are spawned per parallel section via [`std::thread::scope`]
+//! (band 0 runs inline on the calling thread). Scoped spawns keep the
+//! module free of `unsafe` and of any persistent pool state; the spawn
+//! overhead (~µs per section) is the honest cost — it amortizes on the
+//! big meshes this kernel exists for (64×64 points in
+//! `benches/sim_hotpath.rs`) and is why `intra_workers = 1` (the
+//! default) bypasses this module entirely with zero extra state.
+//!
+//! [`Network::step_parallel`]: super::network::Network
+
+use super::buffer::VcState;
+use super::flit::{Coord, Flit, PacketDesc, PacketType};
+use super::gather::{try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
+use super::network::{Arrival, InjEntry, Injector};
+use super::probes::{BandProbes, LinkProbes};
+use super::router::{refresh_vc_state, RouterState};
+use super::routing::Port;
+use super::stats::NetStats;
+use super::topology::Topology;
+use crate::config::{Collection, SimConfig};
+
+const PORTS: usize = Port::COUNT;
+
+/// Persistent parallel-kernel state owned by the `Network` (boxed; the
+/// `intra_workers = 1` path carries only the `None` discriminant).
+pub(super) struct ParState {
+    /// Router-index ranges `[start, end)`, ascending, contiguous from
+    /// router 0, covering the whole grid — whole rows each.
+    pub(super) bands: Vec<(usize, usize)>,
+    /// Per-band arrival inboxes for the deliver phase (capacity reused
+    /// across cycles).
+    pub(super) inboxes: Vec<Vec<Arrival>>,
+    /// Per-band deferred-effect mailboxes (capacity reused across cycles).
+    pub(super) effects: Vec<Effects>,
+    rows_per_band: usize,
+    cols: usize,
+}
+
+impl ParState {
+    /// Band layout for `workers` workers over a `cols`×`rows` grid, or
+    /// `None` when the parallel kernel cannot help (one worker, or too
+    /// few rows to form two bands) — the caller then keeps the
+    /// sequential kernel with zero extra state.
+    pub(super) fn for_grid(workers: usize, cols: usize, rows: usize) -> Option<Box<ParState>> {
+        if workers <= 1 || rows < 2 {
+            return None;
+        }
+        let rpb = rows.div_ceil(workers);
+        let nb = rows.div_ceil(rpb);
+        if nb < 2 {
+            return None;
+        }
+        let bands: Vec<(usize, usize)> =
+            (0..nb).map(|b| (b * rpb * cols, ((b + 1) * rpb).min(rows) * cols)).collect();
+        Some(Box::new(ParState {
+            inboxes: (0..nb).map(|_| Vec::new()).collect(),
+            effects: (0..nb).map(|_| Effects::default()).collect(),
+            rows_per_band: rpb,
+            cols,
+            bands,
+        }))
+    }
+
+    /// Which band owns `router` (bands are whole row groups).
+    #[inline]
+    pub(super) fn band_of(&self, router: usize) -> usize {
+        (router / self.cols) / self.rows_per_band
+    }
+}
+
+/// Everything a band phase would write outside its own band, deferred to
+/// the barrier merge. Field order in `absorb` does not matter — every
+/// entry is either a commutative sum, a max, or a list replayed in the
+/// sequential order (ascending band = ascending router index).
+#[derive(Default)]
+pub(super) struct Effects {
+    /// Stat counter deltas (summed into `Network::stats`;
+    /// `cycles_simulated` stays 0 so `NetStats::merge` leaves it alone).
+    pub(super) stats: NetStats,
+    /// Flits put on links this cycle, in grant order (appended to the
+    /// `arrivals[link_delay - 1]` ring slot).
+    pub(super) arrivals_out: Vec<Arrival>,
+    /// Upstream credit refunds (router, out-port index, vc) for next
+    /// cycle's `apply_credit_refunds`.
+    pub(super) credit_refunds: Vec<(usize, usize, usize)>,
+    /// Routers to `mark_active` at the barrier (buffer writes and
+    /// injector pushes inside the band; the set-bit merge is idempotent).
+    pub(super) wakes: Vec<usize>,
+    /// Flits ejected or absorbed (subtracted from `flits_active`).
+    pub(super) flits_active_sub: u64,
+    pub(super) payloads_delivered: u64,
+    pub(super) stream_tails_ejected: u64,
+    pub(super) gather_packets_ejected: u64,
+    pub(super) result_packets_ejected: u64,
+    /// Any packet tail ejected this cycle (`last_eject_cycle = cycle`).
+    pub(super) tail_ejected: bool,
+    /// Idle injectors that gained work (`busy_injectors` delta).
+    pub(super) busy_injectors_add: usize,
+    /// Link traversals counted toward the network-wide probe series
+    /// bucket of this cycle ([`LinkProbes::bump_series`]).
+    pub(super) series_flits: u64,
+}
+
+impl Effects {
+    /// Clear for the next parallel section, keeping `Vec` capacities.
+    pub(super) fn reset(&mut self) {
+        self.stats = NetStats::default();
+        self.arrivals_out.clear();
+        self.credit_refunds.clear();
+        self.wakes.clear();
+        self.flits_active_sub = 0;
+        self.payloads_delivered = 0;
+        self.stream_tails_ejected = 0;
+        self.gather_packets_ejected = 0;
+        self.result_packets_ejected = 0;
+        self.tail_ejected = false;
+        self.busy_injectors_add = 0;
+        self.series_flits = 0;
+    }
+}
+
+/// Read-only cycle context shared by every worker. `Topology` is
+/// `Send + Sync` by trait bound, so the whole struct is `Sync`.
+pub(super) struct Shared<'a> {
+    pub(super) cfg: &'a SimConfig,
+    pub(super) topo: &'a dyn Topology,
+    pub(super) collection: Collection,
+    pub(super) cols: usize,
+    pub(super) vcs: usize,
+    pub(super) cycle: u64,
+    /// The active-router bitset, frozen for the section (wakes are
+    /// deferred through [`Effects::wakes`], merged at the barrier).
+    pub(super) active: &'a [u64],
+}
+
+impl Shared<'_> {
+    #[inline]
+    fn node_idx(&self, c: Coord) -> usize {
+        c.y as usize * self.cols + c.x as usize
+    }
+
+    /// Mirror of `Network::is_memory_ejection` (same predicate, read
+    /// from the shared context instead of `&self`).
+    #[inline]
+    fn is_memory_ejection(&self, here: Coord, out_port: Port, dst: Coord) -> bool {
+        out_port == Port::Local
+            || (out_port == Port::East
+                && here.x as usize + 1 == self.cols
+                && dst.x as usize >= self.cols)
+    }
+}
+
+/// One band's disjoint mutable view of the network arrays. Built fresh
+/// per parallel section by [`make_bands`] via `split_at_mut` chains —
+/// no `unsafe`, no aliasing.
+pub(super) struct Band<'a> {
+    /// Global router-index range `[start, end)` this band owns.
+    pub(super) range: (usize, usize),
+    pub(super) routers: &'a mut [RouterState],
+    pub(super) ni: &'a mut [NiState],
+    pub(super) injectors: &'a mut [Injector],
+    pub(super) occupancy: &'a mut [u32],
+    pub(super) probes: Option<BandProbes<'a>>,
+}
+
+impl Band<'_> {
+    /// Band-local index of global router `router`.
+    #[inline]
+    fn r(&self, router: usize) -> usize {
+        router - self.range.0
+    }
+}
+
+/// Slice the network arrays into per-band views matching `bands`
+/// (ascending, contiguous from index 0 — the [`ParState::for_grid`]
+/// invariant the `split_at_mut` chain relies on).
+pub(super) fn make_bands<'a>(
+    bands: &[(usize, usize)],
+    routers: &'a mut [RouterState],
+    ni: &'a mut [NiState],
+    injectors: &'a mut [Injector],
+    occupancy: &'a mut [u32],
+    probes: Option<&'a mut LinkProbes>,
+) -> Vec<Band<'a>> {
+    let mut probe_bands = probes.map(|p| p.split_bands(bands)).unwrap_or_default().into_iter();
+    let (mut routers, mut ni, mut injectors, mut occupancy) = (routers, ni, injectors, occupancy);
+    let mut out = Vec::with_capacity(bands.len());
+    for &(start, end) in bands {
+        let n = end - start;
+        let (r, rest) = std::mem::take(&mut routers).split_at_mut(n);
+        routers = rest;
+        let (g, rest) = std::mem::take(&mut ni).split_at_mut(n);
+        ni = rest;
+        let (j, rest) = std::mem::take(&mut injectors).split_at_mut(n * PORTS);
+        injectors = rest;
+        let (o, rest) = std::mem::take(&mut occupancy).split_at_mut(n);
+        occupancy = rest;
+        out.push(Band {
+            range: (start, end),
+            routers: r,
+            ni: g,
+            injectors: j,
+            occupancy: o,
+            probes: probe_bands.next(),
+        });
+    }
+    out
+}
+
+/// Run the deliver phase over all bands concurrently: band 0 inline on
+/// the caller, the rest on scoped threads. The scope exit is the
+/// barrier (joins every worker, propagates panics).
+pub(super) fn run_deliver(
+    sh: &Shared<'_>,
+    bands: &mut [Band<'_>],
+    effects: &mut [Effects],
+    inboxes: &mut [Vec<Arrival>],
+) {
+    debug_assert!(bands.len() == effects.len() && bands.len() == inboxes.len());
+    let mut items: Vec<_> = bands
+        .iter_mut()
+        .zip(effects.iter_mut())
+        .zip(inboxes.iter_mut())
+        .map(|((b, e), i)| (b, e, i))
+        .collect();
+    std::thread::scope(|s| {
+        for (band, fx, inbox) in items.drain(1..) {
+            s.spawn(move || deliver_band(sh, band, fx, inbox));
+        }
+        let (band0, fx0, inbox0) = items.pop().expect("at least one band");
+        deliver_band(sh, band0, fx0, inbox0);
+    });
+}
+
+/// Run fused VA + SA over all bands concurrently (same barrier shape as
+/// [`run_deliver`]). VA completes for the whole band before its SA pass
+/// starts — the same order the sequential kernel's two full sweeps give
+/// each router, and neither pass reads another router's state.
+pub(super) fn run_va_sa(sh: &Shared<'_>, bands: &mut [Band<'_>], effects: &mut [Effects]) {
+    debug_assert_eq!(bands.len(), effects.len());
+    let mut items: Vec<_> = bands.iter_mut().zip(effects.iter_mut()).collect();
+    std::thread::scope(|s| {
+        for (band, fx) in items.drain(1..) {
+            s.spawn(move || {
+                va_band(sh, band, fx);
+                sa_band(sh, band, fx);
+            });
+        }
+        let (band0, fx0) = items.pop().expect("at least one band");
+        va_band(sh, band0, fx0);
+        sa_band(sh, band0, fx0);
+    });
+}
+
+/// Visit the active routers of `[start, end)` in ascending index order —
+/// the band-windowed version of the kernel's `for_each_active!` walk.
+/// Both 64-bit boundary words are masked to the range; the shift guards
+/// keep every shift amount `< 64`.
+#[inline]
+fn for_band_active(active: &[u64], range: (usize, usize), mut f: impl FnMut(usize)) {
+    let (start, end) = range;
+    if start >= end {
+        return;
+    }
+    let w_lo = start >> 6;
+    let w_hi = (end - 1) >> 6;
+    for w in w_lo..=w_hi {
+        let mut bits = active[w];
+        if w == w_lo {
+            bits &= !0u64 << (start & 63);
+        }
+        let word_base = w << 6;
+        let over = (word_base + 64).saturating_sub(end);
+        if over > 0 {
+            // keep = 64 - over bits; 1 <= keep <= 63 since w <= w_hi.
+            bits &= (1u64 << (64 - over)) - 1;
+        }
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            f(word_base + b);
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Band transcriptions of the sequential phases. Each function mirrors
+// its `Network` counterpart line for line, with `self.<array>[i]`
+// becoming `band.<array>[band.r(i)]` and every out-of-band write routed
+// through `fx`. Divergence here is a golden-suite failure, not a
+// compile error — change them in lockstep with network.rs.
+// ----------------------------------------------------------------------
+
+/// Mirror of `Network::deliver_arrivals` for one band's inbox slice
+/// (relative order within the band equals the sequential batch order).
+fn deliver_band(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects, inbox: &mut Vec<Arrival>) {
+    for Arrival { router, port, vc, mut flit } in inbox.drain(..) {
+        flit.arrival = sh.cycle;
+        if flit.ptype == PacketType::Gather
+            && flit.is_head()
+            && band.routers[band.r(router)].coord != flit.src
+        {
+            let bi = band.r(router);
+            match try_board(&mut flit, &mut band.ni[bi]) {
+                BoardOutcome::BoardedAll(k) => {
+                    fx.stats.gather_boards += k as u64;
+                }
+                BoardOutcome::BoardedPartial(k) => {
+                    fx.stats.gather_boards += k as u64;
+                    stage_own_gather(sh, band, fx, router);
+                }
+                BoardOutcome::Full => {
+                    stage_own_gather(sh, band, fx, router);
+                }
+                BoardOutcome::NotApplicable => {}
+            }
+        } else if flit.ptype == PacketType::Ina
+            && flit.is_head()
+            && band.routers[band.r(router)].coord != flit.src
+        {
+            let bi = band.r(router);
+            if let BoardOutcome::BoardedAll(k) =
+                try_board_mode(&mut flit, &mut band.ni[bi], BoardMode::Accumulate)
+            {
+                fx.stats.ina_folds += k as u64;
+                fx.stats.ina_adds += k as u64;
+            }
+        }
+        write_flit(sh, band, fx, router, port, vc, flit);
+    }
+}
+
+/// Mirror of `Network::stage_own_gather` (`desc.id` stays 0 — pids are
+/// assigned at head entry by the sequential `feed_injectors` phase, so
+/// assignment order is untouched by band parallelism).
+fn stage_own_gather(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects, node: usize) {
+    let bi = band.r(node);
+    let ni = &band.ni[bi];
+    if ni.staged || ni.pending == 0 {
+        return;
+    }
+    let (ptype, len_flits, space) = match sh.collection {
+        Collection::Gather => (PacketType::Gather, sh.cfg.gather_packet_flits as u32, 0),
+        Collection::Ina => (PacketType::Ina, sh.cfg.ina_packet_flits(ni.pending), ni.space),
+        Collection::RepetitiveUnicast => unreachable!("RU never stages NI packets"),
+    };
+    let desc = PacketDesc {
+        id: 0, // assigned at head entry
+        ptype,
+        src: band.routers[bi].coord,
+        dst: ni.dst,
+        len_flits,
+        aspace: 0, // computed at head entry
+        space,
+        inject_cycle: sh.cycle,
+        deliver_along_path: false,
+        carried_payloads: 0,
+    };
+    push_injector(
+        band,
+        fx,
+        node * PORTS + Port::Local.index(),
+        InjEntry { desc, from_ni: true, not_before: sh.cycle + 1 },
+    );
+    let ni = &mut band.ni[bi];
+    ni.staged = true;
+    ni.armed = false;
+}
+
+/// Mirror of `Network::push_injector` (busy counter and wakeup deferred).
+fn push_injector(band: &mut Band<'_>, fx: &mut Effects, ii: usize, entry: InjEntry) {
+    let inj = &mut band.injectors[ii - band.range.0 * PORTS];
+    if inj.cur.is_none() && inj.queue.is_empty() {
+        fx.busy_injectors_add += 1;
+    }
+    inj.queue.push_back(entry);
+    fx.wakes.push(ii / PORTS);
+}
+
+/// Mirror of `Network::write_flit` (wakeup deferred).
+#[allow(clippy::too_many_arguments)]
+fn write_flit(
+    sh: &Shared<'_>,
+    band: &mut Band<'_>,
+    fx: &mut Effects,
+    router: usize,
+    port: Port,
+    vc: usize,
+    flit: Flit,
+) {
+    let bi = band.r(router);
+    let r = &mut band.routers[bi];
+    let idx = port.index() * sh.vcs + vc;
+    let was_empty = r.inputs[idx].is_empty();
+    if flit.is_head() {
+        r.meta[idx].head_arrival = sh.cycle;
+    }
+    r.inputs[idx].push(flit);
+    r.nonempty_mask |= 1 << idx;
+    band.occupancy[bi] += 1;
+    fx.stats.buffer_writes += 1;
+    let r = &mut band.routers[bi];
+    if was_empty && r.inputs[idx].state == VcState::Idle {
+        r.inputs[idx].state =
+            refresh_vc_state(&r.inputs[idx], &mut r.meta[idx], sh.cycle, sh.cfg.kappa());
+    }
+    fx.wakes.push(router);
+}
+
+/// Mirror of `Network::vc_allocate` over one band's active routers.
+fn va_band(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects) {
+    let range = band.range;
+    for_band_active(sh.active, range, |ridx| {
+        va_router(sh, band, fx, ridx);
+    });
+}
+
+/// Mirror of `Network::vc_allocate_router`.
+fn va_router(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects, ridx: usize) {
+    let vcs = sh.vcs;
+    let bi = band.r(ridx);
+    let mut mask = band.routers[bi].nonempty_mask;
+    while mask != 0 {
+        let idx = mask.trailing_zeros() as usize;
+        mask &= mask - 1;
+        let (dst, src, ptype) = {
+            let r = &band.routers[bi];
+            match (r.inputs[idx].state, r.inputs[idx].front()) {
+                (VcState::Routing { sa_ready_cycle }, Some(f))
+                    // VA completes one cycle before SA readiness.
+                    if sh.cycle + 1 >= sa_ready_cycle =>
+                {
+                    (f.dst, f.src, f.ptype)
+                }
+                _ => continue,
+            }
+        };
+        let here = band.routers[bi].coord;
+        let out_port = sh.topo.route(ptype, here, dst);
+        let class = if sh.is_memory_ejection(here, out_port, dst) {
+            None
+        } else {
+            sh.topo.vc_class(ptype, src, here, dst, out_port)
+        };
+        let in_port = idx / vcs;
+        let in_vc = idx % vcs;
+        let granted = match class {
+            None => band.routers[bi].allocate_out_vc(out_port, vcs, (in_port, in_vc)),
+            Some(c) => {
+                let half = (vcs / 2).max(1);
+                let (lo, hi) = if c == 0 { (0, half) } else { (half, vcs) };
+                band.routers[bi].allocate_out_vc_range(out_port, lo, hi, vcs, (in_port, in_vc))
+            }
+        };
+        if let Some(out_vc) = granted {
+            fx.stats.vc_allocs += 1;
+            band.routers[bi].inputs[idx].state =
+                VcState::Active { out_port: out_port.index(), out_vc };
+        }
+    }
+}
+
+/// Mirror of `Network::switch_allocate` over one band's active routers.
+fn sa_band(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects) {
+    let vcs = sh.vcs;
+    let n = PORTS * vcs;
+    // Initialized once per band per cycle; `counts` guards liveness.
+    let mut reqs = [[usize::MAX; 16]; PORTS];
+    let range = band.range;
+    for_band_active(sh.active, range, |ridx| {
+        let bi = band.r(ridx);
+        if band.routers[bi].nonempty_mask == 0 {
+            return;
+        }
+        let mut counts = [0usize; PORTS];
+        {
+            let r = &band.routers[bi];
+            let mut mask = r.nonempty_mask;
+            while mask != 0 {
+                let idx = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                let buf = &r.inputs[idx];
+                let (op, ovc) = match buf.state {
+                    VcState::Active { out_port, out_vc } => (out_port, out_vc),
+                    _ => continue,
+                };
+                let Some(front) = buf.front() else { continue };
+                if front.arrival >= sh.cycle {
+                    continue;
+                }
+                if front.is_head() {
+                    let head_ready = r.meta[idx].head_arrival + sh.cfg.kappa() - 1;
+                    let ready = head_ready.max(r.meta[idx].front_since + 1);
+                    if sh.cycle < ready {
+                        continue;
+                    }
+                }
+                if let Some(ct) = &r.out_credits[op] {
+                    if !ct.available(ovc) {
+                        if let Some(p) = band.probes.as_mut() {
+                            p.record_blocked(ridx, op, ovc);
+                        }
+                        continue;
+                    }
+                }
+                reqs[op][counts[op]] = idx;
+                counts[op] += 1;
+            }
+        }
+        if sh.collection == Collection::Ina {
+            merge_ina_requests(sh, band, fx, ridx, &mut reqs, &mut counts);
+        }
+        let mut in_port_used = [false; PORTS];
+        for out_port_i in 0..PORTS {
+            if counts[out_port_i] == 0 {
+                continue;
+            }
+            let rr = band.routers[bi].sa_rr[out_port_i];
+            let mut winner: Option<(usize, usize)> = None; // (dist, idx)
+            for &idx in &reqs[out_port_i][..counts[out_port_i]] {
+                if in_port_used[idx / vcs] {
+                    continue;
+                }
+                let dist = (idx + n - rr) % n;
+                if winner.map_or(true, |(d, _)| dist < d) {
+                    winner = Some((dist, idx));
+                }
+            }
+            let Some((_, idx)) = winner else { continue };
+            grant(sh, band, fx, ridx, idx, out_port_i);
+            in_port_used[idx / vcs] = true;
+            band.routers[bi].sa_rr[out_port_i] = (idx + 1) % n;
+        }
+    });
+}
+
+/// Mirror of `Network::grant` (forwarded flits, credit refunds and the
+/// eject counters all defer through `fx`).
+fn grant(
+    sh: &Shared<'_>,
+    band: &mut Band<'_>,
+    fx: &mut Effects,
+    ridx: usize,
+    idx: usize,
+    out_port_i: usize,
+) {
+    let vcs = sh.vcs;
+    let bi = band.r(ridx);
+    let out_port = Port::from_index(out_port_i);
+    let kappa = sh.cfg.kappa();
+
+    let out_vc = match band.routers[bi].inputs[idx].state {
+        VcState::Active { out_port: op, out_vc } => {
+            debug_assert_eq!(op, out_port_i);
+            out_vc
+        }
+        s => panic!("SA granted from non-active VC state {s:?}"),
+    };
+
+    let flit = band.routers[bi].inputs[idx].pop().expect("SA granted an empty VC");
+    if band.routers[bi].inputs[idx].is_empty() {
+        band.routers[bi].nonempty_mask &= !(1 << idx);
+    }
+    band.occupancy[bi] -= 1;
+    fx.stats.buffer_reads += 1;
+    fx.stats.sa_grants += 1;
+    fx.stats.crossbar_traversals += 1;
+    fx.stats.flit_hops += 1;
+
+    if flit.deliver_along_path {
+        fx.stats.stream_deliveries += 1;
+    }
+
+    let in_port = Port::from_index(idx / vcs);
+    let in_vc = idx % vcs;
+    let here = band.routers[bi].coord;
+    if in_port != Port::Local && flit.src != here {
+        if let Some(up) = sh.topo.neighbor(here, in_port) {
+            fx.credit_refunds.push((sh.node_idx(up), in_port.opposite().index(), in_vc));
+        }
+    }
+
+    if flit.is_tail() || flit.packet_len == 1 {
+        band.routers[bi].release_out_vc(out_port, out_vc, vcs);
+        let r = &mut band.routers[bi];
+        r.inputs[idx].state = VcState::Idle;
+        if !r.inputs[idx].is_empty() {
+            r.inputs[idx].state =
+                refresh_vc_state(&r.inputs[idx], &mut r.meta[idx], sh.cycle, kappa);
+        }
+    }
+
+    if sh.is_memory_ejection(here, out_port, flit.dst) {
+        eject(sh, fx, &flit);
+        fx.flits_active_sub += 1;
+    } else {
+        if let Some(ct) = band.routers[bi].out_credits[out_port_i].as_mut() {
+            ct.consume(out_vc);
+        }
+        let nb = sh.topo.neighbor(here, out_port).expect("routed toward a missing neighbour");
+        fx.stats.link_traversals += 1;
+        fx.series_flits += 1;
+        if let Some(p) = band.probes.as_mut() {
+            p.record_traversal(
+                ridx,
+                out_port_i,
+                out_vc,
+                sh.cycle,
+                flit.is_head(),
+                flit.carried_payloads,
+                flit.deliver_along_path,
+            );
+        }
+        fx.arrivals_out.push(Arrival {
+            router: sh.node_idx(nb),
+            port: out_port.opposite(),
+            vc: out_vc,
+            flit,
+        });
+    }
+}
+
+/// Mirror of `Network::eject` (all sinks are counters, so it only
+/// touches `fx`).
+fn eject(sh: &Shared<'_>, fx: &mut Effects, flit: &Flit) {
+    fx.stats.flits_ejected += 1;
+    if flit.is_head() && flit.dst.x as usize >= sh.cols {
+        fx.payloads_delivered += flit.carried_payloads as u64;
+        if flit.ptype == PacketType::Gather {
+            fx.gather_packets_ejected += 1;
+        }
+    }
+    if flit.is_tail() || flit.packet_len == 1 {
+        fx.stats.packets_ejected += 1;
+        let lat = sh.cycle.saturating_sub(flit.inject_cycle);
+        fx.stats.total_packet_latency += lat;
+        fx.stats.max_packet_latency = fx.stats.max_packet_latency.max(lat);
+        fx.tail_ejected = true;
+        if flit.deliver_along_path {
+            fx.stream_tails_ejected += 1;
+        }
+        if flit.dst.x as usize >= sh.cols {
+            fx.result_packets_ejected += 1;
+        }
+    }
+}
+
+/// Mirror of `Network::merge_ina_requests`.
+fn merge_ina_requests(
+    sh: &Shared<'_>,
+    band: &mut Band<'_>,
+    fx: &mut Effects,
+    ridx: usize,
+    reqs: &mut [[usize; 16]; PORTS],
+    counts: &mut [usize; PORTS],
+) {
+    for op in 0..PORTS {
+        if counts[op] < 2 {
+            continue;
+        }
+        let mut skeys = [(0u64, Coord::new(0, 0)); 16];
+        let mut sidx = [0usize; 16];
+        let mut nsurv = 0usize;
+        let n_req = counts[op];
+        let mut kept = 0usize;
+        for j in 0..n_req {
+            let idx = reqs[op][j];
+            match ina_complete_head(band, ridx, idx) {
+                Some(key) => {
+                    if let Some(k) = (0..nsurv).find(|&k| skeys[k] == key) {
+                        absorb_ina_packet(sh, band, fx, ridx, idx, sidx[k]);
+                        continue; // entry leaves the request list
+                    }
+                    skeys[nsurv] = key;
+                    sidx[nsurv] = idx;
+                    nsurv += 1;
+                    reqs[op][kept] = idx;
+                    kept += 1;
+                }
+                None => {
+                    reqs[op][kept] = idx;
+                    kept += 1;
+                }
+            }
+        }
+        counts[op] = kept;
+    }
+}
+
+/// Mirror of `Network::ina_complete_head`.
+fn ina_complete_head(band: &Band<'_>, ridx: usize, idx: usize) -> Option<(u64, Coord)> {
+    let buf = &band.routers[band.r(ridx)].inputs[idx];
+    let head = buf.front()?;
+    if head.ptype != PacketType::Ina || !head.is_head() {
+        return None;
+    }
+    let len = head.packet_len as usize;
+    let tail = buf.get(len - 1)?;
+    if tail.packet_id != head.packet_id {
+        return None;
+    }
+    if len > 1 && !tail.is_tail() {
+        return None;
+    }
+    Some((head.space, head.dst))
+}
+
+/// Mirror of `Network::absorb_ina_packet`.
+fn absorb_ina_packet(
+    sh: &Shared<'_>,
+    band: &mut Band<'_>,
+    fx: &mut Effects,
+    ridx: usize,
+    absorbed: usize,
+    survivor: usize,
+) {
+    let vcs = sh.vcs;
+    let kappa = sh.cfg.kappa();
+    let bi = band.r(ridx);
+    let (pid, len, carried, words, absorbed_src) = {
+        let f = band.routers[bi].inputs[absorbed].front().expect("absorbed VC empty");
+        (f.packet_id, f.packet_len as usize, f.carried_payloads, f.aspace, f.src)
+    };
+    match band.routers[bi].inputs[absorbed].state {
+        VcState::Active { out_port, out_vc } => {
+            band.routers[bi].release_out_vc(Port::from_index(out_port), out_vc, vcs);
+        }
+        s => panic!("INA merge on non-active VC state {s:?}"),
+    }
+    for _ in 0..len {
+        let f = band.routers[bi].inputs[absorbed].pop().expect("absorbed packet truncated");
+        debug_assert_eq!(f.packet_id, pid, "absorbed a foreign flit");
+    }
+    band.occupancy[bi] -= len as u32;
+    fx.flits_active_sub += len as u64;
+    fx.stats.buffer_reads += len as u64;
+    fx.stats.ina_merges += 1;
+    fx.stats.ina_adds += words as u64;
+    let in_port = Port::from_index(absorbed / vcs);
+    let here = band.routers[bi].coord;
+    if in_port != Port::Local && absorbed_src != here {
+        if let Some(up) = sh.topo.neighbor(here, in_port) {
+            let up_idx = sh.node_idx(up);
+            for _ in 0..len {
+                fx.credit_refunds.push((up_idx, in_port.opposite().index(), absorbed % vcs));
+            }
+        }
+    }
+    {
+        let r = &mut band.routers[bi];
+        r.inputs[absorbed].state = VcState::Idle;
+        if r.inputs[absorbed].is_empty() {
+            r.nonempty_mask &= !(1 << absorbed);
+        } else {
+            r.inputs[absorbed].state =
+                refresh_vc_state(&r.inputs[absorbed], &mut r.meta[absorbed], sh.cycle, kappa);
+        }
+    }
+    let head =
+        band.routers[bi].inputs[survivor].front_mut().expect("survivor VC empty");
+    debug_assert!(head.is_head() && head.ptype == PacketType::Ina);
+    head.carried_payloads += carried;
+    head.aspace = head.aspace.max(words);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn band_layout_covers_grid_contiguously_including_ragged_last_band() {
+        // 8 rows over 3 workers: ceil(8/3) = 3 rows/band -> bands of
+        // 3, 3 and a ragged 2 rows.
+        let cols = 5usize;
+        let par = ParState::for_grid(3, cols, 8).expect("parallelizable grid");
+        assert_eq!(par.bands, vec![(0, 3 * cols), (3 * cols, 6 * cols), (6 * cols, 8 * cols)]);
+        // Every router maps into the band whose range holds it.
+        for r in 0..8 * cols {
+            let b = par.band_of(r);
+            let (s, e) = par.bands[b];
+            assert!(s <= r && r < e, "router {r} mapped to band {b} = [{s},{e})");
+        }
+        // Degenerate shapes stay sequential.
+        assert!(ParState::for_grid(1, 8, 8).is_none(), "one worker is the sequential kernel");
+        assert!(ParState::for_grid(4, 8, 1).is_none(), "one row cannot split");
+        // More workers than rows: one row per band, rows bands.
+        let par = ParState::for_grid(64, 4, 6).unwrap();
+        assert_eq!(par.bands.len(), 6);
+        assert_eq!(par.bands[5], (5 * 4, 6 * 4));
+    }
+
+    #[test]
+    fn band_active_walk_masks_word_boundaries_exactly() {
+        // 130 routers => 3 bitset words; mark every router active and
+        // check each band walk visits exactly its own range, ascending.
+        let n = 130usize;
+        let mut active = vec![0u64; n.div_ceil(64)];
+        for r in 0..n {
+            active[r >> 6] |= 1 << (r & 63);
+        }
+        for &(start, end) in &[(0usize, 63usize), (63, 64), (64, 65), (0, 130), (100, 130)] {
+            let mut seen = Vec::new();
+            for_band_active(&active, (start, end), |r| seen.push(r));
+            let want: Vec<usize> = (start..end).collect();
+            assert_eq!(seen, want, "range [{start},{end})");
+        }
+        // A sparse set stays sparse within the window.
+        let mut sparse = vec![0u64; 3];
+        for r in [0usize, 63, 64, 129] {
+            sparse[r >> 6] |= 1 << (r & 63);
+        }
+        let mut seen = Vec::new();
+        for_band_active(&sparse, (1, 129), |r| seen.push(r));
+        assert_eq!(seen, vec![63, 64]);
+    }
+
+    #[test]
+    fn effects_reset_clears_every_field_and_keeps_capacity() {
+        let mut fx = Effects::default();
+        fx.stats.flit_hops = 7;
+        fx.credit_refunds.push((1, 2, 0));
+        fx.wakes.extend([3usize, 4]);
+        fx.flits_active_sub = 2;
+        fx.payloads_delivered = 9;
+        fx.tail_ejected = true;
+        fx.busy_injectors_add = 1;
+        fx.series_flits = 5;
+        let cap = fx.wakes.capacity();
+        fx.reset();
+        assert_eq!(fx.stats, NetStats::default());
+        assert!(fx.arrivals_out.is_empty() && fx.credit_refunds.is_empty() && fx.wakes.is_empty());
+        assert_eq!(
+            (fx.flits_active_sub, fx.payloads_delivered, fx.busy_injectors_add, fx.series_flits),
+            (0, 0, 0, 0)
+        );
+        assert!(!fx.tail_ejected);
+        assert!(fx.wakes.capacity() >= cap, "reset must keep capacities");
+    }
+}

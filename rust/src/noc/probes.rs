@@ -174,15 +174,156 @@ impl LinkProbes {
                 }
             }
         }
+        // Reconcile the series with the observed window: `record_traversal`
+        // only extends the series when a flit actually crosses a link, so a
+        // calendar fast-forward that jumps the clock past whole buckets —
+        // or a drain tail with no traffic after the last traversal — would
+        // otherwise leave the series short. Pad with explicit zero buckets
+        // so `series.len() == cycles.div_ceil(BUCKET_CYCLES)` always holds
+        // and `series.len() × bucket_cycles` covers the final cycle. (The
+        // lazy per-link bucket roll in `bucket_id`/`bucket_cur` needs no
+        // equivalent fix: an empty bucket can never be the peak.)
+        let mut series = self.series.clone();
+        let want = cycles.div_ceil(BUCKET_CYCLES) as usize;
+        if series.len() < want {
+            series.resize(want, 0);
+        }
         ProbeReport {
             cycles,
             bucket_cycles: BUCKET_CYCLES,
             links,
-            series: self.series.clone(),
+            series,
             total_flits,
             total_payloads,
             total_blocked_cycles: total_blocked,
         }
+    }
+
+    /// Add `n` network-wide traversals to the series bucket covering
+    /// `bucket` (used by the intra-layer parallel kernel to merge per-band
+    /// series deltas at the cycle barrier). No-op for `n == 0`, so the
+    /// series length stays bit-identical to sequential recording.
+    pub fn bump_series(&mut self, bucket: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let bi = bucket as usize;
+        if bi >= self.series.len() {
+            self.series.resize(bi + 1, 0);
+        }
+        self.series[bi] += n;
+    }
+
+    /// Split the per-link counter planes into disjoint mutable band views,
+    /// one per contiguous router range `[start, end)` of `bands` (the
+    /// intra-layer parallel kernel's row bands). The bands must be
+    /// ascending, contiguous from router 0 and cover every router. The
+    /// network-wide `series` is *not* split — each band counts its
+    /// traversals and the barrier merge applies them via
+    /// [`LinkProbes::bump_series`].
+    pub fn split_bands(&mut self, bands: &[(usize, usize)]) -> Vec<BandProbes<'_>> {
+        let vcs = self.vcs;
+        let mut out = Vec::with_capacity(bands.len());
+        let (mut flits, mut payloads, mut stream_flits) =
+            (&mut self.flits[..], &mut self.payloads[..], &mut self.stream_flits[..]);
+        let (mut per_vc, mut blocked) = (&mut self.per_vc_flits[..], &mut self.blocked[..]);
+        let (mut bid, mut bcur, mut bpeak) = (
+            &mut self.bucket_id[..],
+            &mut self.bucket_cur[..],
+            &mut self.bucket_peak[..],
+        );
+        for &(start, end) in bands {
+            let links = (end - start) * Port::COUNT;
+            let (f, f2) = flits.split_at_mut(links);
+            let (p, p2) = payloads.split_at_mut(links);
+            let (s, s2) = stream_flits.split_at_mut(links);
+            let (v, v2) = per_vc.split_at_mut(links * vcs);
+            let (b, b2) = blocked.split_at_mut(links * vcs);
+            let (i, i2) = bid.split_at_mut(links);
+            let (c, c2) = bcur.split_at_mut(links);
+            let (k, k2) = bpeak.split_at_mut(links);
+            flits = f2;
+            payloads = p2;
+            stream_flits = s2;
+            per_vc = v2;
+            blocked = b2;
+            bid = i2;
+            bcur = c2;
+            bpeak = k2;
+            out.push(BandProbes {
+                vcs,
+                base_link: start * Port::COUNT,
+                flits: f,
+                payloads: p,
+                stream_flits: s,
+                per_vc_flits: v,
+                blocked: b,
+                bucket_id: i,
+                bucket_cur: c,
+                bucket_peak: k,
+            });
+        }
+        out
+    }
+}
+
+/// A disjoint mutable view over one band's slice of the [`LinkProbes`]
+/// counter planes (see [`LinkProbes::split_bands`]). Record methods mirror
+/// the sequential ones bit-for-bit; only the network-wide series is
+/// deferred to the barrier merge.
+#[derive(Debug)]
+pub struct BandProbes<'a> {
+    vcs: usize,
+    /// Global link index of this band's first slot (`start_router × ports`).
+    base_link: usize,
+    flits: &'a mut [u64],
+    payloads: &'a mut [u64],
+    stream_flits: &'a mut [u64],
+    per_vc_flits: &'a mut [u64],
+    blocked: &'a mut [u64],
+    bucket_id: &'a mut [u64],
+    bucket_cur: &'a mut [u64],
+    bucket_peak: &'a mut [u64],
+}
+
+impl BandProbes<'_> {
+    /// Band-local mirror of [`LinkProbes::record_traversal`] minus the
+    /// series update (counted by the caller, merged at the barrier).
+    #[inline]
+    pub fn record_traversal(
+        &mut self,
+        ridx: usize,
+        port: usize,
+        vc: usize,
+        cycle: u64,
+        is_head: bool,
+        carried_payloads: u32,
+        along_path: bool,
+    ) {
+        let li = ridx * Port::COUNT + port - self.base_link;
+        self.flits[li] += 1;
+        self.per_vc_flits[li * self.vcs + vc] += 1;
+        if is_head {
+            self.payloads[li] += carried_payloads as u64;
+        }
+        if along_path {
+            self.stream_flits[li] += 1;
+        }
+        let bucket = cycle / BUCKET_CYCLES;
+        if self.bucket_id[li] != bucket {
+            self.bucket_id[li] = bucket;
+            self.bucket_cur[li] = 0;
+        }
+        self.bucket_cur[li] += 1;
+        if self.bucket_cur[li] > self.bucket_peak[li] {
+            self.bucket_peak[li] = self.bucket_cur[li];
+        }
+    }
+
+    /// Band-local mirror of [`LinkProbes::record_blocked`].
+    #[inline]
+    pub fn record_blocked(&mut self, ridx: usize, port: usize, vc: usize) {
+        self.blocked[(ridx * Port::COUNT + port - self.base_link) * self.vcs + vc] += 1;
     }
 }
 
@@ -502,6 +643,57 @@ mod tests {
             .unwrap();
         assert_eq!(l.peak_bucket_flits, 2);
         assert_eq!(r.series, vec![2, 0, 0, 1]);
+    }
+
+    #[test]
+    fn fast_forward_jump_pads_interior_and_trailing_buckets() {
+        let (mut p, topo) = probes_2x2();
+        let e = Port::East.index();
+        // One flit in bucket 1 and nothing afterwards; the clock then
+        // fast-forwards far past the last traversal. Both the leading idle
+        // bucket and every trailing one must appear as explicit zeros.
+        p.record_traversal(0, e, 0, BUCKET_CYCLES + 5, false, 0, false);
+        let r = p.report(&topo, 2, 2, 7 * BUCKET_CYCLES + 1);
+        assert_eq!(r.series, vec![0, 1, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(r.series.len() as u64, r.cycles.div_ceil(r.bucket_cycles));
+        assert_eq!(r.series.iter().sum::<u64>(), r.total_flits);
+    }
+
+    #[test]
+    fn traffic_free_window_still_reconciles_series_length() {
+        // A window that never saw a traversal (all idle fast-forward) must
+        // still report one zero bucket per BUCKET_CYCLES of wall clock.
+        let (p, topo) = probes_2x2();
+        let r = p.report(&topo, 2, 2, 3 * BUCKET_CYCLES);
+        assert_eq!(r.series, vec![0, 0, 0]);
+        // Partial last bucket rounds up; empty window reports no buckets.
+        let (p2, topo2) = probes_2x2();
+        assert_eq!(p2.report(&topo2, 2, 2, 1).series, vec![0]);
+        let (p3, topo3) = probes_2x2();
+        assert_eq!(p3.report(&topo3, 2, 2, 0).series, Vec::<u64>::new());
+    }
+
+    #[test]
+    fn band_split_records_bit_identically_to_sequential() {
+        // Record the same traversals through the band views (plus the
+        // barrier-merge series bump) and sequentially; reports must match.
+        let (mut seq, topo) = probes_2x2();
+        let e = Port::East.index();
+        seq.record_traversal(0, e, 0, 5, true, 3, false);
+        seq.record_traversal(1, e, 1, 5, false, 0, true);
+        seq.record_traversal(2, e, 0, 5, false, 0, false);
+        seq.record_blocked(3, e, 1);
+        let (mut par, topo2) = probes_2x2();
+        {
+            // 2x2 mesh, two row bands: routers [0,2) and [2,4).
+            let mut bands = par.split_bands(&[(0, 2), (2, 4)]);
+            bands[0].record_traversal(0, e, 0, 5, true, 3, false);
+            bands[0].record_traversal(1, e, 1, 5, false, 0, true);
+            bands[1].record_traversal(2, e, 0, 5, false, 0, false);
+            bands[1].record_blocked(3, e, 1);
+        }
+        par.bump_series(5 / BUCKET_CYCLES, 3);
+        assert_eq!(par.report(&topo2, 2, 2, 10), seq.report(&topo, 2, 2, 10));
     }
 
     #[test]

@@ -2,15 +2,17 @@
 """Gate the simulator hot-path throughput against the committed baseline.
 
 Usage:
-    check_bench_regression.py BASELINE.json FRESH.json
+    check_bench_regression.py [--allow-bootstrap] BASELINE.json FRESH.json
     check_bench_regression.py --promote BASELINE.json FRESH.json
 
 * FRESH is the report a CI run just produced (``cargo bench --bench
   sim_hotpath -- --quick --json ...``).
 * BASELINE is the committed ``BENCH_sim_hotpath.json``. While it carries
   ``"measured": false`` (bootstrap: the authoring environment had no Rust
-  toolchain) the gate only prints the fresh numbers — commit a measured
-  CI artifact to arm it.
+  toolchain) the gate FAILS LOUDLY — a disarmed gate must never read as a
+  passing one. ``--allow-bootstrap`` downgrades that failure to a note;
+  the workflow passes it only on push-to-main runs, where the follow-up
+  arm job promotes the fresh report and closes the bootstrap window.
 
 ``--promote`` arms the gate: if (and only if) the committed baseline is
 still the bootstrap placeholder and FRESH carries ``"measured": true``
@@ -99,9 +101,11 @@ def main():
         if len(sys.argv) != 4:
             sys.exit(__doc__)
         sys.exit(promote(sys.argv[2], sys.argv[3]))
-    if len(sys.argv) != 3:
+    args = [a for a in sys.argv[1:] if a != "--allow-bootstrap"]
+    allow_bootstrap = len(args) != len(sys.argv) - 1
+    if len(args) != 2:
         sys.exit(__doc__)
-    baseline, fresh = load(sys.argv[1]), load(sys.argv[2])
+    baseline, fresh = load(args[0]), load(args[1])
 
     fresh_points = {key(p): p for p in fresh.get("points", [])}
     speedups = [p for p in fresh.get("points", []) if p.get("name") == "speedup"]
@@ -113,12 +117,19 @@ def main():
         )
 
     if not baseline.get("measured", False):
-        print(
-            f"baseline {sys.argv[1]} is a bootstrap placeholder "
-            '("measured": false) — gate skipped. Commit a measured CI '
-            "artifact to arm the regression check."
+        msg = (
+            f"baseline {args[0]} is a bootstrap placeholder "
+            '("measured": false) — the regression gate is NOT armed.'
         )
-        return
+        if allow_bootstrap:
+            print(f"{msg} Tolerated (--allow-bootstrap): this is a push run "
+                  "and the arm job will promote the fresh report.")
+            return
+        sys.exit(
+            f"{msg} Failing loudly so a disarmed gate can never pass "
+            "silently; the push-to-main arm job promotes the measured "
+            "report (workflow passes --allow-bootstrap there)."
+        )
 
     failures = []
     compared = 0

@@ -15,6 +15,16 @@ use noc_dnn::noc::{Coord, ProbeReport};
 use noc_dnn::plan::{LayerPolicy, NetworkPlan};
 use noc_dnn::util::rng::Rng;
 
+/// Intra-layer worker count from the `NOC_INTRA_WORKERS` CI matrix axis
+/// (default 1 = sequential kernel): the whole determinism surface must
+/// hold under the band-parallel kernel too.
+fn intra_workers_from_env() -> usize {
+    match std::env::var("NOC_INTRA_WORKERS") {
+        Ok(s) => s.parse().expect("NOC_INTRA_WORKERS must be a worker count"),
+        Err(_) => 1,
+    }
+}
+
 /// Drive one randomized-but-seeded workload to completion, optionally
 /// with the per-link probes on (the returned report is `None` iff
 /// `probes` is false).
@@ -23,11 +33,22 @@ fn run_once(
     collection: Collection,
     probes: bool,
 ) -> (NetStats, u64, u64, Option<ProbeReport>) {
+    run_once_with(seed, collection, probes, intra_workers_from_env())
+}
+
+/// [`run_once`] with an explicit intra-layer worker count.
+fn run_once_with(
+    seed: u64,
+    collection: Collection,
+    probes: bool,
+    intra_workers: usize,
+) -> (NetStats, u64, u64, Option<ProbeReport>) {
     let mut rng = Rng::new(seed);
     let n = *rng.choose(&[1usize, 2, 4, 8]);
     let mut cfg = SimConfig::table1_8x8(n);
     cfg.delta = rng.range(0, 2 * cfg.delta);
     cfg.probes = probes;
+    cfg.intra_workers = intra_workers;
     let mut net = Network::new(&cfg, collection);
     let mut posted = 0u64;
     for round in 0..rng.range(2, 4) {
@@ -112,6 +133,29 @@ fn probe_report_is_bit_identical_across_repeated_runs() {
                 "{collection:?} seed {seed}: ProbeReport diverged between \
                  two identical runs"
             );
+        }
+    }
+}
+
+#[test]
+fn intra_worker_count_is_invisible_in_every_observable() {
+    // The band-parallel kernel is an implementation detail: for every
+    // collection scheme, running the same seeded workload at workers
+    // 2/4/8 must reproduce the workers=1 tuple bit for bit — NetStats,
+    // delivered payloads, final cycle AND the full ProbeReport.
+    for collection in
+        [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina]
+    {
+        for seed in [42u64, 0xDECAF] {
+            let base = run_once_with(seed, collection, true, 1);
+            for workers in [2usize, 4, 8] {
+                let par = run_once_with(seed, collection, true, workers);
+                assert_eq!(
+                    par, base,
+                    "{collection:?} seed {seed}: intra_workers={workers} \
+                     changed an observable vs the sequential kernel"
+                );
+            }
         }
     }
 }

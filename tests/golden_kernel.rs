@@ -13,12 +13,12 @@
 //! matrix. A divergence in any counter fails with the offending matrix
 //! point in the message.
 
-use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming};
+use noc_dnn::config::{Collection, DataflowKind, SimConfig, Streaming, TopologyKind};
 use noc_dnn::dataflow::build;
 use noc_dnn::models::alexnet;
 use noc_dnn::noc::network::Network;
 use noc_dnn::noc::reference::{ReferenceNetwork, SimKernel};
-use noc_dnn::noc::{Coord, NetStats, StreamEdge};
+use noc_dnn::noc::{Coord, NetStats, ProbeReport, StreamEdge};
 
 const SIM_ROUNDS: u64 = 3;
 
@@ -185,6 +185,93 @@ fn event_kernel_matches_reference_on_16x16_two_packet_regime() {
         let cfg = SimConfig::table1_16x16(8);
         let tag = format!("16x16/{}", collection.label());
         assert_equivalent(&cfg, Streaming::TwoWay, collection, &tag);
+    }
+}
+
+/// Drive one burst schedule (row-wide posts every `gap` cycles) on a
+/// network built with `intra_workers` band workers, and return the full
+/// observable surface — stats, final cycle, delivery counters and the
+/// per-link probe report.
+fn run_banded(
+    topology: TopologyKind,
+    collection: Collection,
+    mesh: usize,
+    intra_workers: usize,
+    gap: u64,
+) -> (Observed, Option<ProbeReport>) {
+    let mut cfg = SimConfig::table1_8x8(4);
+    cfg.mesh_cols = mesh;
+    cfg.mesh_rows = mesh;
+    cfg.topology = topology;
+    cfg.probes = true;
+    cfg.intra_workers = intra_workers;
+    cfg.validate().unwrap();
+    let mut net = Network::new(&cfg, collection);
+    for burst in 0..5u64 {
+        let at = burst * gap + 3;
+        let y = (burst % mesh as u64) as u16;
+        for x in 0..mesh as u16 {
+            net.post_result(at, Coord::new(x, y), cfg.pes_per_router as u32);
+        }
+    }
+    assert!(
+        net.run_until_idle(20_000_000),
+        "{topology:?}/{collection:?} w{intra_workers}: workload stalled"
+    );
+    (observe(&net), net.probe_report())
+}
+
+#[test]
+fn parallel_kernel_matches_sequential_across_the_worker_matrix() {
+    // The intra-layer parallel kernel (noc::parallel) against its own
+    // sequential twin: mesh/torus/cmesh × ru/gather/ina at workers
+    // 2/4/8 vs workers 1 — full NetStats, final cycle AND ProbeReport
+    // must be bit-identical. This is the end-to-end check of the
+    // ascending-band merge-order argument.
+    for topology in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
+        for collection in
+            [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina]
+        {
+            let base = run_banded(topology, collection, 8, 1, 37);
+            assert!(
+                base.0.delivered > 0,
+                "{topology:?}/{collection:?}: workload delivered nothing"
+            );
+            for w in [2usize, 4, 8] {
+                let par = run_banded(topology, collection, 8, w, 37);
+                assert_eq!(
+                    par, base,
+                    "{topology:?}/{collection:?}: parallel kernel (workers {w}) \
+                     diverged from the sequential kernel"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_kernel_handles_ragged_bands_and_fast_forward_gaps() {
+    // 8 rows over 3 workers leaves a ragged 2-row last band; the prime
+    // burst spacing (7919 cycles, far past the series bucket width)
+    // forces calendar fast-forward jumps between bursts while the
+    // parallel kernel is active.
+    for collection in [Collection::Gather, Collection::Ina] {
+        let base = run_banded(TopologyKind::Mesh, collection, 8, 1, 7_919);
+        for w in [3usize, 8] {
+            let par = run_banded(TopologyKind::Mesh, collection, 8, w, 7_919);
+            assert_eq!(
+                par, base,
+                "{collection:?} workers {w}: ragged band / fast-forward run \
+                 diverged from the sequential kernel"
+            );
+        }
+    }
+    // Row count not divisible by the worker count: 7 rows at 2 workers
+    // (bands of 4 and 3) and at 4 workers (2/2/2/1).
+    for w in [2usize, 4] {
+        let base = run_banded(TopologyKind::Mesh, Collection::Gather, 7, 1, 37);
+        let par = run_banded(TopologyKind::Mesh, Collection::Gather, 7, w, 37);
+        assert_eq!(par, base, "7x7 workers {w}: ragged last band diverged");
     }
 }
 

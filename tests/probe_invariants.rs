@@ -44,6 +44,16 @@ fn random_collection(rng: &mut Rng) -> Collection {
     }
 }
 
+/// Intra-layer worker count from the `NOC_INTRA_WORKERS` CI matrix axis
+/// (default 1 = sequential kernel). The whole invariant pyramid must
+/// hold bit-for-bit under the band-parallel kernel too.
+fn intra_workers_from_env() -> usize {
+    match std::env::var("NOC_INTRA_WORKERS") {
+        Ok(s) => s.parse().expect("NOC_INTRA_WORKERS must be a worker count"),
+        Err(_) => 1,
+    }
+}
+
 /// Random-but-valid probe-on config over all three fabrics.
 fn random_cfg(rng: &mut Rng) -> SimConfig {
     let mesh = *rng.choose(&[4usize, 5, 8, 11]);
@@ -60,6 +70,7 @@ fn random_cfg(rng: &mut Rng) -> SimConfig {
     cfg.gather_packet_flits = rng.range(2, 20) as usize;
     cfg.sim_rounds_cap = 4;
     cfg.probes = true;
+    cfg.intra_workers = intra_workers_from_env();
     cfg.validate().unwrap();
     cfg
 }
@@ -198,11 +209,18 @@ fn prop_probe_invariants_survive_fast_forward_jumps() {
         assert!(ok, "case {case}: failed to drain after jumps");
         assert_eq!(net.payloads_delivered, posted, "case {case}: shortfall after jumps");
         assert_probe_invariants(&net, &format!("case {case} drained after jumps"));
-        // The series must span the whole jump-heavy schedule gap-free.
+        // The series must span the whole jump-heavy schedule gap-free
+        // and exactly: a fast-forward that skips whole buckets pads
+        // explicit zeros, so `len × bucket_cycles` covers the final
+        // cycle with no bucket past it.
         let p = net.probe_report().unwrap();
-        assert!(
-            (p.series.len() as u64) <= net.cycle / p.bucket_cycles + 1,
-            "case {case}: series has buckets past the final cycle"
+        assert_eq!(
+            p.series.len() as u64,
+            net.cycle.div_ceil(p.bucket_cycles),
+            "case {case}: series length does not reconcile with the final \
+             cycle (cycle {}, bucket {})",
+            net.cycle,
+            p.bucket_cycles
         );
     });
 }
@@ -302,11 +320,21 @@ fn ru_probe_totals_match_the_closed_form_exactly() {
 fn gather_hotspot(topology: TopologyKind) -> (SimConfig, ProbeReport, Network) {
     let mut cfg = SimConfig::table1_8x8(4);
     cfg.topology = topology;
-    // η = (Lg−1)·(flit_bits/payload_bits) = 1·4: one node fills a packet.
+    // Two-flit packets: the capacity closed form
+    // η = (Lg−1)·⌊flit_bits/payload_bits⌋ (`SimConfig::gather_capacity`)
+    // then yields exactly one body flit's worth of payload slots.
     cfg.gather_packet_flits = 2;
     cfg.probes = true;
     cfg.validate().unwrap();
-    let ppn = 4u32;
+    // Post ppn = η per node — derived, not hardcoded, so the census
+    // below survives a flit/payload-width reconfiguration (or fails
+    // loudly at the premise check instead of deep in a link assert).
+    let ppn = cfg.gather_capacity();
+    assert_eq!(
+        ppn.div_ceil(cfg.gather_capacity()),
+        1,
+        "η == ppn premise: each node must fill exactly one packet"
+    );
     let mut net = Network::new(&cfg, Collection::Gather);
     let y = 2u16;
     for x in 0..cfg.mesh_cols {
@@ -324,12 +352,19 @@ fn bottleneck_attribution_pins_the_hotspot_link_on_mesh_and_torus() {
         let (cfg, p, net) = gather_hotspot(topology);
         let m = cfg.mesh_cols as u64;
         let lg = cfg.gather_packet_flits as u64;
+        // Re-derive the census constants from the closed forms instead
+        // of hardcoding them: the hotspot posts ppn = η per node, so the
+        // row initiates ⌈M·ppn/η⌉ packets — exactly M under the η == ppn
+        // premise (one full packet per node, boarding impossible).
+        let ppn = cfg.gather_capacity();
+        let packets = (m * ppn as u64).div_ceil(cfg.gather_capacity() as u64);
+        assert_eq!(packets, m, "{topology:?}: η == ppn premise broken");
         assert_eq!(p.total_flits, net.stats.link_traversals, "{topology:?}");
         // Analytic census: packet i initiates at column i and crosses
-        // M−i routers; the M·Lg ejection hops never touch a link.
-        let hops = analytic::row_collection_flit_hops(&cfg, Collection::Gather, 4);
+        // M−i routers; the `packets·Lg` ejection hops never touch a link.
+        let hops = analytic::row_collection_flit_hops(&cfg, Collection::Gather, ppn);
         assert_eq!(net.stats.flit_hops, hops, "{topology:?}: hop census moved");
-        assert_eq!(p.total_flits, hops - m * lg, "{topology:?}: link census moved");
+        assert_eq!(p.total_flits, hops - packets * lg, "{topology:?}: link census moved");
         // Attribution: strictly hottest is the east-most link of the row,
         // and the traffic on it is collection, not operand streaming.
         let b = p.bottleneck().unwrap_or_else(|| panic!("{topology:?}: no bottleneck"));
@@ -355,7 +390,7 @@ fn bottleneck_attribution_pins_the_hotspot_link_on_mesh_and_torus() {
                 "{topology:?} {}: unexpected census",
                 l.label()
             );
-            assert_eq!(l.payloads, (l.from.x as u64 + 1) * 4, "{topology:?}");
+            assert_eq!(l.payloads, (l.from.x as u64 + 1) * ppn as u64, "{topology:?}");
         }
     }
 }
