@@ -23,11 +23,16 @@
 //!   the run also asserts the probed kernel's cycle/hop counts are
 //!   bit-identical to the unprobed one (probes are observation-only).
 //!
-//! * **big-mesh-workers-w{1,2,4,8}** — the saturating workload on a
+//! * **big-mesh-compact-w{1,2,4,8}** — the saturating workload on a
 //!   64×64 fabric under the intra-layer parallel kernel
-//!   (`SimConfig::intra_workers`), event kernel only. One point name —
-//!   one regression-gate key — per worker count, and every parallel run
-//!   is asserted bit-identical to the workers=1 run it is compared to.
+//!   (`SimConfig::intra_workers`), event kernel only, measuring the
+//!   compact-flit data layout (32-byte interned flit descriptors +
+//!   enum-dispatched `Fabric` routing). One point name — one
+//!   regression-gate key — per worker count, and every parallel run is
+//!   asserted bit-identical to the workers=1 run it is compared to. The
+//!   keys are distinct from the retired `big-mesh-workers-w{N}` points
+//!   so the layout change lands as new baseline entries rather than a
+//!   same-key delta against the wide-flit numbers.
 //!
 //! `--quick` runs the reduced CI matrix; `--json PATH` writes the
 //! machine-readable report (`BENCH_sim_hotpath.json`) that
@@ -236,11 +241,11 @@ fn main() {
         record(&mut report, "big-mesh-probes-on", "event", big_mesh, big_n, coll, &on);
     }
 
-    // Intra-layer parallel kernel: 64x64 saturating gather, event kernel
-    // only, at 1/2/4/8 band workers. Distinct point names per worker
-    // count keep each point a separate regression-gate key, and every
-    // parallel run is asserted bit-identical to the workers=1 baseline
-    // while it is being timed.
+    // Intra-layer parallel kernel on the compact-flit layout: 64x64
+    // saturating gather, event kernel only, at 1/2/4/8 band workers.
+    // Distinct point names per worker count keep each point a separate
+    // regression-gate key, and every parallel run is asserted
+    // bit-identical to the workers=1 baseline while it is being timed.
     {
         let big_mesh = 64usize;
         let big_n = 2usize;
@@ -275,7 +280,7 @@ fn main() {
             }
             record(
                 &mut report,
-                &format!("big-mesh-workers-w{workers}"),
+                &format!("big-mesh-compact-w{workers}"),
                 "event",
                 big_mesh,
                 big_n,

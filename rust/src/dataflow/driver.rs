@@ -71,7 +71,7 @@ pub struct LayerRunResult {
     /// present iff `cfg.probes` was on. Like [`measured_net`](Self::measured_net)
     /// it is *not* extrapolated: `probes.total_flits` reconciles with
     /// `measured_net.link_traversals` bit-exactly.
-    pub probes: Option<ProbeReport>,
+    pub probes: Option<ProbeReport<'static>>,
 }
 
 impl LayerRunResult {
@@ -276,7 +276,7 @@ fn run_bus_layer(
     // Setup-phase bus words (WS weight loads) are charged energy too.
     result.bus.merge(&mapping.setup_bus_stats(cfg, streaming));
     apply_accumulation_counts(&mut result, cfg, mapping);
-    result.probes = net.probe_report();
+    result.probes = net.probe_report().map(|p| p.into_owned());
     result
 }
 
@@ -369,7 +369,7 @@ fn run_mesh_layer(
     // into the probes, which record simulated traffic exclusively.
     result.net.merge(&mapping.setup_net_stats(cfg, Streaming::Mesh));
     apply_accumulation_counts(&mut result, cfg, mapping);
-    result.probes = net.probe_report();
+    result.probes = net.probe_report().map(|p| p.into_owned());
     result
 }
 

@@ -21,15 +21,18 @@ pub enum VcState {
     Active { out_port: usize, out_vc: usize },
 }
 
-/// One virtual-channel FIFO.
+/// One virtual-channel FIFO, generic over the flit representation: the
+/// frozen reference kernel buffers the wide [`Flit`] (the default, so its
+/// code names `VcBuffer` unchanged), the event kernel buffers
+/// [`crate::noc::flit::CompactFlit`].
 #[derive(Debug)]
-pub struct VcBuffer {
-    fifo: VecDeque<Flit>,
+pub struct VcBuffer<F = Flit> {
+    fifo: VecDeque<F>,
     depth: usize,
     pub state: VcState,
 }
 
-impl VcBuffer {
+impl<F> VcBuffer<F> {
     pub fn new(depth: usize) -> Self {
         VcBuffer { fifo: VecDeque::with_capacity(depth), depth, state: VcState::Idle }
     }
@@ -49,30 +52,30 @@ impl VcBuffer {
     /// Push an arriving flit. Panics on overflow — credits must make this
     /// impossible; an overflow is a flow-control bug, not a runtime
     /// condition.
-    pub fn push(&mut self, flit: Flit) {
+    pub fn push(&mut self, flit: F) {
         assert!(self.has_space(), "VC buffer overflow: credit protocol violated");
         self.fifo.push_back(flit);
     }
 
-    pub fn front(&self) -> Option<&Flit> {
+    pub fn front(&self) -> Option<&F> {
         self.fifo.front()
     }
 
-    pub fn front_mut(&mut self) -> Option<&mut Flit> {
+    pub fn front_mut(&mut self) -> Option<&mut F> {
         self.fifo.front_mut()
     }
 
-    pub fn pop(&mut self) -> Option<Flit> {
+    pub fn pop(&mut self) -> Option<F> {
         self.fifo.pop_front()
     }
 
     /// Flit at position `i` from the front (0 = front), if buffered.
-    pub fn get(&self, i: usize) -> Option<&Flit> {
+    pub fn get(&self, i: usize) -> Option<&F> {
         self.fifo.get(i)
     }
 
     /// Iterate the buffered flits, front to back.
-    pub fn iter(&self) -> impl Iterator<Item = &Flit> {
+    pub fn iter(&self) -> impl Iterator<Item = &F> {
         self.fifo.iter()
     }
 }

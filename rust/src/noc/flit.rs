@@ -102,6 +102,286 @@ impl Flit {
     }
 }
 
+/// The one flit query the shared router plumbing ([`super::router`],
+/// [`super::buffer`]) needs, so the VC state machine works over both the
+/// reference kernel's [`Flit`] and the event kernel's [`CompactFlit`].
+pub trait FlitLike {
+    fn is_head(&self) -> bool;
+}
+
+impl FlitLike for Flit {
+    fn is_head(&self) -> bool {
+        Flit::is_head(self)
+    }
+}
+
+impl FlitLike for CompactFlit {
+    fn is_head(&self) -> bool {
+        CompactFlit::is_head(self)
+    }
+}
+
+const HEAD_BIT: u8 = 1 << 0;
+const TAIL_BIT: u8 = 1 << 1;
+const MEM_DST_BIT: u8 = 1 << 2;
+const ALONG_PATH_BIT: u8 = 1 << 3;
+const PTYPE_SHIFT: u8 = 4;
+
+/// The in-flight flit of the event kernel: a packet-table index plus the
+/// genuinely per-flit mutable state. Everything packet-constant (`src`,
+/// `dst`, `packet_len`, `inject_cycle`, `space`, ...) lives in the
+/// [`PacketTable`] entry named by `pid`, so a buffer hop copies 32 bytes
+/// instead of the full [`Flit`].
+///
+/// `flags` caches the per-flit bits the hot loops test every cycle:
+/// head/tail position, `dst.x >= cols` (memory-column destination),
+/// `deliver_along_path`, and the 2-bit packet type — all derivable from
+/// the table but free to read here.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactFlit {
+    /// Live index into the owning [`PacketTable`].
+    pub pid: u32,
+    /// Index of this flit within its packet (head = 0).
+    pub seq: u32,
+    /// Remaining gather payload slots / INA physical word count — the
+    /// per-flit mutable twin of [`Flit::aspace`] (head flits).
+    pub aspace: u32,
+    /// Gather payloads carried so far (head flits) — see
+    /// [`Flit::carried_payloads`].
+    pub carried_payloads: u32,
+    /// Cycle this flit was last written into a buffer (SA eligibility).
+    pub arrival: u64,
+    flags: u8,
+}
+
+// The whole point of the compact layout: if a field lands here that
+// pushes the in-flight flit past 32 bytes, fail the build, not a bench.
+const _: () = assert!(
+    std::mem::size_of::<CompactFlit>() <= 32,
+    "CompactFlit must stay within 32 bytes: intern packet-constant fields in PacketTable instead"
+);
+
+impl CompactFlit {
+    #[inline]
+    pub fn is_head(&self) -> bool {
+        self.flags & HEAD_BIT != 0
+    }
+
+    /// True for the tail flit — including the single flit of a length-1
+    /// packet, so the old `is_tail() || packet_len == 1` retire test is
+    /// one bit test here.
+    #[inline]
+    pub fn is_tail(&self) -> bool {
+        self.flags & TAIL_BIT != 0
+    }
+
+    /// Cached `dst.x >= cols`: the packet is bound for the memory column
+    /// east of the fabric.
+    #[inline]
+    pub fn mem_dst(&self) -> bool {
+        self.flags & MEM_DST_BIT != 0
+    }
+
+    #[inline]
+    pub fn along_path(&self) -> bool {
+        self.flags & ALONG_PATH_BIT != 0
+    }
+
+    #[inline]
+    pub fn ptype(&self) -> PacketType {
+        match self.flags >> PTYPE_SHIFT {
+            0 => PacketType::Unicast,
+            1 => PacketType::Multicast,
+            2 => PacketType::Gather,
+            _ => PacketType::Ina,
+        }
+    }
+}
+
+fn ptype_bits(ptype: PacketType) -> u8 {
+    match ptype {
+        PacketType::Unicast => 0,
+        PacketType::Multicast => 1,
+        PacketType::Gather => 2,
+        PacketType::Ina => 3,
+    }
+}
+
+/// One interned packet: the fields every flit of the packet shares, plus
+/// the retire refcount.
+#[derive(Debug, Clone, Copy)]
+struct PacketEntry {
+    ptype: PacketType,
+    src: Coord,
+    dst: Coord,
+    len: u32,
+    space: u64,
+    inject_cycle: u64,
+    mem_dst: bool,
+    deliver_along_path: bool,
+    /// `aspace` / `carried_payloads` at injection time — the values
+    /// [`PacketTable::make_flit`] stamps on materialized flits (boarding
+    /// then mutates the head's copies in flight).
+    aspace0: u32,
+    carried0: u32,
+    /// Flits of this packet not yet retired. Ejection retires one flit at
+    /// a time; an INA merge retires the whole absorbed packet at once.
+    /// The slot is recycled (pushed on the free list) when it hits 0, so
+    /// `remaining > 0` *is* the liveness predicate.
+    remaining: u32,
+}
+
+/// Slab of live packets, indexed by [`CompactFlit::pid`], with free-list
+/// recycling at tail retire. Interning happens exactly where the kernel
+/// counts `packets_injected`, and a slot is released exactly when its
+/// last flit leaves the network, so at every cycle boundary
+/// `live == packets_injected - packets_ejected - ina_merges`.
+#[derive(Debug, Default)]
+pub struct PacketTable {
+    entries: Vec<PacketEntry>,
+    free: Vec<u32>,
+    live: u64,
+    peak_live: u64,
+}
+
+impl PacketTable {
+    pub fn new() -> PacketTable {
+        PacketTable::default()
+    }
+
+    /// Intern one packet; `mem_dst` caches the caller's `dst.x >= cols`
+    /// test. Returns the slab index the packet's flits carry as `pid`.
+    pub fn intern(&mut self, desc: &PacketDesc, mem_dst: bool) -> u32 {
+        let entry = PacketEntry {
+            ptype: desc.ptype,
+            src: desc.src,
+            dst: desc.dst,
+            len: desc.len_flits,
+            space: desc.space,
+            inject_cycle: desc.inject_cycle,
+            mem_dst,
+            deliver_along_path: desc.deliver_along_path,
+            aspace0: desc.aspace,
+            carried0: desc.carried_payloads,
+            remaining: desc.len_flits,
+        };
+        debug_assert!(entry.remaining > 0, "interned a zero-length packet");
+        let pid = match self.free.pop() {
+            Some(pid) => {
+                self.entries[pid as usize] = entry;
+                pid
+            }
+            None => {
+                self.entries.push(entry);
+                (self.entries.len() - 1) as u32
+            }
+        };
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        pid
+    }
+
+    /// Retire `flits` flits of packet `pid`; recycles the slot when the
+    /// last flit goes.
+    pub fn release(&mut self, pid: u32, flits: u32) {
+        let e = &mut self.entries[pid as usize];
+        debug_assert!(
+            e.remaining >= flits && flits > 0,
+            "released {flits} flits of packet {pid} with {} remaining",
+            e.remaining
+        );
+        e.remaining -= flits;
+        if e.remaining == 0 {
+            self.free.push(pid);
+            self.live -= 1;
+        }
+    }
+
+    /// Materialize flit `seq` of packet `pid` (`arrival` starts at 0,
+    /// exactly like [`PacketDesc::flit`]).
+    pub fn make_flit(&self, pid: u32, seq: u32) -> CompactFlit {
+        let e = &self.entries[pid as usize];
+        debug_assert!(seq < e.len);
+        let mut flags = ptype_bits(e.ptype) << PTYPE_SHIFT;
+        if seq == 0 {
+            flags |= HEAD_BIT;
+        }
+        if seq + 1 == e.len {
+            flags |= TAIL_BIT;
+        }
+        if e.mem_dst {
+            flags |= MEM_DST_BIT;
+        }
+        if e.deliver_along_path {
+            flags |= ALONG_PATH_BIT;
+        }
+        CompactFlit {
+            pid,
+            seq,
+            aspace: e.aspace0,
+            carried_payloads: e.carried0,
+            arrival: 0,
+            flags,
+        }
+    }
+
+    #[inline]
+    pub fn src(&self, pid: u32) -> Coord {
+        self.entries[pid as usize].src
+    }
+
+    #[inline]
+    pub fn dst(&self, pid: u32) -> Coord {
+        self.entries[pid as usize].dst
+    }
+
+    #[inline]
+    pub fn ptype(&self, pid: u32) -> PacketType {
+        self.entries[pid as usize].ptype
+    }
+
+    #[inline]
+    pub fn len(&self, pid: u32) -> u32 {
+        self.entries[pid as usize].len
+    }
+
+    #[inline]
+    pub fn space(&self, pid: u32) -> u64 {
+        self.entries[pid as usize].space
+    }
+
+    #[inline]
+    pub fn inject_cycle(&self, pid: u32) -> u64 {
+        self.entries[pid as usize].inject_cycle
+    }
+
+    /// Packets currently interned.
+    pub fn live(&self) -> u64 {
+        self.live
+    }
+
+    /// High-water mark of simultaneously live packets.
+    pub fn peak_live(&self) -> u64 {
+        self.peak_live
+    }
+
+    /// Slab slots ever allocated (live + recyclable).
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Liveness of a slab index: false for freed (recyclable) slots and
+    /// out-of-range indices.
+    pub fn is_live(&self, pid: u32) -> bool {
+        self.entries.get(pid as usize).is_some_and(|e| e.remaining > 0)
+    }
+
+    /// Flits of `pid` not yet retired (0 for freed slots).
+    pub fn remaining(&self, pid: u32) -> u32 {
+        self.entries[pid as usize].remaining
+    }
+}
+
 /// Builds the flit sequence for one packet.
 #[derive(Debug, Clone)]
 pub struct PacketDesc {
@@ -198,5 +478,79 @@ mod tests {
         };
         assert_eq!(d.flit(0).ftype, FlitType::Head);
         assert_eq!(d.flit(1).ftype, FlitType::Tail);
+    }
+
+    fn desc(id: PacketId, ptype: PacketType, len: u32) -> PacketDesc {
+        PacketDesc {
+            id,
+            ptype,
+            src: Coord::new(1, 2),
+            dst: Coord::new(8, 2),
+            len_flits: len,
+            aspace: 5,
+            space: 77,
+            inject_cycle: 40,
+            deliver_along_path: false,
+            carried_payloads: 3,
+        }
+    }
+
+    #[test]
+    fn compact_flit_mirrors_the_wide_flit_fields() {
+        let mut t = PacketTable::new();
+        let d = desc(0, PacketType::Gather, 3);
+        let pid = t.intern(&d, d.dst.x >= 8);
+        for seq in 0..3 {
+            let wide = d.flit(seq);
+            let compact = t.make_flit(pid, seq);
+            assert_eq!(compact.is_head(), wide.is_head(), "seq {seq}");
+            assert_eq!(compact.is_tail(), wide.is_tail(), "seq {seq}");
+            assert_eq!(compact.ptype(), wide.ptype);
+            assert_eq!(compact.aspace, wide.aspace);
+            assert_eq!(compact.carried_payloads, wide.carried_payloads);
+            assert_eq!(compact.seq, wide.seq);
+            assert_eq!(compact.arrival, 0);
+            assert!(compact.mem_dst());
+            assert!(!compact.along_path());
+        }
+        assert_eq!(t.src(pid), d.src);
+        assert_eq!(t.dst(pid), d.dst);
+        assert_eq!(t.len(pid), 3);
+        assert_eq!(t.space(pid), 77);
+        assert_eq!(t.inject_cycle(pid), 40);
+    }
+
+    #[test]
+    fn single_flit_packet_is_both_head_and_tail() {
+        let mut t = PacketTable::new();
+        let pid = t.intern(&desc(0, PacketType::Ina, 1), false);
+        let f = t.make_flit(pid, 0);
+        assert!(f.is_head() && f.is_tail());
+        assert_eq!(f.ptype(), PacketType::Ina);
+        assert!(!f.mem_dst());
+    }
+
+    #[test]
+    fn slab_recycles_only_fully_retired_slots() {
+        let mut t = PacketTable::new();
+        let a = t.intern(&desc(0, PacketType::Gather, 3), true);
+        let b = t.intern(&desc(0, PacketType::Unicast, 2), true);
+        assert_eq!(t.live(), 2);
+        assert!(t.is_live(a) && t.is_live(b));
+        t.release(a, 1);
+        assert!(t.is_live(a), "partially retired packet must stay live");
+        t.release(a, 2);
+        assert!(!t.is_live(a));
+        assert_eq!(t.live(), 1);
+        // The freed slot is recycled; the live one is untouched.
+        let c = t.intern(&desc(0, PacketType::Ina, 1), false);
+        assert_eq!(c, a, "free list must hand back the retired slot");
+        assert_ne!(c, b);
+        assert_eq!(t.capacity(), 2);
+        assert_eq!(t.peak_live(), 2);
+        // Whole-packet retire (the INA absorb path).
+        t.release(b, 2);
+        t.release(c, 1);
+        assert_eq!(t.live(), 0);
     }
 }

@@ -165,32 +165,47 @@ pub enum BoardMode {
     Accumulate,
 }
 
+/// The boarding-relevant view of a passing head flit, independent of the
+/// flit representation: the event kernel assembles it from a
+/// [`crate::noc::flit::CompactFlit`] plus its packet-table entry, the
+/// wide-`Flit` wrapper [`try_board_mode`] straight from the flit's own
+/// fields. `aspace` / `carried` alias the per-flit mutable occupancy the
+/// boarding decision updates.
+pub struct BoardFields<'a> {
+    pub is_head: bool,
+    pub ptype: PacketType,
+    pub dst: Coord,
+    pub space: u64,
+    pub aspace: &'a mut u32,
+    pub carried: &'a mut u32,
+}
+
 /// Shared boarding logic for gather (`BoardMode::Fill`, Algorithm 1) and
 /// INA (`BoardMode::Accumulate`) packets: try to board `ni`'s pending
-/// payloads onto the passing head `flit`. Mutates `flit.aspace` /
-/// `flit.carried_payloads` and `ni.pending`. Caller handles re-arming on
-/// `BoardedPartial` / `Full` (Fill mode only).
-pub fn try_board_mode(flit: &mut Flit, ni: &mut NiState, mode: BoardMode) -> BoardOutcome {
+/// payloads onto the passing head `f`. Mutates `f.aspace` / `f.carried`
+/// and `ni.pending`. Caller handles re-arming on `BoardedPartial` /
+/// `Full` (Fill mode only).
+pub fn board_fields(f: BoardFields, ni: &mut NiState, mode: BoardMode) -> BoardOutcome {
     let want = match mode {
         BoardMode::Fill => PacketType::Gather,
         BoardMode::Accumulate => PacketType::Ina,
     };
     // if ((F.FT = H) and (F.PT = G|I) and (F.Dst = P.Dst) and pending)
-    if !flit.is_head() || flit.ptype != want {
+    if !f.is_head || f.ptype != want {
         return BoardOutcome::NotApplicable;
     }
-    if ni.pending == 0 || flit.dst != ni.dst {
+    if ni.pending == 0 || f.dst != ni.dst {
         return BoardOutcome::NotApplicable;
     }
     match mode {
         BoardMode::Fill => {
             // if (F.ASpace >= sizeof(P)) then Load <- 1 ; F.ASpace -= sizeof(P)
-            if flit.aspace == 0 {
+            if *f.aspace == 0 {
                 return BoardOutcome::Full;
             }
-            let boarded = flit.aspace.min(ni.pending);
-            flit.aspace -= boarded;
-            flit.carried_payloads += boarded;
+            let boarded = (*f.aspace).min(ni.pending);
+            *f.aspace -= boarded;
+            *f.carried += boarded;
             ni.pending -= boarded;
             if ni.pending == 0 {
                 ni.armed = false;
@@ -201,11 +216,11 @@ pub fn try_board_mode(flit: &mut Flit, ni: &mut NiState, mode: BoardMode) -> Boa
         }
         BoardMode::Accumulate => {
             // Psums of different rounds must not be added together.
-            if flit.space != ni.space {
+            if f.space != ni.space {
                 return BoardOutcome::NotApplicable;
             }
             let folded = ni.pending;
-            flit.carried_payloads += folded;
+            *f.carried += folded;
             // `aspace` holds the packet's physical word count under INA;
             // accumulation adds in place. Every node of a round posts the
             // same width under the uniform drivers, keeping it constant;
@@ -215,12 +230,29 @@ pub fn try_board_mode(flit: &mut Flit, ni: &mut NiState, mode: BoardMode) -> Boa
             // for fewer words would need extra flits), acceptable because
             // same-space psums cover the same outputs and thus the same
             // width in any physically meaningful mapping.
-            flit.aspace = flit.aspace.max(folded);
+            *f.aspace = (*f.aspace).max(folded);
             ni.pending = 0;
             ni.armed = false;
             BoardOutcome::BoardedAll(folded)
         }
     }
+}
+
+/// [`board_fields`] over a wide [`Flit`] — the frozen reference kernel's
+/// entry point (and the unit-test surface for Algorithm 1).
+pub fn try_board_mode(flit: &mut Flit, ni: &mut NiState, mode: BoardMode) -> BoardOutcome {
+    board_fields(
+        BoardFields {
+            is_head: flit.is_head(),
+            ptype: flit.ptype,
+            dst: flit.dst,
+            space: flit.space,
+            aspace: &mut flit.aspace,
+            carried: &mut flit.carried_payloads,
+        },
+        ni,
+        mode,
+    )
 }
 
 /// Algorithm 1: try to board `ni`'s pending payloads onto the passing

@@ -28,10 +28,10 @@ pub mod routing;
 pub mod stats;
 pub mod topology;
 
-pub use flit::{Coord, Flit, FlitType, PacketDesc, PacketId, PacketType};
+pub use flit::{CompactFlit, Coord, Flit, FlitType, PacketDesc, PacketId, PacketTable, PacketType};
 pub use network::{Network, StreamEdge};
 pub use probes::{Bottleneck, BottleneckStage, LinkRecord, ProbeReport, BUCKET_CYCLES};
 pub use reference::{ReferenceNetwork, SimKernel};
 pub use routing::{Algorithm, Port};
 pub use stats::{BusStats, NetStats};
-pub use topology::{BusAttachments, ConcentratedMesh, Mesh2D, Topology, Torus2D};
+pub use topology::{BusAttachments, ConcentratedMesh, Fabric, Mesh2D, Topology, Torus2D};

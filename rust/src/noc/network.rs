@@ -142,14 +142,14 @@ use std::sync::Arc;
 
 use super::buffer::VcState;
 use super::calendar::Calendar;
-use super::flit::{Coord, Flit, PacketDesc, PacketId, PacketType};
-use super::gather::{effective_delta, try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
+use super::flit::{CompactFlit, Coord, PacketDesc, PacketTable, PacketType};
+use super::gather::{board_fields, effective_delta, BoardFields, BoardMode, BoardOutcome, NiState};
 use super::parallel::{self, ParState};
 use super::probes::{LinkProbes, ProbeReport, BUCKET_CYCLES};
 use super::router::{refresh_vc_state, RouterState};
 use super::routing::Port;
 use super::stats::NetStats;
-use super::topology::{self, Topology};
+use super::topology::{self, Fabric, Topology};
 use crate::config::{Collection, SimConfig};
 
 /// A flit in flight on a link, due to be written into a buffer.
@@ -160,7 +160,7 @@ pub(super) struct Arrival {
     pub(super) router: usize,
     pub(super) port: Port,
     pub(super) vc: usize,
-    pub(super) flit: Flit,
+    pub(super) flit: CompactFlit,
 }
 
 /// An entry in an injection source's queue.
@@ -226,10 +226,16 @@ pub struct Network {
     /// bit-identically (pinned against the frozen reference kernel by the
     /// golden suite).
     topo: Arc<dyn Topology>,
+    /// Enum-dispatched twin of `topo` for the per-flit hot path: `route`,
+    /// `vc_class` and `neighbor` inline through it instead of paying two
+    /// virtual calls per occupied VC per cycle. Built from the same
+    /// config (`with_topology` asserts kind + dims agree), so the two
+    /// views can never diverge.
+    fabric: Fabric,
     cols: usize,
     rows: usize,
     vcs: usize,
-    routers: Vec<RouterState>,
+    routers: Vec<RouterState<CompactFlit>>,
     ni: Vec<NiState>,
     injectors: Vec<Injector>,
     /// Ring buffer of link arrivals; slot 0 = current cycle.
@@ -278,7 +284,13 @@ pub struct Network {
     /// shardable grid — see [`super::parallel`]); `None` keeps the
     /// sequential hot path carrying nothing but this discriminant.
     par: Option<Box<ParState>>,
-    next_pid: PacketId,
+    /// Interned packet-constant fields of every in-flight packet, indexed
+    /// by [`CompactFlit::pid`]. Slots are interned exactly where
+    /// `packets_injected` is counted and recycled when the last flit
+    /// retires (tail ejection, or an INA merge absorbing the packet), so
+    /// `packets.live() == packets_injected - packets_ejected - ina_merges`
+    /// at every cycle boundary.
+    packets: PacketTable,
 }
 
 const PORTS: usize = Port::COUNT;
@@ -346,6 +358,7 @@ impl Network {
             cfg.topology,
             "injected topology does not match cfg.topology"
         );
+        let fabric = Fabric::from_config(&cfg);
         let (cols, rows, vcs) = (cfg.mesh_cols, cfg.mesh_rows, cfg.vcs);
         let mut routers = Vec::with_capacity(cols * rows);
         for y in 0..rows {
@@ -373,6 +386,7 @@ impl Network {
         Network {
             collection,
             topo,
+            fabric,
             cols,
             rows,
             vcs,
@@ -402,7 +416,7 @@ impl Network {
                 .probes
                 .then(|| Box::new(LinkProbes::new(cols * rows, vcs))),
             par: ParState::for_grid(cfg.intra_workers, cols, rows),
-            next_pid: 1,
+            packets: PacketTable::new(),
             cfg,
         }
     }
@@ -411,7 +425,7 @@ impl Network {
     /// network was built with `cfg.probes == false`. Counters cover
     /// everything simulated so far; `ProbeReport::total_flits` equals
     /// `self.stats.link_traversals` bit-exactly at any cycle boundary.
-    pub fn probe_report(&self) -> Option<ProbeReport> {
+    pub fn probe_report(&self) -> Option<ProbeReport<'_>> {
         self.probes.as_ref().map(|p| {
             p.report(self.topo.as_ref(), self.cols as u16, self.rows as u16, self.cycle)
         })
@@ -436,16 +450,16 @@ impl Network {
     /// or forwarded over a torus wrap link instead of sunk at memory.
     #[inline]
     fn is_memory_ejection(&self, here: Coord, out_port: Port, dst: Coord) -> bool {
-        out_port == Port::Local
-            || (out_port == Port::East
-                && here.x as usize + 1 == self.cols
-                && dst.x as usize >= self.cols)
+        self.is_memory_ejection_flag(here, out_port, dst.x as usize >= self.cols)
     }
 
-    fn alloc_pid(&mut self) -> PacketId {
-        let id = self.next_pid;
-        self.next_pid += 1;
-        id
+    /// [`Network::is_memory_ejection`] with the `dst.x >= cols` test
+    /// pre-computed — the grant path reads it off the flit's cached
+    /// `mem_dst` flag instead of fetching `dst` from the packet table.
+    #[inline]
+    fn is_memory_ejection_flag(&self, here: Coord, out_port: Port, mem_dst: bool) -> bool {
+        out_port == Port::Local
+            || (out_port == Port::East && here.x as usize + 1 == self.cols && mem_dst)
     }
 
     // ------------------------------------------------------------------
@@ -555,7 +569,7 @@ impl Network {
             StreamEdge::Col(x) => Coord::new(x as u16, 0),
         };
         let desc = PacketDesc {
-            id: self.alloc_pid(),
+            id: 0, // interned (and assigned a table slot) when the post fires
             ptype: PacketType::Multicast,
             src,
             dst,
@@ -691,7 +705,8 @@ impl Network {
         {
             let shared = parallel::Shared {
                 cfg: &self.cfg,
-                topo: self.topo.as_ref(),
+                fabric: self.fabric,
+                packets: &self.packets,
                 collection: self.collection,
                 cols: self.cols,
                 vcs: self.vcs,
@@ -723,7 +738,8 @@ impl Network {
         {
             let shared = parallel::Shared {
                 cfg: &self.cfg,
-                topo: self.topo.as_ref(),
+                fabric: self.fabric,
+                packets: &self.packets,
                 collection: self.collection,
                 cols: self.cols,
                 vcs: self.vcs,
@@ -767,6 +783,14 @@ impl Network {
             for &r in fx.wakes.iter() {
                 self.mark_active(r);
             }
+            // Deferred packet-table retires (ejections + INA absorbs of
+            // this band). Ascending band order replays the exact global
+            // release sequence the sequential SA scan would have produced,
+            // so the free list — and therefore every recycled pid — is
+            // bit-identical to the sequential kernel.
+            for &(pid, flits) in fx.pid_releases.iter() {
+                self.packets.release(pid, flits);
+            }
             self.credit_refunds.append(&mut fx.credit_refunds);
             self.arrivals[delay - 1].append(&mut fx.arrivals_out);
             if let Some(p) = self.probes.as_mut() {
@@ -794,15 +818,23 @@ impl Network {
         let mut batch = self.arrivals.pop_front().expect("arrival ring underflow");
         for Arrival { router, port, vc, mut flit } in batch.drain(..) {
             flit.arrival = self.cycle;
+            let ptype = flit.ptype();
             // Gather boarding happens at head *arrival* — the Load signal
             // is generated in the RC stage (Fig. 7) — so payloads of this
             // router's NI are folded into the packet at zero latency.
-            if flit.ptype == PacketType::Gather
+            if ptype == PacketType::Gather
                 && flit.is_head()
-                && self.routers[router].coord != flit.src
+                && self.routers[router].coord != self.packets.src(flit.pid)
             {
-                let ni = &mut self.ni[router];
-                match try_board(&mut flit, ni) {
+                let fields = BoardFields {
+                    is_head: true,
+                    ptype,
+                    dst: self.packets.dst(flit.pid),
+                    space: self.packets.space(flit.pid),
+                    aspace: &mut flit.aspace,
+                    carried: &mut flit.carried_payloads,
+                };
+                match board_fields(fields, &mut self.ni[router], BoardMode::Fill) {
                     BoardOutcome::BoardedAll(k) => {
                         self.stats.gather_boards += k as u64;
                     }
@@ -817,16 +849,23 @@ impl Network {
                     }
                     BoardOutcome::NotApplicable => {}
                 }
-            } else if flit.ptype == PacketType::Ina
+            } else if ptype == PacketType::Ina
                 && flit.is_head()
-                && self.routers[router].coord != flit.src
+                && self.routers[router].coord != self.packets.src(flit.pid)
             {
                 // INA fold: the router ALU adds this NI's same-space psums
                 // into the passing packet — zero latency, no capacity
                 // limit, one add per folded word.
-                let ni = &mut self.ni[router];
+                let fields = BoardFields {
+                    is_head: true,
+                    ptype,
+                    dst: self.packets.dst(flit.pid),
+                    space: self.packets.space(flit.pid),
+                    aspace: &mut flit.aspace,
+                    carried: &mut flit.carried_payloads,
+                };
                 if let BoardOutcome::BoardedAll(k) =
-                    try_board_mode(&mut flit, ni, BoardMode::Accumulate)
+                    board_fields(fields, &mut self.ni[router], BoardMode::Accumulate)
                 {
                     self.stats.ina_folds += k as u64;
                     self.stats.ina_adds += k as u64;
@@ -878,7 +917,7 @@ impl Network {
 
     /// Buffer write common to link arrivals and local injection. This is
     /// one of the active-set wakeup points.
-    fn write_flit(&mut self, router: usize, port: Port, vc: usize, flit: Flit) {
+    fn write_flit(&mut self, router: usize, port: Port, vc: usize, flit: CompactFlit) {
         let vcs = self.vcs;
         let r = &mut self.routers[router];
         let idx = port.index() * vcs + vc;
@@ -906,8 +945,9 @@ impl Network {
         // applied before the calendar queues replaced them.
         let mut scratch = std::mem::take(&mut self.stream_scratch);
         self.stream_posts.drain_up_to(self.cycle, &mut scratch);
-        for (router, port, desc) in scratch.drain(..) {
+        for (router, port, mut desc) in scratch.drain(..) {
             self.stats.packets_injected += 1;
+            desc.id = self.packets.intern(&desc, desc.dst.x as usize >= self.cols) as u64;
             self.push_injector(
                 router * PORTS + port.index(),
                 InjEntry { desc, from_ni: false, not_before: self.cycle },
@@ -967,8 +1007,8 @@ impl Network {
                 while remaining > 0 {
                     let carried = remaining.min(per_pkt);
                     remaining -= carried;
-                    let desc = PacketDesc {
-                        id: self.alloc_pid(),
+                    let mut desc = PacketDesc {
+                        id: 0,
                         ptype: PacketType::Unicast,
                         src,
                         dst,
@@ -979,6 +1019,7 @@ impl Network {
                         deliver_along_path: false,
                         carried_payloads: carried,
                     };
+                    desc.id = self.packets.intern(&desc, dst.x as usize >= self.cols) as u64;
                     self.stats.packets_injected += 1;
                     self.push_injector(
                         node * PORTS + Port::Local.index(),
@@ -1057,13 +1098,13 @@ impl Network {
                         // VA completes one cycle before SA readiness.
                         if self.cycle + 1 >= sa_ready_cycle =>
                     {
-                        (f.dst, f.src, f.ptype)
+                        (self.packets.dst(f.pid), self.packets.src(f.pid), f.ptype())
                     }
                     _ => continue,
                 }
             };
             let here = self.routers[ridx].coord;
-            let out_port = self.topo.route(ptype, here, dst);
+            let out_port = self.fabric.route(ptype, here, dst);
             // Ejection hops sink unconditionally and carry no VC-class
             // restriction; for link hops the topology may confine
             // allocation to one VC class (the torus dateline rule — a
@@ -1071,7 +1112,7 @@ impl Network {
             let class = if self.is_memory_ejection(here, out_port, dst) {
                 None
             } else {
-                self.topo.vc_class(ptype, src, here, dst, out_port)
+                self.fabric.vc_class(ptype, src, here, dst, out_port)
             };
             let in_port = idx / vcs;
             let in_vc = idx % vcs;
@@ -1206,7 +1247,7 @@ impl Network {
         self.stats.flit_hops += 1;
 
         // --- mesh operand stream delivery along the path ---
-        if flit.deliver_along_path {
+        if flit.along_path() {
             self.stats.stream_deliveries += 1;
         }
 
@@ -1219,7 +1260,7 @@ impl Network {
         // redundant with the missing-neighbour check below; on a torus the
         // edge ports DO have (wrap) neighbours, so without it a stream
         // flit would refund a credit the wrap upstream never spent.
-        if in_port != Port::Local && flit.src != self.routers[ridx].coord {
+        if in_port != Port::Local && self.packets.src(flit.pid) != self.routers[ridx].coord {
             let here = self.routers[ridx].coord;
             if let Some(up) = self.neighbour(here, in_port) {
                 let up_idx = self.node_idx(up);
@@ -1228,7 +1269,7 @@ impl Network {
         }
 
         // --- tail: release the output VC and refresh the input VC ---
-        if flit.is_tail() || flit.packet_len == 1 {
+        if flit.is_tail() {
             self.routers[ridx].release_out_vc(out_port, out_vc, vcs);
             let r = &mut self.routers[ridx];
             r.inputs[idx].state = VcState::Idle;
@@ -1240,7 +1281,7 @@ impl Network {
 
         // --- forward or eject ---
         let here = self.routers[ridx].coord;
-        if self.is_memory_ejection(here, out_port, flit.dst) {
+        if self.is_memory_ejection_flag(here, out_port, flit.mem_dst()) {
             self.eject(flit);
             self.flits_active -= 1;
         } else {
@@ -1265,7 +1306,7 @@ impl Network {
                     self.cycle,
                     flit.is_head(),
                     flit.carried_payloads,
-                    flit.deliver_along_path,
+                    flit.along_path(),
                 );
             }
             // ST (next cycle) + link. The ring was already popped for the
@@ -1345,18 +1386,18 @@ impl Network {
     fn ina_complete_head(&self, ridx: usize, idx: usize) -> Option<(u64, Coord)> {
         let buf = &self.routers[ridx].inputs[idx];
         let head = buf.front()?;
-        if head.ptype != PacketType::Ina || !head.is_head() {
+        if head.ptype() != PacketType::Ina || !head.is_head() {
             return None;
         }
-        let len = head.packet_len as usize;
+        let len = self.packets.len(head.pid) as usize;
         let tail = buf.get(len - 1)?;
-        if tail.packet_id != head.packet_id {
+        if tail.pid != head.pid {
             return None;
         }
         if len > 1 && !tail.is_tail() {
             return None;
         }
-        Some((head.space, head.dst))
+        Some((self.packets.space(head.pid), self.packets.dst(head.pid)))
     }
 
     /// Absorb the complete INA packet fronting input VC `absorbed` into
@@ -1369,7 +1410,13 @@ impl Network {
         let kappa = self.cfg.kappa();
         let (pid, len, carried, words, absorbed_src) = {
             let f = self.routers[ridx].inputs[absorbed].front().expect("absorbed VC empty");
-            (f.packet_id, f.packet_len as usize, f.carried_payloads, f.aspace, f.src)
+            (
+                f.pid,
+                self.packets.len(f.pid) as usize,
+                f.carried_payloads,
+                f.aspace,
+                self.packets.src(f.pid),
+            )
         };
         // SA requesters are Active: release the output VC the absorbed
         // packet held so a later packet can claim the lane.
@@ -1381,12 +1428,14 @@ impl Network {
         }
         for _ in 0..len {
             let f = self.routers[ridx].inputs[absorbed].pop().expect("absorbed packet truncated");
-            debug_assert_eq!(f.packet_id, pid, "absorbed a foreign flit");
+            debug_assert_eq!(f.pid, pid, "absorbed a foreign flit");
         }
         self.occupancy[ridx] -= len as u32;
         self.flits_active -= len as u64;
         // The merge reads the absorbed flits into the ALU; they are not
-        // switched, linked or ejected.
+        // switched, linked or ejected. The whole packet retires at once —
+        // this is the mid-flight retire path of the packet table.
+        self.packets.release(pid, len as u32);
         self.stats.buffer_reads += len as u64;
         self.stats.ina_merges += 1;
         self.stats.ina_adds += words as u64;
@@ -1423,37 +1472,40 @@ impl Network {
         let head = self.routers[ridx].inputs[survivor]
             .front_mut()
             .expect("survivor VC empty");
-        debug_assert!(head.is_head() && head.ptype == PacketType::Ina);
+        debug_assert!(head.is_head() && head.ptype() == PacketType::Ina);
         head.carried_payloads += carried;
         head.aspace = head.aspace.max(words);
     }
 
-    fn eject(&mut self, flit: Flit) {
+    fn eject(&mut self, flit: CompactFlit) {
         self.stats.flits_ejected += 1;
-        if flit.is_head() && flit.dst.x as usize >= self.cols {
+        if flit.is_head() && flit.mem_dst() {
             // Result packet reached the row memory element.
             self.payloads_delivered += flit.carried_payloads as u64;
-            if flit.ptype == PacketType::Gather {
+            if flit.ptype() == PacketType::Gather {
                 self.gather_packets_ejected += 1;
             }
         }
-        if flit.is_tail() || flit.packet_len == 1 {
+        if flit.is_tail() {
             self.stats.packets_ejected += 1;
-            let lat = self.cycle.saturating_sub(flit.inject_cycle);
+            let lat = self.cycle.saturating_sub(self.packets.inject_cycle(flit.pid));
             self.stats.total_packet_latency += lat;
             self.stats.max_packet_latency = self.stats.max_packet_latency.max(lat);
             self.last_eject_cycle = self.cycle;
-            if flit.deliver_along_path {
+            if flit.along_path() {
                 self.stream_tails_ejected += 1;
             }
-            if flit.dst.x as usize >= self.cols {
+            if flit.mem_dst() {
                 self.result_packets_ejected += 1;
             }
         }
+        // Each ejected flit retires from its table slot; wormhole delivery
+        // is in-order, so the tail's retire is the one that frees it.
+        self.packets.release(flit.pid, 1);
     }
 
     fn neighbour(&self, c: Coord, p: Port) -> Option<Coord> {
-        self.topo.neighbor(c, p)
+        self.fabric.neighbor(c, p)
     }
 
     fn feed_injectors(&mut self) {
@@ -1532,8 +1584,8 @@ impl Network {
                     Collection::Gather => cap - carried,
                     _ => carried,
                 };
-                desc.id = self.alloc_pid();
                 desc.inject_cycle = self.cycle;
+                desc.id = self.packets.intern(&desc, desc.dst.x as usize >= self.cols) as u64;
                 self.stats.packets_injected += 1;
             }
             self.injectors[ii].cur = Some((desc, 0, usize::MAX));
@@ -1553,7 +1605,7 @@ impl Network {
         let idx = port.index() * vcs + vc;
         if self.routers[ridx].inputs[idx].has_space() {
             let flit = {
-                let mut f = desc.flit(seq);
+                let mut f = self.packets.make_flit(desc.id as u32, seq);
                 f.arrival = self.cycle;
                 f
             };
@@ -1603,6 +1655,57 @@ impl Network {
 
     pub fn total_buffered_flits(&self) -> usize {
         self.routers.iter().map(|r| r.occupancy()).sum()
+    }
+
+    /// The packet-intern table (exposed for the property suite's
+    /// aliasing/occupancy invariants).
+    pub fn packet_table(&self) -> &PacketTable {
+        &self.packets
+    }
+
+    /// Audit the packet table against every in-flight flit: each one must
+    /// name a live slot with an in-range `seq`, and each in-progress
+    /// injector packet must still be live. Returns the number of flits
+    /// audited. Panics on any aliasing violation — a recycled slot being
+    /// referenced by a stale flit is exactly the bug class the free list
+    /// could introduce.
+    pub fn audit_packet_table(&self) -> u64 {
+        let mut audited = 0u64;
+        let mut check = |flit: &CompactFlit, where_: &str| {
+            assert!(
+                self.packets.is_live(flit.pid),
+                "{where_}: flit of packet {} references a freed table slot",
+                flit.pid
+            );
+            assert!(
+                flit.seq < self.packets.len(flit.pid),
+                "{where_}: flit seq {} out of range for packet {}",
+                flit.seq,
+                flit.pid
+            );
+            audited += 1;
+        };
+        for r in &self.routers {
+            for buf in &r.inputs {
+                for f in buf.iter() {
+                    check(f, "buffer");
+                }
+            }
+        }
+        for batch in &self.arrivals {
+            for a in batch.iter() {
+                check(&a.flit, "link");
+            }
+        }
+        for inj in &self.injectors {
+            if let Some((desc, _, _)) = &inj.cur {
+                assert!(
+                    self.packets.is_live(desc.id as u32),
+                    "injector holds a freed packet slot"
+                );
+            }
+        }
+        audited
     }
 
     /// Every result payload the network is still responsible for: posted

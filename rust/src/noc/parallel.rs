@@ -33,8 +33,11 @@
 //! The remaining phases of the cycle (credit refunds, calendar posts,
 //! injector feeding, δ timeouts, backlog drain, active-set retirement)
 //! stay sequential in [`Network::step_parallel`]: they are cheap O(live
-//! work) scans, and they are where packet ids are allocated — keeping
-//! `next_pid` single-threaded is what makes pid assignment trivially
+//! work) scans, and they are where packet-table slots are interned —
+//! keeping the [`super::flit::PacketTable`] mutations single-threaded
+//! (interns in the sequential phases, retires replayed from
+//! [`Effects::pid_releases`] at the barrier in ascending band order) is
+//! what makes pid assignment and free-list recycling trivially
 //! deterministic.
 //!
 //! Threads are spawned per parallel section via [`std::thread::scope`]
@@ -48,14 +51,14 @@
 //! [`Network::step_parallel`]: super::network::Network
 
 use super::buffer::VcState;
-use super::flit::{Coord, Flit, PacketDesc, PacketType};
-use super::gather::{try_board, try_board_mode, BoardMode, BoardOutcome, NiState};
+use super::flit::{CompactFlit, Coord, PacketDesc, PacketTable, PacketType};
+use super::gather::{board_fields, BoardFields, BoardMode, BoardOutcome, NiState};
 use super::network::{Arrival, InjEntry, Injector};
 use super::probes::{BandProbes, LinkProbes};
 use super::router::{refresh_vc_state, RouterState};
 use super::routing::Port;
 use super::stats::NetStats;
-use super::topology::Topology;
+use super::topology::Fabric;
 use crate::config::{Collection, SimConfig};
 
 const PORTS: usize = Port::COUNT;
@@ -138,6 +141,12 @@ pub(super) struct Effects {
     /// Link traversals counted toward the network-wide probe series
     /// bucket of this cycle ([`LinkProbes::bump_series`]).
     pub(super) series_flits: u64,
+    /// Packet-table retires of this band — `(pid, flits)` per ejected
+    /// flit (1) or absorbed INA packet (its full length) — replayed at
+    /// the barrier in ascending band order, which reproduces the exact
+    /// global release sequence (and therefore free-list state) of the
+    /// sequential kernel.
+    pub(super) pid_releases: Vec<(u32, u32)>,
 }
 
 impl Effects {
@@ -155,14 +164,20 @@ impl Effects {
         self.tail_ejected = false;
         self.busy_injectors_add = 0;
         self.series_flits = 0;
+        self.pid_releases.clear();
     }
 }
 
-/// Read-only cycle context shared by every worker. `Topology` is
-/// `Send + Sync` by trait bound, so the whole struct is `Sync`.
+/// Read-only cycle context shared by every worker. Every field is a
+/// shared reference or `Copy` data, so the whole struct is `Sync`; the
+/// packet table is read-only for the duration of a parallel section
+/// (interns happen in the sequential phases, retires at the barrier).
 pub(super) struct Shared<'a> {
     pub(super) cfg: &'a SimConfig,
-    pub(super) topo: &'a dyn Topology,
+    /// Enum-dispatched fabric — the same devirtualized `route`/
+    /// `vc_class`/`neighbor` the sequential hot path uses.
+    pub(super) fabric: Fabric,
+    pub(super) packets: &'a PacketTable,
     pub(super) collection: Collection,
     pub(super) cols: usize,
     pub(super) vcs: usize,
@@ -182,10 +197,14 @@ impl Shared<'_> {
     /// from the shared context instead of `&self`).
     #[inline]
     fn is_memory_ejection(&self, here: Coord, out_port: Port, dst: Coord) -> bool {
+        self.is_memory_ejection_flag(here, out_port, dst.x as usize >= self.cols)
+    }
+
+    /// Mirror of `Network::is_memory_ejection_flag`.
+    #[inline]
+    fn is_memory_ejection_flag(&self, here: Coord, out_port: Port, mem_dst: bool) -> bool {
         out_port == Port::Local
-            || (out_port == Port::East
-                && here.x as usize + 1 == self.cols
-                && dst.x as usize >= self.cols)
+            || (out_port == Port::East && here.x as usize + 1 == self.cols && mem_dst)
     }
 }
 
@@ -195,7 +214,7 @@ impl Shared<'_> {
 pub(super) struct Band<'a> {
     /// Global router-index range `[start, end)` this band owns.
     pub(super) range: (usize, usize),
-    pub(super) routers: &'a mut [RouterState],
+    pub(super) routers: &'a mut [RouterState<CompactFlit>],
     pub(super) ni: &'a mut [NiState],
     pub(super) injectors: &'a mut [Injector],
     pub(super) occupancy: &'a mut [u32],
@@ -215,7 +234,7 @@ impl Band<'_> {
 /// invariant the `split_at_mut` chain relies on).
 pub(super) fn make_bands<'a>(
     bands: &[(usize, usize)],
-    routers: &'a mut [RouterState],
+    routers: &'a mut [RouterState<CompactFlit>],
     ni: &'a mut [NiState],
     injectors: &'a mut [Injector],
     occupancy: &'a mut [u32],
@@ -335,12 +354,21 @@ fn for_band_active(active: &[u64], range: (usize, usize), mut f: impl FnMut(usiz
 fn deliver_band(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects, inbox: &mut Vec<Arrival>) {
     for Arrival { router, port, vc, mut flit } in inbox.drain(..) {
         flit.arrival = sh.cycle;
-        if flit.ptype == PacketType::Gather
+        let ptype = flit.ptype();
+        if ptype == PacketType::Gather
             && flit.is_head()
-            && band.routers[band.r(router)].coord != flit.src
+            && band.routers[band.r(router)].coord != sh.packets.src(flit.pid)
         {
             let bi = band.r(router);
-            match try_board(&mut flit, &mut band.ni[bi]) {
+            let fields = BoardFields {
+                is_head: true,
+                ptype,
+                dst: sh.packets.dst(flit.pid),
+                space: sh.packets.space(flit.pid),
+                aspace: &mut flit.aspace,
+                carried: &mut flit.carried_payloads,
+            };
+            match board_fields(fields, &mut band.ni[bi], BoardMode::Fill) {
                 BoardOutcome::BoardedAll(k) => {
                     fx.stats.gather_boards += k as u64;
                 }
@@ -353,13 +381,21 @@ fn deliver_band(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects, inbox: &
                 }
                 BoardOutcome::NotApplicable => {}
             }
-        } else if flit.ptype == PacketType::Ina
+        } else if ptype == PacketType::Ina
             && flit.is_head()
-            && band.routers[band.r(router)].coord != flit.src
+            && band.routers[band.r(router)].coord != sh.packets.src(flit.pid)
         {
             let bi = band.r(router);
+            let fields = BoardFields {
+                is_head: true,
+                ptype,
+                dst: sh.packets.dst(flit.pid),
+                space: sh.packets.space(flit.pid),
+                aspace: &mut flit.aspace,
+                carried: &mut flit.carried_payloads,
+            };
             if let BoardOutcome::BoardedAll(k) =
-                try_board_mode(&mut flit, &mut band.ni[bi], BoardMode::Accumulate)
+                board_fields(fields, &mut band.ni[bi], BoardMode::Accumulate)
             {
                 fx.stats.ina_folds += k as u64;
                 fx.stats.ina_adds += k as u64;
@@ -425,7 +461,7 @@ fn write_flit(
     router: usize,
     port: Port,
     vc: usize,
-    flit: Flit,
+    flit: CompactFlit,
 ) {
     let bi = band.r(router);
     let r = &mut band.routers[bi];
@@ -469,17 +505,17 @@ fn va_router(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects, ridx: usize
                     // VA completes one cycle before SA readiness.
                     if sh.cycle + 1 >= sa_ready_cycle =>
                 {
-                    (f.dst, f.src, f.ptype)
+                    (sh.packets.dst(f.pid), sh.packets.src(f.pid), f.ptype())
                 }
                 _ => continue,
             }
         };
         let here = band.routers[bi].coord;
-        let out_port = sh.topo.route(ptype, here, dst);
+        let out_port = sh.fabric.route(ptype, here, dst);
         let class = if sh.is_memory_ejection(here, out_port, dst) {
             None
         } else {
-            sh.topo.vc_class(ptype, src, here, dst, out_port)
+            sh.fabric.vc_class(ptype, src, here, dst, out_port)
         };
         let in_port = idx / vcs;
         let in_vc = idx % vcs;
@@ -606,20 +642,20 @@ fn grant(
     fx.stats.crossbar_traversals += 1;
     fx.stats.flit_hops += 1;
 
-    if flit.deliver_along_path {
+    if flit.along_path() {
         fx.stats.stream_deliveries += 1;
     }
 
     let in_port = Port::from_index(idx / vcs);
     let in_vc = idx % vcs;
     let here = band.routers[bi].coord;
-    if in_port != Port::Local && flit.src != here {
-        if let Some(up) = sh.topo.neighbor(here, in_port) {
+    if in_port != Port::Local && sh.packets.src(flit.pid) != here {
+        if let Some(up) = sh.fabric.neighbor(here, in_port) {
             fx.credit_refunds.push((sh.node_idx(up), in_port.opposite().index(), in_vc));
         }
     }
 
-    if flit.is_tail() || flit.packet_len == 1 {
+    if flit.is_tail() {
         band.routers[bi].release_out_vc(out_port, out_vc, vcs);
         let r = &mut band.routers[bi];
         r.inputs[idx].state = VcState::Idle;
@@ -629,14 +665,14 @@ fn grant(
         }
     }
 
-    if sh.is_memory_ejection(here, out_port, flit.dst) {
+    if sh.is_memory_ejection_flag(here, out_port, flit.mem_dst()) {
         eject(sh, fx, &flit);
         fx.flits_active_sub += 1;
     } else {
         if let Some(ct) = band.routers[bi].out_credits[out_port_i].as_mut() {
             ct.consume(out_vc);
         }
-        let nb = sh.topo.neighbor(here, out_port).expect("routed toward a missing neighbour");
+        let nb = sh.fabric.neighbor(here, out_port).expect("routed toward a missing neighbour");
         fx.stats.link_traversals += 1;
         fx.series_flits += 1;
         if let Some(p) = band.probes.as_mut() {
@@ -647,7 +683,7 @@ fn grant(
                 sh.cycle,
                 flit.is_head(),
                 flit.carried_payloads,
-                flit.deliver_along_path,
+                flit.along_path(),
             );
         }
         fx.arrivals_out.push(Arrival {
@@ -659,29 +695,32 @@ fn grant(
     }
 }
 
-/// Mirror of `Network::eject` (all sinks are counters, so it only
-/// touches `fx`).
-fn eject(sh: &Shared<'_>, fx: &mut Effects, flit: &Flit) {
+/// Mirror of `Network::eject` (all sinks are counters or the deferred
+/// release list, so it only touches `fx`).
+fn eject(sh: &Shared<'_>, fx: &mut Effects, flit: &CompactFlit) {
     fx.stats.flits_ejected += 1;
-    if flit.is_head() && flit.dst.x as usize >= sh.cols {
+    if flit.is_head() && flit.mem_dst() {
         fx.payloads_delivered += flit.carried_payloads as u64;
-        if flit.ptype == PacketType::Gather {
+        if flit.ptype() == PacketType::Gather {
             fx.gather_packets_ejected += 1;
         }
     }
-    if flit.is_tail() || flit.packet_len == 1 {
+    if flit.is_tail() {
         fx.stats.packets_ejected += 1;
-        let lat = sh.cycle.saturating_sub(flit.inject_cycle);
+        let lat = sh.cycle.saturating_sub(sh.packets.inject_cycle(flit.pid));
         fx.stats.total_packet_latency += lat;
         fx.stats.max_packet_latency = fx.stats.max_packet_latency.max(lat);
         fx.tail_ejected = true;
-        if flit.deliver_along_path {
+        if flit.along_path() {
             fx.stream_tails_ejected += 1;
         }
-        if flit.dst.x as usize >= sh.cols {
+        if flit.mem_dst() {
             fx.result_packets_ejected += 1;
         }
     }
+    // Mirror of the sequential per-flit `packets.release(pid, 1)` —
+    // deferred to the barrier, replayed in ascending band order.
+    fx.pid_releases.push((flit.pid, 1));
 }
 
 /// Mirror of `Network::merge_ina_requests`.
@@ -704,7 +743,7 @@ fn merge_ina_requests(
         let mut kept = 0usize;
         for j in 0..n_req {
             let idx = reqs[op][j];
-            match ina_complete_head(band, ridx, idx) {
+            match ina_complete_head(sh, band, ridx, idx) {
                 Some(key) => {
                     if let Some(k) = (0..nsurv).find(|&k| skeys[k] == key) {
                         absorb_ina_packet(sh, band, fx, ridx, idx, sidx[k]);
@@ -727,21 +766,26 @@ fn merge_ina_requests(
 }
 
 /// Mirror of `Network::ina_complete_head`.
-fn ina_complete_head(band: &Band<'_>, ridx: usize, idx: usize) -> Option<(u64, Coord)> {
+fn ina_complete_head(
+    sh: &Shared<'_>,
+    band: &Band<'_>,
+    ridx: usize,
+    idx: usize,
+) -> Option<(u64, Coord)> {
     let buf = &band.routers[band.r(ridx)].inputs[idx];
     let head = buf.front()?;
-    if head.ptype != PacketType::Ina || !head.is_head() {
+    if head.ptype() != PacketType::Ina || !head.is_head() {
         return None;
     }
-    let len = head.packet_len as usize;
+    let len = sh.packets.len(head.pid) as usize;
     let tail = buf.get(len - 1)?;
-    if tail.packet_id != head.packet_id {
+    if tail.pid != head.pid {
         return None;
     }
     if len > 1 && !tail.is_tail() {
         return None;
     }
-    Some((head.space, head.dst))
+    Some((sh.packets.space(head.pid), sh.packets.dst(head.pid)))
 }
 
 /// Mirror of `Network::absorb_ina_packet`.
@@ -758,7 +802,13 @@ fn absorb_ina_packet(
     let bi = band.r(ridx);
     let (pid, len, carried, words, absorbed_src) = {
         let f = band.routers[bi].inputs[absorbed].front().expect("absorbed VC empty");
-        (f.packet_id, f.packet_len as usize, f.carried_payloads, f.aspace, f.src)
+        (
+            f.pid,
+            sh.packets.len(f.pid) as usize,
+            f.carried_payloads,
+            f.aspace,
+            sh.packets.src(f.pid),
+        )
     };
     match band.routers[bi].inputs[absorbed].state {
         VcState::Active { out_port, out_vc } => {
@@ -768,17 +818,20 @@ fn absorb_ina_packet(
     }
     for _ in 0..len {
         let f = band.routers[bi].inputs[absorbed].pop().expect("absorbed packet truncated");
-        debug_assert_eq!(f.packet_id, pid, "absorbed a foreign flit");
+        debug_assert_eq!(f.pid, pid, "absorbed a foreign flit");
     }
     band.occupancy[bi] -= len as u32;
     fx.flits_active_sub += len as u64;
+    // Mirror of the sequential whole-packet `packets.release(pid, len)`
+    // — the mid-flight retire path, deferred to the barrier.
+    fx.pid_releases.push((pid, len as u32));
     fx.stats.buffer_reads += len as u64;
     fx.stats.ina_merges += 1;
     fx.stats.ina_adds += words as u64;
     let in_port = Port::from_index(absorbed / vcs);
     let here = band.routers[bi].coord;
     if in_port != Port::Local && absorbed_src != here {
-        if let Some(up) = sh.topo.neighbor(here, in_port) {
+        if let Some(up) = sh.fabric.neighbor(here, in_port) {
             let up_idx = sh.node_idx(up);
             for _ in 0..len {
                 fx.credit_refunds.push((up_idx, in_port.opposite().index(), absorbed % vcs));
@@ -797,7 +850,7 @@ fn absorb_ina_packet(
     }
     let head =
         band.routers[bi].inputs[survivor].front_mut().expect("survivor VC empty");
-    debug_assert!(head.is_head() && head.ptype == PacketType::Ina);
+    debug_assert!(head.is_head() && head.ptype() == PacketType::Ina);
     head.carried_payloads += carried;
     head.aspace = head.aspace.max(words);
 }
@@ -864,10 +917,12 @@ mod tests {
         fx.tail_ejected = true;
         fx.busy_injectors_add = 1;
         fx.series_flits = 5;
+        fx.pid_releases.push((7, 1));
         let cap = fx.wakes.capacity();
         fx.reset();
         assert_eq!(fx.stats, NetStats::default());
         assert!(fx.arrivals_out.is_empty() && fx.credit_refunds.is_empty() && fx.wakes.is_empty());
+        assert!(fx.pid_releases.is_empty());
         assert_eq!(
             (fx.flits_active_sub, fx.payloads_delivered, fx.busy_injectors_add, fx.series_flits),
             (0, 0, 0, 0)

@@ -30,6 +30,8 @@
 //! the *measured prefix* — the simulated rounds before extrapolation —
 //! exactly like `LayerRunResult::measured_net`.
 
+use std::borrow::Cow;
+
 use super::flit::Coord;
 use super::routing::Port;
 use super::topology::Topology;
@@ -131,12 +133,13 @@ impl LinkProbes {
         self.blocked[(ridx * Port::COUNT + port) * self.vcs + vc] += 1;
     }
 
-    /// Snapshot the counters into an owned [`ProbeReport`], resolving
-    /// link endpoints through `topo`. Only physical links are emitted:
+    /// Snapshot the counters into a [`ProbeReport`] that borrows the
+    /// utilization series where possible (see the comment on the series
+    /// reconciliation below), resolving link endpoints through `topo`. Only physical links are emitted:
     /// (router, port) pairs where the topology wires a neighbour — on the
     /// torus that includes every wrap link. `Port::Local` is never a
     /// link (local traffic ejects or is absorbed before `grant`).
-    pub fn report(&self, topo: &dyn Topology, cols: u16, rows: u16, cycles: u64) -> ProbeReport {
+    pub fn report(&self, topo: &dyn Topology, cols: u16, rows: u16, cycles: u64) -> ProbeReport<'_> {
         let mut links = Vec::new();
         let mut total_flits = 0u64;
         let mut total_payloads = 0u64;
@@ -183,11 +186,20 @@ impl LinkProbes {
         // and `series.len() × bucket_cycles` covers the final cycle. (The
         // lazy per-link bucket roll in `bucket_id`/`bucket_cur` needs no
         // equivalent fix: an empty bucket can never be the peak.)
-        let mut series = self.series.clone();
+        //
+        // Recording never extends the series past the bucket of the last
+        // traversal, so the already-full case borrows the live buffer
+        // instead of cloning it — a snapshot is then allocation-free in
+        // the series; callers that outlive the probes take
+        // [`ProbeReport::into_owned`].
         let want = cycles.div_ceil(BUCKET_CYCLES) as usize;
-        if series.len() < want {
-            series.resize(want, 0);
-        }
+        let series: Cow<'_, [u64]> = if self.series.len() >= want {
+            Cow::Borrowed(&self.series)
+        } else {
+            let mut s = self.series.clone();
+            s.resize(want, 0);
+            Cow::Owned(s)
+        };
         ProbeReport {
             cycles,
             bucket_cycles: BUCKET_CYCLES,
@@ -448,8 +460,13 @@ impl Bottleneck {
 /// The report derives `PartialEq` so determinism tests can require it to
 /// be bit-identical across repeated seeded runs and executor thread
 /// counts.
+///
+/// The utilization series borrows the probes' live buffer when no zero
+/// padding is needed (the common case — any traversal in the final
+/// bucket fills it); [`ProbeReport::into_owned`] detaches the snapshot
+/// for callers that outlive the network.
 #[derive(Debug, Clone, PartialEq)]
-pub struct ProbeReport {
+pub struct ProbeReport<'a> {
     /// Cycles in the observed window (the network's final cycle).
     pub cycles: u64,
     /// Width of one [`series`](Self::series) bucket ([`BUCKET_CYCLES`]).
@@ -458,7 +475,7 @@ pub struct ProbeReport {
     pub links: Vec<LinkRecord>,
     /// Network-wide link traversals per bucket (index `b` covers cycles
     /// `[b * bucket_cycles, (b+1) * bucket_cycles)`).
-    pub series: Vec<u64>,
+    pub series: Cow<'a, [u64]>,
     /// `Σ links flits` — equals the prefix `NetStats::link_traversals`.
     pub total_flits: u64,
     /// `Σ links payloads`.
@@ -467,7 +484,21 @@ pub struct ProbeReport {
     pub total_blocked_cycles: u64,
 }
 
-impl ProbeReport {
+impl ProbeReport<'_> {
+    /// Detach the snapshot from the probes it was taken from (clones the
+    /// series only when it is still borrowed).
+    pub fn into_owned(self) -> ProbeReport<'static> {
+        ProbeReport {
+            cycles: self.cycles,
+            bucket_cycles: self.bucket_cycles,
+            links: self.links,
+            series: Cow::Owned(self.series.into_owned()),
+            total_flits: self.total_flits,
+            total_payloads: self.total_payloads,
+            total_blocked_cycles: self.total_blocked_cycles,
+        }
+    }
+
     /// The highest per-link utilization, in [0, 1].
     pub fn max_utilization(&self) -> f64 {
         self.hottest().map(|l| l.utilization(self.cycles)).unwrap_or(0.0)

@@ -15,7 +15,7 @@
 //!   which is why gather boarding adds zero latency in [`super::network`].
 
 use super::buffer::{CreditTracker, VcBuffer, VcState};
-use super::flit::Coord;
+use super::flit::{Coord, Flit, FlitLike};
 use super::routing::Port;
 
 /// Per-VC pipeline bookkeeping (parallel array to the VC buffers).
@@ -33,12 +33,14 @@ impl Default for VcMeta {
     }
 }
 
-/// One router's complete state.
+/// One router's complete state, generic over the buffered flit
+/// representation exactly like [`VcBuffer`] (the wide [`Flit`] default
+/// keeps the frozen reference kernel compiling unchanged).
 #[derive(Debug)]
-pub struct RouterState {
+pub struct RouterState<F = Flit> {
     pub coord: Coord,
     /// Input VC buffers, indexed `port * vcs + vc`.
-    pub inputs: Vec<VcBuffer>,
+    pub inputs: Vec<VcBuffer<F>>,
     /// Pipeline metadata parallel to `inputs`.
     pub meta: Vec<VcMeta>,
     /// Credits we hold toward the downstream input port behind each of our
@@ -58,7 +60,7 @@ pub struct RouterState {
     pub nonempty_mask: u32,
 }
 
-impl RouterState {
+impl<F> RouterState<F> {
     pub fn new(coord: Coord, vcs: usize, depth: usize, neighbour_ports: &[bool; Port::COUNT]) -> Self {
         let n_in = Port::COUNT * vcs;
         RouterState {
@@ -132,7 +134,12 @@ impl RouterState {
 
 /// State transitions of an input VC when its front flit changes.
 /// Returns the new state given the (possibly new) front flit.
-pub fn refresh_vc_state(buf: &VcBuffer, meta: &mut VcMeta, cycle: u64, kappa: u64) -> VcState {
+pub fn refresh_vc_state<F: FlitLike>(
+    buf: &VcBuffer<F>,
+    meta: &mut VcMeta,
+    cycle: u64,
+    kappa: u64,
+) -> VcState {
     match buf.front() {
         None => VcState::Idle,
         Some(f) if f.is_head() => {

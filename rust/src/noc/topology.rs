@@ -203,6 +203,74 @@ pub fn worst_result_hops(cfg: &SimConfig) -> u64 {
     with_fabric(cfg, |t| t.worst_result_hops())
 }
 
+/// Enum-dispatched fabric for the kernel's per-flit hot path.
+///
+/// The VA stage calls `route` + `vc_class` for every occupied VC every
+/// cycle; through `Arc<dyn Topology>` those are two virtual calls per VC
+/// per cycle. `Fabric` closes the set to the three built-in fabrics so
+/// the match arms inline into the cycle phases. The `Arc<dyn Topology>`
+/// stays authoritative at construction and reporting surfaces — the
+/// kernel builds its `Fabric` from the same `SimConfig` the boxed fabric
+/// came from, so the two can never disagree on geometry.
+#[derive(Debug, Clone, Copy)]
+pub enum Fabric {
+    Mesh(Mesh2D),
+    Torus(Torus2D),
+    CMesh(ConcentratedMesh),
+}
+
+impl Fabric {
+    /// The config's fabric as a stack value (same selection as [`build`]).
+    pub fn from_config(cfg: &SimConfig) -> Fabric {
+        match cfg.topology {
+            TopologyKind::Mesh => Fabric::Mesh(Mesh2D::new(cfg.mesh_cols, cfg.mesh_rows)),
+            TopologyKind::Torus => Fabric::Torus(Torus2D::new(cfg.mesh_cols, cfg.mesh_rows)),
+            TopologyKind::CMesh => Fabric::CMesh(ConcentratedMesh::new(
+                cfg.mesh_cols,
+                cfg.mesh_rows,
+                cfg.pes_per_router,
+            )),
+        }
+    }
+
+    /// [`Topology::route`], statically dispatched.
+    #[inline]
+    pub fn route(&self, ptype: PacketType, here: Coord, dst: Coord) -> Port {
+        match self {
+            Fabric::Mesh(t) => t.route(ptype, here, dst),
+            Fabric::Torus(t) => t.route(ptype, here, dst),
+            Fabric::CMesh(t) => t.route(ptype, here, dst),
+        }
+    }
+
+    /// [`Topology::vc_class`], statically dispatched.
+    #[inline]
+    pub fn vc_class(
+        &self,
+        ptype: PacketType,
+        src: Coord,
+        here: Coord,
+        dst: Coord,
+        out: Port,
+    ) -> Option<usize> {
+        match self {
+            Fabric::Mesh(t) => t.vc_class(ptype, src, here, dst, out),
+            Fabric::Torus(t) => t.vc_class(ptype, src, here, dst, out),
+            Fabric::CMesh(t) => t.vc_class(ptype, src, here, dst, out),
+        }
+    }
+
+    /// [`Topology::neighbor`], statically dispatched.
+    #[inline]
+    pub fn neighbor(&self, node: Coord, port: Port) -> Option<Coord> {
+        match self {
+            Fabric::Mesh(t) => t.neighbor(node, port),
+            Fabric::Torus(t) => t.neighbor(node, port),
+            Fabric::CMesh(t) => t.neighbor(node, port),
+        }
+    }
+}
+
 /// [`Topology::bus_attachments`] of the config's fabric, allocation-free.
 pub fn bus_attachments(cfg: &SimConfig) -> BusAttachments {
     with_fabric(cfg, |t| t.bus_attachments())
@@ -602,6 +670,34 @@ mod tests {
             assert_eq!(worst_result_hops(&cfg), boxed.worst_result_hops(), "{kind:?}");
             assert_eq!(bus_attachments(&cfg), boxed.bus_attachments(), "{kind:?}");
             assert_eq!(with_fabric(&cfg, |t| t.kind()), kind);
+        }
+    }
+
+    #[test]
+    fn fabric_enum_agrees_with_the_boxed_fabric() {
+        for kind in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
+            let mut cfg = SimConfig::table1_8x8(2);
+            cfg.topology = kind;
+            let boxed = build(&cfg);
+            let fabric = Fabric::from_config(&cfg);
+            let mem = Coord::new(cfg.mesh_cols as u16, 0);
+            for ptype in [PacketType::Unicast, PacketType::Gather, PacketType::Multicast] {
+                for sx in 0..cfg.mesh_cols as u16 {
+                    for hx in 0..cfg.mesh_cols as u16 {
+                        let (src, here) = (Coord::new(sx, 1), Coord::new(hx, 1));
+                        for dst in [Coord::new(2, 5), mem] {
+                            let p = boxed.route(ptype, here, dst);
+                            assert_eq!(fabric.route(ptype, here, dst), p, "{kind:?}");
+                            assert_eq!(
+                                fabric.vc_class(ptype, src, here, dst, p),
+                                boxed.vc_class(ptype, src, here, dst, p),
+                                "{kind:?}"
+                            );
+                            assert_eq!(fabric.neighbor(here, p), boxed.neighbor(here, p));
+                        }
+                    }
+                }
+            }
         }
     }
 

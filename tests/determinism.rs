@@ -32,7 +32,7 @@ fn run_once(
     seed: u64,
     collection: Collection,
     probes: bool,
-) -> (NetStats, u64, u64, Option<ProbeReport>) {
+) -> (NetStats, u64, u64, Option<ProbeReport<'static>>) {
     run_once_with(seed, collection, probes, intra_workers_from_env())
 }
 
@@ -42,7 +42,7 @@ fn run_once_with(
     collection: Collection,
     probes: bool,
     intra_workers: usize,
-) -> (NetStats, u64, u64, Option<ProbeReport>) {
+) -> (NetStats, u64, u64, Option<ProbeReport<'static>>) {
     let mut rng = Rng::new(seed);
     let n = *rng.choose(&[1usize, 2, 4, 8]);
     let mut cfg = SimConfig::table1_8x8(n);
@@ -65,7 +65,7 @@ fn run_once_with(
     let ok = net.run_until_idle(2_000_000);
     assert!(ok, "workload failed to drain");
     assert_eq!(net.payloads_delivered, posted);
-    (net.stats.clone(), net.payloads_delivered, net.cycle, net.probe_report())
+    (net.stats.clone(), net.payloads_delivered, net.cycle, net.probe_report().map(|p| p.into_owned()))
 }
 
 #[test]

@@ -198,7 +198,7 @@ fn run_banded(
     mesh: usize,
     intra_workers: usize,
     gap: u64,
-) -> (Observed, Option<ProbeReport>) {
+) -> (Observed, Option<ProbeReport<'static>>) {
     let mut cfg = SimConfig::table1_8x8(4);
     cfg.mesh_cols = mesh;
     cfg.mesh_rows = mesh;
@@ -218,7 +218,7 @@ fn run_banded(
         net.run_until_idle(20_000_000),
         "{topology:?}/{collection:?} w{intra_workers}: workload stalled"
     );
-    (observe(&net), net.probe_report())
+    (observe(&net), net.probe_report().map(|p| p.into_owned()))
 }
 
 #[test]

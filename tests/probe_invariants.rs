@@ -317,7 +317,7 @@ fn ru_probe_totals_match_the_closed_form_exactly() {
 /// of the posted row initiate its own (full) gather packet — boarding is
 /// impossible, so the packet census is timing-independent and the east-
 /// most link `(M−2,y)→E` is *strictly* hottest in every δ regime.
-fn gather_hotspot(topology: TopologyKind) -> (SimConfig, ProbeReport, Network) {
+fn gather_hotspot(topology: TopologyKind) -> (SimConfig, ProbeReport<'static>, Network) {
     let mut cfg = SimConfig::table1_8x8(4);
     cfg.topology = topology;
     // Two-flit packets: the capacity closed form
@@ -342,7 +342,7 @@ fn gather_hotspot(topology: TopologyKind) -> (SimConfig, ProbeReport, Network) {
     }
     assert!(net.run_until_idle(1_000_000), "{topology:?} hotspot failed to drain");
     assert_eq!(net.payloads_delivered, cfg.mesh_cols as u64 * ppn as u64);
-    let p = net.probe_report().unwrap();
+    let p = net.probe_report().unwrap().into_owned();
     (cfg, p, net)
 }
 

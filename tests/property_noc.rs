@@ -200,6 +200,158 @@ fn prop_flit_conservation_holds_across_fast_forward_jumps() {
 }
 
 #[test]
+fn prop_packet_table_never_aliases_live_packets() {
+    // The compact-flit kernel interns packet-constant fields in a slab
+    // with free-list recycling (`noc::flit::PacketTable`). The bug class
+    // a free list can introduce is aliasing: a slot recycled while a
+    // stale flit still points at it. At every sampled cycle boundary —
+    // under gather boarding storms and INA mid-flight absorbs alike —
+    // every in-flight flit must reference a live slot with an in-range
+    // seq (`audit_packet_table` panics otherwise) and the census must
+    // reconcile: live == injected − ejected − merges.
+    check_cases(0xA11A5, 30, |rng, case| {
+        let cfg = random_cfg(rng);
+        let collection = random_collection(rng);
+        let mut net = Network::new(&cfg, collection);
+        let mut posted = 0u64;
+        for r in 0..rng.range(2, 4) {
+            for y in 0..cfg.mesh_rows {
+                for x in 0..cfg.mesh_cols {
+                    if rng.chance(0.7) {
+                        let p = rng.range(1, cfg.pes_per_router as u64) as u32;
+                        net.post_result(r * rng.range(5, 60), Coord::new(x as u16, y as u16), p);
+                        posted += p as u64;
+                    }
+                }
+            }
+        }
+        let mut horizon = 0u64;
+        for _ in 0..5 {
+            horizon += rng.range(20, 800);
+            net.run_until(|_| false, horizon);
+            assert_eq!(
+                net.packet_table().live(),
+                net.stats.packets_injected - net.stats.packets_ejected - net.stats.ina_merges,
+                "case {case}: packet-table census broken at cycle {} ({collection:?})",
+                net.cycle
+            );
+            net.audit_packet_table();
+        }
+        assert!(net.run_until_idle(2_000_000), "case {case}: failed to drain");
+        assert_eq!(net.payloads_delivered, posted, "case {case}: shortfall");
+        assert_eq!(net.packet_table().live(), 0, "case {case}: slots leaked after drain");
+        assert_eq!(
+            net.audit_packet_table(),
+            0,
+            "case {case}: flits still in flight after drain"
+        );
+        // The slab never outgrows the high-water mark of simultaneously
+        // live packets — capacity growth only happens with an empty free
+        // list, so capacity == peak_live is exact, not a bound.
+        assert_eq!(
+            net.packet_table().capacity() as u64,
+            net.packet_table().peak_live(),
+            "case {case}: slab grew past the live high-water mark"
+        );
+    });
+}
+
+#[test]
+fn prop_packet_table_occupancy_bounded_across_fast_forward_jumps() {
+    // Idle gaps of thousands of cycles force the calendar fast-forward
+    // between bursts; a retire lost or replayed across a jump (or a slot
+    // double-released at the band barrier) corrupts the census right
+    // after the jump — and each burst re-interns pids the previous burst
+    // retired, so the walk also proves recycled slots never collide with
+    // flits still draining.
+    check_cases(0x5AB0B5, 20, |rng, case| {
+        let cfg = random_cfg(rng);
+        let collection = random_collection(rng);
+        let mut net = Network::new(&cfg, collection);
+        let mut posted = 0u64;
+        let mut at = 0u64;
+        for _ in 0..rng.range(2, 5) {
+            at += rng.range(3_000, 40_000);
+            for y in 0..cfg.mesh_rows {
+                if rng.chance(0.6) {
+                    let x = rng.below(cfg.mesh_cols as u64) as u16;
+                    let p = rng.range(1, cfg.pes_per_router as u64) as u32;
+                    net.post_result(at, Coord::new(x, y as u16), p);
+                    posted += p as u64;
+                }
+            }
+            net.run_until(|_| false, at + rng.range(1, 2_000));
+            assert_eq!(
+                net.packet_table().live(),
+                net.stats.packets_injected - net.stats.packets_ejected - net.stats.ina_merges,
+                "case {case}: census broken across a jump at cycle {} ({collection:?})",
+                net.cycle
+            );
+            assert_eq!(
+                net.packet_table().capacity() as u64,
+                net.packet_table().peak_live(),
+                "case {case}: slab outgrew its live high-water mark across a jump"
+            );
+            net.audit_packet_table();
+        }
+        if posted == 0 {
+            net.post_result(at, Coord::new(0, 0), 1);
+            posted = 1;
+        }
+        assert!(net.run_until_idle(at + 2_000_000), "case {case}: failed to drain after jumps");
+        assert_eq!(net.payloads_delivered, posted, "case {case}: shortfall after jumps");
+        assert_eq!(net.packet_table().live(), 0, "case {case}: slots leaked after jumps");
+    });
+}
+
+#[test]
+fn ina_mid_flight_retires_recycle_slots_without_aliasing() {
+    // Collection pinned to INA regardless of `NOC_COLLECTION`: the
+    // switch-allocation merge path (`absorb_ina_packet`) retires whole
+    // packets *mid-flight*, the heaviest workout for free-list recycling.
+    // Widely separated full-grid bursts drain completely between rounds,
+    // so later bursts must re-intern the slots earlier bursts freed —
+    // the final capacity strictly undercutting the injection census is
+    // the proof that recycling actually happened.
+    let cfg = SimConfig::table1_8x8(8);
+    let mut net = Network::new(&cfg, Collection::Ina);
+    let mut posted = 0u64;
+    for r in 0..4u64 {
+        for y in 0..cfg.mesh_rows {
+            for x in 0..cfg.mesh_cols {
+                net.post_result(r * 5_000, Coord::new(x as u16, y as u16), 8);
+                posted += 8;
+            }
+        }
+    }
+    let mut horizon = 0u64;
+    loop {
+        horizon += 50;
+        let done = net.run_until(|n| n.payloads_delivered >= posted, horizon);
+        net.audit_packet_table();
+        assert_eq!(
+            net.packet_table().live(),
+            net.stats.packets_injected - net.stats.packets_ejected - net.stats.ina_merges,
+            "census broken at cycle {}",
+            net.cycle
+        );
+        if done {
+            break;
+        }
+        assert!(horizon < 2_000_000, "INA storm stalled at cycle {}", net.cycle);
+    }
+    assert!(net.run_until_idle(2_000_000), "INA storm failed to drain");
+    assert_eq!(net.payloads_delivered, posted);
+    assert_eq!(net.packet_table().live(), 0, "slots leaked after the storm");
+    assert!(
+        (net.packet_table().capacity() as u64) < net.stats.packets_injected,
+        "slab capacity {} never recycled across {} injected packets",
+        net.packet_table().capacity(),
+        net.stats.packets_injected
+    );
+}
+
+#[test]
 fn prop_probe_partition_reconciles_with_netstats() {
     // With probes on, the per-link observability counters are a strict
     // partition of the aggregates this suite already pins: link sums
