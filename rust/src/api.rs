@@ -49,6 +49,7 @@ use crate::coordinator::executor::{NetworkExecutor, NetworkRunReport};
 use crate::coordinator::experiment::LayerReport;
 use crate::dataflow::{driver::run_layer_with_fabric, LayerRunResult};
 use crate::models::{ConvLayer, Network as Model};
+use crate::noc::faults::FaultsConfig;
 use crate::noc::topology::{self, Topology};
 use crate::plan::NetworkPlan;
 use crate::power::power_report;
@@ -87,6 +88,7 @@ pub struct ScenarioBuilder {
     trace_driven: Option<bool>,
     probes: Option<bool>,
     ws_rf_words: Option<u32>,
+    faults: Option<FaultsConfig>,
     tweaks: Vec<ConfigTweak>,
 }
 
@@ -115,6 +117,7 @@ impl ScenarioBuilder {
             trace_driven: None,
             probes: None,
             ws_rf_words: None,
+            faults: None,
             tweaks: Vec::new(),
         }
     }
@@ -224,6 +227,16 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Deterministic fault-injection plan ([`crate::noc::faults`]): link
+    /// and router faults, transient windows, per-flit corruption with
+    /// bounded retransmission. Off by default — an unset plan leaves the
+    /// kernel bit-identical to the fault-free build. The plan is
+    /// validated against the final fabric at `build()`.
+    pub fn faults(mut self, f: FaultsConfig) -> Self {
+        self.faults = Some(f);
+        self
+    }
+
     /// Escape hatch for knobs without a dedicated setter; applied after
     /// every named setter, still subject to `build()` validation.
     pub fn configure(mut self, f: impl FnOnce(&mut SimConfig) + 'static) -> Self {
@@ -308,6 +321,9 @@ impl ScenarioBuilder {
         }
         if let Some(w) = self.ws_rf_words {
             cfg.ws_rf_words = w;
+        }
+        if let Some(f) = self.faults {
+            cfg.faults = Some(f);
         }
         for tweak in self.tweaks {
             tweak(&mut cfg);
@@ -441,6 +457,19 @@ mod tests {
         assert!(off.run.probes.is_none());
         assert_eq!(on.run.net, off.run.net);
         assert_eq!(on.run.total_cycles, off.run.total_cycles);
+    }
+
+    #[test]
+    fn faults_setter_installs_a_validated_plan() {
+        let f = FaultsConfig::parse("seed=7,corrupt=0.01").unwrap();
+        let s = ScenarioBuilder::new().faults(f.clone()).build().unwrap();
+        assert_eq!(s.config().faults.as_ref(), Some(&f));
+        // Out-of-grid fault coordinates are a typed error at build().
+        let bad = FaultsConfig::parse("links=99:0:E").unwrap();
+        assert!(matches!(
+            ScenarioBuilder::new().faults(bad).build(),
+            Err(ConfigError::Invalid { what: "faults", .. })
+        ));
     }
 
     #[test]

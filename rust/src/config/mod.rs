@@ -4,6 +4,7 @@
 //! mesh size (8×8 / 16×16), PEs per router (1/2/4/8), gather packet size
 //! (3/5/9/17 flits), timeout `δ`, and the collection/streaming mode.
 
+use crate::noc::faults::FaultsConfig;
 use crate::util::json::Json;
 
 mod error;
@@ -255,6 +256,18 @@ pub struct SimConfig {
     /// default: the probe-off hot path carries no probe state at all and
     /// is bit-identical to the unprobed kernel.
     pub probes: bool,
+    /// Deterministic fault injection ([`crate::noc::faults`]): permanent
+    /// and transient link faults, router hard-faults, per-flit corruption
+    /// with link-level retransmission, fault-aware rerouting and graceful
+    /// gather degradation. `None` (the default) takes none of those paths
+    /// and is bit-identical to the fault-free kernel.
+    pub faults: Option<FaultsConfig>,
+    /// Hard cap on simulated cycles for any single `run_until` /
+    /// `run_until_idle` call: the kernel returns a typed
+    /// `RunOutcome::CycleCapExceeded` instead of spinning CI forever.
+    /// The default is generous (10^9 cycles); callers' own bounds still
+    /// apply on top (the effective limit is the minimum of the two).
+    pub max_cycles: u64,
     /// Clock frequency in Hz (power reporting only).
     pub clock_hz: f64,
 }
@@ -305,6 +318,8 @@ impl SimConfig {
             threads: 0,
             intra_workers: 1,
             probes: false,
+            faults: None,
+            max_cycles: 1_000_000_000,
             clock_hz: 1.0e9,
         }
     }
@@ -406,6 +421,12 @@ impl SimConfig {
                 "torus wraparound needs >= 2 rows (a 1-row ring self-loops)",
             )?;
         }
+        check(self.max_cycles >= 1, "max_cycles", "the cycle cap must be at least one cycle")?;
+        if let Some(f) = &self.faults {
+            // Coordinate bounds and link existence depend on the concrete
+            // fabric (torus edge links wrap; a mesh's don't).
+            crate::noc::topology::with_fabric(self, |topo| f.validate(topo))?;
+        }
         Ok(())
     }
 
@@ -438,7 +459,11 @@ impl SimConfig {
             .set("threads", Json::Num(self.threads as f64))
             .set("intra_workers", Json::Num(self.intra_workers as f64))
             .set("probes", Json::Bool(self.probes))
+            .set("max_cycles", Json::Num(self.max_cycles as f64))
             .set("clock_hz", Json::Num(self.clock_hz));
+        if let Some(f) = &self.faults {
+            j.set("faults", f.to_json());
+        }
         j.to_pretty()
     }
 
@@ -496,6 +521,12 @@ impl SimConfig {
             threads: us("threads", d.threads),
             intra_workers: us("intra_workers", d.intra_workers),
             probes: j.get("probes").and_then(Json::as_bool).unwrap_or(d.probes),
+            // Configs written before the fault subsystem stay fault-free.
+            faults: match j.get("faults") {
+                Some(v) => Some(FaultsConfig::from_json(v)?),
+                None => None,
+            },
+            max_cycles: u("max_cycles", d.max_cycles),
             clock_hz: j.get("clock_hz").and_then(Json::as_f64).unwrap_or(d.clock_hz),
         };
         cfg.validate()?;
@@ -723,6 +754,37 @@ mod tests {
         let legacy = SimConfig::from_json("{}").unwrap();
         assert!(!legacy.probes);
         assert!(!SimConfig::table1_8x8(1).probes);
+    }
+
+    #[test]
+    fn faults_roundtrip_through_json_and_default_off() {
+        let mut c = SimConfig::table1_8x8(4);
+        c.faults =
+            Some(FaultsConfig::parse("seed=5,rate=0.02,links=3:3:E,corrupt=0.001").unwrap());
+        let d = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, d);
+        // Configs written before the fault subsystem stay fault-free.
+        let legacy = SimConfig::from_json("{}").unwrap();
+        assert!(legacy.faults.is_none());
+        assert!(SimConfig::table1_8x8(1).faults.is_none());
+        // A fault plan naming a link outside the grid is a typed validate
+        // error surfaced by from_json, not a panic.
+        let mut bad = SimConfig::table1_8x8(1);
+        bad.faults = Some(FaultsConfig::parse("links=99:0:E").unwrap());
+        assert!(matches!(bad.validate(), Err(ConfigError::Invalid { what: "faults", .. })));
+        assert!(SimConfig::from_json(&bad.to_json()).is_err());
+    }
+
+    #[test]
+    fn max_cycles_roundtrips_and_rejects_zero() {
+        let mut c = SimConfig::table1_8x8(2);
+        c.max_cycles = 123_456;
+        let d = SimConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(d.max_cycles, 123_456);
+        let legacy = SimConfig::from_json("{}").unwrap();
+        assert_eq!(legacy.max_cycles, 1_000_000_000);
+        c.max_cycles = 0;
+        assert!(matches!(c.validate(), Err(ConfigError::Invalid { what: "max_cycles", .. })));
     }
 
     #[test]

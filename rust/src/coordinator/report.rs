@@ -1,6 +1,7 @@
 //! Report formatting: aligned text tables (what the paper's figures plot)
 //! and JSON for downstream tooling.
 
+use crate::noc::faults::DegradationReport;
 use crate::noc::probes::ProbeReport;
 use crate::util::json::Json;
 
@@ -341,26 +342,37 @@ pub fn probe_heatmap_text(layer: &str, p: &ProbeReport) -> String {
     out
 }
 
+/// One `noc-dnn analyze` layer: the probe snapshot plus the fault
+/// degradation accounting (present iff the run was configured with
+/// `--faults` / `SimConfig::faults`).
+#[derive(Debug, Clone)]
+pub struct AnalyzedLayer {
+    pub name: String,
+    pub probes: ProbeReport<'static>,
+    pub degraded: Option<DegradationReport>,
+}
+
 /// Bottleneck-attribution table (`noc-dnn analyze`): per layer, the link
-/// that bounds the run, its dominant traffic stage, utilization, busiest
-/// VC and credit-blocked cycles.
-pub fn bottleneck_table_text(layers: &[(String, ProbeReport)]) -> String {
+/// that bounds the run, its dominant traffic stage (retransmission-heavy
+/// links attribute to their own class), utilization, busiest VC and
+/// credit-blocked cycles.
+pub fn bottleneck_table_text(layers: &[AnalyzedLayer]) -> String {
     let data: Vec<Vec<String>> = layers
         .iter()
-        .map(|(name, p)| match p.bottleneck() {
+        .map(|l| match l.probes.bottleneck() {
             Some(b) => vec![
-                name.clone(),
-                p.cycles.to_string(),
+                l.name.clone(),
+                l.probes.cycles.to_string(),
                 b.label(),
                 b.stage.label().to_string(),
                 f2(100.0 * b.utilization),
                 b.vc.to_string(),
                 b.blocked_cycles.to_string(),
-                p.total_flits.to_string(),
+                l.probes.total_flits.to_string(),
             ],
             None => vec![
-                name.clone(),
-                p.cycles.to_string(),
+                l.name.clone(),
+                l.probes.cycles.to_string(),
                 "-".to_string(),
                 "-".to_string(),
                 "0.00".to_string(),
@@ -376,9 +388,54 @@ pub fn bottleneck_table_text(layers: &[(String, ProbeReport)]) -> String {
     )
 }
 
+/// Fault-degradation table (`noc-dnn analyze` under `--faults`): the
+/// per-layer `DegradationReport` counters. Empty when no layer carried a
+/// fault plan, so fault-free output is unchanged.
+pub fn degradation_table_text(layers: &[AnalyzedLayer]) -> String {
+    let with: Vec<(&str, &DegradationReport)> = layers
+        .iter()
+        .filter_map(|l| l.degraded.as_ref().map(|d| (l.name.as_str(), d)))
+        .collect();
+    if with.is_empty() {
+        return String::new();
+    }
+    let data: Vec<Vec<String>> = with
+        .iter()
+        .map(|(name, d)| {
+            vec![
+                name.to_string(),
+                d.flits_corrupted.to_string(),
+                d.retransmissions.to_string(),
+                d.retries_exhausted.to_string(),
+                d.packets_dropped.to_string(),
+                d.payloads_dropped.to_string(),
+                d.missing_contributors.to_string(),
+                d.detour_hops.to_string(),
+                format!("{}/{}", d.streams_truncated, d.streams_dropped),
+            ]
+        })
+        .collect();
+    let mut out = "fault degradation (measured prefix):\n".to_string();
+    out.push_str(&table(
+        &[
+            "layer",
+            "corrupt",
+            "retx",
+            "exhaust",
+            "pkt drop",
+            "payload drop",
+            "missing",
+            "detours",
+            "trunc/drop",
+        ],
+        &data,
+    ));
+    out
+}
+
 /// `noc-dnn analyze --json`: per-layer probe snapshots (links, series,
-/// bottleneck attribution) under the model header.
-pub fn analyze_json(model: &str, layers: &[(String, ProbeReport)]) -> Json {
+/// bottleneck attribution, fault degradation) under the model header.
+pub fn analyze_json(model: &str, layers: &[AnalyzedLayer]) -> Json {
     let mut o = Json::obj();
     o.set("model", Json::Str(model.to_string()));
     o.set(
@@ -386,10 +443,13 @@ pub fn analyze_json(model: &str, layers: &[(String, ProbeReport)]) -> Json {
         Json::Arr(
             layers
                 .iter()
-                .map(|(name, p)| {
-                    let mut l = p.to_json();
-                    l.set("layer", Json::Str(name.clone()));
-                    l
+                .map(|l| {
+                    let mut j = l.probes.to_json();
+                    j.set("layer", Json::Str(l.name.clone()));
+                    if let Some(d) = &l.degraded {
+                        j.set("degraded", d.to_json());
+                    }
+                    j
                 })
                 .collect(),
         ),
@@ -531,10 +591,17 @@ mod tests {
         assert!(hm.contains("3.0E"), "hot-cell percent+direction missing:\n{hm}");
         assert!(hm.contains("·"), "idle routers marked:\n{hm}");
         assert!(hm.contains("(0,1)->E(1,1)"), "top-links table missing:\n{hm}");
-        let bt = bottleneck_table_text(&[("conv1".to_string(), p.clone())]);
+        let analyzed = [AnalyzedLayer {
+            name: "conv1".to_string(),
+            probes: p.clone().into_owned(),
+            degraded: None,
+        }];
+        let bt = bottleneck_table_text(&analyzed);
         assert!(bt.contains("(0,1)->E(1,1)"), "bottleneck link missing:\n{bt}");
         assert!(bt.contains("collection"), "stage missing:\n{bt}");
-        let j = analyze_json("alexnet", &[("conv1".to_string(), p)]);
+        // Fault-free analyze output carries no degradation section.
+        assert!(degradation_table_text(&analyzed).is_empty());
+        let j = analyze_json("alexnet", &analyzed);
         assert_eq!(j.get("model").unwrap().as_str(), Some("alexnet"));
         let layers = j.get("layers").unwrap().as_arr().unwrap();
         assert_eq!(layers[0].get("layer").unwrap().as_str(), Some("conv1"));
@@ -543,6 +610,31 @@ mod tests {
             Some("collection")
         );
         assert!(layers[0].get("links").unwrap().as_arr().unwrap().len() >= 8);
+        assert!(layers[0].get("degraded").is_none());
+    }
+
+    #[test]
+    fn degraded_layers_render_the_fault_table_and_json() {
+        use crate::noc::probes::LinkProbes;
+        use crate::noc::topology::Mesh2D;
+        let p = LinkProbes::new(4, 2).report(&Mesh2D::new(2, 2), 2, 2, 10);
+        let analyzed = [AnalyzedLayer {
+            name: "conv1".to_string(),
+            probes: p.into_owned(),
+            degraded: Some(DegradationReport {
+                flits_corrupted: 7,
+                retransmissions: 5,
+                payloads_dropped: 3,
+                ..Default::default()
+            }),
+        }];
+        let t = degradation_table_text(&analyzed);
+        assert!(t.contains("fault degradation"), "header missing:\n{t}");
+        assert!(t.contains("conv1") && t.contains("7") && t.contains("5"), "counters:\n{t}");
+        let j = analyze_json("alexnet", &analyzed);
+        let d = j.get("layers").unwrap().as_arr().unwrap()[0].get("degraded").unwrap();
+        assert_eq!(d.get("flits_corrupted").unwrap().as_u64(), Some(7));
+        assert_eq!(d.get("payloads_dropped").unwrap().as_u64(), Some(3));
     }
 
     #[test]
@@ -550,7 +642,11 @@ mod tests {
         use crate::noc::probes::LinkProbes;
         use crate::noc::topology::Mesh2D;
         let p = LinkProbes::new(4, 2).report(&Mesh2D::new(2, 2), 2, 2, 10);
-        let t = bottleneck_table_text(&[("idle".to_string(), p)]);
+        let t = bottleneck_table_text(&[AnalyzedLayer {
+            name: "idle".to_string(),
+            probes: p.into_owned(),
+            degraded: None,
+        }]);
         assert!(t.contains("idle"));
         assert!(t.contains("-"), "idle layers render placeholders:\n{t}");
     }

@@ -35,7 +35,8 @@ use std::sync::Arc;
 
 use crate::config::{Collection, SimConfig, Streaming};
 use crate::models::ConvLayer;
-use crate::noc::network::{Network, StreamEdge};
+use crate::noc::faults::DegradationReport;
+use crate::noc::network::{Network, RunOutcome, StreamEdge};
 use crate::noc::probes::ProbeReport;
 use crate::noc::stats::{BusStats, NetStats};
 use crate::noc::topology::{self, Topology};
@@ -72,6 +73,12 @@ pub struct LayerRunResult {
     /// it is *not* extrapolated: `probes.total_flits` reconciles with
     /// `measured_net.link_traversals` bit-exactly.
     pub probes: Option<ProbeReport<'static>>,
+    /// Fault-injection degradation accounting for the simulated prefix —
+    /// present iff `cfg.faults` was configured (a clean report, with
+    /// [`DegradationReport::is_clean`] true, means the plan injected no
+    /// observable loss). Like [`probes`](Self::probes) it is *not*
+    /// extrapolated.
+    pub degraded: Option<DegradationReport>,
 }
 
 impl LayerRunResult {
@@ -204,6 +211,7 @@ fn extrapolate(
         bus: bus_per_round.scaled(rounds as f64),
         measured_net: outcome.net,
         probes: None,
+        degraded: None,
     }
 }
 
@@ -248,12 +256,18 @@ fn run_bus_layer(
     for r in 0..sim_rounds {
         post_round(&mut net, cfg, ready, payloads_per_node);
         let target = (r + 1) * per_round;
-        let ok = net.run_until(|n| n.payloads_delivered >= target, bound);
+        // Fault tolerance: payloads lost to the fault plan (dropped
+        // packets, excluded contributors) count toward round completion —
+        // a degraded round still finishes, it just delivers less.
+        let outcome = net
+            .run_until_outcome(|n| n.payloads_delivered + n.payloads_dropped >= target, bound);
         assert!(
-            ok,
-            "round {r} did not complete by cycle {bound} (deadlock or \
-             mis-sized gather capacity): delivered {} of {target}",
-            net.payloads_delivered
+            outcome == RunOutcome::Satisfied,
+            "round {r} did not complete by cycle {bound} ({}): delivered {} \
+             (+{} dropped) of {target}",
+            outcome.describe(),
+            net.payloads_delivered,
+            net.payloads_dropped
         );
         let done = net.cycle;
         completions.push(done);
@@ -277,6 +291,7 @@ fn run_bus_layer(
     result.bus.merge(&mapping.setup_bus_stats(cfg, streaming));
     apply_accumulation_counts(&mut result, cfg, mapping);
     result.probes = net.probe_report().map(|p| p.into_owned());
+    result.degraded = net.degradation_report();
     result
 }
 
@@ -331,9 +346,21 @@ fn run_mesh_layer(
         // Wait for this round's operand delivery (tails eject at the far
         // edge) — possibly already reached while draining collections.
         let target_tails = (r + 1) * streams_per_round;
-        let ok = net.run_until(|n| n.stream_tails_ejected >= target_tails, bound);
-        assert!(ok, "round {r}: operand streams stalled (delivered {} of {target_tails} tails)",
-            net.stream_tails_ejected);
+        // Streams clamped short of the far edge still eject their tail at
+        // the clamped destination; streams dropped whole (entry router
+        // down, head retry exhaustion) are credited via `streams_dropped`.
+        let outcome = net.run_until_outcome(
+            |n| n.stream_tails_ejected + n.streams_dropped >= target_tails,
+            bound,
+        );
+        assert!(
+            outcome == RunOutcome::Satisfied,
+            "round {r}: operand streams stalled ({}): delivered {} (+{} dropped) \
+             of {target_tails} tails",
+            outcome.describe(),
+            net.stream_tails_ejected,
+            net.streams_dropped
+        );
         let stream_end = net.cycle;
         // Next round's streams enter immediately (the PEs hold this round's
         // operands in their register files); collection of this round then
@@ -344,9 +371,15 @@ fn run_mesh_layer(
         post_round(&mut net, cfg, stream_end + cfg.t_mac, payloads_per_node);
 
         let target = (r + 1) * per_round;
-        let ok = net.run_until(|n| n.payloads_delivered >= target, bound);
-        assert!(ok, "round {r}: collection stalled ({} of {target} payloads)",
-            net.payloads_delivered);
+        let outcome = net
+            .run_until_outcome(|n| n.payloads_delivered + n.payloads_dropped >= target, bound);
+        assert!(
+            outcome == RunOutcome::Satisfied,
+            "round {r}: collection stalled ({}): {} (+{} dropped) of {target} payloads",
+            outcome.describe(),
+            net.payloads_delivered,
+            net.payloads_dropped
+        );
         completions.push(net.cycle);
     }
 
@@ -370,6 +403,7 @@ fn run_mesh_layer(
     result.net.merge(&mapping.setup_net_stats(cfg, Streaming::Mesh));
     apply_accumulation_counts(&mut result, cfg, mapping);
     result.probes = net.probe_report().map(|p| p.into_owned());
+    result.degraded = net.degradation_report();
     result
 }
 

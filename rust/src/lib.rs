@@ -141,6 +141,8 @@ pub mod prelude {
     pub use crate::coordinator::Experiment;
     pub use crate::dataflow::run_layer;
     pub use crate::models::{alexnet, ConvLayer, Network};
+    pub use crate::noc::faults::{DegradationReport, FaultsConfig};
+    pub use crate::noc::network::{RunOutcome, StallReport};
     pub use crate::noc::probes::{Bottleneck, BottleneckStage, LinkRecord, ProbeReport};
     pub use crate::noc::topology::Topology;
     pub use crate::plan::{LayerPolicy, NetworkPlan};

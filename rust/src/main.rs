@@ -43,6 +43,8 @@ const VALUED: &[&str] = &[
     "plan",
     "delta",
     "layer",
+    "faults",
+    "max-cycles",
 ];
 const BOOLEAN: &[&str] = &["json", "show", "help"];
 
@@ -83,6 +85,7 @@ USAGE:
               [--topology mesh|torus|cmesh]
               [--streaming mesh|one-way|two-way] [--collection ru|gather|ina]
               [--dataflow os|ws] [--rounds-cap K] [--delta D] [--layer NAME]
+              [--faults SPEC|file.json] [--max-cycles N]
   noc-dnn model --model <alexnet|vgg16|resnet-lite>
                 [--plan uniform|best|<file.json>] [--mesh N] [--n N]
                 [--topology T] [--streaming MODE] [--collection C]
@@ -91,7 +94,8 @@ USAGE:
                   [--json]
   noc-dnn analyze [--model <alexnet|vgg16|resnet-lite>] [--layer NAME]
                   [--mesh N] [--n N] [--topology T] [--streaming MODE]
-                  [--collection C] [--dataflow D] [--rounds-cap K] [--json]
+                  [--collection C] [--dataflow D] [--rounds-cap K]
+                  [--faults SPEC|file.json] [--json]
   noc-dnn overhead
   noc-dnn config --show [--mesh N] [--n N] [--topology T] [--dataflow os|ws]
                  [--collection ru|gather|ina] [--threads T]
@@ -119,6 +123,19 @@ FLAGS:
                      rejects the triple flags, which it would ignore); a
                      path loads a custom JSON plan (one policy per layer)
   --threads T        worker threads for the layer fan-out (0 = auto)
+  --faults SPEC      deterministic fault injection: an inline spec
+                     ('seed=7,rate=0.02,links=3:2:E,routers=5:5,
+                     transient=1:1:E:100:400,corrupt=0.001,retries=4,
+                     holdoff=8') or a path to a *.json fault plan.
+                     Permanently faulted links/routers are routed around
+                     (XY over the healthy subgraph), corrupted flits are
+                     retransmitted under the retry budget, and gather/INA
+                     degrade gracefully — analyze/run report the
+                     DegradationReport. Unset = fault-free, bit-identical
+                     to the unfaulted kernel
+  --max-cycles N     hard cap on simulated cycles per run_until call; a
+                     wedged run returns a typed outcome instead of
+                     spinning forever
   --intra-workers W  band workers inside each simulation (the
                      deterministic intra-layer parallel kernel; 1 =
                      sequential, results bit-identical at any count; the
@@ -135,6 +152,9 @@ per-link observability probes on and reports where the fabric saturates:
 a bottleneck-attribution table (which link/VC/stage bounds each layer)
 and a link-utilization heatmap per layer; --json emits the full
 per-directed-link counters and the cycle-bucketed utilization series.
+Under --faults, analyze also prints the per-layer fault-degradation
+table (corrupted/retransmitted/dropped counts, missing gather
+contributors, detour hops) and --json carries it as 'degraded'.
 "
 }
 
@@ -169,7 +189,31 @@ fn scenario_from(args: &Args) -> Result<noc_dnn::api::Scenario> {
     if args.get("delta").is_some() {
         b = b.delta(args.get_parsed("delta", 0)?);
     }
+    if let Some(spec) = args.get("faults") {
+        b = b.faults(faults_from(spec)?);
+    }
+    if args.get("max-cycles").is_some() {
+        let cap: u64 = args.get_parsed("max-cycles", 0)?;
+        b = b.configure(move |c| c.max_cycles = cap);
+    }
     Ok(b.build()?)
+}
+
+/// `--faults` accepts either an inline spec string
+/// (`seed=7,rate=0.02,corrupt=0.001`) or a path to a JSON file in the
+/// `FaultsConfig::to_json` shape; the plan itself is validated against
+/// the final fabric by `ScenarioBuilder::build`.
+fn faults_from(spec: &str) -> Result<noc_dnn::noc::FaultsConfig> {
+    use noc_dnn::noc::FaultsConfig;
+    if spec.ends_with(".json") {
+        let text = std::fs::read_to_string(spec)
+            .map_err(|e| anyhow::anyhow!("cannot read fault plan '{spec}': {e}"))?;
+        let j = noc_dnn::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("fault plan '{spec}': {e}"))?;
+        Ok(FaultsConfig::from_json(&j)?)
+    } else {
+        Ok(FaultsConfig::parse(spec)?)
+    }
 }
 
 fn cfg_from(args: &Args) -> Result<SimConfig> {
@@ -388,12 +432,15 @@ fn analyze(args: &Args) -> Result<()> {
         layers.retain(|l| l.name == name);
         anyhow::ensure!(!layers.is_empty(), "no layer named '{name}'");
     }
-    let analyzed: Vec<(String, noc_dnn::noc::ProbeReport)> = layers
+    let analyzed: Vec<report::AnalyzedLayer> = layers
         .iter()
         .map(|l| {
             let run = scenario.run_raw(l);
-            let probes = run.probes.expect("probes were forced on for analyze");
-            (l.name.to_string(), probes)
+            report::AnalyzedLayer {
+                name: l.name.to_string(),
+                probes: run.probes.expect("probes were forced on for analyze"),
+                degraded: run.degraded,
+            }
         })
         .collect();
     if args.get_bool("json") {
@@ -415,9 +462,14 @@ fn analyze(args: &Args) -> Result<()> {
     );
     println!("bottleneck attribution (per layer):");
     print!("{}", report::bottleneck_table_text(&analyzed));
-    for (name, p) in &analyzed {
+    let degradation = report::degradation_table_text(&analyzed);
+    if !degradation.is_empty() {
         println!();
-        print!("{}", report::probe_heatmap_text(name, p));
+        print!("{degradation}");
+    }
+    for l in &analyzed {
+        println!();
+        print!("{}", report::probe_heatmap_text(&l.name, &l.probes));
     }
     Ok(())
 }

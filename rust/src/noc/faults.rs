@@ -1,0 +1,1043 @@
+//! Deterministic fault injection: link/router faults, flit corruption,
+//! and the retransmission machinery that keeps the kernel's conservation
+//! invariants intact while packets are being damaged.
+//!
+//! The subsystem is **off by default** ([`crate::config::SimConfig::faults`]
+//! is `None`) and, like the probe layer, strictly additive: with no plan
+//! configured the kernel takes none of these paths and stays bit-identical
+//! to the fault-free simulator. With a plan configured every decision —
+//! which links fail, which flits corrupt, how long a retry holds off — is
+//! a pure function of the plan seed and the flit's identity, so two runs
+//! (at any `intra_workers` count) agree bit for bit.
+//!
+//! Three layers:
+//!
+//! * [`FaultsConfig`] — the user-facing, validated description (spec
+//!   string / JSON / builder), stored on `SimConfig`.
+//! * [`FaultPlan`] — the compiled form: dense link/router masks, sorted
+//!   transient windows keyed by receiver-side link id, and (when any
+//!   topology fault exists) BFS next-hop tables that route *around* the
+//!   fault region, falling back to the fabric's own deterministic route
+//!   whenever that route is still minimal over the healthy subgraph.
+//! * [`FaultState`] — mutable runtime state owned by the network: the
+//!   per-link retransmission queues, the poison set of packets being
+//!   dropped, and the degradation counters that feed
+//!   [`DegradationReport`].
+//!
+//! Corruption is detected at the *delivery point* (the arrival side of a
+//! link), which is sequential in both kernels: the corrupted flit is held
+//! in the sender-modelled retransmission slot (keeping the downstream
+//! buffer credit it already consumed, so replay can never overflow the
+//! buffer) and replayed after an exponential hold-off. Head flits carry
+//! the retry budget: a head that exhausts it poisons its packet, and every
+//! other flit of that packet is dropped — with its credit refunded — at
+//! whatever link it next arrives on. Wormhole order makes this safe: the
+//! head crosses every link first, so nothing of the packet exists beyond
+//! the failing link.
+
+use std::collections::VecDeque;
+
+use crate::config::ConfigError;
+use crate::util::json::Json;
+
+use super::flit::{CompactFlit, Coord, PacketType};
+use super::routing::Port;
+use super::topology::Topology;
+
+/// Router ports that carry inter-router links (everything but `Local`).
+const LINK_PORTS: [Port; 4] = [Port::North, Port::South, Port::East, Port::West];
+const PORTS: usize = Port::COUNT;
+
+// ---------------------------------------------------------------------------
+// User-facing configuration
+// ---------------------------------------------------------------------------
+
+/// A transient link fault: the directed link out of `(x, y)` through
+/// `port` is down for cycles `start..end` (arrivals in the window are held
+/// at the receiver and replayed at `end`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransientFault {
+    pub x: u16,
+    pub y: u16,
+    pub port: Port,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// Declarative fault schedule, attached to
+/// [`crate::config::SimConfig::faults`]. Parsed from a compact spec string
+/// (CLI `--faults`) or a JSON object, validated against the topology by
+/// [`crate::config::SimConfig::validate`].
+///
+/// Spec grammar — comma-separated `key=value` pairs:
+///
+/// ```text
+/// seed=7,rate=0.02,links=3:2:E;4:4:N,routers=5:5,
+/// transient=1:1:E:100:400,corrupt=0.001,retries=4,holdoff=8
+/// ```
+///
+/// `rate` draws permanent directed-link faults Bernoulli(`rate`) per link
+/// from `seed`; `links`/`routers` add explicit permanent faults;
+/// `transient` (repeatable via `;`) adds windows; `corrupt` is the
+/// per-flit per-link-traversal corruption probability; `retries` bounds
+/// head-flit replays; `holdoff` is the base replay delay (doubled per
+/// attempt).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultsConfig {
+    /// Seed for the random link draw and the corruption hash.
+    pub seed: u64,
+    /// Permanent directed-link fault probability, `[0, 1)`.
+    pub link_rate: f64,
+    /// Explicit permanent directed link faults (sender coord, out port).
+    pub links: Vec<(u16, u16, Port)>,
+    /// Routers that are hard-down from cycle 0.
+    pub routers: Vec<(u16, u16)>,
+    /// Transient link-down windows.
+    pub transients: Vec<TransientFault>,
+    /// Per-flit corruption probability per link traversal, `[0, 1)`.
+    pub corrupt: f64,
+    /// Replay budget for a head flit before its packet is dropped (≥ 1).
+    pub retries: u32,
+    /// Base hold-off in cycles before a corrupted flit replays.
+    pub holdoff: u64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            seed: 1,
+            link_rate: 0.0,
+            links: Vec::new(),
+            routers: Vec::new(),
+            transients: Vec::new(),
+            corrupt: 0.0,
+            retries: 3,
+            holdoff: 4,
+        }
+    }
+}
+
+const WHAT: &str = "faults";
+
+fn parse_port(s: &str) -> Result<Port, ConfigError> {
+    match s {
+        "N" | "n" => Ok(Port::North),
+        "S" | "s" => Ok(Port::South),
+        "E" | "e" => Ok(Port::East),
+        "W" | "w" => Ok(Port::West),
+        other => Err(ConfigError::UnknownKeyword {
+            what: "fault link direction",
+            got: other.to_string(),
+            expected: "N | S | E | W",
+        }),
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(s: &str, field: &str) -> Result<T, ConfigError> {
+    s.parse::<T>()
+        .map_err(|_| ConfigError::invalid(WHAT, format!("{field}: cannot parse '{s}'")))
+}
+
+fn parse_coord(s: &str, field: &str) -> Result<(u16, u16), ConfigError> {
+    let mut it = s.split(':');
+    let x = parse_num(it.next().unwrap_or(""), field)?;
+    let y = parse_num(
+        it.next().ok_or_else(|| ConfigError::invalid(WHAT, format!("{field}: expected x:y, got '{s}'")))?,
+        field,
+    )?;
+    if it.next().is_some() {
+        return Err(ConfigError::invalid(WHAT, format!("{field}: expected x:y, got '{s}'")));
+    }
+    Ok((x, y))
+}
+
+fn parse_link(s: &str) -> Result<(u16, u16, Port), ConfigError> {
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.len() != 3 {
+        return Err(ConfigError::invalid(WHAT, format!("links: expected x:y:dir, got '{s}'")));
+    }
+    Ok((parse_num(parts[0], "links")?, parse_num(parts[1], "links")?, parse_port(parts[2])?))
+}
+
+fn parse_transient(s: &str) -> Result<TransientFault, ConfigError> {
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.len() != 5 {
+        return Err(ConfigError::invalid(
+            WHAT,
+            format!("transient: expected x:y:dir:start:end, got '{s}'"),
+        ));
+    }
+    Ok(TransientFault {
+        x: parse_num(parts[0], "transient")?,
+        y: parse_num(parts[1], "transient")?,
+        port: parse_port(parts[2])?,
+        start: parse_num(parts[3], "transient")?,
+        end: parse_num(parts[4], "transient")?,
+    })
+}
+
+impl FaultsConfig {
+    /// Parse the compact `key=value,...` spec string (the CLI form).
+    pub fn parse(spec: &str) -> Result<FaultsConfig, ConfigError> {
+        let mut f = FaultsConfig::default();
+        for pair in spec.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (key, val) = pair.split_once('=').ok_or_else(|| {
+                ConfigError::invalid(WHAT, format!("expected key=value, got '{pair}'"))
+            })?;
+            match key {
+                "seed" => f.seed = parse_num(val, "seed")?,
+                "rate" => f.link_rate = parse_num(val, "rate")?,
+                "corrupt" => f.corrupt = parse_num(val, "corrupt")?,
+                "retries" => f.retries = parse_num(val, "retries")?,
+                "holdoff" => f.holdoff = parse_num(val, "holdoff")?,
+                "links" => {
+                    for item in val.split(';').filter(|s| !s.is_empty()) {
+                        f.links.push(parse_link(item)?);
+                    }
+                }
+                "routers" => {
+                    for item in val.split(';').filter(|s| !s.is_empty()) {
+                        f.routers.push(parse_coord(item, "routers")?);
+                    }
+                }
+                "transient" => {
+                    for item in val.split(';').filter(|s| !s.is_empty()) {
+                        f.transients.push(parse_transient(item)?);
+                    }
+                }
+                other => {
+                    return Err(ConfigError::UnknownKeyword {
+                        what: "faults key",
+                        got: other.to_string(),
+                        expected: "seed | rate | links | routers | transient | corrupt | retries | holdoff",
+                    })
+                }
+            }
+        }
+        Ok(f)
+    }
+
+    /// Parse the JSON object form (`--faults plan.json`); field names
+    /// mirror the spec keys, with `links`/`routers`/`transients` as
+    /// arrays of the same `:`-separated fragments.
+    pub fn from_json(j: &Json) -> Result<FaultsConfig, ConfigError> {
+        let bad = |reason: String| ConfigError::Json { what: "faults", reason };
+        if !matches!(j, Json::Obj(_)) {
+            return Err(bad("expected an object".into()));
+        }
+        let mut f = FaultsConfig::default();
+        if let Some(v) = j.get("seed") {
+            f.seed = v.as_u64().ok_or_else(|| bad("seed must be a number".into()))?;
+        }
+        if let Some(v) = j.get("rate") {
+            f.link_rate = v.as_f64().ok_or_else(|| bad("rate must be a number".into()))?;
+        }
+        if let Some(v) = j.get("corrupt") {
+            f.corrupt = v.as_f64().ok_or_else(|| bad("corrupt must be a number".into()))?;
+        }
+        if let Some(v) = j.get("retries") {
+            f.retries = v.as_u64().ok_or_else(|| bad("retries must be a number".into()))? as u32;
+        }
+        if let Some(v) = j.get("holdoff") {
+            f.holdoff = v.as_u64().ok_or_else(|| bad("holdoff must be a number".into()))?;
+        }
+        let strs = |v: &Json, field: &str| -> Result<Vec<String>, ConfigError> {
+            v.as_arr()
+                .ok_or_else(|| bad(format!("{field} must be an array of strings")))?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| bad(format!("{field} must be an array of strings")))
+                })
+                .collect()
+        };
+        if let Some(v) = j.get("links") {
+            for s in strs(v, "links")? {
+                f.links.push(parse_link(&s)?);
+            }
+        }
+        if let Some(v) = j.get("routers") {
+            for s in strs(v, "routers")? {
+                f.routers.push(parse_coord(&s, "routers")?);
+            }
+        }
+        if let Some(v) = j.get("transients") {
+            for s in strs(v, "transients")? {
+                f.transients.push(parse_transient(&s)?);
+            }
+        }
+        Ok(f)
+    }
+
+    /// Serialize back to the JSON object form (round-trips `from_json`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seed", Json::Num(self.seed as f64))
+            .set("rate", Json::Num(self.link_rate))
+            .set("corrupt", Json::Num(self.corrupt))
+            .set("retries", Json::Num(self.retries as f64))
+            .set("holdoff", Json::Num(self.holdoff as f64))
+            .set(
+                "links",
+                Json::Arr(
+                    self.links
+                        .iter()
+                        .map(|&(x, y, p)| Json::Str(format!("{x}:{y}:{}", port_letter(p))))
+                        .collect(),
+                ),
+            )
+            .set(
+                "routers",
+                Json::Arr(self.routers.iter().map(|&(x, y)| Json::Str(format!("{x}:{y}"))).collect()),
+            )
+            .set(
+                "transients",
+                Json::Arr(
+                    self.transients
+                        .iter()
+                        .map(|t| {
+                            Json::Str(format!(
+                                "{}:{}:{}:{}:{}",
+                                t.x,
+                                t.y,
+                                port_letter(t.port),
+                                t.start,
+                                t.end
+                            ))
+                        })
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    /// Validate against the concrete fabric: probability ranges, retry
+    /// budget, coordinate bounds, and — for explicit link/transient
+    /// faults — that the named directed link actually has a receiving
+    /// router (edge links toward the row memories cannot fault).
+    pub fn validate(&self, topo: &dyn Topology) -> Result<(), ConfigError> {
+        let check = |cond: bool, reason: String| -> Result<(), ConfigError> {
+            if cond {
+                Ok(())
+            } else {
+                Err(ConfigError::Invalid { what: WHAT, reason })
+            }
+        };
+        check(
+            (0.0..1.0).contains(&self.link_rate),
+            format!("rate must be in [0, 1), got {}", self.link_rate),
+        )?;
+        check(
+            (0.0..1.0).contains(&self.corrupt),
+            format!("corrupt must be in [0, 1), got {}", self.corrupt),
+        )?;
+        check(self.retries >= 1, format!("retries must be >= 1, got {}", self.retries))?;
+        let (cols, rows) = topo.dims();
+        let in_grid = |x: u16, y: u16| (x as usize) < cols && (y as usize) < rows;
+        for &(x, y) in &self.routers {
+            check(in_grid(x, y), format!("router {x}:{y} outside the {cols}x{rows} grid"))?;
+        }
+        let link_ok = |x: u16, y: u16, p: Port| -> Result<(), ConfigError> {
+            check(in_grid(x, y), format!("link {x}:{y} outside the {cols}x{rows} grid"))?;
+            check(
+                topo.neighbor(Coord::new(x, y), p).is_some(),
+                format!("link {x}:{y}:{} has no receiving router on this topology", port_letter(p)),
+            )
+        };
+        for &(x, y, p) in &self.links {
+            link_ok(x, y, p)?;
+        }
+        for t in &self.transients {
+            link_ok(t.x, t.y, t.port)?;
+            check(
+                t.start < t.end,
+                format!("transient window [{}, {}) is empty", t.start, t.end),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+fn port_letter(p: Port) -> char {
+    match p {
+        Port::North => 'N',
+        Port::South => 'S',
+        Port::East => 'E',
+        Port::West => 'W',
+        Port::Local => 'L',
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic hashing
+// ---------------------------------------------------------------------------
+
+/// SplitMix64 finalizer — the deterministic coin for link draws and
+/// corruption rolls.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn hash_words(seed: u64, words: &[u64]) -> u64 {
+    let mut h = splitmix(seed);
+    for &w in words {
+        h = splitmix(h ^ w);
+    }
+    h
+}
+
+/// Convert a probability in `[0, 1)` to a 64-bit comparison threshold.
+fn threshold(p: f64) -> u64 {
+    (p * 18_446_744_073_709_551_616.0) as u64
+}
+
+// ---------------------------------------------------------------------------
+// Compiled plan
+// ---------------------------------------------------------------------------
+
+/// The compiled, immutable fault schedule the kernel consults on its hot
+/// paths. Built once per network from a validated [`FaultsConfig`].
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub cols: usize,
+    pub rows: usize,
+    /// Sender-side permanent link faults: `ridx * PORTS + out_port`.
+    pub link_down: Vec<bool>,
+    /// Receiver-side mirror of `link_down`: `ridx * PORTS + in_port`.
+    pub link_dead_recv: Vec<bool>,
+    /// Hard-down routers by node index.
+    pub router_down: Vec<bool>,
+    /// Transient windows keyed by receiver-side link id, sorted by link.
+    pub transients: Vec<(usize, u64, u64)>,
+    /// Corruption threshold (`corrupt` probability as a u64 compare).
+    pub corrupt_threshold: u64,
+    pub retry_budget: u32,
+    pub holdoff_base: u64,
+    pub seed: u64,
+    /// True when any link or router is permanently down — the routing
+    /// override and stream clamping are consulted only then.
+    pub reroutes: bool,
+    /// `next_hop[dst_key * n + ridx]`: the healthy-subgraph minimal next
+    /// hop from router `ridx` toward `dst_key` (`None` = unreachable).
+    /// Empty unless `reroutes`. Keys: node index for router
+    /// destinations, `cols*rows + y` for the row-`y` memory element.
+    next_hop: Vec<Option<Port>>,
+}
+
+impl FaultPlan {
+    /// Compile a validated config against the concrete fabric.
+    pub fn build(cfg: &FaultsConfig, topo: &dyn Topology) -> FaultPlan {
+        let (cols, rows) = topo.dims();
+        let n = cols * rows;
+        let mut link_down = vec![false; n * PORTS];
+        let mut router_down = vec![false; n];
+        let node = |x: u16, y: u16| y as usize * cols + x as usize;
+        for &(x, y) in &cfg.routers {
+            router_down[node(x, y)] = true;
+        }
+        for &(x, y, p) in &cfg.links {
+            link_down[node(x, y) * PORTS + p.index()] = true;
+        }
+        // Seed-derived random permanent faults: one deterministic coin
+        // per existing directed link, independent of the explicit list.
+        if cfg.link_rate > 0.0 {
+            let th = threshold(cfg.link_rate);
+            for ridx in 0..n {
+                let c = Coord::new((ridx % cols) as u16, (ridx / cols) as u16);
+                for p in LINK_PORTS {
+                    if topo.neighbor(c, p).is_none() {
+                        continue;
+                    }
+                    if hash_words(cfg.seed, &[0x11, ridx as u64, p.index() as u64]) < th {
+                        link_down[ridx * PORTS + p.index()] = true;
+                    }
+                }
+            }
+        }
+        // Receiver-side mirror for the arrival filter.
+        let mut link_dead_recv = vec![false; n * PORTS];
+        for ridx in 0..n {
+            let c = Coord::new((ridx % cols) as u16, (ridx / cols) as u16);
+            for p in LINK_PORTS {
+                if !link_down[ridx * PORTS + p.index()] {
+                    continue;
+                }
+                if let Some(nb) = topo.neighbor(c, p) {
+                    let nb_idx = nb.y as usize * cols + nb.x as usize;
+                    link_dead_recv[nb_idx * PORTS + p.opposite().index()] = true;
+                }
+            }
+        }
+        let mut transients: Vec<(usize, u64, u64)> = cfg
+            .transients
+            .iter()
+            .map(|t| {
+                let nb = topo
+                    .neighbor(Coord::new(t.x, t.y), t.port)
+                    .expect("validated transient link lost its neighbor");
+                let nb_idx = nb.y as usize * cols + nb.x as usize;
+                (nb_idx * PORTS + t.port.opposite().index(), t.start, t.end)
+            })
+            .collect();
+        transients.sort_unstable();
+        let reroutes = link_down.iter().any(|&d| d) || router_down.iter().any(|&d| d);
+        let mut plan = FaultPlan {
+            cols,
+            rows,
+            link_down,
+            link_dead_recv,
+            router_down,
+            transients,
+            corrupt_threshold: threshold(cfg.corrupt),
+            retry_budget: cfg.retries,
+            holdoff_base: cfg.holdoff.max(1),
+            seed: cfg.seed,
+            reroutes,
+            next_hop: Vec::new(),
+        };
+        if reroutes {
+            plan.build_tables(topo);
+        }
+        plan
+    }
+
+    fn n(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    /// Destination key for the next-hop table: node index for router
+    /// coordinates, `n + y` for the row-`y` memory element east of the
+    /// grid.
+    pub fn dst_key(&self, dst: Coord) -> usize {
+        if (dst.x as usize) < self.cols {
+            dst.y as usize * self.cols + dst.x as usize
+        } else {
+            self.n() + dst.y as usize
+        }
+    }
+
+    /// Healthy-subgraph next hop from router `ridx` toward `dst`.
+    /// `None` when `dst` is unreachable over healthy links. Only
+    /// meaningful when [`FaultPlan::reroutes`]; callers gate on it.
+    pub fn route(&self, ridx: usize, dst: Coord) -> Option<Port> {
+        self.next_hop[self.dst_key(dst) * self.n() + ridx]
+    }
+
+    /// Whether the memory element (or router) `dst` can be reached from
+    /// router `ridx` at all. Always true when no topology fault exists.
+    pub fn reachable(&self, ridx: usize, dst: Coord) -> bool {
+        !self.reroutes || self.route(ridx, dst).is_some()
+    }
+
+    /// Whether `link` (receiver-side id) is inside a transient-down
+    /// window at `cycle`; returns the window end for the replay deadline.
+    pub fn transient_until(&self, link: usize, cycle: u64) -> Option<u64> {
+        let start = self.transients.partition_point(|&(l, _, _)| l < link);
+        self.transients[start..]
+            .iter()
+            .take_while(|&&(l, _, _)| l == link)
+            .find(|&&(_, s, e)| s <= cycle && cycle < e)
+            .map(|&(_, _, e)| e)
+    }
+
+    /// Deterministic corruption roll for one delivery attempt of one flit
+    /// (identified by `pid`/`seq`) over one directed link.
+    pub fn corrupts(&self, pid: u32, seq: u32, link: usize, attempt: u32) -> bool {
+        if self.corrupt_threshold == 0 {
+            return false;
+        }
+        hash_words(self.seed, &[0x22, pid as u64, seq as u64, link as u64, attempt as u64])
+            < self.corrupt_threshold
+    }
+
+    /// Exponential hold-off before replay `attempt` (1-based).
+    pub fn holdoff(&self, attempt: u32) -> u64 {
+        let shift = (attempt.saturating_sub(1)).min(20);
+        self.holdoff_base.saturating_mul(1u64 << shift)
+    }
+
+    /// BFS next-hop tables over the healthy subgraph, one per
+    /// destination key, reverse-BFS from the destination so every entry
+    /// is minimal. Tie-break: the fabric's own preferred route when it is
+    /// minimal (zero-fault tables therefore reproduce XY / ring-minimal
+    /// exactly), else the lowest port index — both independent of
+    /// traversal order, so the tables are deterministic.
+    fn build_tables(&mut self, topo: &dyn Topology) {
+        let (cols, rows) = (self.cols, self.rows);
+        let n = self.n();
+        let keys = n + rows;
+        self.next_hop = vec![None; keys * n];
+        let coord = |ridx: usize| Coord::new((ridx % cols) as u16, (ridx / cols) as u16);
+        let mut dist = vec![u32::MAX; n];
+        let mut queue = VecDeque::new();
+        for key in 0..keys {
+            dist.iter_mut().for_each(|d| *d = u32::MAX);
+            queue.clear();
+            // A memory-bound flit granted East from the last column ejects
+            // at that row's memory: for memory keys the east-edge links
+            // out of column cols-1 must not appear as graph edges (a torus
+            // wrap there would be hijacked by the ejection check), and the
+            // sole sink is the dst row's edge router with the fabric's own
+            // exit port.
+            let mem = key >= n;
+            let (dst_coord, exit_ridx) = if mem {
+                let y = (key - n) as u16;
+                (Coord::new(cols as u16, y), (y as usize) * cols + (cols - 1))
+            } else {
+                (coord(key), key)
+            };
+            if self.router_down[exit_ridx] {
+                continue; // destination itself is gone: all-None column
+            }
+            let exit_port = if mem {
+                topo.route(PacketType::Unicast, coord(exit_ridx), dst_coord)
+            } else {
+                Port::Local
+            };
+            dist[exit_ridx] = 0;
+            self.next_hop[key * n + exit_ridx] = Some(exit_port);
+            queue.push_back(exit_ridx);
+            let edge_ok = |u: usize, p: Port| -> bool {
+                !self.router_down[u]
+                    && !self.link_down[u * PORTS + p.index()]
+                    && !(mem && p == Port::East && u % cols == cols - 1)
+            };
+            while let Some(v) = queue.pop_front() {
+                let vd = dist[v];
+                for p in LINK_PORTS {
+                    let Some(uc) = topo.neighbor(coord(v), p) else { continue };
+                    let u = uc.y as usize * cols + uc.x as usize;
+                    // The edge u -> v runs through u's opposite port.
+                    let q = p.opposite();
+                    debug_assert_eq!(topo.neighbor(uc, q), Some(coord(v)));
+                    if dist[u] != u32::MAX || !edge_ok(u, q) {
+                        continue;
+                    }
+                    dist[u] = vd + 1;
+                    queue.push_back(u);
+                }
+            }
+            for u in 0..n {
+                if u == exit_ridx || dist[u] == u32::MAX {
+                    continue;
+                }
+                let uc = coord(u);
+                let minimal = |p: Port| -> bool {
+                    if !edge_ok(u, p) {
+                        return false;
+                    }
+                    match topo.neighbor(uc, p) {
+                        Some(vc) => {
+                            let v = vc.y as usize * cols + vc.x as usize;
+                            dist[v] != u32::MAX && dist[v] + 1 == dist[u]
+                        }
+                        None => false,
+                    }
+                };
+                let preferred = topo.route(PacketType::Unicast, uc, dst_coord);
+                let hop = if preferred != Port::Local && minimal(preferred) {
+                    Some(preferred)
+                } else {
+                    LINK_PORTS.into_iter().find(|&p| minimal(p))
+                };
+                debug_assert!(hop.is_some(), "BFS-reached router without a minimal hop");
+                self.next_hop[key * n + u] = hop;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime state
+// ---------------------------------------------------------------------------
+
+/// One flit parked in a link's retransmission slot: the arrival it will
+/// re-present, the replay attempt count, and the cycle it becomes due.
+/// Held flits keep the downstream buffer credit they consumed, so replay
+/// can never overflow the buffer.
+#[derive(Debug, Clone)]
+pub struct RetxEntry {
+    pub router: u32,
+    pub port: Port,
+    pub vc: u8,
+    pub flit: CompactFlit,
+    pub attempt: u32,
+    pub due: u64,
+}
+
+/// Mutable fault-machinery state owned by the network. All mutation
+/// happens on the owner thread (the arrival filter and the post paths),
+/// which is what keeps the sequential and band-parallel kernels
+/// bit-identical.
+#[derive(Debug)]
+pub struct FaultState {
+    pub plan: FaultPlan,
+    /// Per receiver-side link FIFO of held flits (`ridx * PORTS + port`).
+    pub retx: Vec<VecDeque<RetxEntry>>,
+    /// Sorted ids of links with a non-empty retx queue (ascending pump
+    /// order = deterministic replay order).
+    pub active_links: Vec<usize>,
+    /// Sorted pids of packets being dropped flit-by-flit.
+    pub poisoned: Vec<u32>,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> FaultState {
+        let links = plan.n() * PORTS;
+        FaultState { plan, retx: (0..links).map(|_| VecDeque::new()).collect(), active_links: Vec::new(), poisoned: Vec::new() }
+    }
+
+    pub fn mark_active(&mut self, link: usize) {
+        if let Err(i) = self.active_links.binary_search(&link) {
+            self.active_links.insert(i, link);
+        }
+    }
+
+    pub fn mark_idle(&mut self, link: usize) {
+        if let Ok(i) = self.active_links.binary_search(&link) {
+            self.active_links.remove(i);
+        }
+    }
+
+    pub fn poison(&mut self, pid: u32) {
+        if let Err(i) = self.poisoned.binary_search(&pid) {
+            self.poisoned.insert(i, pid);
+        }
+    }
+
+    pub fn unpoison(&mut self, pid: u32) {
+        if let Ok(i) = self.poisoned.binary_search(&pid) {
+            self.poisoned.remove(i);
+        }
+    }
+
+    pub fn is_poisoned(&self, pid: u32) -> bool {
+        self.poisoned.binary_search(&pid).is_ok()
+    }
+
+    /// Any flit parked in a retransmission slot (they stay counted in
+    /// `flits_active`, so quiescence — and idle fast-forward — waits for
+    /// them).
+    pub fn holding(&self) -> bool {
+        !self.active_links.is_empty()
+    }
+
+    /// True when some held flit is legitimately waiting for a future
+    /// cycle (hold-off or transient window) — the watchdog defers to it.
+    pub fn pending_future_replay(&self, cycle: u64) -> bool {
+        self.active_links
+            .iter()
+            .any(|&l| self.retx[l].front().is_some_and(|e| e.due > cycle))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Degradation report
+// ---------------------------------------------------------------------------
+
+/// What the fault subsystem cost a run: the census shortfall, every drop
+/// class, and the rerouting/retransmission overhead. Attached to
+/// [`crate::dataflow::LayerRunResult::degraded`] whenever faults are
+/// configured (even if every counter is zero).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DegradationReport {
+    /// Contributors excluded from the gather/INA census (router down or
+    /// memory unreachable at post time).
+    pub missing_contributors: u64,
+    /// Result payloads that never reached memory (post-time exclusions
+    /// plus retry-exhausted packet drops).
+    pub payloads_dropped: u64,
+    /// Packets poisoned after a head flit exhausted its retry budget.
+    pub packets_dropped: u64,
+    /// Individual flits discarded (poisoned packets, dead-link arrivals).
+    pub flits_dropped: u64,
+    /// Delivery attempts that failed the corruption roll.
+    pub flits_corrupted: u64,
+    /// Replays performed from retransmission slots.
+    pub retransmissions: u64,
+    /// Head flits whose packet was dropped after the retry budget.
+    pub retries_exhausted: u64,
+    /// Extra hops taken relative to the fabric's fault-free route.
+    pub detour_hops: u64,
+    /// Operand streams clamped short of their full path by a fault.
+    pub streams_truncated: u64,
+    /// Operand streams dropped whole (entry router down or head lost).
+    pub streams_dropped: u64,
+}
+
+impl DegradationReport {
+    /// No fault ever bit: the run was degradation-free.
+    pub fn is_clean(&self) -> bool {
+        *self == DegradationReport::default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("missing_contributors", Json::Num(self.missing_contributors as f64))
+            .set("payloads_dropped", Json::Num(self.payloads_dropped as f64))
+            .set("packets_dropped", Json::Num(self.packets_dropped as f64))
+            .set("flits_dropped", Json::Num(self.flits_dropped as f64))
+            .set("flits_corrupted", Json::Num(self.flits_corrupted as f64))
+            .set("retransmissions", Json::Num(self.retransmissions as f64))
+            .set("retries_exhausted", Json::Num(self.retries_exhausted as f64))
+            .set("detour_hops", Json::Num(self.detour_hops as f64))
+            .set("streams_truncated", Json::Num(self.streams_truncated as f64))
+            .set("streams_dropped", Json::Num(self.streams_dropped as f64));
+        j
+    }
+
+    /// One-line human summary for reports and the analyze command.
+    pub fn summary(&self) -> String {
+        if self.is_clean() {
+            return "faults enabled, no degradation".to_string();
+        }
+        format!(
+            "missing contributors {}, payloads dropped {}, packets dropped {}, \
+             corrupted {}, retransmitted {}, retries exhausted {}, detour hops {}, \
+             streams truncated {} / dropped {}",
+            self.missing_contributors,
+            self.payloads_dropped,
+            self.packets_dropped,
+            self.flits_corrupted,
+            self.retransmissions,
+            self.retries_exhausted,
+            self.detour_hops,
+            self.streams_truncated,
+            self.streams_dropped,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::topology::{Mesh2D, Torus2D};
+
+    #[test]
+    fn spec_string_parses_every_key() {
+        let f = FaultsConfig::parse(
+            "seed=7,rate=0.25,links=3:2:E;4:4:N,routers=5:5,transient=1:1:E:100:400,\
+             corrupt=0.001,retries=4,holdoff=8",
+        )
+        .unwrap();
+        assert_eq!(f.seed, 7);
+        assert_eq!(f.link_rate, 0.25);
+        assert_eq!(f.links, vec![(3, 2, Port::East), (4, 4, Port::North)]);
+        assert_eq!(f.routers, vec![(5, 5)]);
+        assert_eq!(f.transients.len(), 1);
+        assert_eq!(f.transients[0].port, Port::East);
+        assert_eq!((f.transients[0].start, f.transients[0].end), (100, 400));
+        assert_eq!(f.corrupt, 0.001);
+        assert_eq!(f.retries, 4);
+        assert_eq!(f.holdoff, 8);
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_errors() {
+        assert!(matches!(
+            FaultsConfig::parse("bogus=1"),
+            Err(ConfigError::UnknownKeyword { what: "faults key", .. })
+        ));
+        assert!(matches!(
+            FaultsConfig::parse("links=1:2:Q"),
+            Err(ConfigError::UnknownKeyword { what: "fault link direction", .. })
+        ));
+        assert!(FaultsConfig::parse("rate=notanumber").is_err());
+        assert!(FaultsConfig::parse("transient=1:1:E:9").is_err());
+        assert!(FaultsConfig::parse("seed").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let f = FaultsConfig::parse(
+            "seed=9,rate=0.1,links=0:0:E,routers=2:2,transient=1:0:S:5:50,corrupt=0.01",
+        )
+        .unwrap();
+        let back = FaultsConfig::from_json(&f.to_json()).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_and_edge_links() {
+        let topo = Mesh2D::new(8, 8);
+        let ok = FaultsConfig::parse("links=3:3:E,routers=7:7").unwrap();
+        assert!(ok.validate(&topo).is_ok());
+        // North out of row 0 has no receiver on a mesh...
+        let bad = FaultsConfig::parse("links=3:0:N").unwrap();
+        assert!(bad.validate(&topo).is_err());
+        // ...but does on a torus.
+        assert!(bad.validate(&Torus2D::new(8, 8)).is_ok());
+        // East out of the last column is the memory link: never faultable.
+        let mem = FaultsConfig::parse("links=7:3:E").unwrap();
+        assert!(mem.validate(&topo).is_err());
+        assert!(FaultsConfig::parse("routers=8:0").unwrap().validate(&topo).is_err());
+        assert!(FaultsConfig::parse("rate=1.5").unwrap().validate(&topo).is_err());
+        assert!(FaultsConfig::parse("retries=0").unwrap().validate(&topo).is_err());
+        assert!(FaultsConfig::parse("transient=1:1:E:9:9").unwrap().validate(&topo).is_err());
+    }
+
+    #[test]
+    fn zero_fault_tables_reproduce_the_fabric_route() {
+        // With reroutes forced on but nothing actually down, every table
+        // entry must equal the fabric's own deterministic route — the
+        // detour logic is a strict superset of XY.
+        let topo = Mesh2D::new(6, 6);
+        let mut cfg = FaultsConfig::default();
+        cfg.links.push((2, 2, Port::East)); // make reroutes true...
+        let mut plan = FaultPlan::build(&cfg, &topo);
+        // ...then heal it and rebuild the tables over the full graph.
+        plan.link_down.iter_mut().for_each(|d| *d = false);
+        plan.link_dead_recv.iter_mut().for_each(|d| *d = false);
+        plan.build_tables(&topo);
+        for y in 0..6u16 {
+            let mem = Coord::new(6, y);
+            for ridx in 0..36 {
+                let here = Coord::new((ridx % 6) as u16, (ridx / 6) as u16);
+                if here.x == 5 && here.y != y {
+                    // Last-column routers on the wrong row: the fabric
+                    // would say East, but granting East there ejects into
+                    // the *wrong* row's memory, so the table deliberately
+                    // jogs toward the dst row instead. Real fault-free
+                    // traffic never routes mem row y through here.
+                    continue;
+                }
+                let want = topo.route(PacketType::Unicast, here, mem);
+                assert_eq!(plan.route(ridx, mem), Some(want), "router {here:?} -> mem row {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn tables_detour_around_a_dead_link_and_mark_unreachable() {
+        let topo = Mesh2D::new(4, 4);
+        // Kill the East link out of every router in column 2 at every row:
+        // column 3 (and memory) stays reachable only... no — row paths can
+        // jog through other rows? Also dead: that's all E links at x=2, so
+        // reaching x=3 is impossible and memory keys must go None west of
+        // the cut while column 3 itself stays fine.
+        let cfg = FaultsConfig::parse("links=2:0:E;2:1:E;2:2:E;2:3:E").unwrap();
+        cfg.validate(&topo).unwrap();
+        let plan = FaultPlan::build(&cfg, &topo);
+        assert!(plan.reroutes);
+        let mem0 = Coord::new(4, 0);
+        assert!(plan.route(0, mem0).is_none(), "memory unreachable across the cut");
+        assert!(!plan.reachable(0, mem0));
+        let east_ridx = 3; // (3, 0): east of the cut
+        assert_eq!(plan.route(east_ridx, mem0), Some(Port::East));
+        // A single dead link detours instead.
+        let cfg = FaultsConfig::parse("links=1:1:E").unwrap();
+        let plan = FaultPlan::build(&cfg, &topo);
+        let mem1 = Coord::new(4, 1);
+        let at_cut = 1 * 4 + 1; // (1,1)
+        let hop = plan.route(at_cut, mem1).unwrap();
+        assert!(hop == Port::North || hop == Port::South, "must jog around the dead link");
+        // Every healthy router still reaches its memory row.
+        for ridx in 0..16 {
+            assert!(plan.reachable(ridx, Coord::new(4, (ridx / 4) as u16)));
+        }
+    }
+
+    #[test]
+    fn router_fault_excludes_itself_and_random_rate_is_deterministic() {
+        let topo = Mesh2D::new(4, 4);
+        let cfg = FaultsConfig::parse("routers=1:1").unwrap();
+        let plan = FaultPlan::build(&cfg, &topo);
+        let down = 1 * 4 + 1;
+        // No destination is reachable *from* the dead router, and no
+        // table routes *through* it.
+        assert!(plan.route(down, Coord::new(4, 1)).is_none());
+        for ridx in 0..16 {
+            if ridx == down {
+                continue;
+            }
+            for y in 0..4u16 {
+                let mem = Coord::new(4, y);
+                if let Some(p) = plan.route(ridx, mem) {
+                    let here = Coord::new((ridx % 4) as u16, (ridx / 4) as u16);
+                    let nb = topo.neighbor(here, p);
+                    assert_ne!(nb, Some(Coord::new(1, 1)), "routed into a dead router");
+                }
+            }
+        }
+        let a = FaultPlan::build(&FaultsConfig::parse("seed=3,rate=0.3").unwrap(), &topo);
+        let b = FaultPlan::build(&FaultsConfig::parse("seed=3,rate=0.3").unwrap(), &topo);
+        assert_eq!(a.link_down, b.link_down, "same seed must fault the same links");
+        let c = FaultPlan::build(&FaultsConfig::parse("seed=4,rate=0.3").unwrap(), &topo);
+        assert!(a.link_down != c.link_down || a.link_down.iter().all(|&d| !d));
+    }
+
+    #[test]
+    fn corruption_roll_and_transient_lookup_are_deterministic() {
+        let topo = Mesh2D::new(4, 4);
+        let cfg = FaultsConfig::parse("corrupt=0.5,transient=1:1:E:100:200").unwrap();
+        let plan = FaultPlan::build(&cfg, &topo);
+        assert!(!plan.reroutes, "corruption alone must not arm rerouting");
+        let roll = plan.corrupts(9, 0, 13, 0);
+        assert_eq!(roll, plan.corrupts(9, 0, 13, 0));
+        // Attempts decorrelate: over many flits both outcomes appear.
+        let mut flipped = false;
+        for pid in 0..64 {
+            if plan.corrupts(pid, 0, 13, 0) != plan.corrupts(pid, 0, 13, 1) {
+                flipped = true;
+            }
+        }
+        assert!(flipped);
+        // The transient window: receiver side of (1,1)->E is (2,1) West.
+        let link = (1 * 4 + 2) * PORTS + Port::West.index();
+        assert_eq!(plan.transient_until(link, 99), None);
+        assert_eq!(plan.transient_until(link, 100), Some(200));
+        assert_eq!(plan.transient_until(link, 199), Some(200));
+        assert_eq!(plan.transient_until(link, 200), None);
+        assert_eq!(plan.transient_until(link + 1, 150), None);
+    }
+
+    #[test]
+    fn holdoff_grows_exponentially_and_saturates() {
+        let topo = Mesh2D::new(2, 2);
+        let plan = FaultPlan::build(&FaultsConfig::parse("holdoff=4").unwrap(), &topo);
+        assert_eq!(plan.holdoff(1), 4);
+        assert_eq!(plan.holdoff(2), 8);
+        assert_eq!(plan.holdoff(3), 16);
+        assert!(plan.holdoff(1000) >= plan.holdoff(21));
+    }
+
+    #[test]
+    fn fault_state_bookkeeping() {
+        let topo = Mesh2D::new(2, 2);
+        let plan = FaultPlan::build(&FaultsConfig::default(), &topo);
+        let mut fs = FaultState::new(plan);
+        fs.mark_active(7);
+        fs.mark_active(3);
+        fs.mark_active(7);
+        assert_eq!(fs.active_links, vec![3, 7]);
+        fs.mark_idle(7);
+        assert_eq!(fs.active_links, vec![3]);
+        fs.poison(9);
+        fs.poison(2);
+        assert!(fs.is_poisoned(9) && fs.is_poisoned(2) && !fs.is_poisoned(5));
+        fs.unpoison(9);
+        assert!(!fs.is_poisoned(9));
+        assert!(!fs.pending_future_replay(0));
+    }
+
+    #[test]
+    fn degradation_report_summary_and_json() {
+        let mut d = DegradationReport::default();
+        assert!(d.is_clean());
+        assert!(d.summary().contains("no degradation"));
+        d.payloads_dropped = 3;
+        d.retransmissions = 11;
+        assert!(!d.is_clean());
+        let s = d.summary();
+        assert!(s.contains("payloads dropped 3") && s.contains("retransmitted 11"));
+        assert_eq!(d.to_json().get("retransmissions").unwrap().as_u64(), Some(11));
+    }
+}

@@ -17,6 +17,7 @@
 
 pub mod buffer;
 pub mod calendar;
+pub mod faults;
 pub mod flit;
 pub mod gather;
 pub mod network;
@@ -28,8 +29,9 @@ pub mod routing;
 pub mod stats;
 pub mod topology;
 
+pub use faults::{DegradationReport, FaultPlan, FaultsConfig};
 pub use flit::{CompactFlit, Coord, Flit, FlitType, PacketDesc, PacketId, PacketTable, PacketType};
-pub use network::{Network, StreamEdge};
+pub use network::{Network, RunOutcome, StallReport, StreamEdge};
 pub use probes::{Bottleneck, BottleneckStage, LinkRecord, ProbeReport, BUCKET_CYCLES};
 pub use reference::{ReferenceNetwork, SimKernel};
 pub use routing::{Algorithm, Port};

@@ -142,6 +142,7 @@ use std::sync::Arc;
 
 use super::buffer::VcState;
 use super::calendar::Calendar;
+use super::faults::{DegradationReport, FaultPlan, FaultState, RetxEntry};
 use super::flit::{CompactFlit, Coord, PacketDesc, PacketTable, PacketType};
 use super::gather::{board_fields, effective_delta, BoardFields, BoardMode, BoardOutcome, NiState};
 use super::parallel::{self, ParState};
@@ -212,6 +213,75 @@ struct NiPost {
 
 /// A deferred operand-stream injection.
 type StreamPost = (usize, Port, PacketDesc);
+
+/// Why a bounded run ([`Network::run_until_outcome`]) returned.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RunOutcome {
+    /// The caller's predicate was satisfied.
+    Satisfied,
+    /// The caller's cycle bound was reached with the predicate unmet.
+    Exhausted,
+    /// The [`crate::config::SimConfig::max_cycles`] hard cap tripped
+    /// before the caller's bound — the CI-hang guard.
+    CycleCapExceeded { cap: u64 },
+    /// The quiescence watchdog detected a wedged network: flits in
+    /// flight, zero progress over a full window, nothing scheduled.
+    Stalled(StallReport),
+}
+
+impl RunOutcome {
+    /// Short human description (panic messages, analyze output).
+    pub fn describe(&self) -> String {
+        match self {
+            RunOutcome::Satisfied => "satisfied".to_string(),
+            RunOutcome::Exhausted => "cycle bound exhausted".to_string(),
+            RunOutcome::CycleCapExceeded { cap } => {
+                format!("SimConfig::max_cycles cap of {cap} exceeded")
+            }
+            RunOutcome::Stalled(r) => r.describe(),
+        }
+    }
+}
+
+/// Diagnostic snapshot taken when the quiescence watchdog fires: what is
+/// stuck and what it is stuck on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StallReport {
+    pub cycle: u64,
+    /// Flits resident in buffers, on links, or in retransmission slots.
+    pub stuck_flits: u64,
+    /// Sample (up to 8) of live packet ids among the stuck flits.
+    pub stuck_packets: Vec<u32>,
+    /// Credit-blocked Active VCs at stall time (up to 16):
+    /// (router x, router y, blocked output port, output VC).
+    pub blocking_links: Vec<(u16, u16, Port, u8)>,
+    pub busy_injectors: usize,
+    pub backlogged_nodes: usize,
+}
+
+impl StallReport {
+    pub fn describe(&self) -> String {
+        let links = if self.blocking_links.is_empty() {
+            "none".to_string()
+        } else {
+            self.blocking_links
+                .iter()
+                .map(|&(x, y, p, vc)| format!("{x}:{y}->{p:?} vc{vc}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        format!(
+            "stalled at cycle {}: {} flits stuck (packets {:?}), credit-blocked links: {}, \
+             busy injectors {}, backlogged nodes {}",
+            self.cycle,
+            self.stuck_flits,
+            self.stuck_packets,
+            links,
+            self.busy_injectors,
+            self.backlogged_nodes
+        )
+    }
+}
 
 /// The simulator.
 pub struct Network {
@@ -284,6 +354,26 @@ pub struct Network {
     /// shardable grid — see [`super::parallel`]); `None` keeps the
     /// sequential hot path carrying nothing but this discriminant.
     par: Option<Box<ParState>>,
+    /// Fault-injection runtime state (`cfg.faults`): the compiled plan,
+    /// per-link retransmission slots and the poison set. `None` keeps
+    /// every fault path untaken — the kernel is bit-identical to the
+    /// fault-free simulator (pinned by `tests/fault_injection.rs`).
+    faults: Option<Box<FaultState>>,
+    /// Reused scratch for the arrival fault filter (no steady-state
+    /// allocation while faults are enabled).
+    fault_scratch: Vec<Arrival>,
+    /// Fault degradation: result payloads that will never reach memory
+    /// (census exclusions at post time + retry-exhausted packet drops).
+    pub payloads_dropped: u64,
+    /// Fault degradation: contributors excluded from a round's census
+    /// (router down or memory unreachable at post time).
+    pub missing_contributors: u64,
+    /// Fault degradation: operand streams clamped short of their full
+    /// path by a permanent fault on it.
+    pub streams_truncated: u64,
+    /// Fault degradation: operand streams dropped whole (entry router
+    /// down, or a stream head lost to the retry budget).
+    pub streams_dropped: u64,
     /// Interned packet-constant fields of every in-flight packet, indexed
     /// by [`CompactFlit::pid`]. Slots are interned exactly where
     /// `packets_injected` is counted and recycled when the last flit
@@ -316,6 +406,18 @@ macro_rules! for_each_active {
             }
         }
     };
+}
+
+/// Outcome of screening one delivery attempt at the arrival fault filter.
+enum Screened {
+    /// Passes: hand the arrival to the normal delivery path.
+    Deliver(Arrival),
+    /// Park in the link's retransmission slot (transient window or a
+    /// corruption within budget); the caller chooses front/back.
+    Hold(RetxEntry),
+    /// The flit was consumed (poison, dead link/router, or retry
+    /// exhaustion); all accounting already happened.
+    Dropped,
 }
 
 impl Network {
@@ -383,6 +485,12 @@ impl Network {
             ni[y * cols].is_initiator = true;
         }
         let link_window = (cfg.link_latency + 2) as usize;
+        // Compile the fault plan against the concrete fabric before the
+        // topology handle moves into the struct.
+        let faults = cfg
+            .faults
+            .as_ref()
+            .map(|f| Box::new(FaultState::new(FaultPlan::build(f, topo.as_ref()))));
         Network {
             collection,
             topo,
@@ -416,6 +524,12 @@ impl Network {
                 .probes
                 .then(|| Box::new(LinkProbes::new(cols * rows, vcs))),
             par: ParState::for_grid(cfg.intra_workers, cols, rows),
+            faults,
+            fault_scratch: Vec::new(),
+            payloads_dropped: 0,
+            missing_contributors: 0,
+            streams_truncated: 0,
+            streams_dropped: 0,
             packets: PacketTable::new(),
             cfg,
         }
@@ -552,7 +666,7 @@ impl Network {
         assert!(at >= self.cycle, "cannot post streams in the past");
         let ppf = self.cfg.payloads_per_flit() as u64;
         let body = words.div_ceil(ppf).max(1);
-        let (router, port, dst) = match edge {
+        let (router, port, mut dst) = match edge {
             StreamEdge::Row(y) => (
                 self.node_idx(Coord::new(0, y as u16)),
                 Port::West,
@@ -568,6 +682,45 @@ impl Network {
             StreamEdge::Row(y) => Coord::new(0, y as u16),
             StreamEdge::Col(x) => Coord::new(x as u16, 0),
         };
+        // Multicast streams cannot reroute (their hardwired straight path
+        // IS the delivery pattern): a permanent fault on the path clamps
+        // the stream to the last healthy router, and a dead entry router
+        // drops the whole stream. Transient faults are instead ridden out
+        // by the retransmission machinery.
+        if let Some(fs) = self.faults.as_deref() {
+            if fs.plan.reroutes {
+                let plan = &fs.plan;
+                if plan.router_down[router] {
+                    self.streams_dropped += 1;
+                    return;
+                }
+                let step_port = match edge {
+                    StreamEdge::Row(_) => Port::East,
+                    StreamEdge::Col(_) => Port::South,
+                };
+                let (mut cx, mut cy) = (src.x as usize, src.y as usize);
+                while (cx as u16, cy as u16) != (dst.x, dst.y) {
+                    let ridx = cy * self.cols + cx;
+                    if plan.link_down[ridx * PORTS + step_port.index()] {
+                        break;
+                    }
+                    let (nx, ny) = match step_port {
+                        Port::East => (cx + 1, cy),
+                        _ => (cx, cy + 1),
+                    };
+                    if plan.router_down[ny * self.cols + nx] {
+                        break;
+                    }
+                    cx = nx;
+                    cy = ny;
+                }
+                let clamped = Coord::new(cx as u16, cy as u16);
+                if clamped != dst {
+                    self.streams_truncated += 1;
+                    dst = clamped;
+                }
+            }
+        }
         let desc = PacketDesc {
             id: 0, // interned (and assigned a table slot) when the post fires
             ptype: PacketType::Multicast,
@@ -616,27 +769,81 @@ impl Network {
     /// if the predicate was satisfied. Fast-forwards through idle gaps:
     /// with the network quiescent, the clock jumps straight to the next
     /// scheduled post, stream, or armed δ expiry.
-    pub fn run_until(&mut self, mut pred: impl FnMut(&Network) -> bool, max_cycle: u64) -> bool {
-        while self.cycle < max_cycle {
+    /// ([`Network::run_until_outcome`] is the typed form; this wrapper
+    /// folds every non-satisfied outcome to `false`.)
+    pub fn run_until(&mut self, pred: impl FnMut(&Network) -> bool, max_cycle: u64) -> bool {
+        matches!(self.run_until_outcome(pred, max_cycle), RunOutcome::Satisfied)
+    }
+
+    /// Cycles of zero kernel progress (while non-quiescent, with no
+    /// future event pending) after which the watchdog declares a stall.
+    pub const STALL_WINDOW: u64 = 10_000;
+
+    /// Advance until `pred` holds, reporting *why* the run ended. The
+    /// effective bound is `min(max_cycle, cfg.max_cycles)`: tripping the
+    /// config cap is [`RunOutcome::CycleCapExceeded`], tripping the
+    /// caller's own bound is [`RunOutcome::Exhausted`]. A non-quiescent
+    /// network that makes no progress for [`Self::STALL_WINDOW`] cycles
+    /// with nothing scheduled (no calendar event, no armed δ, no held
+    /// retransmission waiting on a future cycle) is a wedge: the
+    /// watchdog stops stepping and returns [`RunOutcome::Stalled`] with
+    /// a structured diagnostic instead of spinning to the bound.
+    pub fn run_until_outcome(
+        &mut self,
+        mut pred: impl FnMut(&Network) -> bool,
+        max_cycle: u64,
+    ) -> RunOutcome {
+        let bound = max_cycle.min(self.cfg.max_cycles);
+        let mut marker = self.progress_marker();
+        let mut marker_cycle = self.cycle;
+        while self.cycle < bound {
             if pred(self) {
-                return true;
+                return RunOutcome::Satisfied;
             }
             if self.quiescent() {
                 match self.next_event_cycle() {
                     Some(c) if c > self.cycle => self.cycle = c,
                     Some(_) => {}
-                    None => return pred(self),
+                    None => {
+                        return if pred(self) {
+                            RunOutcome::Satisfied
+                        } else {
+                            RunOutcome::Exhausted
+                        };
+                    }
                 }
             }
             self.step();
+            let m = self.progress_marker();
+            if m != marker {
+                marker = m;
+                marker_cycle = self.cycle;
+            } else if !self.quiescent()
+                && self.cycle - marker_cycle >= Self::STALL_WINDOW
+                && !self.has_future_event()
+            {
+                return RunOutcome::Stalled(self.stall_report());
+            }
         }
-        pred(self)
+        if pred(self) {
+            RunOutcome::Satisfied
+        } else if bound < max_cycle {
+            RunOutcome::CycleCapExceeded { cap: bound }
+        } else {
+            RunOutcome::Exhausted
+        }
     }
 
     /// Drain everything currently scheduled; returns false on `max_cycle`
     /// overrun (treated by callers as a deadlock/livelock failure).
     pub fn run_until_idle(&mut self, max_cycle: u64) -> bool {
-        self.run_until(
+        matches!(self.run_until_idle_outcome(max_cycle), RunOutcome::Satisfied)
+    }
+
+    /// [`Network::run_until_idle`] with the typed outcome (cap overruns
+    /// and watchdog stalls carry their diagnostics).
+    pub fn run_until_idle_outcome(&mut self, max_cycle: u64) -> RunOutcome {
+        self.run_until_outcome(
             |n| {
                 n.quiescent()
                     && n.ni_posts.is_empty()
@@ -645,6 +852,87 @@ impl Network {
             },
             max_cycle,
         )
+    }
+
+    /// Monotone counter that advances whenever the kernel does anything
+    /// observable — a buffer write or read, an SA grant, a fault drop or
+    /// a retransmission. The watchdog compares it across cycles.
+    fn progress_marker(&self) -> u64 {
+        self.stats.sa_grants
+            + self.stats.buffer_writes
+            + self.stats.buffer_reads
+            + self.stats.flits_dropped
+            + self.stats.retransmissions
+    }
+
+    /// Is anything scheduled to happen after the current cycle (a
+    /// calendar post, an armed δ expiry, or a held retransmission
+    /// waiting out its hold-off / transient window)? The watchdog defers
+    /// to these: waiting is not a wedge.
+    fn has_future_event(&self) -> bool {
+        if let Some(fs) = self.faults.as_deref() {
+            if fs.pending_future_replay(self.cycle) {
+                return true;
+            }
+        }
+        self.next_event_cycle().is_some()
+    }
+
+    /// Snapshot the wedge for [`RunOutcome::Stalled`].
+    fn stall_report(&self) -> StallReport {
+        let mut stuck_packets: Vec<u32> = Vec::new();
+        let mut blocking_links: Vec<(u16, u16, Port, u8)> = Vec::new();
+        for_each_active!(self, ridx, {
+            let r = &self.routers[ridx];
+            let mut mask = r.nonempty_mask;
+            while mask != 0 {
+                let idx = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                if let Some(f) = r.inputs[idx].front() {
+                    if stuck_packets.len() < 8 && !stuck_packets.contains(&f.pid) {
+                        stuck_packets.push(f.pid);
+                    }
+                }
+                if let VcState::Active { out_port, out_vc } = r.inputs[idx].state {
+                    if blocking_links.len() < 16 {
+                        if let Some(ct) = &r.out_credits[out_port] {
+                            if !ct.available(out_vc) {
+                                blocking_links.push((
+                                    r.coord.x,
+                                    r.coord.y,
+                                    Port::from_index(out_port),
+                                    out_vc as u8,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        StallReport {
+            cycle: self.cycle,
+            stuck_flits: self.flits_active,
+            stuck_packets,
+            blocking_links,
+            busy_injectors: self.busy_injectors,
+            backlogged_nodes: self.backlogged_nodes,
+        }
+    }
+
+    /// Test/diagnostic hook: drain every credit the router at `node`
+    /// holds toward `port`, modelling a downstream that stopped
+    /// refunding (a wedged neighbor). The watchdog suite hand-builds a
+    /// stall with it; the kernel never calls it.
+    pub fn drain_credits_for_test(&mut self, node: Coord, port: Port) {
+        let idx = self.node_idx(node);
+        let vcs = self.vcs;
+        if let Some(ct) = self.routers[idx].out_credits[port.index()].as_mut() {
+            for vc in 0..vcs {
+                while ct.available(vc) {
+                    ct.consume(vc);
+                }
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -697,6 +985,12 @@ impl Network {
     fn deliver_arrivals_parallel(&mut self) {
         let mut par = self.par.take().expect("parallel step without ParState");
         let mut batch = self.arrivals.pop_front().expect("arrival ring underflow");
+        // Fault screening happens here, on the owner thread, BEFORE the
+        // band partition: every retransmission, drop and poison decision
+        // is made in the same order as the sequential kernel.
+        if self.faults.is_some() {
+            self.filter_faults(&mut batch);
+        }
         for a in batch.drain(..) {
             let b = par.band_of(a.router);
             par.inboxes[b].push(a);
@@ -712,6 +1006,7 @@ impl Network {
                 vcs: self.vcs,
                 cycle: self.cycle,
                 active: &self.active,
+                faults: self.faults.as_deref().map(|fs| &fs.plan),
             };
             // Deliver records no probe counters (both record sites live
             // in SA/grant), so no band probe views are built here.
@@ -745,6 +1040,7 @@ impl Network {
                 vcs: self.vcs,
                 cycle: self.cycle,
                 active: &self.active,
+                faults: self.faults.as_deref().map(|fs| &fs.plan),
             };
             let mut bands = parallel::make_bands(
                 &par.bands,
@@ -814,8 +1110,238 @@ impl Network {
         self.credit_scratch.clear();
     }
 
+    // ------------------------------------------------------------------
+    // Fault injection: the arrival filter
+    // ------------------------------------------------------------------
+
+    /// Arrival-side fault filter, run by BOTH kernels on the owner thread
+    /// before the cycle's batch is delivered (sequential) or partitioned
+    /// into bands (parallel) — which is what keeps every fault decision
+    /// bit-identical at any worker count. Phase 1 pumps due
+    /// retransmission slots in ascending link id (replayed flits
+    /// re-present themselves ahead of the fresh batch, preserving
+    /// per-link flit order); phase 2 screens each fresh arrival for
+    /// poison, dead links/routers, transient windows and corruption.
+    /// Never called without `cfg.faults`.
+    fn filter_faults(&mut self, batch: &mut Vec<Arrival>) {
+        let Some(mut fs) = self.faults.take() else { return };
+        let cycle = self.cycle;
+        let mut out = std::mem::take(&mut self.fault_scratch);
+        out.clear();
+        // Phase 1: pump at most one due flit per link (the single
+        // retransmission slot's replay bandwidth), ascending link id.
+        let mut k = 0;
+        while k < fs.active_links.len() {
+            let link = fs.active_links[k];
+            let due = fs.retx[link].front().is_some_and(|e| e.due <= cycle);
+            if !due {
+                k += 1;
+                continue;
+            }
+            let e = fs.retx[link].pop_front().expect("due link with empty retx queue");
+            let attempt = e.attempt;
+            let a = Arrival {
+                router: e.router as usize,
+                port: e.port,
+                vc: e.vc as usize,
+                flit: e.flit,
+            };
+            match self.screen_delivery(&mut fs, a, attempt, link) {
+                Screened::Deliver(a) => {
+                    if attempt > 0 {
+                        // A replay that finally went through. Probe
+                        // mirror uses the sender-side link id.
+                        self.stats.retransmissions += 1;
+                        let here = self.routers[a.router].coord;
+                        let up = self.fabric.neighbor(here, a.port);
+                        if let (Some(up), Some(p)) = (up, self.probes.as_mut()) {
+                            let up_idx = up.y as usize * self.cols + up.x as usize;
+                            p.record_retransmission(up_idx, a.port.opposite().index());
+                        }
+                    }
+                    out.push(a);
+                }
+                // Re-held (transient still open, or corrupted again):
+                // back to the front, order preserved.
+                Screened::Hold(en) => fs.retx[link].push_front(en),
+                Screened::Dropped => {}
+            }
+            if fs.retx[link].is_empty() {
+                fs.active_links.remove(k);
+            } else {
+                k += 1;
+            }
+        }
+        // Phase 2: fresh arrivals, batch order.
+        for a in batch.drain(..) {
+            let link = a.router * PORTS + a.port.index();
+            if !fs.retx[link].is_empty() {
+                // Earlier flits of this link are still held: queue behind
+                // them (FIFO per link keeps wormhole order).
+                fs.retx[link].push_back(RetxEntry {
+                    router: a.router as u32,
+                    port: a.port,
+                    vc: a.vc as u8,
+                    flit: a.flit,
+                    attempt: 0,
+                    due: cycle,
+                });
+                continue;
+            }
+            match self.screen_delivery(&mut fs, a, 0, link) {
+                Screened::Deliver(a) => out.push(a),
+                Screened::Hold(en) => {
+                    fs.retx[link].push_back(en);
+                    fs.mark_active(link);
+                }
+                Screened::Dropped => {}
+            }
+        }
+        std::mem::swap(batch, &mut out);
+        self.fault_scratch = out;
+        self.faults = Some(fs);
+    }
+
+    /// Screen one delivery attempt of one flit over one receiver-side
+    /// link. `attempt` counts failed attempts so far (0 = fresh).
+    fn screen_delivery(
+        &mut self,
+        fs: &mut FaultState,
+        a: Arrival,
+        attempt: u32,
+        link: usize,
+    ) -> Screened {
+        let pid = a.flit.pid;
+        // Poisoned packet: the head already died; every surviving flit
+        // drops at its next delivery point.
+        if fs.is_poisoned(pid) {
+            self.drop_flit(fs, &a);
+            return Screened::Dropped;
+        }
+        // Permanently dead link or receiving router: the flit is lost.
+        // Its head poisons the packet so the body follows it down.
+        if fs.plan.link_dead_recv[link] || fs.plan.router_down[a.router] {
+            self.kill_packet(fs, &a);
+            self.drop_flit(fs, &a);
+            return Screened::Dropped;
+        }
+        // Transient window: hold to the window end; no attempt charged
+        // (the link was down, the flit was never exposed to corruption).
+        if let Some(end) = fs.plan.transient_until(link, self.cycle) {
+            return Screened::Hold(RetxEntry {
+                router: a.router as u32,
+                port: a.port,
+                vc: a.vc as u8,
+                flit: a.flit,
+                attempt,
+                due: end,
+            });
+        }
+        // Corruption roll for this attempt. Heads carry the retry
+        // budget; body/tail flits replay until their (per-attempt
+        // decorrelated) roll passes — wormhole-safe because the head
+        // crossed every link first.
+        if fs.plan.corrupts(pid, a.flit.seq, link, attempt) {
+            self.stats.flits_corrupted += 1;
+            let next = attempt + 1;
+            if a.flit.is_head() && next > fs.plan.retry_budget {
+                self.stats.retries_exhausted += 1;
+                self.kill_packet(fs, &a);
+                self.drop_flit(fs, &a);
+                return Screened::Dropped;
+            }
+            let due = self.cycle + fs.plan.holdoff(next);
+            return Screened::Hold(RetxEntry {
+                router: a.router as u32,
+                port: a.port,
+                vc: a.vc as u8,
+                flit: a.flit,
+                attempt: next,
+                due,
+            });
+        }
+        Screened::Deliver(a)
+    }
+
+    /// Poison a packet whose head flit is being dropped, with the
+    /// packet-level degradation accounting. No-op for non-head flits
+    /// (their packet was poisoned when the head died).
+    fn kill_packet(&mut self, fs: &mut FaultState, a: &Arrival) {
+        if !a.flit.is_head() {
+            return;
+        }
+        fs.poison(a.flit.pid);
+        self.stats.packets_dropped += 1;
+        if a.flit.mem_dst() {
+            // Result payloads ride the head; they will never reach the
+            // row memory now.
+            self.payloads_dropped += a.flit.carried_payloads as u64;
+        }
+        if a.flit.ptype() == PacketType::Multicast {
+            self.streams_dropped += 1;
+        }
+    }
+
+    /// Discard one flit at a delivery point: count it, retire it from
+    /// the packet table, and refund the upstream credit its buffer slot
+    /// reservation was holding (held flits keep their credit; dropped
+    /// flits give it back). Unpoisons the pid once its last flit is gone
+    /// so a recycled table slot never inherits stale poison.
+    fn drop_flit(&mut self, fs: &mut FaultState, a: &Arrival) {
+        self.stats.flits_dropped += 1;
+        self.flits_active -= 1;
+        let here = self.routers[a.router].coord;
+        if let Some(up) = self.neighbour(here, a.port) {
+            let up_idx = self.node_idx(up);
+            self.credit_refunds.push((up_idx, a.port.opposite().index(), a.vc));
+        }
+        let pid = a.flit.pid;
+        self.packets.release(pid, 1);
+        if !self.packets.is_live(pid) {
+            fs.unpoison(pid);
+        }
+    }
+
+    /// The fabric's deterministic route, overridden by the fault plan's
+    /// healthy-subgraph tables when any link/router is permanently down.
+    /// Multicast streams keep their hardwired path (they were clamped at
+    /// post time); an unreachable destination falls back to the fabric
+    /// route — the flit dies at the dead link's arrival filter, and the
+    /// watchdog reports it if it wedges instead.
+    #[inline]
+    fn route_with_faults(&self, ptype: PacketType, ridx: usize, here: Coord, dst: Coord) -> Port {
+        if let Some(fs) = self.faults.as_deref() {
+            if fs.plan.reroutes && ptype != PacketType::Multicast {
+                if let Some(p) = fs.plan.route(ridx, dst) {
+                    return p;
+                }
+            }
+        }
+        self.fabric.route(ptype, here, dst)
+    }
+
+    /// Degradation summary, `Some` exactly when faults are configured
+    /// (all-zero counters report a degradation-free faulted run).
+    pub fn degradation_report(&self) -> Option<DegradationReport> {
+        self.faults.as_ref().map(|_| DegradationReport {
+            missing_contributors: self.missing_contributors,
+            payloads_dropped: self.payloads_dropped,
+            packets_dropped: self.stats.packets_dropped,
+            flits_dropped: self.stats.flits_dropped,
+            flits_corrupted: self.stats.flits_corrupted,
+            retransmissions: self.stats.retransmissions,
+            retries_exhausted: self.stats.retries_exhausted,
+            detour_hops: self.stats.detour_hops,
+            streams_truncated: self.streams_truncated,
+            streams_dropped: self.streams_dropped,
+        })
+    }
+
     fn deliver_arrivals(&mut self) {
         let mut batch = self.arrivals.pop_front().expect("arrival ring underflow");
+        if self.faults.is_some() {
+            self.filter_faults(&mut batch);
+        }
         for Arrival { router, port, vc, mut flit } in batch.drain(..) {
             flit.arrival = self.cycle;
             let ptype = flit.ptype();
@@ -964,6 +1490,20 @@ impl Network {
     }
 
     fn apply_ni_post(&mut self, post: NiPost) {
+        // Census degradation: a contributor sitting on a dead router — or
+        // cut off from its row memory — can never deliver. Excluding it
+        // here (instead of letting it arm a δ timer that can't fire a
+        // packet anywhere) is what makes the gather census degrade
+        // gracefully: the δ timeout machinery of the healthy nodes never
+        // waits on it, and the shortfall is reported, not hung on.
+        if let Some(fs) = self.faults.as_deref() {
+            let plan = &fs.plan;
+            if plan.router_down[post.node] || !plan.reachable(post.node, post.dst) {
+                self.payloads_dropped += post.payloads as u64;
+                self.missing_contributors += 1;
+                return;
+            }
+        }
         // The NI payload queue (Fig. 9) holds one round; if the previous
         // round's payloads have not left this node yet, the new round backs
         // up (PE output registers stall) — this is the backpressure through
@@ -1104,7 +1644,7 @@ impl Network {
                 }
             };
             let here = self.routers[ridx].coord;
-            let out_port = self.fabric.route(ptype, here, dst);
+            let out_port = self.route_with_faults(ptype, ridx, here, dst);
             // Ejection hops sink unconditionally and carry no VC-class
             // restriction; for link hops the topology may confine
             // allocation to one VC class (the torus dateline rule — a
@@ -1294,6 +1834,16 @@ impl Network {
                 .expect("routed toward a missing neighbour");
             let nb_idx = self.node_idx(nb);
             self.stats.link_traversals += 1;
+            // Fault-aware routing observability: a forwarded head taking
+            // a hop off the fabric's fault-free route is one detour hop.
+            if let Some(fs) = self.faults.as_deref() {
+                if fs.plan.reroutes
+                    && flit.is_head()
+                    && out_port != self.fabric.route(flit.ptype(), here, self.packets.dst(flit.pid))
+                {
+                    self.stats.detour_hops += 1;
+                }
+            }
             // Probe record site #1: every link_traversals increment is
             // mirrored per directed link — ejections (the branch above)
             // and INA absorbs never reach here, so the per-link sums
@@ -1697,6 +2247,13 @@ impl Network {
                 check(&a.flit, "link");
             }
         }
+        if let Some(fs) = self.faults.as_deref() {
+            for q in &fs.retx {
+                for e in q.iter() {
+                    check(&e.flit, "retransmission slot");
+                }
+            }
+        }
         for inj in &self.injectors {
             if let Some((desc, _, _)) = &inj.cur {
                 assert!(
@@ -1712,9 +2269,11 @@ impl Network {
     /// but not yet activated, pending/backlogged at an NI, staged or
     /// queued in an injector, buffered in a router VC, or in flight on a
     /// link. At any cycle boundary
-    /// `posted == payloads_delivered + payloads_in_flight()` — the flit
-    /// conservation invariant the property suite pins (no payload is ever
-    /// dropped by VC/switch allocation, boarding, or INA merging).
+    /// `posted == payloads_delivered + payloads_dropped +
+    /// payloads_in_flight()` — the flit conservation invariant the
+    /// property suite pins (no payload is ever dropped by VC/switch
+    /// allocation, boarding, or INA merging; under fault injection every
+    /// loss is accounted in `payloads_dropped`).
     ///
     /// Payload counts ride on head flits only (`carried_payloads` is
     /// replicated onto body flits for convenience but represents the
@@ -1759,6 +2318,15 @@ impl Network {
                 .filter(|a| a.flit.is_head())
                 .map(|a| a.flit.carried_payloads as u64)
                 .sum::<u64>();
+        }
+        if let Some(fs) = self.faults.as_deref() {
+            for q in &fs.retx {
+                total += q
+                    .iter()
+                    .filter(|e| e.flit.is_head())
+                    .map(|e| e.flit.carried_payloads as u64)
+                    .sum::<u64>();
+            }
         }
         total
     }

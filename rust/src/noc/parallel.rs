@@ -51,6 +51,7 @@
 //! [`Network::step_parallel`]: super::network::Network
 
 use super::buffer::VcState;
+use super::faults::FaultPlan;
 use super::flit::{CompactFlit, Coord, PacketDesc, PacketTable, PacketType};
 use super::gather::{board_fields, BoardFields, BoardMode, BoardOutcome, NiState};
 use super::network::{Arrival, InjEntry, Injector};
@@ -185,6 +186,11 @@ pub(super) struct Shared<'a> {
     /// The active-router bitset, frozen for the section (wakes are
     /// deferred through [`Effects::wakes`], merged at the barrier).
     pub(super) active: &'a [u64],
+    /// The compiled fault plan (`cfg.faults`): immutable for the whole
+    /// run, so bands may consult the routing tables concurrently. All
+    /// *mutable* fault state (retransmission slots, poison set) is owner-
+    /// thread-only — the arrival filter runs before the band partition.
+    pub(super) faults: Option<&'a FaultPlan>,
 }
 
 impl Shared<'_> {
@@ -511,7 +517,16 @@ fn va_router(sh: &Shared<'_>, band: &mut Band<'_>, fx: &mut Effects, ridx: usize
             }
         };
         let here = band.routers[bi].coord;
-        let out_port = sh.fabric.route(ptype, here, dst);
+        // Mirror of `Network::route_with_faults`: the fault plan's
+        // healthy-subgraph table overrides the fabric when any link or
+        // router is permanently down (multicast keeps its hardwired
+        // path; unreachable falls back to the fabric route).
+        let out_port = match sh.faults {
+            Some(plan) if plan.reroutes && ptype != PacketType::Multicast => {
+                plan.route(ridx, dst).unwrap_or_else(|| sh.fabric.route(ptype, here, dst))
+            }
+            _ => sh.fabric.route(ptype, here, dst),
+        };
         let class = if sh.is_memory_ejection(here, out_port, dst) {
             None
         } else {
@@ -674,6 +689,15 @@ fn grant(
         }
         let nb = sh.fabric.neighbor(here, out_port).expect("routed toward a missing neighbour");
         fx.stats.link_traversals += 1;
+        // Mirror of the sequential kernel's detour-hop accounting.
+        if let Some(plan) = sh.faults {
+            if plan.reroutes
+                && flit.is_head()
+                && out_port != sh.fabric.route(flit.ptype(), here, sh.packets.dst(flit.pid))
+            {
+                fx.stats.detour_hops += 1;
+            }
+        }
         fx.series_flits += 1;
         if let Some(p) = band.probes.as_mut() {
             p.record_traversal(

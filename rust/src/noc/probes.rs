@@ -56,6 +56,13 @@ pub struct LinkProbes {
     /// Traversals by operand-stream flits (`deliver_along_path`); the
     /// complement (`flits - stream_flits`) is result/collection traffic.
     stream_flits: Vec<u64>,
+    /// Fault-injection replays pumped from each link's retransmission
+    /// slot. Replays re-deliver an arrival at the receiver without the
+    /// flit re-crossing `grant`, so they are *not* part of `flits` and
+    /// the `Σ flits == link_traversals` partition stays exact. Recorded
+    /// on the owner thread only (the arrival filter runs before the band
+    /// partition), so no `BandProbes` view exists for this plane.
+    retx_flits: Vec<u64>,
     /// Traversals per (link, output VC).
     per_vc_flits: Vec<u64>,
     /// Requester-cycles blocked on credit per (link, output VC).
@@ -76,6 +83,7 @@ impl LinkProbes {
             flits: vec![0; links],
             payloads: vec![0; links],
             stream_flits: vec![0; links],
+            retx_flits: vec![0; links],
             per_vc_flits: vec![0; links * vcs],
             blocked: vec![0; links * vcs],
             // u64::MAX forces the first traversal of each link to open a
@@ -133,6 +141,15 @@ impl LinkProbes {
         self.blocked[(ridx * Port::COUNT + port) * self.vcs + vc] += 1;
     }
 
+    /// Record one fault-injection replay charged to the *sender-side*
+    /// directed link (`ridx`, `port`) — the link whose receiver corrupted
+    /// or transiently lost the flit. Called from the arrival filter on
+    /// the owner thread only.
+    #[inline]
+    pub fn record_retransmission(&mut self, ridx: usize, port: usize) {
+        self.retx_flits[ridx * Port::COUNT + port] += 1;
+    }
+
     /// Snapshot the counters into a [`ProbeReport`] that borrows the
     /// utilization series where possible (see the comment on the series
     /// reconciliation below), resolving link endpoints through `topo`. Only physical links are emitted:
@@ -144,6 +161,7 @@ impl LinkProbes {
         let mut total_flits = 0u64;
         let mut total_payloads = 0u64;
         let mut total_blocked = 0u64;
+        let mut total_retx = 0u64;
         for y in 0..rows {
             for x in 0..cols {
                 let from = Coord::new(x, y);
@@ -163,6 +181,7 @@ impl LinkProbes {
                     total_flits += self.flits[li];
                     total_payloads += self.payloads[li];
                     total_blocked += blocked.iter().sum::<u64>();
+                    total_retx += self.retx_flits[li];
                     links.push(LinkRecord {
                         from,
                         to,
@@ -170,6 +189,7 @@ impl LinkProbes {
                         flits: self.flits[li],
                         payloads: self.payloads[li],
                         stream_flits: self.stream_flits[li],
+                        retx_flits: self.retx_flits[li],
                         per_vc_flits: per_vc,
                         blocked_cycles: blocked,
                         peak_bucket_flits: self.bucket_peak[li],
@@ -208,6 +228,7 @@ impl LinkProbes {
             total_flits,
             total_payloads,
             total_blocked_cycles: total_blocked,
+            total_retransmissions: total_retx,
         }
     }
 
@@ -355,6 +376,10 @@ pub struct LinkRecord {
     /// Traversals by multicast operand-stream flits; the rest
     /// (`flits - stream_flits`) is collection/result traffic.
     pub stream_flits: u64,
+    /// Fault-injection replays pumped from this link's retransmission
+    /// slot (not part of [`flits`](Self::flits) — replays re-deliver at
+    /// the receiver without re-crossing the switch).
+    pub retx_flits: u64,
     /// Traversals per output VC (`Σ == flits`).
     pub per_vc_flits: Vec<u64>,
     /// Requester-cycles blocked on missing credit, per output VC.
@@ -400,6 +425,10 @@ pub enum BottleneckStage {
     Collection,
     /// Multicast operand streaming over the mesh.
     OperandStreaming,
+    /// Fault-injection replay traffic (`SimConfig::faults`): the link is
+    /// dominated by retransmissions of corrupted or transiently lost
+    /// flits rather than first-attempt deliveries.
+    Retransmission,
 }
 
 impl BottleneckStage {
@@ -407,6 +436,7 @@ impl BottleneckStage {
         match self {
             BottleneckStage::Collection => "collection",
             BottleneckStage::OperandStreaming => "operand-streaming",
+            BottleneckStage::Retransmission => "retransmission",
         }
     }
 }
@@ -482,6 +512,8 @@ pub struct ProbeReport<'a> {
     pub total_payloads: u64,
     /// `Σ links blocked_cycles` across all VCs.
     pub total_blocked_cycles: u64,
+    /// `Σ links retx_flits` — equals the prefix `NetStats::retransmissions`.
+    pub total_retransmissions: u64,
 }
 
 impl ProbeReport<'_> {
@@ -496,6 +528,7 @@ impl ProbeReport<'_> {
             total_flits: self.total_flits,
             total_payloads: self.total_payloads,
             total_blocked_cycles: self.total_blocked_cycles,
+            total_retransmissions: self.total_retransmissions,
         }
     }
 
@@ -528,7 +561,12 @@ impl ProbeReport<'_> {
             .enumerate()
             .fold((0usize, 0u64), |acc, (i, &f)| if f > acc.1 { (i, f) } else { acc })
             .0;
-        let stage = if l.stream_flits > l.result_flits() {
+        // Retransmission outranks the first-attempt classes only when it
+        // strictly dominates both, so fault-free runs (retx_flits == 0
+        // everywhere) attribute exactly as before.
+        let stage = if l.retx_flits > l.stream_flits && l.retx_flits > l.result_flits() {
+            BottleneckStage::Retransmission
+        } else if l.stream_flits > l.result_flits() {
             BottleneckStage::OperandStreaming
         } else {
             BottleneckStage::Collection
@@ -553,6 +591,7 @@ impl ProbeReport<'_> {
             .set("total_flits", Json::Num(self.total_flits as f64))
             .set("total_payloads", Json::Num(self.total_payloads as f64))
             .set("total_blocked_cycles", Json::Num(self.total_blocked_cycles as f64))
+            .set("total_retransmissions", Json::Num(self.total_retransmissions as f64))
             .set("max_link_utilization", Json::Num(self.max_utilization()))
             .set(
                 "series",
@@ -580,6 +619,7 @@ impl ProbeReport<'_> {
                     .set("payloads", Json::Num(l.payloads as f64))
                     .set("stream_flits", Json::Num(l.stream_flits as f64))
                     .set("result_flits", Json::Num(l.result_flits() as f64))
+                    .set("retx_flits", Json::Num(l.retx_flits as f64))
                     .set(
                         "per_vc_flits",
                         Json::Arr(
@@ -755,6 +795,27 @@ mod tests {
         p.record_traversal(0, e, 0, 3, true, 1, false);
         let r = p.report(&topo, 2, 2, 10);
         assert_eq!(r.bottleneck().unwrap().stage, BottleneckStage::OperandStreaming);
+    }
+
+    #[test]
+    fn retransmission_dominated_link_attributes_to_its_own_class() {
+        let (mut p, topo) = probes_2x2();
+        let e = Port::East.index();
+        p.record_traversal(0, e, 0, 1, true, 0, false);
+        p.record_retransmission(0, e);
+        p.record_retransmission(0, e);
+        let r = p.report(&topo, 2, 2, 10);
+        assert_eq!(r.total_retransmissions, 2);
+        let l = r
+            .links
+            .iter()
+            .find(|l| l.from == Coord::new(0, 0) && l.port == Port::East)
+            .unwrap();
+        assert_eq!(l.retx_flits, 2);
+        // Retx (2) strictly dominates stream (0) and result (1) flits.
+        assert_eq!(r.bottleneck().unwrap().stage, BottleneckStage::Retransmission);
+        // Replays never join the traversal partition.
+        assert_eq!(r.total_flits, 1);
     }
 
     #[test]

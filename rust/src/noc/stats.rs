@@ -60,6 +60,23 @@ pub struct NetStats {
     /// Words delivered over the streaming buses (per-row/column counters are
     /// in `BusStats`).
     pub cycles_simulated: u64,
+    /// Fault injection (`SimConfig::faults`): delivery attempts that
+    /// failed the corruption roll at a link's receiver.
+    pub flits_corrupted: u64,
+    /// Fault injection: replays performed from link retransmission slots.
+    pub retransmissions: u64,
+    /// Fault injection: head flits whose retry budget ran out (their
+    /// packet is dropped whole).
+    pub retries_exhausted: u64,
+    /// Fault injection: flits discarded (poisoned packets, arrivals on
+    /// dead links/routers).
+    pub flits_dropped: u64,
+    /// Fault injection: packets dropped whole after retry exhaustion or a
+    /// dead-link arrival.
+    pub packets_dropped: u64,
+    /// Fault-aware routing: hops taken off the fabric's fault-free route
+    /// while steering around the fault region.
+    pub detour_hops: u64,
 }
 
 impl NetStats {
@@ -94,6 +111,12 @@ impl NetStats {
         self.delta_expiries += other.delta_expiries;
         self.stream_deliveries += other.stream_deliveries;
         self.cycles_simulated = self.cycles_simulated.max(other.cycles_simulated);
+        self.flits_corrupted += other.flits_corrupted;
+        self.retransmissions += other.retransmissions;
+        self.retries_exhausted += other.retries_exhausted;
+        self.flits_dropped += other.flits_dropped;
+        self.packets_dropped += other.packets_dropped;
+        self.detour_hops += other.detour_hops;
     }
 
     /// Scale all additive counters by `k` (round extrapolation).
@@ -120,6 +143,12 @@ impl NetStats {
             delta_expiries: s(self.delta_expiries),
             stream_deliveries: s(self.stream_deliveries),
             cycles_simulated: self.cycles_simulated,
+            flits_corrupted: s(self.flits_corrupted),
+            retransmissions: s(self.retransmissions),
+            retries_exhausted: s(self.retries_exhausted),
+            flits_dropped: s(self.flits_dropped),
+            packets_dropped: s(self.packets_dropped),
+            detour_hops: s(self.detour_hops),
         }
     }
 }

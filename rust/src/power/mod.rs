@@ -66,6 +66,10 @@ pub fn power_report(
     // NI partial-sum accumulation (WS register-file spill): one adder pass
     // + payload-register write per fold, independent of collection scheme.
     dyn_j += net.ni_accumulations as f64 * re.gather_payload_j;
+    // Fault-injection retransmissions: each replay re-drives the link and
+    // re-writes the receiver's input buffer (the retransmission slot is a
+    // sender-side register, charged as one buffer write on replay).
+    dyn_j += net.retransmissions as f64 * (re.link_j + re.buffer_write_j);
 
     let seconds = total_cycles as f64 / cfg.clock_hz;
     let routers = (cfg.mesh_rows * cfg.mesh_cols) as f64;
@@ -166,6 +170,18 @@ mod tests {
             ina.router_dynamic_j > g.router_dynamic_j,
             "INA folds reuse the boarding hardware and add the ALU cost on top"
         );
+    }
+
+    #[test]
+    fn retransmissions_cost_link_and_buffer_energy() {
+        let cfg = SimConfig::table1_8x8(1);
+        let clean = stats(1000);
+        let faulty = NetStats { retransmissions: 200, ..stats(1000) };
+        let a = power_report(&cfg, Streaming::TwoWay, Collection::Gather, &clean, &BusStats::default(), 10_000);
+        let b = power_report(&cfg, Streaming::TwoWay, Collection::Gather, &faulty, &BusStats::default(), 10_000);
+        let re = router::RouterEnergy::forty_five_nm();
+        let delta = b.router_dynamic_j - a.router_dynamic_j;
+        assert!((delta - 200.0 * (re.link_j + re.buffer_write_j)).abs() < 1e-18, "delta {delta}");
     }
 
     #[test]

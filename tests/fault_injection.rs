@@ -1,0 +1,387 @@
+//! Fault-injection suite: the robustness contract of `noc::faults`.
+//!
+//! Four pillars:
+//! * **off means off** — with `SimConfig::faults` unset the simulator is
+//!   bit-identical to the fault-free kernel for every collection scheme,
+//!   every fabric and every intra-layer worker count (NetStats, final
+//!   cycle, delivered/dropped counters AND the full ProbeReport);
+//! * **conservation under fire** — a seeded fault storm (random permanent
+//!   link faults + per-flit corruption) never loses a payload: at every
+//!   sampled cycle boundary and after the drain,
+//!   `posted == delivered + dropped + in flight`, and packet accounting
+//!   closes (`injected == ejected + merged + dropped`);
+//! * **determinism** — faulted runs are a pure function of (config, fault
+//!   spec, posting schedule): repeated seeds and workers 1/2/4 produce
+//!   identical NetStats and identical `DegradationReport`s;
+//! * **typed failure outcomes** — a hand-wedged network trips the
+//!   quiescence watchdog with a `RunOutcome::Stalled` report naming the
+//!   credit-blocked link, and `SimConfig::max_cycles` trips
+//!   `RunOutcome::CycleCapExceeded` instead of spinning.
+
+use noc_dnn::config::{Collection, SimConfig, TopologyKind};
+use noc_dnn::noc::stats::NetStats;
+use noc_dnn::noc::{
+    Coord, DegradationReport, FaultsConfig, Network, Port, ProbeReport, RunOutcome,
+};
+use noc_dnn::util::rng::Rng;
+
+const COLLECTIONS: [Collection; 3] =
+    [Collection::RepetitiveUnicast, Collection::Gather, Collection::Ina];
+
+/// Everything a run can observe: stats, delivered, dropped, final cycle,
+/// the per-link probe report and the degradation summary.
+type Observed = (
+    NetStats,
+    u64,
+    u64,
+    u64,
+    Option<ProbeReport<'static>>,
+    Option<DegradationReport>,
+);
+
+/// Drive one seeded randomized workload to drain and return the full
+/// observable surface. `faults` is an optional `FaultsConfig::parse` spec;
+/// `mesh` picks the grid edge (8 or 16).
+fn run_seeded(
+    topology: TopologyKind,
+    collection: Collection,
+    faults: Option<&str>,
+    mesh: usize,
+    seed: u64,
+    intra_workers: usize,
+) -> Observed {
+    let mut rng = Rng::new(seed);
+    let mut cfg = SimConfig::table1(mesh, 4);
+    cfg.topology = topology;
+    cfg.probes = true;
+    cfg.intra_workers = intra_workers;
+    cfg.delta = rng.range(0, 2 * cfg.delta);
+    if let Some(spec) = faults {
+        cfg.faults = Some(FaultsConfig::parse(spec).expect("fault spec must parse"));
+    }
+    cfg.validate().unwrap();
+    let mut net = Network::new(&cfg, collection);
+    let mut posted = 0u64;
+    for round in 0..3u64 {
+        let at = round * rng.range(20, 90);
+        for y in 0..cfg.mesh_rows {
+            for x in 0..cfg.mesh_cols {
+                if rng.chance(0.8) {
+                    let p = rng.range(1, cfg.pes_per_router as u64) as u32;
+                    net.post_result(at, Coord::new(x as u16, y as u16), p);
+                    posted += p as u64;
+                }
+            }
+        }
+    }
+    let outcome = net.run_until_idle_outcome(8_000_000);
+    assert!(
+        outcome == RunOutcome::Satisfied,
+        "{topology:?}/{collection:?} seed {seed} w{intra_workers}: drain failed ({})",
+        outcome.describe()
+    );
+    assert_eq!(
+        net.payloads_delivered + net.payloads_dropped,
+        posted,
+        "{topology:?}/{collection:?} seed {seed}: payload accounting open after drain"
+    );
+    (
+        net.stats.clone(),
+        net.payloads_delivered,
+        net.payloads_dropped,
+        net.cycle,
+        net.probe_report().map(|p| p.into_owned()),
+        net.degradation_report(),
+    )
+}
+
+#[test]
+fn faults_unset_is_bit_identical_across_fabrics_and_worker_counts() {
+    // The subsystem must be invisible when off: `faults: None` runs carry
+    // no degradation report, spend nothing on fault bookkeeping, and stay
+    // bit-identical across repeated runs and across the band-parallel
+    // worker matrix — per collection scheme, per fabric.
+    for topology in [TopologyKind::Mesh, TopologyKind::Torus, TopologyKind::CMesh] {
+        for collection in COLLECTIONS {
+            let base = run_seeded(topology, collection, None, 8, 41, 1);
+            assert!(base.5.is_none(), "faults unset but a DegradationReport was issued");
+            assert!(base.1 > 0, "{topology:?}/{collection:?}: nothing delivered");
+            assert_eq!(base.2, 0, "{topology:?}/{collection:?}: fault-free run dropped payloads");
+            assert_eq!(base.0.flits_corrupted, 0);
+            assert_eq!(base.0.retransmissions, 0);
+            assert_eq!(base.0.detour_hops, 0);
+            let again = run_seeded(topology, collection, None, 8, 41, 1);
+            assert_eq!(again, base, "{topology:?}/{collection:?}: repeat run diverged");
+            for workers in [2usize, 4, 8] {
+                let par = run_seeded(topology, collection, None, 8, 41, workers);
+                assert_eq!(
+                    par, base,
+                    "{topology:?}/{collection:?}: intra_workers={workers} changed an \
+                     observable with faults unset"
+                );
+            }
+        }
+    }
+}
+
+/// The 16×16 storm used by the conservation and determinism pillars:
+/// random permanent link faults, per-flit corruption, a tight retry
+/// budget — everything at once.
+const STORM: &str = "seed=61455,rate=0.04,corrupt=0.02,retries=3,holdoff=6";
+
+#[test]
+fn fault_storm_conserves_payloads_and_packets() {
+    // Extended conservation on a 16×16 mesh under the storm: mid-flight,
+    // `posted == delivered + dropped + in flight` at every sampled cycle
+    // boundary (retransmission slots and census exclusions included);
+    // after the drain, nothing is resident and the packet ledger closes
+    // with drops as a first-class column.
+    for collection in COLLECTIONS {
+        let mut rng = Rng::new(0x57011);
+        let mut cfg = SimConfig::table1_16x16(4);
+        cfg.probes = true;
+        cfg.faults = Some(FaultsConfig::parse(STORM).unwrap());
+        cfg.validate().unwrap();
+        let mut net = Network::new(&cfg, collection);
+        let mut posted = 0u64;
+        for round in 0..3u64 {
+            for y in 0..cfg.mesh_rows {
+                for x in 0..cfg.mesh_cols {
+                    if rng.chance(0.7) {
+                        let p = rng.range(1, cfg.pes_per_router as u64) as u32;
+                        net.post_result(round * 60, Coord::new(x as u16, y as u16), p);
+                        posted += p as u64;
+                    }
+                }
+            }
+        }
+        // Sample the invariant while the storm is raging...
+        net.run_until(
+            |n| {
+                assert_eq!(
+                    posted,
+                    n.payloads_delivered + n.payloads_dropped + n.payloads_in_flight(),
+                    "{collection:?}: payload leak at cycle {} under faults",
+                    n.cycle
+                );
+                false
+            },
+            rng.range(300, 3_000),
+        );
+        // ...and close the books after the drain.
+        let outcome = net.run_until_idle_outcome(8_000_000);
+        assert!(
+            outcome == RunOutcome::Satisfied,
+            "{collection:?}: storm run failed to drain ({})",
+            outcome.describe()
+        );
+        assert_eq!(
+            net.payloads_delivered + net.payloads_dropped,
+            posted,
+            "{collection:?}: payload ledger open after drain"
+        );
+        assert_eq!(net.payloads_in_flight(), 0, "{collection:?}: residue after drain");
+        assert_eq!(net.total_buffered_flits(), 0, "{collection:?}: flits stuck");
+        assert_eq!(
+            net.stats.packets_injected,
+            net.stats.packets_ejected + net.stats.ina_merges + net.stats.packets_dropped,
+            "{collection:?}: packet ledger open (merges and drops must cover the gap)"
+        );
+        assert!(net.payloads_delivered > 0, "{collection:?}: storm delivered nothing");
+        // The probe partition survives the storm: retransmission traffic
+        // is its own plane, so link totals still equal the traversal count.
+        let p = net.probe_report().expect("probes were on");
+        assert_eq!(p.total_flits, net.stats.link_traversals, "{collection:?}: probe split broke");
+        assert_eq!(
+            p.total_retransmissions, net.stats.retransmissions,
+            "{collection:?}: probe retransmission plane diverged from NetStats"
+        );
+        // The degradation report mirrors the stats it summarizes.
+        let d = net.degradation_report().expect("faults on ⇒ report present");
+        assert_eq!(d.flits_corrupted, net.stats.flits_corrupted);
+        assert_eq!(d.retransmissions, net.stats.retransmissions);
+        assert_eq!(d.retries_exhausted, net.stats.retries_exhausted);
+        assert_eq!(d.packets_dropped, net.stats.packets_dropped);
+        assert_eq!(d.payloads_dropped, net.payloads_dropped);
+        assert!(
+            !d.is_clean(),
+            "{collection:?}: a 4% link-fault storm left no trace — injection inert?"
+        );
+    }
+}
+
+#[test]
+fn faulted_runs_are_deterministic_and_worker_invariant() {
+    // A faulted run is still a pure function of its inputs: repeated runs
+    // agree bit for bit — including the DegradationReport — and the
+    // band-parallel kernel at workers 2 and 4 reproduces the sequential
+    // tuple exactly (the fault filter runs on the owner thread before the
+    // band partition, so worker count must be invisible).
+    for collection in COLLECTIONS {
+        for seed in [42u64, 0xDECAF] {
+            let base = run_seeded(TopologyKind::Mesh, collection, Some(STORM), 16, seed, 1);
+            assert!(base.5.is_some(), "faults on but no DegradationReport");
+            let again = run_seeded(TopologyKind::Mesh, collection, Some(STORM), 16, seed, 1);
+            assert_eq!(
+                again, base,
+                "{collection:?} seed {seed}: two identical faulted runs diverged"
+            );
+            for workers in [2usize, 4] {
+                let par =
+                    run_seeded(TopologyKind::Mesh, collection, Some(STORM), 16, seed, workers);
+                assert_eq!(
+                    par, base,
+                    "{collection:?} seed {seed}: intra_workers={workers} changed a \
+                     faulted observable"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dead_router_contributors_are_excluded_not_wedged() {
+    // Graceful degradation: a hard-faulted router's contributors leave
+    // the round census (counted, not silently lost), everyone else routes
+    // around the hole, and the run drains to a typed clean completion.
+    for collection in COLLECTIONS {
+        let mut cfg = SimConfig::table1_8x8(4);
+        cfg.faults = Some(FaultsConfig::parse("seed=3,routers=3:3").unwrap());
+        cfg.validate().unwrap();
+        let mut net = Network::new(&cfg, collection);
+        let mut posted = 0u64;
+        let mut posted_at_dead = 0u64;
+        for round in 0..2u64 {
+            for y in 0..8u16 {
+                for x in 0..8u16 {
+                    net.post_result(round * 50, Coord::new(x, y), 4);
+                    posted += 4;
+                    if (x, y) == (3, 3) {
+                        posted_at_dead += 4;
+                    }
+                }
+            }
+        }
+        let outcome = net.run_until_idle_outcome(8_000_000);
+        assert!(
+            outcome == RunOutcome::Satisfied,
+            "{collection:?}: dead-router run wedged ({})",
+            outcome.describe()
+        );
+        let d = net.degradation_report().expect("faults on ⇒ report present");
+        assert!(
+            d.missing_contributors >= 2,
+            "{collection:?}: the dead router's two rounds were not excluded \
+             from the census ({})",
+            d.summary()
+        );
+        assert!(
+            net.payloads_dropped >= posted_at_dead,
+            "{collection:?}: census exclusion must account the dead router's payloads"
+        );
+        assert_eq!(
+            net.payloads_delivered + net.payloads_dropped,
+            posted,
+            "{collection:?}: accounting open after degradation"
+        );
+        assert!(
+            net.payloads_delivered > 0,
+            "{collection:?}: healthy routers delivered nothing"
+        );
+    }
+}
+
+#[test]
+fn corruption_is_retransmitted_within_budget_and_priced_by_probes() {
+    // Corruption-only spec (no permanent faults): every corrupted flit is
+    // held and replayed from its retransmission slot, the replays appear
+    // in NetStats and in the probes' dedicated per-link plane, and with a
+    // generous retry budget the workload still delivers everything it
+    // does not explicitly drop.
+    let (stats, delivered, dropped, _, probes, degraded) = run_seeded(
+        TopologyKind::Mesh,
+        Collection::Gather,
+        Some("seed=9,corrupt=0.02,retries=6,holdoff=5"),
+        8,
+        7,
+        1,
+    );
+    assert!(delivered > 0);
+    assert!(stats.flits_corrupted > 0, "2% corruption left no corrupted flit");
+    assert!(stats.retransmissions > 0, "corrupted flits were never replayed");
+    assert!(
+        stats.retransmissions <= stats.flits_corrupted,
+        "more replays than corruption events"
+    );
+    // No permanent fault ⇒ no rerouting, no census exclusion.
+    assert_eq!(stats.detour_hops, 0, "corruption-only spec must not reroute");
+    let d = degraded.expect("faults on ⇒ report present");
+    assert_eq!(d.missing_contributors, 0);
+    assert_eq!(d.retransmissions, stats.retransmissions);
+    let p = probes.expect("probes were on");
+    assert_eq!(p.total_retransmissions, stats.retransmissions);
+    assert_eq!(p.total_flits, stats.link_traversals);
+    assert_eq!(dropped, d.payloads_dropped);
+}
+
+#[test]
+fn watchdog_names_the_credit_blocked_link() {
+    // Hand-built wedge: drain every credit router (4,3) holds toward its
+    // east neighbor — modelling a downstream that stopped refunding —
+    // then post a result whose XY path crosses that link. The head gets
+    // VC allocation, switch allocation blocks forever, nothing is
+    // scheduled: the watchdog must stop stepping and name the link
+    // instead of spinning to the bound.
+    let cfg = SimConfig::table1_8x8(1);
+    cfg.validate().unwrap();
+    let mut net = Network::new(&cfg, Collection::RepetitiveUnicast);
+    net.drain_credits_for_test(Coord::new(4, 3), Port::East);
+    net.post_result(0, Coord::new(2, 3), 1);
+    let outcome = net.run_until_idle_outcome(2_000_000);
+    match outcome {
+        RunOutcome::Stalled(r) => {
+            assert!(r.stuck_flits > 0, "stall report saw no stuck flits");
+            assert!(
+                r.blocking_links
+                    .iter()
+                    .any(|&(x, y, p, _)| (x, y, p) == (4, 3, Port::East)),
+                "stall report failed to name the drained link: {}",
+                r.describe()
+            );
+            assert!(
+                r.cycle < 2_000_000,
+                "watchdog fired only at the bound — it spun instead of detecting"
+            );
+        }
+        other => panic!("expected RunOutcome::Stalled, got {}", other.describe()),
+    }
+    // The boolean wrapper folds the stall to a plain failure.
+    let mut twin = Network::new(&cfg, Collection::RepetitiveUnicast);
+    twin.drain_credits_for_test(Coord::new(4, 3), Port::East);
+    twin.post_result(0, Coord::new(2, 3), 1);
+    assert!(!twin.run_until_idle(2_000_000), "wrapper must report the wedge as failure");
+}
+
+#[test]
+fn cycle_cap_trips_as_a_typed_outcome() {
+    // `SimConfig::max_cycles` is the CI-hang guard: posts scheduled past
+    // the cap leave the drain predicate unmet when the capped bound is
+    // reached, and the kernel reports the cap — not a bare `false`, not
+    // an exhausted caller bound.
+    let mut cfg = SimConfig::table1_8x8(4);
+    cfg.max_cycles = 2_500;
+    cfg.validate().unwrap();
+    let mut net = Network::new(&cfg, Collection::Gather);
+    for round in 0..10u64 {
+        for x in 0..8u16 {
+            net.post_result(round * 1_000, Coord::new(x, 0), 4);
+        }
+    }
+    let outcome = net.run_until_idle_outcome(1_000_000);
+    assert_eq!(
+        outcome,
+        RunOutcome::CycleCapExceeded { cap: 2_500 },
+        "capped run must surface the cap (got {})",
+        outcome.describe()
+    );
+}
