@@ -34,6 +34,13 @@
 //!   so the layout change lands as new baseline entries rather than a
 //!   same-key delta against the wide-flit numbers.
 //!
+//! * **serving-knee** — the serving event loop (`serving::serve`) on a
+//!   synthetic 8-layer service profile at 0.9× capacity: Poisson
+//!   arrivals, batching, the multi-pass fabric interleaver and the
+//!   latency histogram, with no network simulation underneath — a pure
+//!   measure of the serving subsystem's calendar loop. Tagged
+//!   `kernel=event` so the regression gate covers it once baselined.
+//!
 //! `--quick` runs the reduced CI matrix; `--json PATH` writes the
 //! machine-readable report (`BENCH_sim_hotpath.json`) that
 //! `scripts/check_bench_regression.py` gates against the committed
@@ -45,6 +52,7 @@ use noc_dnn::models::alexnet;
 use noc_dnn::noc::network::Network;
 use noc_dnn::noc::reference::{ReferenceNetwork, SimKernel};
 use noc_dnn::noc::Coord;
+use noc_dnn::serving::{serve, ArrivalKind, LayerCost, ServiceProfile, ServingConfig};
 use noc_dnn::util::bench::{bench_args, fmt_ns, time_it, BenchReport, Timing};
 
 const SATURATE_ROUNDS: u64 = 16;
@@ -291,6 +299,60 @@ fn main() {
                 baseline = Some(m);
             }
         }
+    }
+
+    // Serving event loop near the knee: a synthetic 8-layer profile (no
+    // network simulation underneath) served at 0.9x its serial-fabric
+    // capacity — batching, the pass interleaver and the histogram are
+    // the entire cost. cycles_per_sec here is simulated serving cycles
+    // per wall-second, the same axis the gate already checks.
+    {
+        let profile = ServiceProfile::synthetic(
+            "bench",
+            (0..8u64)
+                .map(|i| LayerCost {
+                    name: format!("l{i}"),
+                    setup_cycles: 40,
+                    per_image_cycles: 220 + 13 * i,
+                    reload_cycles: 60,
+                })
+                .collect(),
+        );
+        let cfg = ServingConfig {
+            arrival: ArrivalKind::Poisson,
+            rate_per_mcycle: profile.capacity_per_mcycle(4) * 0.9,
+            batch: 4,
+            queue_cap: 32,
+            max_inflight: 2,
+            duration: if args.quick { 20_000_000 } else { 80_000_000 },
+            seed: 7,
+            ..ServingConfig::default()
+        };
+        let mut last = (0u64, 0u64);
+        let t = time_it(reps, || {
+            let rep = serve(&profile, &cfg).expect("bench serving config is valid");
+            assert_eq!(rep.conservation_violations, 0, "serving bench lost requests");
+            last = (rep.total_cycles, rep.completed);
+            last
+        });
+        let cyc_per_sec = last.0 as f64 / (t.median_ns as f64 / 1e9);
+        println!(
+            "serving-knee (8 synthetic layers, 0.9x capacity, {}M cycles): {t} \
+             | {:>5.1}M cyc/s | {} requests",
+            cfg.duration / 1_000_000,
+            cyc_per_sec / 1e6,
+            last.1,
+        );
+        report.add(BenchReport::point(
+            &[("name", "serving-knee"), ("kernel", "event"), ("collection", "synthetic")],
+            &[
+                ("duration_cycles", cfg.duration as f64),
+                ("cycles", last.0 as f64),
+                ("completed", last.1 as f64),
+                ("median_ns", t.median_ns as f64),
+                ("cycles_per_sec", cyc_per_sec),
+            ],
+        ));
     }
 
     // End-to-end layer simulation timing (what every figure point costs).

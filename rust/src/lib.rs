@@ -59,6 +59,11 @@
 //! * [`config`] — configuration types with JSON round-trip (Table 1
 //!   defaults), including the [`config::DataflowKind`] and
 //!   [`config::Collection`] selectors.
+//! * [`serving`] — serving-scale traffic on top of the executor: seeded
+//!   request arrivals (Poisson / uniform / closed-loop), batch
+//!   scheduling with per-tenant priority, a multi-pass fabric-sharing
+//!   executor, and deterministic p50/p99/p999 tail-latency metrics with
+//!   saturation-knee location (`noc-dnn serve`).
 //!
 //! See `ARCHITECTURE.md` at the repository root for the module map, the
 //! simulator's per-cycle tick order, and the topology layer.
@@ -127,6 +132,7 @@ pub mod pe;
 pub mod plan;
 pub mod power;
 pub mod runtime;
+pub mod serving;
 pub mod streaming;
 pub mod util;
 
@@ -146,6 +152,10 @@ pub mod prelude {
     pub use crate::noc::probes::{Bottleneck, BottleneckStage, LinkRecord, ProbeReport};
     pub use crate::noc::topology::Topology;
     pub use crate::plan::{LayerPolicy, NetworkPlan};
+    pub use crate::serving::{
+        ArrivalKind, SchedKind, ServiceProfile, ServingConfig, ServingReport,
+    };
+    pub use crate::util::histogram::Histogram;
 }
 
 /// The north-star spelling of this crate's namespace: `pallas::prelude`

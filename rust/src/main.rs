@@ -15,6 +15,10 @@
 //! noc-dnn analyze --model alexnet [--layer NAME] [--json]
 //!                                               # per-link utilization +
 //!                                               # bottleneck attribution
+//! noc-dnn serve --model alexnet --arrival-rate 2 [--batch 4] [--json]
+//!                                               # serving traffic: batch
+//!                                               # scheduling + p99 tail +
+//!                                               # saturation knee (--sweep)
 //! noc-dnn overhead                              # §5.4 router overhead
 //! noc-dnn config --show [--mesh 8] [--n 1]      # print Table-1 config JSON
 //! ```
@@ -27,6 +31,7 @@ use noc_dnn::coordinator::{report, sweep};
 use noc_dnn::models::{alexnet, Network};
 use noc_dnn::plan::{LayerPolicy, NetworkPlan};
 use noc_dnn::power::area::overhead_report;
+use noc_dnn::serving::{self, ArrivalKind, SchedKind, ServiceProfile, ServingConfig};
 use noc_dnn::util::cli::Args;
 
 const VALUED: &[&str] = &[
@@ -45,6 +50,19 @@ const VALUED: &[&str] = &[
     "layer",
     "faults",
     "max-cycles",
+    "arrival-rate",
+    "arrivals",
+    "batch",
+    "batch-timeout",
+    "tenants",
+    "sched",
+    "queue-cap",
+    "max-inflight",
+    "clients",
+    "think",
+    "duration",
+    "seed",
+    "sweep",
 ];
 const BOOLEAN: &[&str] = &["json", "show", "help"];
 
@@ -70,6 +88,7 @@ fn cli_main() -> Result<()> {
         "model" => model_cmd(&args),
         "compare" => compare(&args),
         "analyze" => analyze(&args),
+        "serve" => serve_cmd(&args),
         "overhead" => overhead(&args),
         "config" => config_cmd(&args),
         cmd => bail!("unknown command '{cmd}'\n{}", usage()),
@@ -96,6 +115,14 @@ USAGE:
                   [--mesh N] [--n N] [--topology T] [--streaming MODE]
                   [--collection C] [--dataflow D] [--rounds-cap K]
                   [--faults SPEC|file.json] [--json]
+  noc-dnn serve --model <alexnet|vgg16|resnet-lite> --arrival-rate R
+                [--arrivals poisson|uniform|closed] [--batch B]
+                [--batch-timeout CYC] [--tenants T] [--sched fifo|priority]
+                [--queue-cap Q] [--max-inflight P] [--duration CYC]
+                [--clients K] [--think CYC] [--seed S] [--sweep R1,R2,..]
+                [--mesh N] [--n N] [--topology T] [--streaming MODE]
+                [--collection C] [--dataflow D] [--rounds-cap K]
+                [--faults SPEC] [--json]
   noc-dnn overhead
   noc-dnn config --show [--mesh N] [--n N] [--topology T] [--dataflow os|ws]
                  [--collection ru|gather|ina] [--threads T]
@@ -141,6 +168,29 @@ FLAGS:
                      sequential, results bit-identical at any count; the
                      layer fan-out is clamped so threads x W stays within
                      the host)
+  --arrival-rate R   serve: offered load in requests per million cycles
+                     (open-loop modes; required unless --arrivals closed
+                     or --sweep)
+  --arrivals MODE    serve: 'poisson' (default), 'uniform' (constant gap)
+                     or 'closed' (bounded population: --clients issuers,
+                     one outstanding request each, --think cycles between
+                     completion and reissue)
+  --batch B          serve: max images per admitted batch (setup is paid
+                     once per batch, streaming/compute per image)
+  --batch-timeout C  serve: cycles a queue head may age before a partial
+                     batch is forced out (0 = auto: half a full pass)
+  --tenants T        serve: round-robin tenant count; with --sched
+                     priority each tenant gets its own queue mapped to a
+                     VC class, lower ids win ties
+  --queue-cap Q      serve: waiting-request capacity; arrivals beyond it
+                     are rejected (counted in the report)
+  --max-inflight P   serve: concurrent passes time-sharing the fabric at
+                     layer granularity
+  --duration CYC     serve: arrival window; the run then drains
+                     (0 = auto: 32 full-batch passes)
+  --sweep R1,R2,..   serve: run each rate (strictly increasing) and mark
+                     the saturation knee — the last rate with zero
+                     rejections and p99 within 5x of the lowest rate's
 
 `model` executes a whole DNN through the network executor: per-layer
 flit-accurate simulation, per-layer policies, inter-layer traffic charged
@@ -155,6 +205,15 @@ per-directed-link counters and the cycle-bucketed utilization series.
 Under --faults, analyze also prints the per-layer fault-degradation
 table (corrupted/retransmitted/dropped counts, missing gather
 contributors, detour hops) and --json carries it as 'degraded'.
+
+`serve` turns the executor into a capacity-planning tool: it profiles the
+model once per layer (probes on), then time-shares the fabric across
+concurrent inference passes fed by a seeded arrival process through a
+batch scheduler, and reports throughput, offered/accepted/rejected
+counts, queue depths, deterministic p50/p99/p999 latency and the link
+that saturates first under load. --sweep serves each listed rate and
+marks the saturation knee. Same seed, same ledger — bit for bit, at any
+--threads/--intra-workers.
 "
 }
 
@@ -470,6 +529,217 @@ fn analyze(args: &Args) -> Result<()> {
     for l in &analyzed {
         println!();
         print!("{}", report::probe_heatmap_text(&l.name, &l.probes));
+    }
+    Ok(())
+}
+
+/// Assemble the serving knobs from the CLI flags; keyword and numeric
+/// parses are typed errors, semantic validation happens in the serving
+/// layer itself (and is re-checked per sweep point).
+fn serving_cfg_from(args: &Args) -> Result<ServingConfig> {
+    let mut cfg = ServingConfig::default();
+    if let Some(k) = args.get("arrivals") {
+        cfg.arrival = ArrivalKind::parse(k)?;
+    }
+    cfg.rate_per_mcycle = args.get_parsed("arrival-rate", cfg.rate_per_mcycle)?;
+    cfg.clients = args.get_parsed("clients", cfg.clients)?;
+    cfg.think_cycles = args.get_parsed("think", cfg.think_cycles)?;
+    cfg.batch = args.get_parsed("batch", cfg.batch)?;
+    cfg.batch_timeout = args.get_parsed("batch-timeout", cfg.batch_timeout)?;
+    cfg.tenants = args.get_parsed("tenants", cfg.tenants)?;
+    if let Some(s) = args.get("sched") {
+        cfg.sched = SchedKind::parse(s)?;
+    }
+    cfg.queue_cap = args.get_parsed("queue-cap", cfg.queue_cap)?;
+    cfg.max_inflight = args.get_parsed("max-inflight", cfg.max_inflight)?;
+    cfg.duration = args.get_parsed("duration", cfg.duration)?;
+    cfg.seed = args.get_parsed("seed", cfg.seed)?;
+    Ok(cfg)
+}
+
+fn sweep_rates_from(spec: &str) -> Result<Vec<f64>> {
+    let mut rates = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let rate: f64 = part.parse().map_err(|_| {
+            noc_dnn::config::ConfigError::invalid(
+                "serving",
+                format!("--sweep rate '{part}' is not a number"),
+            )
+        })?;
+        if !rate.is_finite() || rate <= 0.0 {
+            return Err(noc_dnn::config::ConfigError::invalid(
+                "serving",
+                format!("--sweep rate '{part}' must be positive and finite"),
+            )
+            .into());
+        }
+        rates.push(rate);
+    }
+    Ok(rates)
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    // Validate every serving knob before paying for the profile run, so
+    // a bad rate or batch spec fails in milliseconds.
+    let scfg = serving_cfg_from(args)?;
+    let rates = args.get("sweep").map(sweep_rates_from).transpose()?;
+    match &rates {
+        None => scfg.validate()?,
+        Some(rates) => {
+            anyhow::ensure!(
+                scfg.arrival != ArrivalKind::ClosedLoop,
+                "--sweep needs an open-loop arrival mode (a closed loop \
+                 self-throttles and has no offered-rate axis)"
+            );
+            let mut probe = scfg.clone();
+            probe.rate_per_mcycle = rates[0];
+            probe.validate()?;
+        }
+    }
+
+    // Profile the fabric once with the probes forced on (the `analyze`
+    // convention): the serving report attributes which link saturates
+    // first under load, so there is no probe-off variant to configure.
+    let base = scenario_from(args)?;
+    let mut cfg = base.config().clone();
+    cfg.probes = true;
+    let scenario = ScenarioBuilder::from_config(cfg).streaming(base.streaming()).build()?;
+    let model = Network::by_name(args.get("model").unwrap_or("alexnet"))?;
+    let plan = NetworkPlan::uniform(scenario.uniform_policy(), model.len());
+    let run = scenario.execute(&model, &plan)?;
+    let profile = ServiceProfile::from_run(&run);
+    let cfg = scenario.config();
+
+    if let Some(rates) = rates {
+        let sw = serving::sweep(&profile, &scfg, &rates)?;
+        if args.get_bool("json") {
+            println!("{}", sw.to_json().to_pretty());
+            return Ok(());
+        }
+        println!(
+            "arrival-rate sweep: {} on {}x{}, n={}, batch<={} — serial-fabric \
+             capacity ~{:.2} req/Mcycle",
+            profile.model,
+            cfg.mesh_cols,
+            cfg.mesh_rows,
+            cfg.pes_per_router,
+            scfg.batch,
+            profile.capacity_per_mcycle(scfg.batch as u64)
+        );
+        let rows: Vec<Vec<String>> = sw
+            .points
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let r = &p.report;
+                vec![
+                    format!("{:.2}", p.rate),
+                    r.offered.to_string(),
+                    r.rejected.to_string(),
+                    format!("{:.2}", r.throughput_per_mcycle),
+                    r.p50().to_string(),
+                    r.p99().to_string(),
+                    format!("{:.1}%", r.utilization * 100.0),
+                    if sw.knee == Some(i) { "<- knee".into() } else { String::new() },
+                ]
+            })
+            .collect();
+        print!(
+            "{}",
+            report::table(
+                &["rate/Mcyc", "offered", "rejected", "tput/Mcyc", "p50", "p99", "busy", ""],
+                &rows
+            )
+        );
+        match sw.knee_rate() {
+            Some(r) => println!(
+                "saturation knee at ~{r:.2} req/Mcycle (last rate with zero \
+                 rejections and p99 within {}x of the lowest rate's)",
+                noc_dnn::serving::KNEE_BLOWUP
+            ),
+            None => println!("no pre-knee point: even the lowest swept rate saturates"),
+        }
+        if let Some(b) = profile.bottleneck() {
+            println!(
+                "link that saturates first: {} ({} stage, vc {}, util {:.2} in profile)",
+                b.label(),
+                b.stage.label(),
+                b.vc,
+                b.utilization
+            );
+        }
+        return Ok(());
+    }
+
+    let rep = serving::serve(&profile, &scfg)?;
+    if args.get_bool("json") {
+        println!("{}", rep.to_json().to_pretty());
+        return Ok(());
+    }
+    println!(
+        "serving {} on {}x{} {} routers, n={}: {} arrivals, batch<={} \
+         (timeout {} cyc), {} tenant(s) [{}], queue cap {}, max in-flight {}",
+        rep.model,
+        cfg.mesh_cols,
+        cfg.mesh_rows,
+        cfg.topology.label(),
+        cfg.pes_per_router,
+        scfg.arrival.key(),
+        scfg.batch,
+        rep.batch_timeout,
+        scfg.tenants,
+        scfg.sched.key(),
+        scfg.queue_cap,
+        scfg.max_inflight
+    );
+    println!(
+        "offered {}  accepted {}  rejected {}  completed {}  batches {} (mean fill {:.2})",
+        rep.offered, rep.accepted, rep.rejected, rep.completed, rep.batches, rep.mean_batch_fill
+    );
+    println!(
+        "window {} cycles, drained at {} cycles; throughput {:.3} req/Mcycle, \
+         fabric busy {:.1}%",
+        rep.duration,
+        rep.total_cycles,
+        rep.throughput_per_mcycle,
+        rep.utilization * 100.0
+    );
+    println!(
+        "latency (cycles): p50 {}  p99 {}  p999 {}  mean {:.0}  max {}",
+        rep.p50(),
+        rep.p99(),
+        rep.p999(),
+        rep.latency.mean(),
+        rep.latency.max()
+    );
+    println!(
+        "queue depth: mean {:.2}  max {}",
+        rep.queue_depth_mean, rep.queue_depth_max
+    );
+    if let Some(b) = &rep.bottleneck {
+        println!(
+            "saturates first under load: link {} ({} stage, vc {}, util {:.2} in profile)",
+            b.label(),
+            b.stage.label(),
+            b.vc,
+            b.utilization
+        );
+    }
+    if let Some(d) = &rep.degraded {
+        if !d.is_clean() {
+            println!(
+                "profiled on a degraded fabric: {} payloads dropped, {} \
+                 retransmissions, {} detour hops",
+                d.payloads_dropped, d.retransmissions, d.detour_hops
+            );
+        }
+    }
+    if rep.conservation_violations > 0 {
+        println!(
+            "WARNING: {} conservation violations (scheduler leaked requests)",
+            rep.conservation_violations
+        );
     }
     Ok(())
 }

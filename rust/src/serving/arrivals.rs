@@ -1,0 +1,185 @@
+//! Seeded stochastic arrival processes for inference requests.
+//!
+//! Open-loop modes (Poisson, deterministic uniform) push a fixed offered
+//! load regardless of how the fabric keeps up — the right model for
+//! shared front-ends and the one that exposes the saturation knee.
+//! Closed-loop mode models a bounded client population: each client has
+//! at most one request outstanding and thinks for a fixed time between
+//! completion and reissue, so offered load self-throttles to service
+//! capacity (the mode the drain-to-zero conservation test exercises).
+//!
+//! All randomness comes from one [SplitMix64](Rng) stream seeded from
+//! [`ServingConfig::seed`](super::ServingConfig::seed): same seed, same
+//! arrival ledger, bit for bit.
+
+use crate::config::ConfigError;
+use crate::util::rng::Rng;
+
+/// How requests enter the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Open loop, exponential inter-arrival gaps (memoryless traffic).
+    Poisson,
+    /// Open loop, constant inter-arrival gap `1e6 / rate` — a
+    /// deterministic pace clock, useful for pinning exact latencies.
+    Uniform,
+    /// Closed loop: `clients` issuers, one outstanding request each,
+    /// fixed think time between completion and reissue.
+    ClosedLoop,
+}
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Result<ArrivalKind, ConfigError> {
+        match s {
+            "poisson" => Ok(ArrivalKind::Poisson),
+            "uniform" => Ok(ArrivalKind::Uniform),
+            "closed" | "closed-loop" => Ok(ArrivalKind::ClosedLoop),
+            other => Err(ConfigError::UnknownKeyword {
+                what: "arrival",
+                got: other.to_string(),
+                expected: "poisson | uniform | closed",
+            }),
+        }
+    }
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Uniform => "uniform",
+            ArrivalKind::ClosedLoop => "closed",
+        }
+    }
+}
+
+/// One inference request: a single image against the served model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    /// Mint order, 0-based — doubles as the ledger key.
+    pub id: u64,
+    /// Owning tenant, `id % tenants` (round-robin across tenants keeps
+    /// per-tenant load balanced without a second RNG stream).
+    pub tenant: usize,
+    /// Closed-loop issuer index; 0 for open-loop traffic.
+    pub client: usize,
+    /// Cycle the request entered the system.
+    pub arrival: u64,
+}
+
+/// Mints [`Request`]s and, for open-loop modes, draws inter-arrival gaps.
+#[derive(Debug, Clone)]
+pub struct ArrivalProcess {
+    kind: ArrivalKind,
+    rng: Rng,
+    /// Mean inter-arrival gap in cycles (`1e6 / rate_per_mcycle`).
+    mean_gap: f64,
+    tenants: usize,
+    next_id: u64,
+}
+
+impl ArrivalProcess {
+    /// `rate_per_mcycle` is only meaningful for open-loop kinds; pass
+    /// anything (it is unused) for [`ArrivalKind::ClosedLoop`].
+    pub fn new(
+        kind: ArrivalKind,
+        rate_per_mcycle: f64,
+        tenants: usize,
+        seed: u64,
+    ) -> ArrivalProcess {
+        let mean_gap = if rate_per_mcycle > 0.0 {
+            1.0e6 / rate_per_mcycle
+        } else {
+            0.0
+        };
+        ArrivalProcess {
+            kind,
+            rng: Rng::new(seed),
+            mean_gap,
+            tenants: tenants.max(1),
+            next_id: 0,
+        }
+    }
+
+    /// Cycles until the next open-loop arrival; always at least 1 so the
+    /// event clock advances. Poisson draws an exponential via inverse
+    /// transform; uniform is the rounded mean.
+    pub fn gap(&mut self) -> u64 {
+        let cycles = match self.kind {
+            ArrivalKind::Poisson => {
+                // u in [0,1) so 1-u in (0,1] and the log is finite.
+                let u = self.rng.unit();
+                -(1.0 - u).ln() * self.mean_gap
+            }
+            ArrivalKind::Uniform | ArrivalKind::ClosedLoop => self.mean_gap,
+        };
+        (cycles.round() as u64).max(1)
+    }
+
+    /// Mint the next request; ids are dense and tenant assignment is
+    /// round-robin by id.
+    pub fn mint(&mut self, arrival: u64, client: usize) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        Request {
+            id,
+            tenant: (id % self.tenants as u64) as usize,
+            client,
+            arrival,
+        }
+    }
+
+    /// Requests minted so far.
+    pub fn minted(&self) -> u64 {
+        self.next_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_gap_sequence() {
+        let mut a = ArrivalProcess::new(ArrivalKind::Poisson, 5.0, 1, 42);
+        let mut b = ArrivalProcess::new(ArrivalKind::Poisson, 5.0, 1, 42);
+        for _ in 0..1000 {
+            assert_eq!(a.gap(), b.gap());
+        }
+    }
+
+    #[test]
+    fn poisson_mean_gap_tracks_the_rate() {
+        // rate 10/Mcycle -> mean gap 100k cycles; the empirical mean over
+        // 20k draws should land within a few percent.
+        let mut p = ArrivalProcess::new(ArrivalKind::Poisson, 10.0, 1, 7);
+        let n = 20_000u64;
+        let total: u64 = (0..n).map(|_| p.gap()).sum();
+        let mean = total as f64 / n as f64;
+        assert!(
+            (mean - 100_000.0).abs() < 5_000.0,
+            "empirical mean gap {mean} too far from 100k"
+        );
+    }
+
+    #[test]
+    fn uniform_gap_is_constant_and_rounded() {
+        let mut u = ArrivalProcess::new(ArrivalKind::Uniform, 4.0, 1, 1);
+        for _ in 0..10 {
+            assert_eq!(u.gap(), 250_000);
+        }
+        // Gaps never collapse to zero even at absurd rates.
+        let mut fast = ArrivalProcess::new(ArrivalKind::Uniform, 1.0e9, 1, 1);
+        assert_eq!(fast.gap(), 1);
+    }
+
+    #[test]
+    fn minting_is_dense_and_round_robin_across_tenants() {
+        let mut p = ArrivalProcess::new(ArrivalKind::Uniform, 1.0, 3, 9);
+        let reqs: Vec<Request> = (0..7).map(|i| p.mint(i * 10, 0)).collect();
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tenant, i % 3);
+            assert_eq!(r.arrival, i as u64 * 10);
+        }
+        assert_eq!(p.minted(), 7);
+    }
+}

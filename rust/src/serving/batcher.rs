@@ -1,0 +1,295 @@
+//! Batch formation and admission control.
+//!
+//! Requests wait in bounded queues until a batch is formed — either a
+//! full one (`batch` images ready) or a partial one forced out when the
+//! queue head has aged past the batch timeout (so a lone request is
+//! never parked forever behind an unreachable fill target). Admission is
+//! capacity-checked here: a request that arrives with `queue_cap`
+//! requests already waiting is rejected and counted, which is what makes
+//! offered-vs-accepted load a meaningful pair of numbers in the report.
+//!
+//! Scheduling is FIFO (one shared queue) or per-tenant priority: each
+//! tenant gets its own queue, lower tenant ids strictly win ties, and a
+//! batch carries the virtual-channel class its tenant maps to
+//! (`tenant % vc_classes`). The VC tag rides along as pass metadata —
+//! the profile-based serving executor time-shares the fabric at layer
+//! granularity rather than re-simulating per-flit VC arbitration, but
+//! the tag keeps the tenant→VC mapping visible in ledgers and reports
+//! (and gives a cycle-accurate multi-pass NoC a ready-made handle).
+//!
+//! Everything here is integer state machines over [`VecDeque`]s: batch
+//! formation order is a pure function of (arrival order, clock), so the
+//! batcher contributes nothing nondeterministic to a seeded run.
+
+use std::collections::VecDeque;
+
+use super::arrivals::Request;
+use super::ServingConfig;
+use crate::config::ConfigError;
+
+/// Queue discipline for batch formation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    /// One shared queue, strict arrival order.
+    Fifo,
+    /// Per-tenant queues; the lowest-id tenant with a full batch wins,
+    /// then the most-overdue timed-out head.
+    Priority,
+}
+
+impl SchedKind {
+    pub fn parse(s: &str) -> Result<SchedKind, ConfigError> {
+        match s {
+            "fifo" => Ok(SchedKind::Fifo),
+            "priority" => Ok(SchedKind::Priority),
+            other => Err(ConfigError::UnknownKeyword {
+                what: "sched",
+                got: other.to_string(),
+                expected: "fifo | priority",
+            }),
+        }
+    }
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            SchedKind::Fifo => "fifo",
+            SchedKind::Priority => "priority",
+        }
+    }
+}
+
+/// A formed batch, ready to be admitted as an in-flight pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+    /// Source queue: tenant id under priority scheduling, 0 under FIFO.
+    pub tenant: usize,
+    /// Virtual-channel class the batch's traffic is tagged with.
+    pub vc: usize,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Bounded queues + batch formation. See the module docs for the rules.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    sched: SchedKind,
+    batch: usize,
+    timeout: u64,
+    queue_cap: usize,
+    vc_classes: usize,
+    /// One queue under FIFO, `tenants` queues under priority.
+    queues: Vec<VecDeque<Request>>,
+    queued: usize,
+    /// Requests admitted into a queue.
+    pub accepted: u64,
+    /// Requests turned away at capacity.
+    pub rejected: u64,
+}
+
+impl Batcher {
+    /// `timeout` is the resolved batch timeout in cycles (the executor
+    /// resolves the config's `0 = auto` before building the batcher).
+    pub fn new(cfg: &ServingConfig, timeout: u64, vc_classes: usize) -> Batcher {
+        let lanes = match cfg.sched {
+            SchedKind::Fifo => 1,
+            SchedKind::Priority => cfg.tenants.max(1),
+        };
+        Batcher {
+            sched: cfg.sched,
+            batch: cfg.batch.max(1),
+            timeout: timeout.max(1),
+            queue_cap: cfg.queue_cap.max(1),
+            vc_classes: vc_classes.max(1),
+            queues: (0..lanes).map(|_| VecDeque::new()).collect(),
+            queued: 0,
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Admit or reject one arrival. Returns whether it was queued.
+    pub fn offer(&mut self, req: Request) -> bool {
+        if self.queued >= self.queue_cap {
+            self.rejected += 1;
+            return false;
+        }
+        let lane = match self.sched {
+            SchedKind::Fifo => 0,
+            SchedKind::Priority => req.tenant % self.queues.len(),
+        };
+        self.queues[lane].push_back(req);
+        self.queued += 1;
+        self.accepted += 1;
+        true
+    }
+
+    /// Requests currently waiting across all queues.
+    pub fn depth(&self) -> usize {
+        self.queued
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued == 0
+    }
+
+    /// Earliest cycle at which some queue head times out, if any request
+    /// is waiting. The executor uses this only as a sanity bound; the
+    /// event loop schedules an explicit timeout event per admission.
+    pub fn next_deadline(&self) -> Option<u64> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|r| r.arrival + self.timeout))
+            .min()
+    }
+
+    /// Form the next batch at cycle `now`, or `None` if no queue has
+    /// either a full batch or a timed-out head. Deterministic: full
+    /// batches beat timeouts, lower tenant ids break every tie.
+    pub fn pop_batch(&mut self, now: u64) -> Option<Batch> {
+        // Pass 1: lowest-id lane with a full batch.
+        let full = (0..self.queues.len()).find(|&i| self.queues[i].len() >= self.batch);
+        // Pass 2: among timed-out heads, the most overdue (oldest head
+        // arrival); ties fall to the lower lane via strict `<`.
+        let lane = full.or_else(|| {
+            let mut best: Option<(u64, usize)> = None;
+            for (i, q) in self.queues.iter().enumerate() {
+                if let Some(head) = q.front() {
+                    if head.arrival + self.timeout <= now
+                        && best.map_or(true, |(a, _)| head.arrival < a)
+                    {
+                        best = Some((head.arrival, i));
+                    }
+                }
+            }
+            best.map(|(_, i)| i)
+        })?;
+        let take = self.queues[lane].len().min(self.batch);
+        let requests: Vec<Request> =
+            self.queues[lane].drain(..take).collect();
+        self.queued -= take;
+        let tenant = match self.sched {
+            SchedKind::Fifo => 0,
+            SchedKind::Priority => lane,
+        };
+        Some(Batch {
+            requests,
+            tenant,
+            vc: tenant % self.vc_classes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::arrivals::{ArrivalKind, ArrivalProcess};
+    use super::*;
+
+    fn cfg(sched: SchedKind, batch: usize, tenants: usize, cap: usize) -> ServingConfig {
+        ServingConfig {
+            rate_per_mcycle: 1.0,
+            sched,
+            batch,
+            tenants,
+            queue_cap: cap,
+            ..ServingConfig::default()
+        }
+    }
+
+    fn mint(n: usize, tenants: usize) -> Vec<Request> {
+        let mut p = ArrivalProcess::new(ArrivalKind::Uniform, 1.0, tenants, 1);
+        (0..n).map(|i| p.mint(i as u64 * 10, 0)).collect()
+    }
+
+    #[test]
+    fn fifo_forms_full_batches_in_arrival_order() {
+        let mut b = Batcher::new(&cfg(SchedKind::Fifo, 3, 1, 64), 1000, 1);
+        for r in mint(7, 1) {
+            assert!(b.offer(r));
+        }
+        let first = b.pop_batch(60).expect("full batch available");
+        assert_eq!(
+            first.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        let second = b.pop_batch(60).expect("second full batch");
+        assert_eq!(
+            second.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![3, 4, 5]
+        );
+        // One request left: below the fill target and not yet timed out.
+        assert!(b.pop_batch(60).is_none());
+        assert_eq!(b.depth(), 1);
+        // Past its deadline (arrival 60 + timeout 1000) it flushes alone.
+        let flush = b.pop_batch(1060).expect("timeout flush");
+        assert_eq!(flush.len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn capacity_rejections_are_counted() {
+        let mut b = Batcher::new(&cfg(SchedKind::Fifo, 4, 1, 3), 1000, 1);
+        let reqs = mint(5, 1);
+        let admitted: Vec<bool> = reqs.into_iter().map(|r| b.offer(r)).collect();
+        assert_eq!(admitted, vec![true, true, true, false, false]);
+        assert_eq!((b.accepted, b.rejected), (3, 2));
+        assert_eq!(b.depth(), 3);
+    }
+
+    #[test]
+    fn priority_prefers_the_lowest_tenant_with_a_full_batch() {
+        let mut b = Batcher::new(&cfg(SchedKind::Priority, 2, 3, 64), 1000, 4);
+        // Round-robin tenants: ids 0..6 -> tenants 0,1,2,0,1,2.
+        for r in mint(6, 3) {
+            assert!(b.offer(r));
+        }
+        let batch = b.pop_batch(60).expect("tenant 0 is full");
+        assert_eq!(batch.tenant, 0);
+        assert_eq!(batch.vc, 0);
+        assert_eq!(
+            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 3]
+        );
+        // Next full lane by id order: tenant 1.
+        assert_eq!(b.pop_batch(60).expect("tenant 1").tenant, 1);
+        assert_eq!(b.pop_batch(60).expect("tenant 2").tenant, 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn priority_timeout_picks_the_most_overdue_head() {
+        let mut b = Batcher::new(&cfg(SchedKind::Priority, 4, 2, 64), 100, 2);
+        let mut p = ArrivalProcess::new(ArrivalKind::Uniform, 1.0, 2, 1);
+        // id 0 -> tenant 0 at cycle 0; id 1 -> tenant 1 at cycle 5.
+        let a = p.mint(0, 0);
+        let b1 = p.mint(5, 0);
+        b.offer(a);
+        b.offer(b1);
+        // Neither lane is full; at cycle 150 both heads are overdue and
+        // tenant 0's (arrival 0) is older.
+        let first = b.pop_batch(150).expect("overdue head");
+        assert_eq!(first.tenant, 0);
+        assert_eq!(first.vc, 0);
+        let second = b.pop_batch(150).expect("remaining overdue head");
+        assert_eq!(second.tenant, 1);
+        assert_eq!(second.vc, 1);
+    }
+
+    #[test]
+    fn deadline_tracks_the_oldest_head() {
+        let mut b = Batcher::new(&cfg(SchedKind::Fifo, 8, 1, 64), 500, 1);
+        assert_eq!(b.next_deadline(), None);
+        for r in mint(2, 1) {
+            b.offer(r);
+        }
+        assert_eq!(b.next_deadline(), Some(500));
+    }
+}

@@ -1,0 +1,766 @@
+//! Multi-pass fabric-sharing executor and the serving metrics layer.
+//!
+//! ## The fabric-sharing model
+//!
+//! A whole-network pass occupies the mesh one layer at a time — the
+//! executor's own convention (each layer's output feature map completes
+//! before the next layer starts) means the NoC is a **serial resource at
+//! layer granularity**. The serving executor exploits that: it measures
+//! each layer once through the real per-flit simulator (via
+//! [`ServiceProfile::from_run`]) and then time-shares the fabric across
+//! concurrent in-flight passes by granting it to one pass per layer
+//! slice from a FIFO ready ring. A pass that finishes a layer re-enters
+//! the back of the ring, so `max_inflight` passes interleave
+//! round-robin at layer granularity — the same policy a cycle-accurate
+//! multi-pass fabric would approach with fair arbitration, at event
+//! cost instead of per-flit cost.
+//!
+//! Batching scales each layer slice: a batch of `B` images pays the
+//! layer's setup once and its streaming/compute/reload terms per image
+//! (`setup + B x (per_image + reload)`), which is exactly why batching
+//! buys throughput at the cost of per-request latency.
+//!
+//! ## Determinism
+//!
+//! The event loop is single-threaded over the
+//! [`Calendar`](crate::noc::calendar::Calendar) queue; the only
+//! randomness is the seeded arrival RNG. Executor parallelism knobs
+//! (`threads`, `intra_workers`) affect the *profile measurement* only,
+//! and those runs are bit-identical by the network executor's own
+//! guarantee — so the request ledger, percentiles, and every counter
+//! here are bit-identical for a given seed. `tests/serving.rs` pins it.
+//!
+//! ## Conservation
+//!
+//! At every event cycle the loop audits
+//! `offered == completed + rejected + queued + in_flight` and counts
+//! violations (always zero unless the scheduler leaks a request); the
+//! count is part of the report so CI can assert on it.
+
+use std::collections::VecDeque;
+
+use super::arrivals::{ArrivalKind, ArrivalProcess};
+use super::batcher::{Batch, Batcher};
+use super::ServingConfig;
+use crate::coordinator::executor::NetworkRunReport;
+use crate::noc::calendar::Calendar;
+use crate::noc::faults::DegradationReport;
+use crate::noc::probes::{Bottleneck, ProbeReport};
+use crate::util::histogram::Histogram;
+use crate::util::json::Json;
+
+/// p99 multiplier (vs. the lowest swept rate) past which a sweep point
+/// no longer counts as pre-knee.
+pub const KNEE_BLOWUP: f64 = 5.0;
+
+/// Latency histogram geometry: bucket width is one 64th of a full-batch
+/// pass, so the tail resolves to ~1.5% of a pass and 8192 buckets cover
+/// 128 queued pass-times before overflow (overflow reports the max).
+const LAT_BUCKETS: usize = 8192;
+
+/// Hard ceiling on processed events — a liveness backstop far above any
+/// real run (arrivals are >= 1 cycle apart and passes retire requests).
+const EVENT_CAP: u64 = 200_000_000;
+
+/// What one layer of the served model costs, measured once by the
+/// network executor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerCost {
+    pub name: String,
+    /// Paid once per batch: pipeline fill / drain and control overhead.
+    pub setup_cycles: u64,
+    /// Paid per image: the layer's streaming + compute + collection term.
+    pub per_image_cycles: u64,
+    /// Paid per image: refilling the layer's input feature map between
+    /// passes (the executor's inter-layer reload charge).
+    pub reload_cycles: u64,
+}
+
+/// Per-layer service costs plus the load-attribution artifacts carried
+/// over from the measuring run: the hottest layer's link probes (for
+/// "which link saturates first under load") and the summed degradation
+/// ledger when the profile was measured on a faulty fabric.
+#[derive(Debug, Clone)]
+pub struct ServiceProfile {
+    pub model: String,
+    pub layers: Vec<LayerCost>,
+    /// Virtual-channel classes tenants map onto (the fabric's VC count).
+    pub vc_classes: usize,
+    /// Link probes of the most expensive layer (per-image + reload) —
+    /// the layer that bounds service rate, hence the saturation story.
+    pub probes: Option<ProbeReport<'static>>,
+    /// Field-wise sum of the measuring run's per-layer degradation.
+    pub degraded: Option<DegradationReport>,
+}
+
+impl ServiceProfile {
+    /// Distill a [`NetworkRunReport`] into per-layer costs. The driver's
+    /// `total_cycles` splits into the setup prefix and a per-image
+    /// remainder; `reload_cycles` is the executor's boundary charge.
+    pub fn from_run(run: &NetworkRunReport) -> ServiceProfile {
+        let mut layers = Vec::with_capacity(run.layers.len());
+        let mut hot: Option<(u64, usize)> = None;
+        for (i, l) in run.layers.iter().enumerate() {
+            let total = l.report.run.total_cycles;
+            let setup = l.report.run.setup_cycles.min(total);
+            let per_image = (total - setup).max(1);
+            layers.push(LayerCost {
+                name: l.report.layer.clone(),
+                setup_cycles: setup,
+                per_image_cycles: per_image,
+                reload_cycles: l.reload_cycles,
+            });
+            // Strict `>` keeps the first of equals — deterministic.
+            let weight = per_image + l.reload_cycles;
+            if hot.map_or(true, |(w, _)| weight > w) {
+                hot = Some((weight, i));
+            }
+        }
+        let probes = hot.and_then(|(_, i)| run.layers[i].report.run.probes.clone());
+        let mut acc = DegradationReport::default();
+        let mut any = false;
+        for l in &run.layers {
+            if let Some(d) = &l.report.run.degraded {
+                any = true;
+                acc.missing_contributors += d.missing_contributors;
+                acc.payloads_dropped += d.payloads_dropped;
+                acc.packets_dropped += d.packets_dropped;
+                acc.flits_dropped += d.flits_dropped;
+                acc.flits_corrupted += d.flits_corrupted;
+                acc.retransmissions += d.retransmissions;
+                acc.retries_exhausted += d.retries_exhausted;
+                acc.detour_hops += d.detour_hops;
+                acc.streams_truncated += d.streams_truncated;
+                acc.streams_dropped += d.streams_dropped;
+            }
+        }
+        ServiceProfile {
+            model: run.model.clone(),
+            layers,
+            vc_classes: run.cfg.vcs.max(1),
+            probes,
+            degraded: any.then_some(acc),
+        }
+    }
+
+    /// A hand-built profile for tests and benches — no fabric run needed.
+    pub fn synthetic(model: &str, layers: Vec<LayerCost>) -> ServiceProfile {
+        ServiceProfile {
+            model: model.to_string(),
+            layers,
+            vc_classes: 2,
+            probes: None,
+            degraded: None,
+        }
+    }
+
+    /// Cycles layer `i` occupies the fabric for a batch of `batch` images.
+    pub fn layer_cycles(&self, i: usize, batch: u64) -> u64 {
+        let l = &self.layers[i];
+        l.setup_cycles
+            .saturating_add(batch.saturating_mul(l.per_image_cycles + l.reload_cycles))
+    }
+
+    /// Cycles one whole pass of `batch` images occupies the fabric.
+    pub fn pass_cycles(&self, batch: u64) -> u64 {
+        (0..self.layers.len())
+            .map(|i| self.layer_cycles(i, batch))
+            .sum()
+    }
+
+    /// Upper bound on sustainable throughput at this batch size,
+    /// requests per Mcycle — the fabric is serial, so it is simply
+    /// `batch / pass_cycles`. Sweeps use this to place rates around the
+    /// knee.
+    pub fn capacity_per_mcycle(&self, batch: u64) -> f64 {
+        batch as f64 * 1.0e6 / self.pass_cycles(batch).max(1) as f64
+    }
+
+    /// The link that bounds this profile's hottest layer, if the
+    /// measuring run carried probes.
+    pub fn bottleneck(&self) -> Option<Bottleneck> {
+        self.probes.as_ref().and_then(|p| p.bottleneck())
+    }
+}
+
+/// One retired request in the ledger (the bit-identity witness).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompletedRequest {
+    pub id: u64,
+    pub tenant: usize,
+    pub client: usize,
+    pub arrival: u64,
+    pub completion: u64,
+}
+
+/// Everything a seeded serving run produced.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub model: String,
+    pub cfg: ServingConfig,
+    /// Resolved batch timeout (after `0 = auto`).
+    pub batch_timeout: u64,
+    /// Resolved arrival window (after `0 = auto`).
+    pub duration: u64,
+    /// Cycle the last event retired (arrival window + drain).
+    pub total_cycles: u64,
+    pub offered: u64,
+    pub accepted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    pub fabric_busy_cycles: u64,
+    /// `fabric_busy_cycles / total_cycles` — approaches 1 at the knee.
+    pub utilization: f64,
+    pub latency: Histogram,
+    pub queue_depth_max: u64,
+    pub queue_depth_mean: f64,
+    pub throughput_per_mcycle: f64,
+    /// Sample points where `offered != completed + rejected + queued +
+    /// in_flight` — always 0 unless the scheduler leaks a request.
+    pub conservation_violations: u64,
+    pub queued_at_end: u64,
+    pub inflight_at_end: u64,
+    /// The link that saturates first under load (from the profile).
+    pub bottleneck: Option<Bottleneck>,
+    /// Degradation carried by the profile's measuring run, if faulty.
+    pub degraded: Option<DegradationReport>,
+    /// Per-request completions in retirement order.
+    pub ledger: Vec<CompletedRequest>,
+}
+
+impl ServingReport {
+    pub fn p50(&self) -> u64 {
+        self.latency.percentile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.latency.percentile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.latency.percentile(0.999)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", Json::Str(self.model.clone()))
+            .set("serving", self.cfg.to_json())
+            .set("batch_timeout", Json::Num(self.batch_timeout as f64))
+            .set("duration", Json::Num(self.duration as f64))
+            .set("total_cycles", Json::Num(self.total_cycles as f64))
+            .set("offered", Json::Num(self.offered as f64))
+            .set("accepted", Json::Num(self.accepted as f64))
+            .set("rejected", Json::Num(self.rejected as f64))
+            .set("completed", Json::Num(self.completed as f64))
+            .set("batches", Json::Num(self.batches as f64))
+            .set("mean_batch_fill", Json::Num(self.mean_batch_fill))
+            .set("fabric_busy_cycles", Json::Num(self.fabric_busy_cycles as f64))
+            .set("utilization", Json::Num(self.utilization))
+            .set(
+                "throughput_per_mcycle",
+                Json::Num(self.throughput_per_mcycle),
+            )
+            .set(
+                "conservation_violations",
+                Json::Num(self.conservation_violations as f64),
+            )
+            .set("queued_at_end", Json::Num(self.queued_at_end as f64))
+            .set("inflight_at_end", Json::Num(self.inflight_at_end as f64))
+            .set("latency", self.latency.to_json());
+        let mut q = Json::obj();
+        q.set("mean", Json::Num(self.queue_depth_mean))
+            .set("max", Json::Num(self.queue_depth_max as f64));
+        j.set("queue_depth", q);
+        // Same bottleneck object shape as ProbeReport::to_json, so
+        // downstream tooling parses both.
+        if let Some(b) = &self.bottleneck {
+            let mut o = Json::obj();
+            o.set("link", Json::Str(b.label()))
+                .set("port", Json::Str(b.port.letter().to_string()))
+                .set("utilization", Json::Num(b.utilization))
+                .set("flits", Json::Num(b.flits as f64))
+                .set("vc", Json::Num(b.vc as f64))
+                .set("blocked_cycles", Json::Num(b.blocked_cycles as f64))
+                .set("stage", Json::Str(b.stage.label().to_string()));
+            j.set("bottleneck", o);
+        } else {
+            j.set("bottleneck", Json::Null);
+        }
+        match &self.degraded {
+            Some(d) => j.set("degraded", d.to_json()),
+            None => j.set("degraded", Json::Null),
+        };
+        j
+    }
+}
+
+/// Everything the event loop schedules.
+enum Event {
+    /// Next open-loop arrival (self-rescheduling until the window ends).
+    Arrival,
+    /// A closed-loop client issues (or retries) its request.
+    ClientArrival(usize),
+    /// A queue head may have aged out; purely a dispatch trigger, stale
+    /// ones are no-ops.
+    BatchTimeout,
+    /// The fabric finished the current layer slice of pass `slot`.
+    LayerDone(usize),
+}
+
+/// An admitted batch working through the model's layers.
+struct Pass {
+    batch: Batch,
+    next_layer: usize,
+}
+
+/// Run one seeded serving simulation against a measured profile.
+pub fn serve(profile: &ServiceProfile, cfg: &ServingConfig) -> crate::Result<ServingReport> {
+    cfg.validate()?;
+    anyhow::ensure!(
+        !profile.layers.is_empty(),
+        "service profile has no layers to serve"
+    );
+    let batch_images = cfg.batch as u64;
+    let full_pass = profile.pass_cycles(batch_images).max(1);
+    let timeout = if cfg.batch_timeout == 0 {
+        (full_pass / 2).max(1)
+    } else {
+        cfg.batch_timeout
+    };
+    let duration = if cfg.duration == 0 {
+        full_pass.saturating_mul(32).max(1_000_000)
+    } else {
+        cfg.duration
+    };
+
+    let mut arrivals =
+        ArrivalProcess::new(cfg.arrival, cfg.rate_per_mcycle, cfg.tenants, cfg.seed);
+    let mut batcher = Batcher::new(cfg, timeout, profile.vc_classes);
+    let mut events: Calendar<Event> = Calendar::new();
+    let mut latency = Histogram::new((full_pass / 64).max(1), LAT_BUCKETS);
+
+    let mut passes: Vec<Option<Pass>> = Vec::new();
+    let mut ready: VecDeque<usize> = VecDeque::new();
+    let mut fabric_busy = false;
+    let mut inflight_passes = 0usize;
+    let mut inflight_requests = 0u64;
+    let mut completed = 0u64;
+    let mut batches = 0u64;
+    let mut fill_sum = 0u64;
+    let mut busy_cycles = 0u64;
+    let mut ledger: Vec<CompletedRequest> = Vec::new();
+    let mut conservation_violations = 0u64;
+    let (mut depth_sum, mut depth_max, mut depth_samples) = (0u64, 0u64, 0u64);
+    let mut clock = 0u64;
+    let mut processed = 0u64;
+
+    match cfg.arrival {
+        ArrivalKind::ClosedLoop => {
+            // Stagger the population by one cycle each so issue order is
+            // well-defined without a tie-break rule.
+            for c in 0..cfg.clients {
+                events.push(1 + c as u64, Event::ClientArrival(c));
+            }
+        }
+        ArrivalKind::Poisson | ArrivalKind::Uniform => {
+            let first = arrivals.gap();
+            if first <= duration {
+                events.push(first, Event::Arrival);
+            }
+        }
+    }
+
+    let mut scratch: Vec<Event> = Vec::new();
+    while let Some(cycle) = events.next_cycle() {
+        clock = cycle;
+        scratch.clear();
+        events.drain_up_to(cycle, &mut scratch);
+        for ev in scratch.drain(..) {
+            processed += 1;
+            match ev {
+                Event::Arrival => {
+                    let req = arrivals.mint(clock, 0);
+                    if batcher.offer(req) {
+                        events.push(clock + timeout, Event::BatchTimeout);
+                    }
+                    let next = clock + arrivals.gap();
+                    if next <= duration {
+                        events.push(next, Event::Arrival);
+                    }
+                }
+                Event::ClientArrival(c) => {
+                    let req = arrivals.mint(clock, c);
+                    if batcher.offer(req) {
+                        events.push(clock + timeout, Event::BatchTimeout);
+                    } else {
+                        // The client population is fixed: a rejected
+                        // client thinks and retries rather than vanishing.
+                        let retry = clock + cfg.think_cycles.max(1);
+                        if retry <= duration {
+                            events.push(retry, Event::ClientArrival(c));
+                        }
+                    }
+                }
+                Event::BatchTimeout => {}
+                Event::LayerDone(slot) => {
+                    fabric_busy = false;
+                    let finished = {
+                        let pass = passes[slot].as_mut().expect("pass slot is live");
+                        pass.next_layer += 1;
+                        pass.next_layer >= profile.layers.len()
+                    };
+                    if finished {
+                        let pass = passes[slot].take().expect("pass slot is live");
+                        inflight_passes -= 1;
+                        inflight_requests -= pass.batch.len() as u64;
+                        completed += pass.batch.len() as u64;
+                        for r in &pass.batch.requests {
+                            latency.record(clock - r.arrival);
+                            ledger.push(CompletedRequest {
+                                id: r.id,
+                                tenant: r.tenant,
+                                client: r.client,
+                                arrival: r.arrival,
+                                completion: clock,
+                            });
+                            if cfg.arrival == ArrivalKind::ClosedLoop {
+                                let next = clock + cfg.think_cycles.max(1);
+                                if next <= duration {
+                                    events.push(next, Event::ClientArrival(r.client));
+                                }
+                            }
+                        }
+                    } else {
+                        // Round-robin: back of the ready ring.
+                        ready.push_back(slot);
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(
+            processed <= EVENT_CAP,
+            "serving run wedged: {processed} events without draining (cycle {clock})"
+        );
+
+        // Admit every batch the scheduler can form while in-flight slots
+        // are free.
+        while inflight_passes < cfg.max_inflight {
+            let Some(batch) = batcher.pop_batch(clock) else {
+                break;
+            };
+            batches += 1;
+            fill_sum += batch.len() as u64;
+            inflight_requests += batch.len() as u64;
+            inflight_passes += 1;
+            let slot = passes.len();
+            passes.push(Some(Pass {
+                batch,
+                next_layer: 0,
+            }));
+            ready.push_back(slot);
+        }
+        // Grant the serial fabric to the next ready pass.
+        if !fabric_busy {
+            if let Some(slot) = ready.pop_front() {
+                let pass = passes[slot].as_ref().expect("pass slot is live");
+                let cycles = profile
+                    .layer_cycles(pass.next_layer, pass.batch.len() as u64)
+                    .max(1);
+                busy_cycles += cycles;
+                fabric_busy = true;
+                events.push(clock + cycles, Event::LayerDone(slot));
+            }
+        }
+        // Conservation audit + queue-depth sample at every event cycle.
+        let queued = batcher.depth() as u64;
+        if arrivals.minted() != completed + batcher.rejected + queued + inflight_requests {
+            conservation_violations += 1;
+        }
+        depth_samples += 1;
+        depth_sum += queued;
+        depth_max = depth_max.max(queued);
+    }
+
+    let total_cycles = clock.max(1);
+    Ok(ServingReport {
+        model: profile.model.clone(),
+        cfg: cfg.clone(),
+        batch_timeout: timeout,
+        duration,
+        total_cycles,
+        offered: arrivals.minted(),
+        accepted: batcher.accepted,
+        rejected: batcher.rejected,
+        completed,
+        batches,
+        mean_batch_fill: if batches == 0 {
+            0.0
+        } else {
+            fill_sum as f64 / batches as f64
+        },
+        fabric_busy_cycles: busy_cycles,
+        utilization: busy_cycles as f64 / total_cycles as f64,
+        latency,
+        queue_depth_max: depth_max,
+        queue_depth_mean: if depth_samples == 0 {
+            0.0
+        } else {
+            depth_sum as f64 / depth_samples as f64
+        },
+        throughput_per_mcycle: completed as f64 * 1.0e6 / total_cycles as f64,
+        conservation_violations,
+        queued_at_end: batcher.depth() as u64,
+        inflight_at_end: inflight_requests,
+        bottleneck: profile.bottleneck(),
+        degraded: profile.degraded.clone(),
+        ledger,
+    })
+}
+
+/// One swept arrival rate and its full report.
+#[derive(Debug, Clone)]
+pub struct RatePoint {
+    pub rate: f64,
+    pub report: ServingReport,
+}
+
+/// An ascending arrival-rate sweep with the located saturation knee.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub points: Vec<RatePoint>,
+    /// Index of the highest pre-knee rate: the last point, scanning from
+    /// the lowest rate, with zero rejections and p99 within
+    /// [`KNEE_BLOWUP`] x the lowest rate's p99. `None` if even the first
+    /// rate saturates.
+    pub knee: Option<usize>,
+}
+
+impl SweepReport {
+    pub fn knee_rate(&self) -> Option<f64> {
+        self.knee.map(|i| self.points[i].rate)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let model = self
+            .points
+            .first()
+            .map(|p| p.report.model.clone())
+            .unwrap_or_default();
+        j.set("model", Json::Str(model));
+        match self.knee_rate() {
+            Some(r) => j.set("knee_rate_per_mcycle", Json::Num(r)),
+            None => j.set("knee_rate_per_mcycle", Json::Null),
+        };
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                let r = &p.report;
+                let mut o = Json::obj();
+                o.set("rate_per_mcycle", Json::Num(p.rate))
+                    .set("offered", Json::Num(r.offered as f64))
+                    .set("rejected", Json::Num(r.rejected as f64))
+                    .set("completed", Json::Num(r.completed as f64))
+                    .set("throughput_per_mcycle", Json::Num(r.throughput_per_mcycle))
+                    .set("utilization", Json::Num(r.utilization))
+                    .set("p50", Json::Num(r.p50() as f64))
+                    .set("p99", Json::Num(r.p99() as f64))
+                    .set("p999", Json::Num(r.p999() as f64));
+                o
+            })
+            .collect();
+        j.set("points", Json::Arr(points));
+        j
+    }
+}
+
+/// Serve the profile at each rate in ascending order and locate the
+/// saturation knee. Open-loop modes only — a closed loop self-throttles
+/// and has no offered-rate axis to sweep.
+pub fn sweep(
+    profile: &ServiceProfile,
+    base: &ServingConfig,
+    rates: &[f64],
+) -> crate::Result<SweepReport> {
+    anyhow::ensure!(!rates.is_empty(), "rate sweep needs at least one rate");
+    anyhow::ensure!(
+        rates.windows(2).all(|w| w[0] < w[1]),
+        "sweep rates must be strictly increasing"
+    );
+    anyhow::ensure!(
+        base.arrival != ArrivalKind::ClosedLoop,
+        "rate sweep needs an open-loop arrival mode (poisson | uniform)"
+    );
+    let mut points = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        let mut cfg = base.clone();
+        cfg.rate_per_mcycle = rate;
+        let report = serve(profile, &cfg)?;
+        points.push(RatePoint { rate, report });
+    }
+    let base_p99 = points[0].report.p99().max(1) as f64;
+    let mut knee = None;
+    for (i, p) in points.iter().enumerate() {
+        let r = &p.report;
+        if r.rejected == 0 && (r.p99() as f64) <= base_p99 * KNEE_BLOWUP {
+            knee = Some(i);
+        } else {
+            break;
+        }
+    }
+    Ok(SweepReport { points, knee })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SchedKind;
+    use super::*;
+
+    fn flat_profile(layers: usize, per_image: u64) -> ServiceProfile {
+        ServiceProfile::synthetic(
+            "synthetic",
+            (0..layers)
+                .map(|i| LayerCost {
+                    name: format!("l{i}"),
+                    setup_cycles: 0,
+                    per_image_cycles: per_image,
+                    reload_cycles: 0,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn unloaded_uniform_arrivals_pin_the_exact_latency() {
+        // One layer of 100 cycles/image, batch 1, one arrival per 10k
+        // cycles: no queueing ever, so every latency is exactly 100.
+        let profile = flat_profile(1, 100);
+        let cfg = ServingConfig {
+            arrival: ArrivalKind::Uniform,
+            rate_per_mcycle: 100.0,
+            batch: 1,
+            max_inflight: 1,
+            duration: 1_000_000,
+            ..ServingConfig::default()
+        };
+        let r = serve(&profile, &cfg).unwrap();
+        assert_eq!(r.offered, 100);
+        assert_eq!(r.completed, 100);
+        assert_eq!(r.rejected, 0);
+        assert_eq!(r.conservation_violations, 0);
+        assert_eq!((r.p50(), r.p99(), r.p999()), (100, 100, 100));
+        assert_eq!(r.latency.max(), 100);
+        assert_eq!(r.queued_at_end, 0);
+        assert_eq!(r.inflight_at_end, 0);
+    }
+
+    #[test]
+    fn batch_slices_pay_setup_once_and_per_image_per_image() {
+        let profile = ServiceProfile::synthetic(
+            "synthetic",
+            vec![LayerCost {
+                name: "l0".into(),
+                setup_cycles: 50,
+                per_image_cycles: 100,
+                reload_cycles: 10,
+            }],
+        );
+        assert_eq!(profile.layer_cycles(0, 1), 160);
+        assert_eq!(profile.layer_cycles(0, 4), 490);
+        assert_eq!(profile.pass_cycles(4), 490);
+        let cap = profile.capacity_per_mcycle(4);
+        assert!((cap - 4.0e6 / 490.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overload_rejects_and_conserves() {
+        // Capacity is 1 req / 1000 cycles; offer 10x that into a short
+        // queue: rejections must appear and the audit must stay clean.
+        let profile = flat_profile(2, 500);
+        let cfg = ServingConfig {
+            arrival: ArrivalKind::Uniform,
+            rate_per_mcycle: 10_000.0,
+            batch: 1,
+            queue_cap: 8,
+            max_inflight: 2,
+            duration: 400_000,
+            ..ServingConfig::default()
+        };
+        let r = serve(&profile, &cfg).unwrap();
+        assert!(r.rejected > 0, "10x overload must reject");
+        assert_eq!(r.offered, r.accepted + r.rejected);
+        assert_eq!(r.accepted, r.completed, "the run drains fully");
+        assert_eq!(r.conservation_violations, 0);
+        assert_eq!(r.ledger.len() as u64, r.completed);
+        assert!(r.utilization > 0.9, "overloaded fabric is ~saturated");
+    }
+
+    #[test]
+    fn priority_ledger_orders_tenant_zero_first() {
+        // Two tenants, both queues fill while the fabric is busy; the
+        // priority scheduler must retire tenant 0's batch first.
+        let profile = flat_profile(1, 1000);
+        let cfg = ServingConfig {
+            arrival: ArrivalKind::Uniform,
+            rate_per_mcycle: 4000.0, // 4x capacity
+            batch: 2,
+            tenants: 2,
+            sched: SchedKind::Priority,
+            queue_cap: 32,
+            max_inflight: 1,
+            duration: 100_000,
+            ..ServingConfig::default()
+        };
+        let r = serve(&profile, &cfg).unwrap();
+        assert!(r.completed >= 4);
+        assert_eq!(r.conservation_violations, 0);
+        let first_batch: Vec<usize> = r.ledger[..2].iter().map(|c| c.tenant).collect();
+        assert_eq!(first_batch, vec![0, 0], "tenant 0 retires first");
+    }
+
+    #[test]
+    fn sweep_finds_a_knee_and_p99_blows_up_past_it() {
+        let profile = flat_profile(4, 250); // 1000 cycles/image
+        let base = ServingConfig {
+            arrival: ArrivalKind::Poisson,
+            batch: 1,
+            queue_cap: 32,
+            max_inflight: 1,
+            duration: 2_000_000,
+            ..ServingConfig::default()
+        };
+        // Capacity is 1000 req/Mcycle; sweep through it.
+        let rates = [100.0, 400.0, 800.0, 1500.0, 3000.0];
+        let sw = sweep(&profile, &base, &rates).unwrap();
+        let knee = sw.knee.expect("low rates are pre-knee");
+        assert!(knee < rates.len() - 1, "3x overload cannot be pre-knee");
+        let last = &sw.points[rates.len() - 1].report;
+        let at_knee = &sw.points[knee].report;
+        assert!(
+            last.p99() > at_knee.p99(),
+            "p99 must blow up past the knee: {} vs {}",
+            last.p99(),
+            at_knee.p99()
+        );
+        assert!(last.rejected > 0 || last.p99() as f64 > KNEE_BLOWUP * at_knee.p99() as f64);
+    }
+
+    #[test]
+    fn sweep_rejects_unordered_rates_and_closed_loops() {
+        let profile = flat_profile(1, 100);
+        let base = ServingConfig {
+            batch: 1,
+            ..ServingConfig::default()
+        };
+        assert!(sweep(&profile, &base, &[]).is_err());
+        assert!(sweep(&profile, &base, &[5.0, 2.0]).is_err());
+        let closed = ServingConfig {
+            arrival: ArrivalKind::ClosedLoop,
+            ..ServingConfig::default()
+        };
+        assert!(sweep(&profile, &closed, &[1.0, 2.0]).is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! Serving-scale traffic: request streams, batch scheduling, and
+//! tail-latency metrics.
+//!
+//! The rest of the crate answers "how many cycles does one layer (or one
+//! whole-network pass) cost on this fabric?" — the paper's question. A
+//! capacity planner asks a different one: *at what offered load does the
+//! fabric saturate, and what does the p99 latency look like near that
+//! knee?* This module answers it by composing four pieces:
+//!
+//! ```text
+//!   arrivals ──▶ batcher ──▶ multi-pass executor ──▶ metrics
+//!   (seeded       (size/       (time-shares the        (throughput,
+//!    Poisson /     timeout /    NoC across in-flight     queue depths,
+//!    closed        per-tenant   passes at layer          p50/p99/p999)
+//!    loop)         priority)    granularity)
+//! ```
+//!
+//! * [`arrivals`] — a seeded stochastic arrival process (Poisson,
+//!   deterministic-uniform, or closed-loop clients) minting
+//!   [`Request`]s against a chosen model.
+//! * [`batcher`] — admission control: bounded per-tenant queues, batch
+//!   formation by size or timeout, FIFO or priority scheduling with
+//!   tenants mapped onto virtual-channel classes.
+//! * [`executor`] — the multi-pass fabric-sharing executor. It reuses
+//!   the network executor's per-layer results as a [`ServiceProfile`]
+//!   (per-layer setup / per-image / reload costs, plus the hot layer's
+//!   [`ProbeReport`](crate::noc::probes::ProbeReport) bottleneck and the
+//!   summed [`DegradationReport`](crate::noc::faults::DegradationReport)),
+//!   and time-shares the NoC across concurrent passes through the
+//!   [`Calendar`](crate::noc::calendar::Calendar) event core.
+//!
+//! ## Determinism
+//!
+//! Everything is seeded and single-threaded at the serving level: the
+//! arrival RNG is [SplitMix64](crate::util::rng::Rng), the calendar
+//! drains events in (cycle, insertion-order) order, the fabric is a
+//! serial resource granted to passes from a FIFO ready ring, and the
+//! latency tail is a fixed-bucket integer
+//! [`Histogram`](crate::util::histogram::Histogram). Executor-level
+//! parallelism (`threads`, `intra_workers`) only affects how the
+//! *profile* is measured, and those runs are bit-identical by the
+//! executor's own determinism guarantee — so a seeded serving run is
+//! bit-identical across every parallelism knob. `tests/serving.rs` pins
+//! this.
+
+pub mod arrivals;
+pub mod batcher;
+pub mod executor;
+
+pub use arrivals::{ArrivalKind, ArrivalProcess, Request};
+pub use batcher::{Batch, Batcher, SchedKind};
+pub use executor::{
+    serve, sweep, CompletedRequest, LayerCost, RatePoint, ServiceProfile,
+    ServingReport, SweepReport, KNEE_BLOWUP,
+};
+
+use crate::config::ConfigError;
+use crate::util::json::Json;
+
+/// Knobs for one serving run. Everything is in cycles or requests —
+/// rates are expressed per **million cycles** (`Mcycle`) because a
+/// whole-network pass on the 8x8 mesh costs millions of cycles, so
+/// per-cycle rates would be unreadably small.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// Arrival mode (open-loop Poisson/uniform or closed-loop clients).
+    pub arrival: ArrivalKind,
+    /// Open-loop offered load, requests per million cycles. Ignored by
+    /// closed-loop mode.
+    pub rate_per_mcycle: f64,
+    /// Closed-loop population size. Ignored by open-loop modes.
+    pub clients: usize,
+    /// Closed-loop think time between a completion and the client's next
+    /// request.
+    pub think_cycles: u64,
+    /// Max images per admitted batch.
+    pub batch: usize,
+    /// Cycles a queue head may age before a partial batch is forced out.
+    /// 0 = auto: half a full-batch pass time, derived from the profile.
+    pub batch_timeout: u64,
+    /// Number of tenants; arrivals are round-robin across tenants.
+    pub tenants: usize,
+    /// FIFO (single queue) or per-tenant priority queues mapped to VCs.
+    pub sched: SchedKind,
+    /// Total queued-request capacity; arrivals beyond it are rejected.
+    pub queue_cap: usize,
+    /// Max concurrent in-flight passes time-sharing the fabric.
+    pub max_inflight: usize,
+    /// Cycles during which new arrivals are generated; the run then
+    /// drains to completion. 0 = auto: 32 full-batch pass times.
+    pub duration: u64,
+    /// Arrival-process RNG seed.
+    pub seed: u64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> ServingConfig {
+        ServingConfig {
+            arrival: ArrivalKind::Poisson,
+            rate_per_mcycle: 0.0,
+            clients: 4,
+            think_cycles: 0,
+            batch: 4,
+            batch_timeout: 0,
+            tenants: 1,
+            sched: SchedKind::Fifo,
+            queue_cap: 64,
+            max_inflight: 2,
+            duration: 0,
+            seed: 1,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Typed validation, same contract as
+    /// [`SimConfig::validate`](crate::config::SimConfig::validate): every
+    /// rejection is a [`ConfigError`] naming the serving knob that broke.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        fn check(cond: bool, reason: &str) -> Result<(), ConfigError> {
+            if cond {
+                Ok(())
+            } else {
+                Err(ConfigError::invalid("serving", reason))
+            }
+        }
+        match self.arrival {
+            ArrivalKind::Poisson | ArrivalKind::Uniform => {
+                check(
+                    self.rate_per_mcycle.is_finite() && self.rate_per_mcycle > 0.0,
+                    "arrival rate must be a positive, finite number of \
+                     requests per Mcycle (--arrival-rate)",
+                )?;
+            }
+            ArrivalKind::ClosedLoop => {
+                check(self.clients >= 1, "closed-loop mode needs at least one client")?;
+            }
+        }
+        check(self.batch >= 1, "batch size must be at least 1 image")?;
+        check(self.tenants >= 1, "tenant count must be at least 1")?;
+        check(self.queue_cap >= 1, "queue capacity must be at least 1")?;
+        check(self.max_inflight >= 1, "max in-flight passes must be at least 1")?;
+        Ok(())
+    }
+
+    /// Config echo embedded in the serving report.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("arrival", Json::Str(self.arrival.key().to_string()))
+            .set("rate_per_mcycle", Json::Num(self.rate_per_mcycle))
+            .set("clients", Json::Num(self.clients as f64))
+            .set("think_cycles", Json::Num(self.think_cycles as f64))
+            .set("batch", Json::Num(self.batch as f64))
+            .set("batch_timeout", Json::Num(self.batch_timeout as f64))
+            .set("tenants", Json::Num(self.tenants as f64))
+            .set("sched", Json::Str(self.sched.key().to_string()))
+            .set("queue_cap", Json::Num(self.queue_cap as f64))
+            .set("max_inflight", Json::Num(self.max_inflight as f64))
+            .set("duration", Json::Num(self.duration as f64))
+            .set("seed", Json::Num(self.seed as f64));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_names_the_serving_knob() {
+        let cfg = ServingConfig {
+            rate_per_mcycle: 2.0,
+            ..ServingConfig::default()
+        };
+        assert!(cfg.validate().is_ok());
+
+        let zero_rate = ServingConfig::default();
+        let err = zero_rate.validate().unwrap_err();
+        assert!(err.to_string().contains("serving"), "{err}");
+        assert!(err.to_string().contains("arrival rate"), "{err}");
+
+        let bad_batch = ServingConfig {
+            rate_per_mcycle: 2.0,
+            batch: 0,
+            ..ServingConfig::default()
+        };
+        let err = bad_batch.validate().unwrap_err();
+        assert!(err.to_string().contains("serving"), "{err}");
+        assert!(err.to_string().contains("batch"), "{err}");
+
+        // Closed loop ignores the rate but insists on a population.
+        let closed = ServingConfig {
+            arrival: ArrivalKind::ClosedLoop,
+            clients: 0,
+            ..ServingConfig::default()
+        };
+        assert!(closed.validate().is_err());
+        let closed_ok = ServingConfig {
+            arrival: ArrivalKind::ClosedLoop,
+            ..ServingConfig::default()
+        };
+        assert!(closed_ok.validate().is_ok());
+    }
+
+    #[test]
+    fn keyword_parses_reject_unknown_modes() {
+        assert!(ArrivalKind::parse("poisson").is_ok());
+        assert!(ArrivalKind::parse("uniform").is_ok());
+        assert!(ArrivalKind::parse("closed").is_ok());
+        let err = ArrivalKind::parse("bursty").unwrap_err();
+        assert!(err.to_string().contains("arrival"), "{err}");
+        assert!(SchedKind::parse("fifo").is_ok());
+        assert!(SchedKind::parse("priority").is_ok());
+        assert!(SchedKind::parse("wfq").is_err());
+    }
+
+    #[test]
+    fn config_json_echo_is_complete() {
+        let cfg = ServingConfig {
+            rate_per_mcycle: 3.5,
+            ..ServingConfig::default()
+        };
+        let j = cfg.to_json();
+        for key in [
+            "arrival",
+            "rate_per_mcycle",
+            "batch",
+            "batch_timeout",
+            "tenants",
+            "sched",
+            "queue_cap",
+            "max_inflight",
+            "duration",
+            "seed",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+}

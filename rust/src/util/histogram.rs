@@ -1,0 +1,266 @@
+//! Deterministic fixed-bucket histogram for latency percentiles.
+//!
+//! The serving metrics layer reports p50/p99/p999 over hundreds of
+//! thousands of per-request latencies. Sorting raw samples would be
+//! exact but O(n log n) per report and memory-heavy; a quantile sketch
+//! (t-digest and friends) would be compact but floating-point-ordering
+//! dependent — two runs that interleave samples differently could
+//! report different tails, which the serving determinism suite forbids.
+//! A fixed-bucket integer histogram is both: exact counts per bucket,
+//! order-insensitive by construction (addition of u64 counts commutes),
+//! and O(buckets) per percentile query.
+//!
+//! ## Percentile convention
+//!
+//! Bucket `i` covers values `[i*w, (i+1)*w)` for width `w`; values at or
+//! beyond the last bucket land in a single overflow bucket. The
+//! `q`-quantile is defined by the **nearest-rank rule**: rank
+//! `ceil(q * count)` (clamped to `[1, count]`), and the reported value is
+//! the inclusive upper edge `(i+1)*w - 1` of the bucket holding that
+//! rank, clamped to the true observed maximum (so a constant
+//! distribution reports the constant, and `q = 1` reports the max).
+//! With `w = 1` the rule is exact. Overflowed ranks report the observed
+//! maximum. Every step is integer arithmetic over counts — no
+//! floating-point accumulation order can change the answer.
+
+use super::json::Json;
+
+/// Fixed-bucket histogram over `u64` samples (see module docs for the
+/// bucket and percentile conventions).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    bucket_width: u64,
+    counts: Vec<u64>,
+    /// Samples at or beyond `buckets * width`.
+    overflow: u64,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Histogram {
+    /// A histogram of `buckets` buckets of `bucket_width` values each.
+    /// Zero widths or bucket counts have no meaningful geometry and are
+    /// rejected loudly (a caller bug, not a data condition).
+    pub fn new(bucket_width: u64, buckets: usize) -> Histogram {
+        assert!(bucket_width > 0, "histogram bucket width must be positive");
+        assert!(buckets > 0, "histogram needs at least one bucket");
+        Histogram {
+            bucket_width,
+            counts: vec![0; buckets],
+            overflow: 0,
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn bucket_width(&self) -> u64 {
+        self.bucket_width
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, value: u64) {
+        let idx = (value / self.bucket_width) as usize;
+        if idx < self.counts.len() {
+            self.counts[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+        self.total += 1;
+        self.sum += value as u128;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean (the sum is kept as u128, so it never saturates on
+    /// cycle-scale samples).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Nearest-rank percentile for `q` in `[0, 1]` — see the module docs
+    /// for the exact deterministic rule. Returns 0 on an empty histogram.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        // rank = ceil(q * total), clamped to [1, total]; integer walk
+        // from there on.
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cumulative = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cumulative += c;
+            if cumulative >= rank {
+                let upper = (i as u64 + 1) * self.bucket_width - 1;
+                return upper.min(self.max);
+            }
+        }
+        // The rank falls into the overflow bucket: the best deterministic
+        // answer under fixed buckets is the observed maximum.
+        self.max
+    }
+
+    /// Fold another histogram of identical geometry into this one
+    /// (commutative — merge order cannot change any percentile).
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(
+            (self.bucket_width, self.counts.len()),
+            (other.bucket_width, other.counts.len()),
+            "histogram merge requires identical geometry"
+        );
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.overflow += other.overflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The summary the serving report embeds: counts, extrema, mean and
+    /// the p50/p99/p999 tail.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("bucket_width", Json::Num(self.bucket_width as f64))
+            .set("count", Json::Num(self.total as f64))
+            .set("overflow", Json::Num(self.overflow as f64))
+            .set("min", Json::Num(self.min() as f64))
+            .set("max", Json::Num(self.max() as f64))
+            .set("mean", Json::Num(self.mean()))
+            .set("p50", Json::Num(self.percentile(0.50) as f64))
+            .set("p99", Json::Num(self.percentile(0.99) as f64))
+            .set("p999", Json::Num(self.percentile(0.999) as f64));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pins_percentiles_on_a_known_uniform_distribution() {
+        // 0..=999 with unit buckets: the rule is exact. Nearest rank for
+        // q over 1000 samples is ceil(1000q), so p50 is the 500th
+        // smallest (= 499), p99 the 990th (= 989), p999 the 999th (= 998).
+        let mut h = Histogram::new(1, 1024);
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!((h.min(), h.max()), (0, 999));
+        assert_eq!(h.percentile(0.50), 499);
+        assert_eq!(h.percentile(0.99), 989);
+        assert_eq!(h.percentile(0.999), 998);
+        assert_eq!(h.percentile(1.0), 999);
+        assert!((h.mean() - 499.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pins_percentiles_on_a_skewed_distribution() {
+        // 990 fast samples at 10, 9 at 500, 1 at 9000: the classic
+        // tail-latency shape. p50 sits in the body, p99 at the knee of
+        // the slow band, p999 on the outlier.
+        let mut h = Histogram::new(10, 128);
+        for _ in 0..990 {
+            h.record(10);
+        }
+        for _ in 0..9 {
+            h.record(500);
+        }
+        h.record(9000);
+        assert_eq!(h.count(), 1000);
+        // Bucket [10,20) upper edge 19 — within one bucket width of the
+        // true 10.
+        assert_eq!(h.percentile(0.50), 19);
+        assert_eq!(h.percentile(0.99), 509);
+        // Rank 999 is the 9th slow sample (cumulative 999 at bucket 50).
+        assert_eq!(h.percentile(0.999), 509);
+        // 9000 lands beyond 128 buckets x 10 — overflow reports the max.
+        assert_eq!(h.percentile(1.0), 9000);
+    }
+
+    #[test]
+    fn constant_distribution_reports_the_constant() {
+        let mut h = Histogram::new(64, 32);
+        for _ in 0..17 {
+            h.record(100);
+        }
+        // The bucket's upper edge (127) clamps to the observed max.
+        for q in [0.5, 0.99, 0.999, 1.0] {
+            assert_eq!(h.percentile(q), 100, "q={q}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::new(8, 8);
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(0.99), 0);
+        assert_eq!((h.min(), h.max()), (0, 0));
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_is_order_insensitive() {
+        let mut a = Histogram::new(5, 64);
+        let mut b = Histogram::new(5, 64);
+        let mut ab = Histogram::new(5, 64);
+        for v in [3u64, 77, 12, 300, 4, 4] {
+            a.record(v);
+            ab.record(v);
+        }
+        for v in [250u64, 1, 90] {
+            b.record(v);
+            ab.record(v);
+        }
+        let mut ba = b.clone();
+        ba.merge(&a);
+        a.merge(&b);
+        assert_eq!(a, ba);
+        assert_eq!(a, ab);
+    }
+
+    #[test]
+    fn json_carries_the_tail() {
+        let mut h = Histogram::new(1, 256);
+        for v in 0..100u64 {
+            h.record(v);
+        }
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(100));
+        assert_eq!(j.get("p50").and_then(Json::as_u64), Some(49));
+        assert_eq!(j.get("p99").and_then(Json::as_u64), Some(98));
+        assert_eq!(j.get("max").and_then(Json::as_u64), Some(99));
+    }
+}

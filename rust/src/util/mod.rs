@@ -1,9 +1,12 @@
 //! In-tree utilities replacing unavailable third-party crates (the build
 //! environment is offline): JSON ([`json`]), deterministic RNG and
-//! property-check driver ([`rng`]), a wall-clock bench harness ([`bench`])
-//! and CLI flag parsing ([`cli`]).
+//! property-check driver ([`rng`]), a wall-clock bench harness ([`bench`]),
+//! CLI flag parsing ([`cli`]) and the deterministic fixed-bucket
+//! percentile histogram ([`histogram`]) the serving metrics layer reports
+//! tail latencies through.
 
 pub mod bench;
 pub mod cli;
+pub mod histogram;
 pub mod json;
 pub mod rng;

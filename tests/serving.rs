@@ -1,0 +1,301 @@
+//! Serving-subsystem invariants: determinism, conservation, drain.
+//!
+//! Top — **bit-identity**: a seeded serving run's request ledger,
+//! percentiles and profile (including the measuring run's NetStats) are
+//! bit-identical across executor `threads` 1/2/4 and `intra_workers`
+//! 1/4. Serving itself is single-threaded; the only way parallelism
+//! could leak in is through the measured profile, and the network
+//! executor guarantees those runs are bit-identical — this suite pins
+//! the composition.
+//!
+//! Middle — **conservation**: `offered == completed + rejected + queued
+//! + in_flight` is audited by the event loop at every sample point and
+//! the violation count must be zero, under overload, multi-tenant
+//! priority and closed-loop traffic alike.
+//!
+//! Base — **drain**: a closed-loop population offered below service
+//! capacity ends with zero queued and zero in-flight requests, and every
+//! offered request completes.
+//!
+//! Honours the `NOC_COLLECTION` CI matrix pin for the profile run.
+
+use noc_dnn::config::{Collection, SimConfig, Streaming};
+use noc_dnn::coordinator::executor::NetworkExecutor;
+use noc_dnn::models::{ConvLayer, Network};
+use noc_dnn::plan::{LayerPolicy, NetworkPlan};
+use noc_dnn::serving::{
+    serve, sweep, ArrivalKind, LayerCost, SchedKind, ServiceProfile, ServingConfig,
+};
+
+fn env_collection() -> Collection {
+    match std::env::var("NOC_COLLECTION") {
+        Ok(s) => Collection::parse(&s).expect("NOC_COLLECTION must be ru|gather|ina"),
+        Err(_) => Collection::Gather,
+    }
+}
+
+fn tiny_model() -> Network {
+    Network::new(
+        "tiny",
+        vec![
+            ConvLayer { name: "t1", c: 4, h_in: 8, r: 3, stride: 1, pad: 1, q: 16 },
+            ConvLayer { name: "t2", c: 16, h_in: 8, r: 1, stride: 2, pad: 0, q: 8 },
+        ],
+    )
+}
+
+/// Measure the tiny model's service profile at one executor parallelism
+/// setting; returns the profile plus a NetStats fingerprint of the
+/// measuring run (the bit-identity witness below the profile).
+fn profile_at(threads: usize, intra_workers: usize) -> (ServiceProfile, String) {
+    let mut cfg = SimConfig::table1_8x8(2);
+    cfg.sim_rounds_cap = 2;
+    cfg.threads = threads;
+    cfg.intra_workers = intra_workers;
+    cfg.collection = env_collection();
+    cfg.probes = true;
+    let model = tiny_model();
+    let plan = NetworkPlan::uniform(
+        LayerPolicy {
+            streaming: Streaming::TwoWay,
+            collection: cfg.collection,
+            dataflow: cfg.dataflow,
+        },
+        model.len(),
+    );
+    let run = NetworkExecutor::new(cfg).run(&model, &plan).unwrap();
+    let nets: Vec<String> = run
+        .layers
+        .iter()
+        .map(|l| format!("{:?}", l.report.run.net))
+        .collect();
+    (ServiceProfile::from_run(&run), nets.join(" | "))
+}
+
+fn near_capacity_cfg(profile: &ServiceProfile) -> ServingConfig {
+    ServingConfig {
+        arrival: ArrivalKind::Poisson,
+        rate_per_mcycle: profile.capacity_per_mcycle(2) * 0.9,
+        batch: 2,
+        tenants: 2,
+        sched: SchedKind::Priority,
+        queue_cap: 16,
+        max_inflight: 2,
+        seed: 7,
+        ..ServingConfig::default()
+    }
+}
+
+#[test]
+fn seeded_serving_is_bit_identical_across_executor_parallelism() {
+    let (base_profile, base_nets) = profile_at(1, 1);
+    let base_report = serve(&base_profile, &near_capacity_cfg(&base_profile)).unwrap();
+    assert!(base_report.completed > 0, "the pinned config must retire requests");
+    assert_eq!(base_report.conservation_violations, 0);
+    let base_json = base_report.to_json().to_pretty();
+
+    for (threads, intra) in [(2, 1), (4, 1), (1, 4), (2, 4)] {
+        let (profile, nets) = profile_at(threads, intra);
+        assert_eq!(
+            nets, base_nets,
+            "NetStats diverged at threads={threads}, intra_workers={intra}"
+        );
+        assert_eq!(
+            profile.layers, base_profile.layers,
+            "per-layer costs diverged at threads={threads}, intra_workers={intra}"
+        );
+        let report = serve(&profile, &near_capacity_cfg(&profile)).unwrap();
+        assert_eq!(
+            report.ledger, base_report.ledger,
+            "request ledger diverged at threads={threads}, intra_workers={intra}"
+        );
+        assert_eq!(
+            (report.p50(), report.p99(), report.p999()),
+            (base_report.p50(), base_report.p99(), base_report.p999()),
+            "percentiles diverged at threads={threads}, intra_workers={intra}"
+        );
+        assert_eq!(
+            report.to_json().to_pretty(),
+            base_json,
+            "full report diverged at threads={threads}, intra_workers={intra}"
+        );
+    }
+}
+
+#[test]
+fn same_seed_same_ledger_different_seed_different_ledger() {
+    let profile = synthetic_profile();
+    let cfg = ServingConfig {
+        arrival: ArrivalKind::Poisson,
+        rate_per_mcycle: 600.0,
+        batch: 2,
+        tenants: 2,
+        sched: SchedKind::Priority,
+        queue_cap: 8,
+        duration: 3_000_000,
+        seed: 11,
+        ..ServingConfig::default()
+    };
+    let a = serve(&profile, &cfg).unwrap();
+    let b = serve(&profile, &cfg).unwrap();
+    assert_eq!(a.ledger, b.ledger);
+    assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+
+    let reseeded = ServingConfig { seed: 12, ..cfg };
+    let c = serve(&profile, &reseeded).unwrap();
+    assert!(a.completed > 0 && c.completed > 0);
+    assert_ne!(a.ledger, c.ledger, "a different seed must reshuffle arrivals");
+}
+
+/// 4 layers x 250 cycles/image: capacity is 1000 req/Mcycle at batch 1.
+fn synthetic_profile() -> ServiceProfile {
+    ServiceProfile::synthetic(
+        "synthetic",
+        (0..4)
+            .map(|i| LayerCost {
+                name: format!("l{i}"),
+                setup_cycles: 0,
+                per_image_cycles: 250,
+                reload_cycles: 0,
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn conservation_holds_under_overload_and_priority_tenants() {
+    let profile = synthetic_profile();
+    let cfg = ServingConfig {
+        arrival: ArrivalKind::Uniform,
+        rate_per_mcycle: 5_000.0, // 5x capacity
+        batch: 2,
+        tenants: 3,
+        sched: SchedKind::Priority,
+        queue_cap: 6,
+        max_inflight: 2,
+        duration: 1_000_000,
+        ..ServingConfig::default()
+    };
+    let r = serve(&profile, &cfg).unwrap();
+    assert_eq!(r.conservation_violations, 0, "audited at every sample point");
+    assert_eq!(r.offered, r.accepted + r.rejected);
+    assert!(r.rejected > 0, "5x overload into a 6-deep queue must reject");
+    assert_eq!(r.accepted, r.completed, "the run drains fully");
+    assert_eq!(r.queued_at_end, 0);
+    assert_eq!(r.inflight_at_end, 0);
+    assert_eq!(r.ledger.len() as u64, r.completed);
+    // The ledger never duplicates or invents a request id.
+    let mut ids: Vec<u64> = r.ledger.iter().map(|c| c.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len() as u64, r.completed);
+}
+
+#[test]
+fn closed_loop_below_capacity_drains_to_zero_queue() {
+    let profile = synthetic_profile();
+    let cfg = ServingConfig {
+        arrival: ArrivalKind::ClosedLoop,
+        clients: 3,
+        think_cycles: 5_000, // issue every ~6k cycles vs 1k service
+        batch: 1,
+        queue_cap: 16,
+        max_inflight: 2,
+        duration: 500_000,
+        ..ServingConfig::default()
+    };
+    let r = serve(&profile, &cfg).unwrap();
+    assert!(r.offered >= 3, "each client issues at least once");
+    assert_eq!(r.rejected, 0, "an under-capacity closed loop never overflows");
+    assert_eq!(r.completed, r.offered, "every issued request completes");
+    assert_eq!(r.queued_at_end, 0, "the queue drains to zero");
+    assert_eq!(r.inflight_at_end, 0);
+    assert_eq!(r.conservation_violations, 0);
+    assert!(
+        r.queue_depth_max <= 3,
+        "never more waiting requests than clients (got {})",
+        r.queue_depth_max
+    );
+}
+
+#[test]
+fn sweep_reports_a_knee_and_a_monotone_p99_blowup_past_it() {
+    let profile = synthetic_profile();
+    let base = ServingConfig {
+        arrival: ArrivalKind::Poisson,
+        batch: 1,
+        queue_cap: 32,
+        max_inflight: 1,
+        duration: 2_000_000,
+        ..ServingConfig::default()
+    };
+    let rates = [100.0, 400.0, 800.0, 1500.0, 3000.0];
+    let sw = sweep(&profile, &base, &rates).unwrap();
+    let knee = sw.knee.expect("a 10x-under-capacity rate is pre-knee");
+    assert!(knee < rates.len() - 1, "3x overload cannot be pre-knee");
+    // Past the knee the tail only gets worse (two deeply saturated
+    // points both pin near the full-queue sojourn, so allow a sliver of
+    // sampling slack rather than demand strict ordering there).
+    let p99s: Vec<u64> = sw.points.iter().map(|p| p.report.p99()).collect();
+    for w in p99s[knee..].windows(2) {
+        assert!(
+            w[1] as f64 >= w[0] as f64 * 0.9,
+            "p99 must not improve past the knee: {p99s:?}"
+        );
+    }
+    assert!(
+        p99s[rates.len() - 1] > p99s[knee],
+        "deep saturation must blow the tail up: {p99s:?}"
+    );
+    let last = &sw.points[rates.len() - 1].report;
+    assert!(last.rejected > 0, "3x overload into a 32-deep queue must reject");
+    // Throughput can never exceed the serial-fabric capacity.
+    let cap = profile.capacity_per_mcycle(1);
+    for p in &sw.points {
+        assert!(
+            p.report.throughput_per_mcycle <= cap * 1.05,
+            "throughput {} above capacity {cap}",
+            p.report.throughput_per_mcycle
+        );
+    }
+}
+
+#[test]
+fn serve_report_json_has_the_contract_keys() {
+    let profile = synthetic_profile();
+    let cfg = ServingConfig {
+        arrival: ArrivalKind::Poisson,
+        rate_per_mcycle: 500.0,
+        batch: 2,
+        duration: 2_000_000,
+        ..ServingConfig::default()
+    };
+    let j = serve(&profile, &cfg).unwrap().to_json();
+    for key in [
+        "model",
+        "serving",
+        "offered",
+        "accepted",
+        "rejected",
+        "completed",
+        "throughput_per_mcycle",
+        "utilization",
+        "latency",
+        "queue_depth",
+        "conservation_violations",
+        "bottleneck",
+        "degraded",
+    ] {
+        assert!(j.get(key).is_some(), "report JSON lost key {key}");
+    }
+    let lat = j.get("latency").unwrap();
+    for key in ["p50", "p99", "p999", "mean", "max", "count"] {
+        assert!(lat.get(key).is_some(), "latency JSON lost key {key}");
+    }
+    // Round-trips through the crate's JSON parser.
+    let back = noc_dnn::util::json::parse(&j.to_pretty()).unwrap();
+    assert_eq!(
+        back.get("offered").unwrap().as_u64(),
+        j.get("offered").unwrap().as_u64()
+    );
+}
